@@ -1,0 +1,51 @@
+//! Quickstart: schedule a 9-model LLM-ensembling application on a
+//! simulated 8×A100 node and compare SamuLLM against both heuristics.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use samullm::apps::ensembling;
+use samullm::baselines::PolicyKind;
+use samullm::cluster::ClusterSpec;
+use samullm::metrics::gantt;
+use samullm::runner::{run_policy, RunOpts};
+
+fn main() {
+    let cluster = ClusterSpec::a100_node(8);
+    // 1000 MixInstruct-like requests, answered by all nine LLM-Blender
+    // models, output limit 256 (the paper's Fig. 7a leftmost group).
+    let scenario = ensembling::build(1000, 256, 42);
+    println!("scenario: {} ({} models)", scenario.name, scenario.graph.n_nodes());
+
+    let opts = RunOpts::default();
+    let mut reports = vec![];
+    for policy in PolicyKind::ALL {
+        let r = run_policy(policy, &scenario, &cluster, &opts);
+        println!(
+            "{:<14} end-to-end {:>7.1}s  (inference {:>7.1}s + search {:>5.1}s)  stages={} idle={:.0} gpu·s",
+            r.policy,
+            r.end_to_end_time,
+            r.inference_time,
+            r.extra_time,
+            r.n_stages,
+            r.gpu_idle_time()
+        );
+        reports.push(r);
+    }
+    let ours = &reports[0];
+    for other in &reports[1..] {
+        println!(
+            "speedup vs {:<14} {:.2}x end-to-end, {:.2}x inference",
+            other.policy,
+            other.end_to_end_time / ours.end_to_end_time,
+            other.inference_time / ours.inference_time
+        );
+    }
+    println!("\nSamuLLM schedule:");
+    println!("{}", gantt::render(ours, 72));
+    println!(
+        "cost-model estimate {:.1}s vs actual {:.1}s (error {:.1}%)",
+        ours.estimated_inference_time,
+        ours.inference_time,
+        100.0 * ours.estimation_error()
+    );
+}

@@ -1,0 +1,46 @@
+//! LLM routing (§5.2): Table-1-skewed workloads over five models, with
+//! and without known output lengths — shows how the sampling cost model
+//! compares to a perfect-information planner.
+//!
+//! Run with: `cargo run --release --example routing_known_lengths`
+
+use samullm::apps::routing;
+use samullm::baselines::PolicyKind;
+use samullm::cluster::ClusterSpec;
+use samullm::runner::{run_policy, RunOpts};
+use samullm::workload::routerbench::TABLE1;
+
+fn main() {
+    println!("Table 1 routing distribution:");
+    for (model, count) in TABLE1 {
+        println!("  {model:<28} {count:>5}");
+    }
+    let scenario = routing::build(4096, 7);
+    let cluster = ClusterSpec::a100_node(8);
+
+    for known in [false, true] {
+        println!("\n--- output lengths {} ---", if known { "KNOWN" } else { "unknown (eCDF-sampled)" });
+        let opts = RunOpts { known_lengths: known, ..Default::default() };
+        let mut ours_t = 0.0;
+        for policy in PolicyKind::ALL {
+            let r = run_policy(policy, &scenario, &cluster, &opts);
+            if policy == PolicyKind::SamuLlm {
+                ours_t = r.end_to_end_time;
+                println!(
+                    "{:<14} {:>7.1}s  (estimate {:.1}s, error {:.1}%)",
+                    r.policy,
+                    r.end_to_end_time,
+                    r.estimated_inference_time,
+                    100.0 * r.estimation_error()
+                );
+            } else {
+                println!(
+                    "{:<14} {:>7.1}s  ({:.2}x ours)",
+                    r.policy,
+                    r.end_to_end_time,
+                    r.end_to_end_time / ours_t
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Text serving: tokenizes real prompt strings, serves them through the
+//! AOT-compiled TinyGPT on PJRT, and decodes the generations back to text
+//! (garbage-in-style text, of course — the weights are random — but the
+//! full tokenize → prefill → decode → detokenize loop is real).
+//!
+//! Prerequisite: `make artifacts`.
+//! Run with: `cargo run --release --example serve_text`
+
+use samullm::runtime::{default_artifacts_dir, tokenizer};
+use samullm::serve::{ServeEngine, ServeRequest};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = ServeEngine::load(&dir)?;
+
+    let prompts = [
+        "Summarize the following document: ",
+        "Which model should answer this? ",
+        "The scheduling problem is NP-hard because ",
+        "Route this request to the best LLM. ",
+        "Once upon a time, a GPU sat idle ",
+        "Tensor parallelism splits each layer ",
+        "Data parallelism replicates the model ",
+        "Preemption lets the scheduler reclaim ",
+    ];
+    let requests: Vec<ServeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ServeRequest {
+            id: i as u64,
+            prompt: tokenizer::encode(p),
+            max_new_tokens: 16,
+        })
+        .collect();
+
+    println!("serving {} text prompts through TinyGPT...", requests.len());
+    let (results, metrics) = engine.serve(&requests)?;
+    for r in &results {
+        let text = tokenizer::decode(&r.generated);
+        println!(
+            "[{}] {:?} -> {:?} ({} tokens, {:.2}s)",
+            r.id,
+            prompts[r.id as usize],
+            text,
+            r.generated.len(),
+            r.latency
+        );
+    }
+    println!(
+        "\n{} tokens in {:.2}s -> {:.1} tok/s",
+        metrics.total_tokens, metrics.wall_time, metrics.tokens_per_second
+    );
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT bridge: lower TinyGPT prefill/decode to HLO text + dump weights.
+
+Interchange format is HLO *text*, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  prefill.hlo.txt   — (params..., tokens[B,S] i32, lengths[B] i32)
+                        -> (logits, k_cache, v_cache)
+  decode.hlo.txt    — (params..., token[B] i32, k_cache, v_cache, pos[B] i32)
+                        -> (logits, k_cache, v_cache)
+  weights.bin       — all params, f32 little-endian, canonical order
+  model_meta.json   — dims + param spec (name, shape, byte offset/len) +
+                      entry-point argument order
+
+Run via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as m
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: PJRT then hands rust one buffer per output leaf,
+    # so the runtime can keep KV caches device-resident between decode
+    # steps (no host round-trip per token).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="stamp file path; artifacts land in its directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = m.CONFIG
+    params = m.init_params(cfg, seed=args.seed)
+    spec = m.param_spec(cfg)
+
+    # --- weights.bin + meta -------------------------------------------------
+    offsets, off = [], 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for (name, shape), arr in zip(spec, params):
+            buf = np.asarray(arr, dtype="<f4").tobytes()
+            offsets.append({"name": name, "shape": list(shape),
+                            "offset": off, "bytes": len(buf)})
+            f.write(buf)
+            off += len(buf)
+
+    b, s = cfg.batch, cfg.max_seq
+    l, h, d = cfg.n_layers, cfg.n_heads, cfg.d_head
+    p_specs = [jax.ShapeDtypeStruct(sh, jnp.float32) for _, sh in spec]
+    tok_bs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    len_b = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_b = jax.ShapeDtypeStruct((b,), jnp.int32)
+    cache = jax.ShapeDtypeStruct((l, b, h, s, d), jnp.float32)
+
+    packed = jax.ShapeDtypeStruct((m.packed_len(cfg),), jnp.float32)
+
+    def prefill_fn(*xs):
+        ps, tokens, lengths = list(xs[:-2]), xs[-2], xs[-1]
+        return m.prefill_packed(cfg, ps, tokens, lengths)
+
+    def decode_fn(*xs):
+        ps = list(xs[:-3])
+        token, state, pos = xs[-3:]
+        return m.decode_packed(cfg, ps, token, state, pos)
+
+    lowered_p = jax.jit(prefill_fn).lower(*p_specs, tok_bs, len_b)
+    lowered_d = jax.jit(decode_fn).lower(*p_specs, tok_b, packed, len_b)
+
+    for name, lowered in [("prefill", lowered_p), ("decode", lowered_d)]:
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+    meta = {
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "max_seq": cfg.max_seq,
+            "batch": cfg.batch, "d_ff": cfg.d_ff, "d_head": cfg.d_head,
+        },
+        "params": offsets,
+        "entry_points": {
+            "prefill": {"extra_args": ["tokens[b,s]:i32", "lengths[b]:i32"],
+                        "outputs": ["packed[b*v + 2*l*b*h*s*d]:f32"]},
+            "decode": {"extra_args": ["token[b]:i32", "packed:f32",
+                                       "pos[b]:i32"],
+                       "outputs": ["packed:f32"]},
+        },
+        "packed_len": m.packed_len(cfg),
+        "seed": args.seed,
+    }
+    with open(os.path.join(out_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    # Stamp file for make.
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("see prefill.hlo.txt / decode.hlo.txt\n")
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Pallas attention kernels — the L1 compute hot-spot.
+
+The paper's serving substrate (vLLM on A100) spends its iteration time in
+PagedAttention CUDA kernels. This module is the TPU rethink of that hot spot
+(see DESIGN.md §Hardware-Adaptation):
+
+* the HBM→shared-memory gather of KV blocks becomes a ``BlockSpec``-driven
+  HBM→VMEM tile schedule,
+* warp-level QKᵀ/PV WMMA becomes full-tile matmuls targeting the MXU
+  (``preferred_element_type=float32``),
+* the flash-attention running max/sum recurrence bounds the VMEM working
+  set to ``O(block_q·d + block_k·d)`` per grid step.
+
+Both kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness (and
+AOT-artifact) path; real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Prefill: blocked causal flash attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """One grid step: one (batch, head, q-block) tile.
+
+    Streams K/V in ``block_k`` tiles, maintaining the flash-attention
+    running (max, sum, acc) recurrence entirely in VMEM-resident values.
+    """
+    _, _, block_q, d = q_ref.shape
+    s = k_ref.shape[2]
+    q_blk = pl.program_id(2)
+    q0 = q_blk * block_q
+    length = len_ref[0]
+
+    q = q_ref[0, 0].astype(jnp.float32) * (1.0 / jnp.sqrt(float(d)))
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    num_kb = s // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k0 = kb * block_k
+        k_tile = k_ref[0, 0, pl.dslice(k0, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[0, 0, pl.dslice(k0, block_k), :].astype(jnp.float32)
+        # MXU tile: [block_q, d] x [d, block_k]
+        scores = jax.lax.dot_general(
+            q,
+            k_tile,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kj = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = (kj <= qi) & (kj < length)
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=1))
+        # Guard: fully-masked rows keep m == NEG_INF; exp(NEG_INF - NEG_INF)
+        # would be exp(0) = 1, so clamp the correction term.
+        corr = jnp.where(m == NEG_INF, 0.0, jnp.exp(m - m_new))
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)  # pad rows: emit zeros, not NaN
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def prefill_attention(q, k, v, lengths, *, block_q: int = 32, block_k: int = 32):
+    """Blocked causal flash attention.
+
+    Args:
+      q, k, v: ``[B, H, S, D]``.
+      lengths: ``[B]`` int32 valid lengths.
+      block_q, block_k: VMEM tile sizes (S must be divisible by both).
+
+    Returns:
+      ``[B, H, S, D]`` matching :func:`..ref.ref_prefill_attention`.
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    grid = (b, h, s // block_q)
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, qi: (bi,)),
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=True,
+    )(lengths, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode: single-token query vs KV cache
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref):
+    """One grid step: one (batch, head) pair; q is a single row."""
+    _, _, s, d = k_ref.shape
+    p = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32) * (1.0 / jnp.sqrt(float(d)))  # [1, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [S, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [1, S]
+    kj = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)
+    scores = jnp.where(kj <= p, scores, NEG_INF)
+    m = scores.max(axis=1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(kj <= p, e, 0.0)
+    probs = e / e.sum(axis=1, keepdims=True)
+    o_ref[0, 0] = jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-step decode attention against a dense per-request KV cache.
+
+    Args:
+      q: ``[B, H, D]``.
+      k_cache, v_cache: ``[B, H, S, D]``.
+      pos: ``[B]`` int32 — cache slot of the current token.
+
+    Returns:
+      ``[B, H, D]`` matching :func:`..ref.ref_decode_attention`.
+    """
+    b, h, s, d = k_cache.shape
+    grid = (b, h)
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=True,
+    )(pos, q[:, :, None, :], k_cache, v_cache)
+    return out[:, :, 0, :]
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d: int, s: int,
+                         dtype_bytes: int = 2) -> int:
+    """Analytic VMEM working set per prefill grid step (for §Perf).
+
+    q tile + one K tile + one V tile (streamed) + f32 score tile +
+    f32 accumulators.
+    """
+    tiles = (block_q * d + 2 * block_k * d) * dtype_bytes
+    scores = block_q * block_k * 4
+    accum = (block_q * d + 2 * block_q) * 4
+    return tiles + scores + accum

@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations the pytest suite compares the
+Pallas kernels against (see ``python/tests/test_kernel.py``). They share the
+exact masking semantics of the kernels:
+
+* ``ref_prefill_attention`` — causal self-attention over a padded batch.
+  Position ``i`` may attend to positions ``j <= i`` with ``j < length[b]``.
+* ``ref_decode_attention`` — single-token query attending to a KV cache.
+  The query for request ``b`` sits at position ``pos[b]`` and attends to
+  cache slots ``j <= pos[b]``.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_prefill_attention(q, k, v, lengths):
+    """Causal attention with per-request valid lengths.
+
+    Args:
+      q, k, v: ``[B, H, S, D]`` arrays.
+      lengths: ``[B]`` int32 — number of valid (non-pad) tokens per request.
+
+    Returns:
+      ``[B, H, S, D]`` attention output (pad positions hold garbage that the
+      caller ignores; they are still finite).
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    causal = kj <= qi  # [S, S]
+    valid = jnp.arange(s)[None, None, :] < lengths[:, None, None]  # [B, 1, S]
+    mask = causal[None, :, :] & valid  # [B, S, S]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_decode_attention(q, k_cache, v_cache, pos):
+    """Single-step decode attention against a KV cache.
+
+    Args:
+      q: ``[B, H, D]`` query for the token being generated.
+      k_cache, v_cache: ``[B, H, S, D]`` caches whose slot ``pos[b]`` already
+        holds the current token's K/V.
+      pos: ``[B]`` int32 — cache index of the current token.
+
+    Returns:
+      ``[B, H, D]`` attention output.
+    """
+    b, h, s, d = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.einsum(
+        "bhd,bhkd->bhk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    kj = jnp.arange(s)[None, :]  # [1, S]
+    mask = kj <= pos[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

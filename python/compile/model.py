@@ -1,0 +1,225 @@
+"""L2: TinyGPT — the jax model served end-to-end through the rust runtime.
+
+A small decoder-only transformer (pre-LN, GELU MLP, learned positions, tied
+unembedding) whose attention hot-spot is the Pallas kernel in
+``kernels/attention.py``. Two entry points are AOT-lowered by ``aot.py``:
+
+* ``prefill(params, tokens[B,S], lengths[B])``
+    -> ``(logits[B,V], k_cache[L,B,H,S,D], v_cache[L,B,H,S,D])``
+  Runs the full prompt, fills the KV cache, returns next-token logits taken
+  at each request's last valid position.
+
+* ``decode(params, token[B], k_cache, v_cache, pos[B])``
+    -> ``(logits[B,V], k_cache, v_cache)``
+  One autoregressive step: embeds ``token`` at position ``pos[b]``, writes
+  its K/V into slot ``pos[b]``, attends over slots ``<= pos[b]``.
+
+Weights are *runtime inputs*, not HLO constants: ``aot.py`` dumps them to
+``artifacts/weights.bin`` and the rust runtime feeds them back as literals.
+This keeps the HLO text small and lets rust own every buffer on the request
+path.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as ka
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyGptConfig:
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    max_seq: int = 128
+    batch: int = 8
+    d_ff: int = 1024
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIG = TinyGptConfig()
+
+
+def param_spec(cfg: TinyGptConfig) -> List[tuple]:
+    """Canonical (name, shape) list — the contract with the rust runtime."""
+    spec = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.max_seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1_scale", (cfg.d_model,)),
+            (f"l{i}.ln1_bias", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_scale", (cfg.d_model,)),
+            (f"l{i}.ln2_bias", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.b1", (cfg.d_ff,)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.b2", (cfg.d_model,)),
+        ]
+    spec += [("lnf_scale", (cfg.d_model,)), ("lnf_bias", (cfg.d_model,))]
+    return spec
+
+
+def init_params(cfg: TinyGptConfig, seed: int = 0) -> List[jax.Array]:
+    """Seeded random weights (no real checkpoints offline — see DESIGN.md)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_scale",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_bias", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * (1.0 / jnp.sqrt(float(fan_in)))
+            )
+    return params
+
+
+def _unflatten(cfg: TinyGptConfig, flat: List[jax.Array]) -> dict:
+    named = dict(zip([n for n, _ in param_spec(cfg)], flat))
+    return named
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _split_heads(x, cfg):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x, cfg):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def prefill(cfg: TinyGptConfig, flat_params: List[jax.Array], tokens, lengths):
+    """Full-prompt forward pass; returns next-token logits + filled caches."""
+    p = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos_embed"][None, :s, :]
+    k_layers, v_layers = [], []
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        q = _split_heads(h @ p[f"l{i}.wq"], cfg)
+        k = _split_heads(h @ p[f"l{i}.wk"], cfg)
+        v = _split_heads(h @ p[f"l{i}.wv"], cfg)
+        att = ka.prefill_attention(q, k, v, lengths)
+        x = x + _merge_heads(att, cfg) @ p[f"l{i}.wo"]
+        h2 = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+        k_layers.append(k)
+        v_layers.append(v)
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    # Gather last valid position per request.
+    idx = jnp.clip(lengths - 1, 0, s - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]
+    logits = last @ p["embed"].T  # tied unembedding
+    k_cache = jnp.stack(k_layers)  # [L, B, H, S, D]
+    v_cache = jnp.stack(v_layers)
+    return logits, k_cache, v_cache
+
+
+def decode(cfg: TinyGptConfig, flat_params: List[jax.Array], token, k_cache, v_cache, pos):
+    """One autoregressive step for every request in the batch."""
+    p = _unflatten(cfg, flat_params)
+    b = token.shape[0]
+    pos_emb = p["pos_embed"][jnp.clip(pos, 0, cfg.max_seq - 1)]
+    x = p["embed"][token] + pos_emb  # [B, D]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        q = (h @ p[f"l{i}.wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k = (h @ p[f"l{i}.wk"]).reshape(b, cfg.n_heads, cfg.d_head)
+        v = (h @ p[f"l{i}.wv"]).reshape(b, cfg.n_heads, cfg.d_head)
+        # Write this token's K/V into cache slot pos[b].
+        bi = jnp.arange(b)
+        kc = k_cache[i].at[bi, :, pos, :].set(k)
+        vc = v_cache[i].at[bi, :, pos, :].set(v)
+        att = ka.decode_attention(q, kc, vc, pos)  # [B, H, D]
+        x = x + att.reshape(b, cfg.d_model) @ p[f"l{i}.wo"]
+        h2 = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+        new_k.append(kc)
+        new_v.append(vc)
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def pack_state(cfg: TinyGptConfig, logits, k_cache, v_cache):
+    """Flatten (logits, k, v) into one f32 vector: [B*V | k | v].
+
+    A single-array output avoids PJRT tuple outputs, so the rust runtime
+    can keep the whole decode state device-resident and read back only the
+    logits prefix each step (see rust/src/runtime).
+    """
+    return jnp.concatenate(
+        [logits.reshape(-1), k_cache.reshape(-1), v_cache.reshape(-1)]
+    ).astype(jnp.float32)
+
+
+def unpack_state(cfg: TinyGptConfig, packed):
+    """Inverse of :func:`pack_state`."""
+    b, v = cfg.batch, cfg.vocab
+    l, h, s, d = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head
+    n_logits = b * v
+    n_cache = l * b * h * s * d
+    logits = packed[:n_logits].reshape(b, v)
+    k = packed[n_logits:n_logits + n_cache].reshape(l, b, h, s, d)
+    vv = packed[n_logits + n_cache:n_logits + 2 * n_cache].reshape(l, b, h, s, d)
+    return logits, k, vv
+
+
+def packed_len(cfg: TinyGptConfig) -> int:
+    return cfg.batch * cfg.vocab + 2 * cfg.n_layers * cfg.batch * cfg.n_heads * cfg.max_seq * cfg.d_head
+
+
+def prefill_packed(cfg: TinyGptConfig, flat_params, tokens, lengths):
+    logits, k, v = prefill(cfg, flat_params, tokens, lengths)
+    return pack_state(cfg, logits, k, v)
+
+
+def decode_packed(cfg: TinyGptConfig, flat_params, token, packed, pos):
+    _, k, v = unpack_state(cfg, packed)
+    logits, k2, v2 = decode(cfg, flat_params, token, k, v, pos)
+    return pack_state(cfg, logits, k2, v2)
+
+
+def ref_full_forward(cfg: TinyGptConfig, flat_params: List[jax.Array], tokens, lengths):
+    """Reference forward that never touches the Pallas kernels (for tests)."""
+    from .kernels.ref import ref_prefill_attention
+
+    p = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos_embed"][None, :s, :]
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        q = _split_heads(h @ p[f"l{i}.wq"], cfg)
+        k = _split_heads(h @ p[f"l{i}.wk"], cfg)
+        v = _split_heads(h @ p[f"l{i}.wv"], cfg)
+        att = ref_prefill_attention(q, k, v, lengths)
+        x = x + _merge_heads(att, cfg) @ p[f"l{i}.wo"]
+        h2 = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["embed"].T  # logits at every position [B, S, V]

@@ -1,0 +1,118 @@
+"""Kernel-vs-oracle correctness — the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes for both Pallas kernels against the pure-jnp
+oracles in ``compile/kernels/ref.py``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention as ka
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=8,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _mk(seed, b, h, s, d, dtype):
+    k = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(k, 4)
+    q = _rand(kq, (b, h, s, d), dtype)
+    kk_ = _rand(kk, (b, h, s, d), dtype)
+    v = _rand(kv, (b, h, s, d), dtype)
+    lengths = jax.random.randint(kl, (b,), 1, s + 1).astype(jnp.int32)
+    return q, kk_, v, lengths
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([8, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_prefill_matches_ref(seed, b, h, s, d, dtype):
+    q, k, v, lengths = _mk(seed, b, h, s, d, dtype)
+    got = ka.prefill_attention(q, k, v, lengths, block_q=8, block_k=8)
+    want = ref.ref_prefill_attention(q, k, v, lengths)
+    # Only positions inside each request's valid length are meaningful.
+    mask = (np.arange(s)[None, :] < np.asarray(lengths)[:, None])
+    g = np.asarray(got, np.float32)[mask.nonzero()[0], :, mask.nonzero()[1], :]
+    w = np.asarray(want, np.float32)[mask.nonzero()[0], :, mask.nonzero()[1], :]
+    np.testing.assert_allclose(g, w, **TOL[dtype])
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 5),
+    h=st.integers(1, 4),
+    s=st.sampled_from([8, 16, 128]),
+    d=st.sampled_from([8, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_decode_matches_ref(seed, b, h, s, d, dtype):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = _rand(kq, (b, h, d), dtype)
+    kc = _rand(kk, (b, h, s, d), dtype)
+    vc = _rand(kv, (b, h, s, d), dtype)
+    pos = jax.random.randint(kp, (b,), 0, s).astype(jnp.int32)
+    got = ka.decode_attention(q, kc, vc, pos)
+    want = ref.ref_decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_prefill_block_shape_invariance():
+    """Different (block_q, block_k) tilings must agree bit-for-bit-ish."""
+    q, k, v, lengths = _mk(7, 2, 2, 64, 32, jnp.float32)
+    base = ka.prefill_attention(q, k, v, lengths, block_q=64, block_k=64)
+    for bq, bk in [(8, 8), (16, 32), (32, 16), (64, 8)]:
+        other = ka.prefill_attention(q, k, v, lengths, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(other),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_pad_rows_finite():
+    """Fully-masked (pad) rows must produce zeros, never NaN."""
+    q, k, v, _ = _mk(3, 2, 2, 16, 8, jnp.float32)
+    lengths = jnp.array([1, 4], jnp.int32)
+    out = np.asarray(ka.prefill_attention(q, k, v, lengths, block_q=8, block_k=8))
+    assert np.isfinite(out).all()
+
+
+def test_decode_pos_zero_attends_single_slot():
+    """pos=0 means the softmax has exactly one valid slot -> output == v[0]."""
+    b, h, s, d = 2, 2, 8, 4
+    key = jax.random.PRNGKey(0)
+    q = _rand(key, (b, h, d), jnp.float32)
+    kc = _rand(key, (b, h, s, d), jnp.float32)
+    vc = _rand(key, (b, h, s, d), jnp.float32)
+    pos = jnp.zeros((b,), jnp.int32)
+    out = ka.decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vc[:, :, 0, :]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_footprint_model():
+    """The §Perf VMEM model: monotone in block sizes, fits 16 MB for defaults."""
+    base = ka.vmem_footprint_bytes(32, 32, 64, 128)
+    assert base < 16 * 2**20
+    assert ka.vmem_footprint_bytes(64, 32, 64, 128) > base
+    assert ka.vmem_footprint_bytes(32, 64, 64, 128) > base

@@ -1,0 +1,50 @@
+//! Per-iteration cost-model pricing: the innermost hot function of every
+//! simulation (called once per simulated iteration segment).
+
+use samullm::cluster::ClusterSpec;
+use samullm::costmodel::{HardwareModel, IterLatency, LinearIterModel, OutputSampler};
+use samullm::models::Registry;
+use samullm::util::bench::BenchGroup;
+use samullm::util::rng::Rng;
+
+fn main() {
+    let cluster = ClusterSpec::a100_node(8);
+    let hw = HardwareModel::new(cluster.clone());
+    let lm = LinearIterModel::fit_from_profile(&hw);
+    let registry = Registry::paper();
+    let spec = registry.get("vicuna-13b-v1.5").unwrap().clone();
+
+    let mut g = BenchGroup::new("costmodel");
+    g.bench("hardware_decode_x1k", || {
+        let mut acc = 0.0;
+        for b in 1..=1000usize {
+            acc += hw.decode(&spec, 1, b % 256 + 1, (b as u64 % 256 + 1) * 300, 320);
+        }
+        acc
+    });
+    g.bench("linear_decode_x1k", || {
+        let mut acc = 0.0;
+        for b in 1..=1000usize {
+            acc += lm.decode(&spec, 1, b % 256 + 1, (b as u64 % 256 + 1) * 300, 320);
+        }
+        acc
+    });
+    let lens = vec![200u32; 64];
+    g.bench("hardware_prefill_64_x1k", || {
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += hw.prefill(&spec, 1, &lens);
+        }
+        acc
+    });
+    g.bench("fit_from_profile", || LinearIterModel::fit_from_profile(&hw));
+    g.bench("sampler_build", || OutputSampler::from_norobots_trace(1));
+    let sampler = OutputSampler::from_norobots_trace(1);
+    g.bench("sampler_draw_10k", || {
+        let mut rng = Rng::new(2);
+        (0..10_000)
+            .map(|_| sampler.sample("vicuna-13b-v1.5", 30, 512, 4096, &mut rng))
+            .sum::<u32>()
+    });
+    g.finish();
+}

@@ -1,0 +1,36 @@
+//! End-to-end application runs (plan + execute) for each paper experiment:
+//! the meso-benchmarks behind Figs. 7, 8, 11 and 12. Wall-clock here is
+//! our framework's cost to schedule+simulate the whole application —
+//! the paper's "extra time" plus the runner's bookkeeping.
+
+use samullm::apps::{chain_summary, ensembling, mixed, routing};
+use samullm::baselines::PolicyKind;
+use samullm::cluster::ClusterSpec;
+use samullm::runner::{run_policy, RunOpts};
+use samullm::util::bench::BenchGroup;
+
+fn main() {
+    let cluster = ClusterSpec::a100_node(8);
+    let opts = RunOpts::default();
+    let mut g = BenchGroup::new("e2e_apps");
+    g.sample_size(4);
+
+    let s = ensembling::build(1000, 256, 42);
+    g.bench("fig7_ensembling_1k_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+    g.bench("fig7_ensembling_1k_max", || {
+        run_policy(PolicyKind::MaxHeuristic, &s, &cluster, &opts)
+    });
+    g.bench("fig7_ensembling_1k_min", || {
+        run_policy(PolicyKind::MinHeuristic, &s, &cluster, &opts)
+    });
+
+    let s = routing::build(4096, 7);
+    g.bench("fig8_routing_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+
+    let s = chain_summary::build(100, 2, 500, 7);
+    g.bench("fig11_chain_summary_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+
+    let s = mixed::build(100, 1000, 900, 256, 4, 7);
+    g.bench("fig12_mixed_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+    g.finish();
+}

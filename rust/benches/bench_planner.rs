@@ -1,0 +1,30 @@
+//! Planner search time ("extra time" in §5): Algorithm 1 over the paper's
+//! applications. The paper reports 22–69 s on its testbed for ensembling;
+//! our target is to keep search a small fraction of end-to-end time.
+
+use samullm::apps::{chain_summary, ensembling, routing};
+use samullm::cluster::ClusterSpec;
+use samullm::costmodel::CostModel;
+use samullm::models::Registry;
+use samullm::planner::GreedyPlanner;
+use samullm::util::bench::BenchGroup;
+
+fn main() {
+    let cluster = ClusterSpec::a100_node(8);
+    let cost = CostModel::calibrated(&cluster, 1);
+    let planner = GreedyPlanner::new(cost, Registry::paper(), cluster);
+
+    let mut g = BenchGroup::new("planner");
+    g.sample_size(5);
+    for n in [1000usize, 4000] {
+        let s = ensembling::build(n, 256, 42);
+        g.bench(&format!("ensembling_{n}"), || {
+            planner.plan(&s.graph, &s.workloads, false, 7)
+        });
+    }
+    let s = routing::build(4096, 7);
+    g.bench("routing", || planner.plan(&s.graph, &s.workloads, false, 7));
+    let s = chain_summary::build(100, 2, 500, 7);
+    g.bench("chain_summary", || planner.plan(&s.graph, &s.workloads, false, 7));
+    g.finish();
+}

@@ -1,0 +1,52 @@
+//! Real-path benchmarks: PJRT prefill/decode steps of the AOT-compiled
+//! TinyGPT (requires `make artifacts`; benches are skipped otherwise).
+
+use samullm::runtime::{default_artifacts_dir, TinyGpt};
+use samullm::util::bench::BenchGroup;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("bench_runtime skipped: run `make artifacts` first");
+        return;
+    }
+    let model = TinyGpt::load(&dir).expect("load artifacts");
+    let b = model.batch();
+    let s = model.max_seq();
+    let mut tokens = vec![0i32; b * s];
+    for row in 0..b {
+        for i in 0..16 {
+            tokens[row * s + i] = ((row * 7 + i) % 500 + 1) as i32;
+        }
+    }
+    let lengths = vec![16i32; b];
+
+    let mut g = BenchGroup::new("runtime");
+    g.sample_size(8);
+    g.bench("prefill_b8_s128", || model.prefill(&tokens, &lengths).unwrap());
+
+    let out = model.prefill(&tokens, &lengths).unwrap();
+    let next = model.argmax(&out.logits);
+    let pos = vec![16i32; b];
+    g.bench("decode_step_b8", || {
+        let o = model.prefill(&tokens, &lengths).unwrap();
+        model.decode(&next, o.state, &pos).unwrap()
+    });
+    // A short generation loop: prefill + 16 decode steps.
+    g.bench("generate_16_tokens_b8", || {
+        let o = model.prefill(&tokens, &lengths).unwrap();
+        let mut state = o.state;
+        let mut nxt = model.argmax(&o.logits);
+        let mut p: Vec<i32> = lengths.clone();
+        for _ in 0..16 {
+            let o = model.decode(&nxt, state, &p).unwrap();
+            state = o.state;
+            nxt = model.argmax(&o.logits);
+            for x in p.iter_mut() {
+                *x += 1;
+            }
+        }
+        nxt
+    });
+    g.finish();
+}

@@ -1,0 +1,60 @@
+//! Engine-simulator throughput — the planner's inner loop and therefore
+//! the dominant term of "extra time". Compares the exact per-iteration
+//! path with the fast-forward event-jump path.
+
+use samullm::cluster::ClusterSpec;
+use samullm::costmodel::{CostModel, HardwareModel};
+use samullm::engine::sim::{EngineConfig, EngineSim};
+use samullm::engine::EngineRequest;
+use samullm::models::Registry;
+use samullm::util::bench::BenchGroup;
+use samullm::util::rng::Rng;
+
+fn requests(n: usize, seed: u64) -> Vec<EngineRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|i| {
+            let out = samullm::workload::lengths::true_output_len(
+                "vicuna-13b-v1.5",
+                0.0,
+                30,
+                512,
+                4096,
+                &mut rng,
+            );
+            EngineRequest::fresh(i, 30, out)
+        })
+        .collect()
+}
+
+fn main() {
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let spec = registry.get("vicuna-13b-v1.5").unwrap().clone();
+    let hw = HardwareModel::new(cluster.clone());
+    let cm = CostModel::calibrated(&cluster, 1);
+
+    let mut g = BenchGroup::new("simulator");
+    for n in [1000usize, 10000] {
+        let reqs = requests(n, 3);
+        g.bench(&format!("fast_forward_{n}"), || {
+            let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+            let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
+            sim.run(None)
+        });
+        if n == 1000 {
+            g.bench(&format!("exact_{n}"), || {
+                let mut cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+                cfg.fast_forward = false;
+                let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
+                sim.run(None)
+            });
+        }
+        g.bench(&format!("linear_model_{n}"), || {
+            let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+            let mut sim = EngineSim::new(&spec, 1, &cm.iter_model, cfg, reqs.clone(), 0.0, 0);
+            sim.run(None)
+        });
+    }
+    g.finish();
+}

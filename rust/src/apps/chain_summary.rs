@@ -1,0 +1,141 @@
+//! §5.3 chain summary: a summarizer walks each document chunk-by-chunk
+//! (self-loop, fused into per-document request chains), then an evaluator
+//! judges each final summary `eval_times` times (Fig. 5c/d).
+
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::runner::{AppRequest, Scenario};
+use crate::util::rng::Rng;
+use crate::workload::{booksum, lengths};
+
+pub const SUMMARIZER: &str = "vicuna-13b-v1.5";
+pub const EVALUATOR: &str = "llama-2-70b-chat";
+
+/// Build the chain-summary scenario.
+///
+/// * node 0 — summarizer: one request per chunk; chunks of a document form
+///   a chain (each carries the previous summary in its prompt);
+/// * node 1 — evaluator: `eval_times` requests per document, depending on
+///   the document's final chunk.
+pub fn build(n_docs: usize, eval_times: u32, max_out: u32, seed: u64) -> Scenario {
+    let registry = Registry::paper();
+    let docs = booksum::documents(n_docs, seed);
+    let shift = lengths::dataset_shift(seed ^ 0xC5);
+    let mut rng = Rng::new(seed ^ 0x5375_6D);
+
+    let mut graph = AppGraph::default();
+    let s_node = graph.add_node(SUMMARIZER, "summarizer", max_out);
+    let e_node = graph.add_node(EVALUATOR, "evaluator", 256);
+    graph.add_edge(s_node, e_node);
+
+    let s_spec = registry.get(SUMMARIZER).expect("summarizer");
+    let e_spec = registry.get(EVALUATOR).expect("evaluator");
+
+    let mut summarizer_reqs: Vec<AppRequest> = vec![];
+    let mut evaluator_reqs: Vec<AppRequest> = vec![];
+    let mut next_id = 0u64;
+    let mut eval_id = 0u64;
+    for doc in &docs {
+        let mut prev: Option<usize> = None; // index into summarizer_reqs
+        for chunk in 0..doc.n_chunks {
+            // Prompt = chunk text + running summary so far.
+            let carried = if chunk == 0 { 0 } else { max_out.min(s_spec.max_seq / 4) };
+            let input_len =
+                (booksum::CHUNK_TOKENS + carried).min(s_spec.max_seq.saturating_sub(max_out + 8));
+            let out = lengths::true_output_len(
+                SUMMARIZER,
+                shift,
+                input_len,
+                max_out,
+                s_spec.max_seq,
+                &mut rng,
+            );
+            let id = next_id;
+            next_id += 1;
+            let req = AppRequest {
+                id,
+                input_len,
+                true_output_len: out,
+                chain_next: None,
+                chain_blocked: chunk > 0,
+                dep: None,
+            };
+            if let Some(p) = prev {
+                summarizer_reqs[p].chain_next = Some(id);
+            }
+            summarizer_reqs.push(req);
+            prev = Some(summarizer_reqs.len() - 1);
+        }
+        // The document's final summary feeds `eval_times` evaluations.
+        let last_id = summarizer_reqs[prev.expect("documents have >=1 chunk")].id;
+        for _ in 0..eval_times {
+            let input_len = (200 + max_out.min(600)).min(e_spec.max_seq - 300);
+            let out = lengths::true_output_len(
+                EVALUATOR,
+                shift,
+                input_len,
+                256,
+                e_spec.max_seq,
+                &mut rng,
+            );
+            evaluator_reqs.push(AppRequest {
+                id: eval_id,
+                input_len,
+                true_output_len: out,
+                chain_next: None,
+                chain_blocked: false,
+                dep: Some((s_node, last_id)),
+            });
+            eval_id += 1;
+        }
+    }
+
+    Scenario {
+        name: format!("chain-summary-{n_docs}docs-eval{eval_times}-out{max_out}"),
+        graph,
+        workloads: vec![summarizer_reqs, evaluator_reqs],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::booksum::documents;
+
+    #[test]
+    fn chains_mirror_documents() {
+        let s = build(50, 2, 400, 7);
+        let docs = documents(50, 7);
+        let total_chunks: u64 = docs.iter().map(|d| d.n_chunks as u64).sum();
+        assert_eq!(s.workloads[0].len() as u64, total_chunks);
+        assert_eq!(s.workloads[1].len(), 50 * 2);
+        // Chain structure: #chain_next links = chunks - docs.
+        let links = s.workloads[0].iter().filter(|r| r.chain_next.is_some()).count() as u64;
+        assert_eq!(links, total_chunks - 50);
+        // First chunk of each doc is unblocked; the rest are blocked.
+        let blocked = s.workloads[0].iter().filter(|r| r.chain_blocked).count() as u64;
+        assert_eq!(blocked, total_chunks - 50);
+    }
+
+    #[test]
+    fn evaluator_depends_on_final_chunks() {
+        let s = build(30, 3, 500, 9);
+        for r in &s.workloads[1] {
+            let dep = r.dep.expect("evaluator requests depend on summaries");
+            assert_eq!(dep.0, 0);
+            // Dep target must be a chain *tail* (no chain_next).
+            let target = s.workloads[0].iter().find(|q| q.id == dep.1).unwrap();
+            assert!(target.chain_next.is_none(), "dep must be the final chunk");
+        }
+    }
+
+    #[test]
+    fn prompt_fits_context_window() {
+        for max_out in [100, 500, 900] {
+            let s = build(20, 1, max_out, 11);
+            for r in &s.workloads[0] {
+                assert!(r.input_len + r.true_output_len <= 4096, "out={max_out}");
+            }
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! §5.1 LLM ensembling: every model answers every request independently
+//! (LLM-Blender's 9-model zoo over MixInstruct-like inputs).
+
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::runner::{AppRequest, Scenario};
+use crate::util::rng::Rng;
+use crate::workload::{lengths, mixinstruct};
+
+/// Build the ensembling scenario: `n_requests` inputs, answered by all 9
+/// models under `max_out` (the paper tests 256 and 512).
+pub fn build(n_requests: usize, max_out: u32, seed: u64) -> Scenario {
+    let models = Registry::ensembling_models();
+    let registry = Registry::paper();
+    let inputs = mixinstruct::inputs(n_requests, seed);
+    let shift = lengths::dataset_shift(seed ^ 0xE25);
+
+    let mut graph = AppGraph::default();
+    let mut workloads = vec![];
+    let mut rng = Rng::new(seed ^ 0x454E53);
+    for (i, m) in models.iter().enumerate() {
+        graph.add_node(m, &format!("ensemble-{i}"), max_out);
+        let spec = registry.get(m).expect("model");
+        let w: Vec<AppRequest> = inputs
+            .iter()
+            .map(|inp| {
+                let out = lengths::true_output_len(
+                    m,
+                    shift,
+                    inp.input_len,
+                    max_out,
+                    spec.max_seq,
+                    &mut rng,
+                );
+                AppRequest::simple(inp.id, inp.input_len, out)
+            })
+            .collect();
+        workloads.push(w);
+    }
+    Scenario { name: format!("ensembling-{n_requests}req-out{max_out}"), graph, workloads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_independent_nodes() {
+        let s = build(100, 256, 1);
+        assert_eq!(s.graph.n_nodes(), 9);
+        assert!(s.graph.edges.is_empty());
+        assert_eq!(s.workloads.len(), 9);
+        for w in &s.workloads {
+            assert_eq!(w.len(), 100);
+            assert!(w.iter().all(|r| r.true_output_len <= 256));
+            assert!(w.iter().all(|r| (5..=127).contains(&r.input_len)));
+        }
+    }
+
+    #[test]
+    fn per_model_output_distributions_differ() {
+        let s = build(500, 512, 2);
+        let mean = |w: &Vec<AppRequest>| {
+            w.iter().map(|r| r.true_output_len as f64).sum::<f64>() / w.len() as f64
+        };
+        let means: Vec<f64> = s.workloads.iter().map(mean).collect();
+        let min = means.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = means.iter().copied().fold(0.0, f64::max);
+        assert!(max / min > 1.15, "models should have different styles: {means:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = build(50, 256, 3);
+        let b = build(50, 256, 3);
+        for (wa, wb) in a.workloads.iter().zip(&b.workloads) {
+            assert!(wa
+                .iter()
+                .zip(wb)
+                .all(|(x, y)| x.true_output_len == y.true_output_len));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! §5.4 mixed application: chain summary + LLM ensembling scheduled as one
+//! computation graph (the paper shows whole-app scheduling beats running
+//! the two apps sequentially).
+
+use crate::runner::Scenario;
+
+use super::{chain_summary, ensembling};
+
+/// Merge two scenarios into one graph (disjoint union, node ids offset).
+pub fn merge(a: Scenario, b: Scenario, name: &str) -> Scenario {
+    let mut graph = a.graph.clone();
+    let offset = graph.n_nodes();
+    for n in &b.graph.nodes {
+        graph.add_node(&n.model, &n.label, n.max_out);
+    }
+    for &(f, t) in &b.graph.edges {
+        graph.add_edge(f + offset, t + offset);
+    }
+    let mut workloads = a.workloads;
+    for w in b.workloads {
+        workloads.push(
+            w.into_iter()
+                .map(|mut r| {
+                    if let Some((n, id)) = r.dep {
+                        r.dep = Some((n + offset, id));
+                    }
+                    r
+                })
+                .collect(),
+        );
+    }
+    Scenario { name: name.to_string(), graph, workloads }
+}
+
+/// Build the §5.4 mixture: `n_docs` chain-summary documents (4 evals,
+/// max_out 900 in the paper) + `n_ens` ensembling requests (max_out 256).
+pub fn build(
+    n_docs: usize,
+    n_ens: usize,
+    summary_max_out: u32,
+    ensemble_max_out: u32,
+    eval_times: u32,
+    seed: u64,
+) -> Scenario {
+    let cs = chain_summary::build(n_docs, eval_times, summary_max_out, seed);
+    let en = ensembling::build(n_ens, ensemble_max_out, seed ^ 0x4D49_58);
+    merge(cs, en, &format!("mixed-{n_docs}docs-{n_ens}ens"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merged_graph_shape() {
+        let s = build(20, 100, 900, 256, 4, 1);
+        // 2 chain-summary nodes + 9 ensembling nodes.
+        assert_eq!(s.graph.n_nodes(), 11);
+        assert_eq!(s.graph.edges.len(), 1);
+        assert_eq!(s.workloads.len(), 11);
+    }
+
+    #[test]
+    fn dep_offsets_remapped() {
+        let s = build(10, 50, 500, 256, 2, 2);
+        // Evaluator (node 1) deps still point at the summarizer (node 0).
+        for r in &s.workloads[1] {
+            assert_eq!(r.dep.unwrap().0, 0);
+        }
+        // Ensembling nodes (2..) have no deps.
+        for w in &s.workloads[2..] {
+            assert!(w.iter().all(|r| r.dep.is_none()));
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! The paper's applications (§5, Fig. 5) as runnable [`Scenario`]s.
+
+pub mod chain_summary;
+pub mod ensembling;
+pub mod mixed;
+pub mod routing;
+
+pub use crate::runner::Scenario;

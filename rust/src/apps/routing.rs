@@ -1,0 +1,67 @@
+//! §5.2 LLM routing: each request goes only to its best model
+//! (RouterBench's open-source five, Table 1 proportions).
+
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::runner::{AppRequest, Scenario};
+use crate::workload::routerbench;
+
+/// Build the routing scenario. The dataset ships true response lengths;
+/// `max_out` caps them (the paper uses 4096 when lengths are unknown).
+pub fn build(max_out: u32, seed: u64) -> Scenario {
+    let registry = Registry::paper();
+    let data = routerbench::dataset(seed);
+    let mut graph = AppGraph::default();
+    let mut workloads: Vec<Vec<AppRequest>> = vec![];
+    let models = Registry::routing_models();
+    for (i, m) in models.iter().enumerate() {
+        graph.add_node(m, &format!("route-{i}"), max_out);
+        workloads.push(vec![]);
+    }
+    for r in &data {
+        let node = models.iter().position(|m| *m == r.model).expect("routed model");
+        let spec = registry.get(r.model).expect("model");
+        let window = spec.max_seq.saturating_sub(r.input_len).max(1);
+        let out = r.output_len.min(max_out).min(window).max(1);
+        workloads[node].push(AppRequest::simple(r.id, r.input_len, out));
+    }
+    Scenario { name: format!("routing-out{max_out}"), graph, workloads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::routerbench::TABLE1;
+
+    #[test]
+    fn five_nodes_with_table1_counts() {
+        let s = build(4096, 1);
+        assert_eq!(s.graph.n_nodes(), 5);
+        for (i, (_, count)) in TABLE1.iter().enumerate() {
+            assert_eq!(s.workloads[i].len(), *count);
+        }
+    }
+
+    #[test]
+    fn outputs_match_dataset_when_uncapped() {
+        let s = build(4096, 2);
+        let total: usize = s.workloads.iter().map(|w| w.len()).sum();
+        assert_eq!(total, 6856);
+        let mean: f64 = s
+            .workloads
+            .iter()
+            .flatten()
+            .map(|r| r.true_output_len as f64)
+            .sum::<f64>()
+            / total as f64;
+        assert!((140.0..260.0).contains(&mean), "mean={mean} (paper 199)");
+    }
+
+    #[test]
+    fn skewed_load_across_models() {
+        // Mistral gets ~6.5x llama-70b's requests (Table 1) — the paper's
+        // point that per-model workloads differ wildly in routing.
+        let s = build(4096, 3);
+        assert!(s.workloads[4].len() > 6 * s.workloads[0].len());
+    }
+}

@@ -1,0 +1,233 @@
+//! Stage construction for the §5 competitor policies.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cluster::ClusterSpec;
+use crate::costmodel::IterLatency;
+use crate::graph::AppGraph;
+use crate::models::{ModelSpec, Registry};
+use crate::plan::{ExecPlan, Stage, StageEntry};
+use crate::runner::state::ExecState;
+
+/// Minimum GPUs a model needs (smallest valid tp).
+pub fn min_gpus(spec: &ModelSpec, cluster: &ClusterSpec) -> Option<u32> {
+    cluster
+        .valid_tp()
+        .into_iter()
+        .find(|&tp| ExecPlan::new(1, tp).is_valid_for(spec, cluster))
+}
+
+/// The largest-utilisation plan for `spec` inside a `gpus` budget, using
+/// the smallest valid tp (pure data parallelism when the model fits one
+/// GPU — the Min-heuristic's shape).
+pub fn smallest_valid_plan(spec: &ModelSpec, cluster: &ClusterSpec, gpus: u32) -> Option<ExecPlan> {
+    let tp = min_gpus(spec, cluster)?;
+    if tp > gpus {
+        return None;
+    }
+    let dp = (gpus / tp).max(1);
+    let plan = ExecPlan::new(dp, tp);
+    plan.is_valid_for(spec, cluster).then_some(plan)
+}
+
+/// Max-heuristic (§5): all GPUs to a single ready LLM, with the plan the
+/// cost model says completes its remaining workload fastest.
+pub fn max_heuristic_stage(
+    graph: &AppGraph,
+    est_state: &ExecState,
+    registry: &Registry,
+    cluster: &ClusterSpec,
+    lat: &dyn IterLatency,
+) -> Option<Stage> {
+    let ready = graph.ready_nodes(&est_state.finished_nodes, &HashSet::new());
+    let node = *ready.first()?;
+    let spec = registry.get(&graph.nodes[node].model)?;
+    // Full-node plans: dp*tp == n_gpus.
+    let mut best: Option<(f64, ExecPlan)> = None;
+    for tp in cluster.valid_tp() {
+        let dp = cluster.n_gpus / tp;
+        let plan = ExecPlan::new(dp, tp);
+        if !plan.is_valid_for(spec, cluster) {
+            continue;
+        }
+        let stage = Stage { entries: vec![StageEntry { node, plan }] };
+        let mut scratch = est_state.clone();
+        let res = scratch.run_stage(
+            &stage,
+            graph,
+            registry,
+            lat,
+            cluster.mem_bytes,
+            &HashMap::new(),
+            true,
+            false,
+        );
+        let t = res.end - res.start;
+        if best.map(|(bt, _)| t < bt).unwrap_or(true) {
+            best = Some((t, plan));
+        }
+    }
+    best.map(|(_, plan)| Stage { entries: vec![StageEntry { node, plan }] })
+}
+
+/// Min-heuristic (§5): split all GPUs as evenly as possible across as many
+/// ready LLMs as possible. `locked` pins plans of already-running nodes
+/// (used by both the normal variant — which re-splits every stage — and
+/// the no-preemption variant, which passes every running node as locked).
+pub fn min_heuristic_stage(
+    graph: &AppGraph,
+    est_state: &ExecState,
+    registry: &Registry,
+    cluster: &ClusterSpec,
+    locked: &HashMap<usize, ExecPlan>,
+) -> Option<Stage> {
+    let mut entries: Vec<StageEntry> = vec![];
+    let mut gpus_left = cluster.n_gpus;
+    // Locked nodes first (unchanged plans).
+    for (&node, &plan) in locked {
+        if est_state.finished_nodes.contains(&node) {
+            continue;
+        }
+        if plan.n_gpus() <= gpus_left {
+            entries.push(StageEntry { node, plan });
+            gpus_left -= plan.n_gpus();
+        }
+    }
+    let in_stage: HashSet<usize> = entries.iter().map(|e| e.node).collect();
+    let mut ready: Vec<usize> = graph
+        .ready_nodes(&est_state.finished_nodes, &in_stage)
+        .into_iter()
+        .filter(|n| !in_stage.contains(n))
+        .collect();
+    ready.sort_unstable();
+
+    // Figure out how many of the ready models fit, largest-first greedy on
+    // minimum footprints.
+    let mut chosen: Vec<(usize, u32)> = vec![]; // (node, min_gpus)
+    let mut budget = gpus_left;
+    for &n in &ready {
+        let spec = registry.get(&graph.nodes[n].model)?;
+        if let Some(mg) = min_gpus(spec, cluster) {
+            if mg <= budget {
+                chosen.push((n, mg));
+                budget -= mg;
+            }
+        }
+    }
+    if chosen.is_empty() {
+        return (!entries.is_empty()).then_some(Stage { entries });
+    }
+    // Distribute the remaining budget round-robin (+1 each) for evenness.
+    let mut alloc: Vec<u32> = chosen.iter().map(|&(_, mg)| mg).collect();
+    let mut i = 0;
+    let n_alloc = alloc.len();
+    while budget > 0 {
+        alloc[i % n_alloc] += 1;
+        budget -= 1;
+        i += 1;
+    }
+    for ((node, _), gpus) in chosen.iter().zip(alloc) {
+        let spec = registry.get(&graph.nodes[*node].model)?;
+        if let Some(plan) = smallest_valid_plan(spec, cluster, gpus) {
+            entries.push(StageEntry { node: *node, plan });
+        }
+    }
+    (!entries.is_empty()).then_some(Stage { entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::runner::state::AppRequest;
+
+    fn ctx() -> (ClusterSpec, Registry, CostModel) {
+        let c = ClusterSpec::a100_node(8);
+        let cm = CostModel::calibrated(&c, 1);
+        (c, Registry::paper(), cm)
+    }
+
+    fn app(models: &[&str], reqs: usize) -> (AppGraph, Vec<Vec<AppRequest>>) {
+        let mut g = AppGraph::default();
+        let mut w = vec![];
+        for m in models {
+            g.add_node(m, m, 256);
+            w.push((0..reqs as u64).map(|i| AppRequest::simple(i, 20, 120)).collect());
+        }
+        (g, w)
+    }
+
+    #[test]
+    fn max_uses_all_gpus_on_one_node() {
+        let (c, reg, cm) = ctx();
+        let (g, w) = app(&["chatglm3-6b", "alpaca-13b"], 500);
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let stage = max_heuristic_stage(&g, &st, &reg, &c, &cm.iter_model).unwrap();
+        assert_eq!(stage.entries.len(), 1);
+        assert_eq!(stage.n_gpus(), 8);
+    }
+
+    #[test]
+    fn min_splits_evenly() {
+        let (c, reg, _) = ctx();
+        let (g, w) = app(&["chatglm3-6b", "alpaca-13b", "koala-13b", "mpt-7b-chat"], 500);
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let stage = min_heuristic_stage(&g, &st, &reg, &c, &HashMap::new()).unwrap();
+        assert_eq!(stage.entries.len(), 4);
+        for e in &stage.entries {
+            assert_eq!(e.plan.n_gpus(), 2, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn min_respects_big_model_footprint() {
+        let (c, reg, _) = ctx();
+        let (g, w) = app(&["llama-2-70b-chat", "mistral-7b-instruct"], 300);
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let stage = min_heuristic_stage(&g, &st, &reg, &c, &HashMap::new()).unwrap();
+        let p70 = stage.plan_of(0).unwrap();
+        assert!(p70.tp >= 2, "70B can't run at tp=1: {p70:?}");
+        assert!(stage.n_gpus() <= 8);
+    }
+
+    #[test]
+    fn min_with_more_models_than_gpus() {
+        let (c, reg, _) = ctx();
+        let names: Vec<&str> = Registry::ensembling_models();
+        let (g, w) = app(&names, 100);
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let stage = min_heuristic_stage(&g, &st, &reg, &c, &HashMap::new()).unwrap();
+        // 9 models, 8 GPUs -> at most 8 scheduled, 1 GPU each.
+        assert!(stage.entries.len() <= 8);
+        assert!(stage.n_gpus() <= 8);
+        assert!(stage.entries.len() >= 7);
+    }
+
+    #[test]
+    fn locked_plans_survive() {
+        let (c, reg, _) = ctx();
+        let (g, w) = app(&["chatglm3-6b", "alpaca-13b", "koala-13b"], 400);
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut locked = HashMap::new();
+        locked.insert(0usize, ExecPlan::new(1, 1));
+        let stage = min_heuristic_stage(&g, &st, &reg, &c, &locked).unwrap();
+        assert_eq!(stage.plan_of(0), Some(ExecPlan::new(1, 1)));
+        // Remaining 7 GPUs split across the other two (4/3 or 3/4).
+        let g1 = stage.plan_of(1).unwrap().n_gpus();
+        let g2 = stage.plan_of(2).unwrap().n_gpus();
+        assert_eq!(g1 + g2, 7);
+        assert!((g1 as i32 - g2 as i32).abs() <= 1);
+    }
+
+    #[test]
+    fn smallest_valid_plan_prefers_dp() {
+        let (c, reg, _) = ctx();
+        let small = reg.get("mistral-7b-instruct").unwrap();
+        let plan = smallest_valid_plan(small, &c, 4).unwrap();
+        assert_eq!(plan, ExecPlan::new(4, 1));
+        let big = reg.get("llama-2-70b-chat").unwrap();
+        let plan = smallest_valid_plan(big, &c, 4).unwrap();
+        assert_eq!(plan.tp, 2);
+        assert_eq!(plan.dp, 2);
+    }
+}

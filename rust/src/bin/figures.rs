@@ -1,0 +1,22 @@
+//! Regenerate the paper's tables and figures: `figures <id>|all [--quick]`.
+//! Ids: fig2 fig3 fig4 fig7 table1 fig8 fig9 fig10 fig11 fig12 fig13
+//!      fig14 fig15 errors  (see DESIGN.md's experiment index).
+
+use samullm::harness;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let ids: Vec<&str> = args.iter().filter(|a| *a != "--quick").map(|s| s.as_str()).collect();
+    let ids: Vec<&str> = if ids.is_empty() || ids == ["all"] {
+        harness::ALL_FIGURES.to_vec()
+    } else {
+        ids
+    };
+    for id in ids {
+        match harness::run_figure(id, quick) {
+            Some(text) => println!("{text}"),
+            None => eprintln!("unknown figure id: {id} (known: {:?})", harness::ALL_FIGURES),
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Simulated single-node multi-GPU cluster (the paper's 8×A100-80G testbed).
+//!
+//! The scheduling problem consumes only: GPU count, per-GPU memory, which
+//! GPU sets may form a tensor-parallel group (NVLink constraint), and the
+//! interconnect bandwidths that feed the cost model. This module provides
+//! that inventory plus the §4.3 minimum-reload placement solver.
+
+pub mod placement;
+
+pub use placement::{Placement, ReloadPlan};
+
+
+/// Hardware description of the node.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub n_gpus: u32,
+    /// Usable HBM per GPU in bytes (80 GB minus runtime reserve).
+    pub mem_bytes: u64,
+    /// HBM bandwidth per GPU (bytes/s).
+    pub hbm_bw: f64,
+    /// Dense bf16/fp16 peak per GPU (FLOP/s).
+    pub peak_flops: f64,
+    /// NVLink bandwidth within a linked pair (bytes/s, per direction).
+    pub nvlink_bw: f64,
+    /// PCIe bandwidth between unlinked GPUs (bytes/s).
+    pub pcie_bw: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed: `n` A100-80G GPUs, NVLink in adjacent pairs
+    /// (GPU 0–1, 2–3, …), PCIe across pairs.
+    pub fn a100_node(n: u32) -> Self {
+        assert!(n.is_power_of_two() && n >= 1, "gpu count must be a power of two");
+        ClusterSpec {
+            n_gpus: n,
+            mem_bytes: (80u64 << 30) - (6u64 << 30), // 6 GB runtime reserve
+            hbm_bw: 2.0e12,
+            peak_flops: 312.0e12,
+            nvlink_bw: 300.0e9,
+            pcie_bw: 32.0e9,
+        }
+    }
+
+    /// Whether two GPUs share an NVLink (adjacent even/odd pair).
+    pub fn nvlinked(&self, a: u32, b: u32) -> bool {
+        a / 2 == b / 2 && a != b
+    }
+
+    /// Effective all-reduce bandwidth for a TP group of size `tp` rooted at
+    /// an aligned block. `tp<=2` stays inside an NVLink pair; larger groups
+    /// bottleneck on PCIe hops across pairs.
+    pub fn tp_group_bw(&self, tp: u32) -> f64 {
+        match tp {
+            0 | 1 => f64::INFINITY,
+            2 => self.nvlink_bw,
+            _ => self.pcie_bw,
+        }
+    }
+
+    /// Valid tensor-parallel degrees on this node. TP groups are aligned
+    /// power-of-two blocks so tp=2 groups always coincide with NVLink pairs
+    /// (the paper's placement rule, §4.3).
+    pub fn valid_tp(&self) -> Vec<u32> {
+        let mut v = vec![];
+        let mut tp = 1;
+        while tp <= self.n_gpus {
+            v.push(tp);
+            tp *= 2;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_node_shape() {
+        let c = ClusterSpec::a100_node(8);
+        assert_eq!(c.n_gpus, 8);
+        assert_eq!(c.valid_tp(), vec![1, 2, 4, 8]);
+        assert!(c.mem_bytes > 70 << 30);
+    }
+
+    #[test]
+    fn nvlink_pairs_are_adjacent() {
+        let c = ClusterSpec::a100_node(8);
+        assert!(c.nvlinked(0, 1));
+        assert!(c.nvlinked(3, 2));
+        assert!(!c.nvlinked(1, 2));
+        assert!(!c.nvlinked(0, 0));
+        assert!(!c.nvlinked(0, 7));
+    }
+
+    #[test]
+    fn tp_bandwidth_tiers() {
+        let c = ClusterSpec::a100_node(8);
+        assert!(c.tp_group_bw(1).is_infinite());
+        assert_eq!(c.tp_group_bw(2), c.nvlink_bw);
+        assert_eq!(c.tp_group_bw(4), c.pcie_bw);
+        assert_eq!(c.tp_group_bw(8), c.pcie_bw);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        ClusterSpec::a100_node(6);
+    }
+}

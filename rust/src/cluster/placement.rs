@@ -1,0 +1,277 @@
+//! GPU placement with the §4.3 minimum-reload rule.
+//!
+//! Tensor-parallel groups occupy *aligned* power-of-two GPU blocks so that
+//! tp=2 groups always coincide with NVLink pairs (the paper's example: a
+//! tp=2 model may load on GPUs 0–1 or 2–3, never 1–2). When a new stage
+//! starts, replicas that keep their `(owner, tp)` shape stay where they
+//! are; everything else is (re)loaded into free blocks, and the stage pays
+//! the loading time of the slowest newly-loaded replica (loads proceed in
+//! parallel on disjoint GPUs).
+//!
+//! Owners are opaque ids (application *nodes*, not model names — the same
+//! LLM may appear at two different nodes and must be two instances).
+
+
+use super::ClusterSpec;
+
+/// One replica pinned to the aligned GPU block `[start, start+tp)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Group {
+    /// Owning application node.
+    pub owner: u64,
+    pub tp: u32,
+    pub start: u32,
+}
+
+impl Group {
+    pub fn gpus(&self) -> impl Iterator<Item = u32> + '_ {
+        self.start..self.start + self.tp
+    }
+}
+
+/// Assignment of replicas to GPU blocks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Placement {
+    pub n_gpus: u32,
+    pub groups: Vec<Group>,
+}
+
+/// Outcome of a stage transition: the new placement, which replicas must be
+/// (re)loaded, and the wall-clock loading cost per owner.
+#[derive(Debug, Clone)]
+pub struct ReloadPlan {
+    pub placement: Placement,
+    pub new_groups: Vec<Group>,
+    /// Max load time across newly loaded replicas (loads are parallel).
+    pub load_time: f64,
+    /// Per-owner load time (0 for owners whose replicas were all kept).
+    pub load_time_by_owner: std::collections::HashMap<u64, f64>,
+}
+
+impl Placement {
+    pub fn empty(n_gpus: u32) -> Self {
+        Placement { n_gpus, groups: vec![] }
+    }
+
+    /// Per-GPU occupancy bitmap.
+    pub fn occupied(&self) -> Vec<bool> {
+        let mut m = vec![false; self.n_gpus as usize];
+        for g in &self.groups {
+            for gpu in g.gpus() {
+                m[gpu as usize] = true;
+            }
+        }
+        m
+    }
+
+    pub fn gpus_used(&self) -> u32 {
+        self.groups.iter().map(|g| g.tp).sum()
+    }
+
+    /// All placements must keep groups on aligned blocks inside the node.
+    pub fn is_valid(&self, cluster: &ClusterSpec) -> bool {
+        if self.n_gpus != cluster.n_gpus {
+            return false;
+        }
+        let mut occ = vec![false; self.n_gpus as usize];
+        for g in &self.groups {
+            if !g.tp.is_power_of_two() || g.start % g.tp != 0 || g.start + g.tp > self.n_gpus {
+                return false;
+            }
+            for gpu in g.gpus() {
+                if occ[gpu as usize] {
+                    return false; // overlap
+                }
+                occ[gpu as usize] = true;
+            }
+        }
+        true
+    }
+
+    /// Find the lowest free aligned block of size `tp`, if any.
+    fn find_block(occ: &[bool], tp: u32) -> Option<u32> {
+        let n = occ.len() as u32;
+        let mut start = 0;
+        while start + tp <= n {
+            if (start..start + tp).all(|g| !occ[g as usize]) {
+                return Some(start);
+            }
+            start += tp; // aligned scan
+        }
+        None
+    }
+
+    /// Transition to a stage requiring `needs` = [(owner, dp, tp)], with
+    /// `load_time(owner, tp)` giving the profiled loading cost.
+    ///
+    /// Returns `None` only if the request cannot fit the node at all.
+    /// Minimum-reload policy: keep every replica whose `(owner, tp)`
+    /// matches the previous placement, then first-fit the rest; if
+    /// fragmentation from kept groups blocks allocation, retry from an
+    /// empty node (full reload) before giving up.
+    pub fn transition(
+        prev: &Placement,
+        needs: &[(u64, u32, u32)],
+        cluster: &ClusterSpec,
+        load_time: &dyn Fn(u64, u32) -> f64,
+    ) -> Option<ReloadPlan> {
+        let total: u32 = needs.iter().map(|(_, dp, tp)| dp * tp).sum();
+        if total > cluster.n_gpus {
+            return None;
+        }
+        Self::transition_keeping(prev, needs, cluster, load_time).or_else(|| {
+            Self::transition_keeping(&Placement::empty(cluster.n_gpus), needs, cluster, load_time)
+        })
+    }
+
+    fn transition_keeping(
+        prev: &Placement,
+        needs: &[(u64, u32, u32)],
+        cluster: &ClusterSpec,
+        load_time: &dyn Fn(u64, u32) -> f64,
+    ) -> Option<ReloadPlan> {
+        let mut kept: Vec<Group> = vec![];
+        let mut pending: Vec<(u64, u32)> = vec![];
+        let mut available: Vec<Group> = prev.groups.clone();
+
+        for (owner, dp, tp) in needs {
+            for _ in 0..*dp {
+                if let Some(i) =
+                    available.iter().position(|g| g.owner == *owner && g.tp == *tp)
+                {
+                    kept.push(available.remove(i));
+                } else {
+                    pending.push((*owner, *tp));
+                }
+            }
+        }
+
+        let mut placement = Placement { n_gpus: cluster.n_gpus, groups: kept };
+        let mut occ = placement.occupied();
+        pending.sort_by(|a, b| b.1.cmp(&a.1)); // largest groups first
+        let mut new_groups = vec![];
+        for (owner, tp) in pending {
+            let start = Self::find_block(&occ, tp)?;
+            let g = Group { owner, tp, start };
+            for gpu in g.gpus() {
+                occ[gpu as usize] = true;
+            }
+            new_groups.push(g);
+            placement.groups.push(g);
+        }
+
+        let mut by_owner = std::collections::HashMap::new();
+        let mut max_load = 0.0f64;
+        for g in &new_groups {
+            let t = load_time(g.owner, g.tp);
+            let e = by_owner.entry(g.owner).or_insert(0.0f64);
+            *e = e.max(t);
+            max_load = max_load.max(t);
+        }
+        debug_assert!(placement.is_valid(cluster));
+        Some(ReloadPlan { placement, new_groups, load_time: max_load, load_time_by_owner: by_owner })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn setup() -> ClusterSpec {
+        ClusterSpec::a100_node(8)
+    }
+
+    fn loader() -> impl Fn(u64, u32) -> f64 {
+        let reg = Registry::paper();
+        move |owner, tp| {
+            let names = ["chatglm3-6b", "vicuna-13b-v1.5", "llama-2-70b-chat", "mistral-7b-instruct"];
+            reg.get(names[(owner as usize) % names.len()]).unwrap().load_time(tp)
+        }
+    }
+
+    #[test]
+    fn fresh_allocation_loads_everything() {
+        let c = setup();
+        let lt = loader();
+        let plan = Placement::transition(
+            &Placement::empty(8),
+            &[(0, 2, 1), (1, 1, 2)],
+            &c,
+            &lt,
+        )
+        .unwrap();
+        assert_eq!(plan.new_groups.len(), 3);
+        assert!(plan.load_time > 0.0);
+        assert!(plan.placement.is_valid(&c));
+        assert_eq!(plan.placement.gpus_used(), 4);
+        assert_eq!(plan.load_time_by_owner.len(), 2);
+    }
+
+    #[test]
+    fn unchanged_replicas_are_kept_free() {
+        let c = setup();
+        let lt = loader();
+        let first =
+            Placement::transition(&Placement::empty(8), &[(0, 4, 2)], &c, &lt).unwrap();
+        let second = Placement::transition(&first.placement, &[(0, 4, 2)], &c, &lt).unwrap();
+        assert!(second.new_groups.is_empty());
+        assert_eq!(second.load_time, 0.0);
+        assert_eq!(second.placement, first.placement);
+    }
+
+    #[test]
+    fn tp2_groups_sit_on_nvlink_pairs() {
+        let c = setup();
+        let lt = loader();
+        let plan =
+            Placement::transition(&Placement::empty(8), &[(1, 4, 2)], &c, &lt).unwrap();
+        for g in &plan.placement.groups {
+            assert_eq!(g.start % 2, 0, "tp=2 must start on an even GPU");
+            let gpus: Vec<u32> = g.gpus().collect();
+            assert!(c.nvlinked(gpus[0], gpus[1]));
+        }
+    }
+
+    #[test]
+    fn overflow_is_rejected() {
+        let c = setup();
+        let lt = loader();
+        assert!(Placement::transition(&Placement::empty(8), &[(0, 9, 1)], &c, &lt).is_none());
+    }
+
+    #[test]
+    fn fragmentation_falls_back_to_full_reload() {
+        let c = setup();
+        let lt = loader();
+        let a = Placement::transition(&Placement::empty(8), &[(0, 6, 1)], &c, &lt).unwrap();
+        let b = Placement::transition(&a.placement, &[(2, 1, 8)], &c, &lt).unwrap();
+        assert_eq!(b.placement.groups.len(), 1);
+        assert_eq!(b.placement.groups[0].tp, 8);
+    }
+
+    #[test]
+    fn partial_keep_counts_only_new_loads() {
+        let c = setup();
+        let lt = loader();
+        let a = Placement::transition(&Placement::empty(8), &[(0, 2, 1)], &c, &lt).unwrap();
+        let b =
+            Placement::transition(&a.placement, &[(0, 2, 1), (3, 1, 2)], &c, &lt).unwrap();
+        assert_eq!(b.new_groups.len(), 1);
+        assert_eq!(b.new_groups[0].owner, 3);
+        assert_eq!(b.load_time_by_owner.get(&0), None);
+        assert!(b.load_time_by_owner[&3] > 0.0);
+    }
+
+    #[test]
+    fn same_model_two_nodes_are_distinct_instances() {
+        // Owner 0 and owner 4 may run the same LLM; keeping owner 0's
+        // replica must not satisfy owner 4's need.
+        let c = setup();
+        let lt = loader();
+        let a = Placement::transition(&Placement::empty(8), &[(0, 1, 1)], &c, &lt).unwrap();
+        let b = Placement::transition(&a.placement, &[(4, 1, 1)], &c, &lt).unwrap();
+        assert_eq!(b.new_groups.len(), 1);
+        assert_eq!(b.new_groups[0].owner, 4);
+    }
+}

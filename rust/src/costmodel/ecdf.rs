@@ -1,0 +1,112 @@
+//! Empirical cumulative distribution functions over output lengths (§2).
+
+use crate::util::rng::Rng;
+
+/// An eCDF over non-negative integer lengths, stored as a sorted sample.
+#[derive(Debug, Clone)]
+pub struct Ecdf {
+    sorted: Vec<u32>,
+}
+
+impl Ecdf {
+    /// Build from raw observations (at least one required).
+    pub fn from_samples(mut samples: Vec<u32>) -> Self {
+        assert!(!samples.is_empty(), "eCDF needs at least one sample");
+        samples.sort_unstable();
+        Ecdf { sorted: samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// `P(X <= x)`.
+    pub fn cdf(&self, x: u32) -> f64 {
+        // partition_point = number of elements <= x.
+        let cnt = self.sorted.partition_point(|&v| v <= x);
+        cnt as f64 / self.sorted.len() as f64
+    }
+
+    /// Inverse CDF: smallest observed value with `cdf >= q`.
+    pub fn quantile(&self, q: f64) -> u32 {
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((q * self.sorted.len() as f64).ceil() as usize).max(1) - 1;
+        self.sorted[idx.min(self.sorted.len() - 1)]
+    }
+
+    /// Draw one value by inverse-transform sampling.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        self.quantile(rng.uniform())
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sorted.iter().map(|&v| v as f64).sum::<f64>() / self.sorted.len() as f64
+    }
+
+    pub fn min(&self) -> u32 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> u32 {
+        *self.sorted.last().unwrap()
+    }
+
+    /// Evaluate the eCDF on a fixed grid — used to print Fig. 2 series.
+    pub fn curve(&self, xs: &[u32]) -> Vec<(u32, f64)> {
+        xs.iter().map(|&x| (x, self.cdf(x))).collect()
+    }
+
+    /// Kolmogorov–Smirnov distance to another eCDF (used to validate the
+    /// "category-invariance" insight of Fig. 2).
+    pub fn ks_distance(&self, other: &Ecdf) -> f64 {
+        let mut xs: Vec<u32> = self.sorted.iter().chain(other.sorted.iter()).copied().collect();
+        xs.sort_unstable();
+        xs.dedup();
+        xs.iter()
+            .map(|&x| (self.cdf(x) - other.cdf(x)).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_and_quantile_roundtrip() {
+        let e = Ecdf::from_samples(vec![10, 20, 30, 40]);
+        assert_eq!(e.cdf(9), 0.0);
+        assert_eq!(e.cdf(10), 0.25);
+        assert_eq!(e.cdf(40), 1.0);
+        assert_eq!(e.quantile(0.0), 10);
+        assert_eq!(e.quantile(0.5), 20);
+        assert_eq!(e.quantile(1.0), 40);
+    }
+
+    #[test]
+    fn sampling_recovers_distribution() {
+        let e = Ecdf::from_samples((1..=100).collect());
+        let mut rng = Rng::new(4);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| e.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - e.mean()).abs() < 2.0, "mean={mean} want≈{}", e.mean());
+    }
+
+    #[test]
+    fn ks_distance_self_is_zero() {
+        let e = Ecdf::from_samples(vec![5, 6, 7, 8, 9]);
+        assert_eq!(e.ks_distance(&e), 0.0);
+        let f = Ecdf::from_samples(vec![50, 60, 70]);
+        assert!(e.ks_distance(&f) > 0.9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_rejected() {
+        Ecdf::from_samples(vec![]);
+    }
+}

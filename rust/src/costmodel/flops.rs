@@ -1,0 +1,104 @@
+//! Iteration FLOPs accounting — the paper's Eqs. (1) and (2).
+//!
+//! * Eq. (1)  `FLOPs_prefill = L (c·B·s + 2·B·h·s²)`   (weights + attention)
+//! * Eq. (2)  `FLOPs_decode  = L (c·B + 2·h·S)`
+//!
+//! with `L` layers, `B` running requests, `s` request length, `h` hidden
+//! size, `S` total context tokens and `c` the summed matmul-weight size.
+//! We use the 2-FLOPs-per-MAC convention explicitly (the paper folds it
+//! into `c`): weight GEMMs cost `2·c` per token, attention costs `4·h`
+//! per (token, context-token) pair (QKᵀ and PV).
+
+use crate::models::ModelSpec;
+
+/// FLOPs of a prefill iteration over the given prompt lengths (Eq. 1,
+/// summed per request instead of padding to `B·s_max`).
+pub fn prefill_flops(spec: &ModelSpec, prompt_lens: &[u32]) -> f64 {
+    let l = spec.n_layers as f64;
+    let h = spec.hidden as f64;
+    let c = spec.c_matmul();
+    let mut total = 0.0;
+    for &s in prompt_lens {
+        let s = s as f64;
+        total += 2.0 * c * s + 4.0 * h * s * s;
+    }
+    l * total
+}
+
+/// FLOPs of a decode iteration (Eq. 2): one new token per running request,
+/// attention over `total_context` cached tokens.
+pub fn decode_flops(spec: &ModelSpec, batch: usize, total_context: u64) -> f64 {
+    let l = spec.n_layers as f64;
+    let h = spec.hidden as f64;
+    let c = spec.c_matmul();
+    l * (2.0 * c * batch as f64 + 4.0 * h * total_context as f64)
+}
+
+/// Total FLOPs for a request processed start-to-finish (prefill + all
+/// decode steps). Used for stage-throughput accounting (`T_E` in §3).
+pub fn request_total_flops(spec: &ModelSpec, input_len: u32, output_len: u32) -> f64 {
+    let mut total = prefill_flops(spec, &[input_len]);
+    let l = spec.n_layers as f64;
+    let h = spec.hidden as f64;
+    let c = spec.c_matmul();
+    for i in 0..output_len as u64 {
+        let ctx = input_len as u64 + i + 1;
+        total += l * (2.0 * c + 4.0 * h * ctx as f64);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn spec() -> ModelSpec {
+        Registry::paper().get("mistral-7b-instruct").unwrap().clone()
+    }
+
+    #[test]
+    fn prefill_scales_superlinearly_in_length() {
+        let s = spec();
+        let f1 = prefill_flops(&s, &[128]);
+        let f2 = prefill_flops(&s, &[256]);
+        assert!(f2 > 2.0 * f1); // quadratic attention term
+        assert!(f2 < 4.5 * f1);
+    }
+
+    #[test]
+    fn prefill_additive_over_requests() {
+        let s = spec();
+        let lhs = prefill_flops(&s, &[100, 200]);
+        let rhs = prefill_flops(&s, &[100]) + prefill_flops(&s, &[200]);
+        assert!((lhs - rhs).abs() / rhs < 1e-12);
+    }
+
+    #[test]
+    fn decode_linear_in_batch_at_fixed_context_per_req() {
+        let s = spec();
+        let f1 = decode_flops(&s, 10, 10 * 300);
+        let f2 = decode_flops(&s, 20, 20 * 300);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_dominated_by_weights_at_small_context() {
+        // For a 7B model, 2·c·B >> 4·h·S when S is small: weight reads rule.
+        let s = spec();
+        let with_ctx = decode_flops(&s, 1, 10);
+        let weights_only = s.n_layers as f64 * 2.0 * s.c_matmul();
+        assert!((with_ctx - weights_only) / with_ctx < 0.01);
+    }
+
+    #[test]
+    fn request_total_is_sum_of_parts() {
+        let s = spec();
+        let total = request_total_flops(&s, 50, 3);
+        let prefill = prefill_flops(&s, &[50]);
+        assert!(total > prefill);
+        // 3 decode steps, each ≳ the weight GEMM cost.
+        let min_decode = 3.0 * s.n_layers as f64 * 2.0 * s.c_matmul();
+        assert!(total - prefill >= min_decode * 0.99);
+    }
+}

@@ -1,0 +1,234 @@
+//! Analytic A100 ground-truth latency model.
+//!
+//! Substitutes the paper's physical testbed (DESIGN.md): a roofline
+//! (compute vs HBM) with a batch-dependent efficiency curve, explicit
+//! input-preparation and sampling costs (the paper's three components,
+//! Fig. 4), a fixed scheduler/launch overhead, and tensor-parallel
+//! all-reduce time over NVLink/PCIe.
+//!
+//! Calibration anchors (§5.1 of the paper, reproduced by unit tests):
+//! * chatglm3-6b, 1 000 requests (in≈21, out≈180, limit 512):
+//!   ≈37–48 s on 1 GPU; ≈5× less on 8 GPUs (paper: 2.3–3×; sublinear).
+//! * chatglm3-6b, 10 000 requests: ≈356 s on 1 GPU, ≈6.6× better on 8.
+//! * vicuna-13b, 1 000 SharedGPT requests ≈ 92 s inference on one plan.
+
+
+use super::{flops, IterLatency};
+use crate::cluster::ClusterSpec;
+use crate::models::ModelSpec;
+
+/// Latency decomposition of one iteration. `comp`/`prep`/`samp` are the
+/// paper's three modeled components; `base` (engine/scheduler overhead) and
+/// `comm` (TP all-reduce) exist in reality but are *not* captured by the
+/// linear cost model — the gap is the paper's residual estimation error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterComponents {
+    pub comp: f64,
+    pub prep: f64,
+    pub samp: f64,
+    pub base: f64,
+    pub comm: f64,
+}
+
+impl IterComponents {
+    pub fn total(&self) -> f64 {
+        self.comp + self.prep + self.samp + self.base + self.comm
+    }
+}
+
+/// Ground-truth per-iteration latency model (see module docs).
+#[derive(Debug, Clone)]
+pub struct HardwareModel {
+    pub cluster: ClusterSpec,
+    /// Peak decode MXU/tensor-core efficiency at infinite batch.
+    pub eff_dec_max: f64,
+    /// Batch size at which decode efficiency reaches half its max.
+    pub eff_dec_knee: f64,
+    pub eff_pref_max: f64,
+    pub eff_pref_knee: f64,
+    /// Fixed per-iteration engine overhead (seconds).
+    pub base_overhead: f64,
+    pub prep_const: f64,
+    pub prep_per_padded_token: f64,
+    pub samp_const: f64,
+    pub samp_per_token: f64,
+}
+
+impl HardwareModel {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        HardwareModel {
+            cluster,
+            eff_dec_max: 0.35,
+            eff_dec_knee: 90.0,
+            eff_pref_max: 0.55,
+            eff_pref_knee: 512.0,
+            base_overhead: 6.0e-3,
+            prep_const: 2.0e-3,
+            prep_per_padded_token: 3.0e-8,
+            samp_const: 2.5e-3,
+            samp_per_token: 1.5e-7,
+        }
+    }
+
+    fn eff_decode(&self, batch: f64) -> f64 {
+        self.eff_dec_max * batch / (batch + self.eff_dec_knee)
+    }
+
+    fn eff_prefill(&self, tokens: f64) -> f64 {
+        self.eff_pref_max * tokens / (tokens + self.eff_pref_knee)
+    }
+
+    /// All-reduce time per iteration for a TP group (2 all-reduces per
+    /// layer, ring cost `2·(tp-1)/tp · bytes / bw`).
+    fn comm_time(&self, spec: &ModelSpec, tp: u32, tokens: f64) -> f64 {
+        if tp <= 1 {
+            return 0.0;
+        }
+        let bytes = tokens * spec.hidden as f64 * spec.dtype_bytes as f64;
+        let bw = self.cluster.tp_group_bw(tp);
+        let per_ar = 2.0 * (tp as f64 - 1.0) / tp as f64 * bytes / bw;
+        // 2 all-reduces per layer + a small per-launch latency.
+        2.0 * spec.n_layers as f64 * (per_ar + 6.0e-6)
+    }
+
+    /// Component breakdown of a prefill iteration.
+    pub fn prefill_components(&self, spec: &ModelSpec, tp: u32, prompt_lens: &[u32]) -> IterComponents {
+        let tokens: u64 = prompt_lens.iter().map(|&l| l as u64).sum();
+        let batch = prompt_lens.len() as f64;
+        let max_len = prompt_lens.iter().copied().max().unwrap_or(0) as f64;
+        let fl = flops::prefill_flops(spec, prompt_lens);
+        let t_flops = fl / (tp as f64 * self.cluster.peak_flops * self.eff_prefill(tokens as f64));
+        let t_mem = spec.weight_bytes_per_gpu(tp) as f64 / self.cluster.hbm_bw;
+        IterComponents {
+            comp: t_flops.max(t_mem),
+            prep: self.prep_const + self.prep_per_padded_token * batch * max_len,
+            samp: self.samp_const + self.samp_per_token * tokens as f64,
+            base: self.base_overhead,
+            comm: self.comm_time(spec, tp, tokens as f64),
+        }
+    }
+
+    /// Component breakdown of a decode iteration.
+    pub fn decode_components(
+        &self,
+        spec: &ModelSpec,
+        tp: u32,
+        batch: usize,
+        total_context: u64,
+        max_context: u32,
+    ) -> IterComponents {
+        let fl = flops::decode_flops(spec, batch, total_context);
+        let t_flops = fl / (tp as f64 * self.cluster.peak_flops * self.eff_decode(batch as f64));
+        let kv_bytes = total_context as f64 * spec.kv_bytes_per_token(tp) as f64;
+        let t_mem = (spec.weight_bytes_per_gpu(tp) as f64 + kv_bytes) / self.cluster.hbm_bw;
+        IterComponents {
+            comp: t_flops.max(t_mem),
+            prep: self.prep_const + self.prep_per_padded_token * batch as f64 * max_context as f64,
+            samp: self.samp_const + self.samp_per_token * total_context as f64,
+            base: self.base_overhead,
+            comm: self.comm_time(spec, tp, batch as f64),
+        }
+    }
+}
+
+impl IterLatency for HardwareModel {
+    fn prefill(&self, spec: &ModelSpec, tp: u32, prompt_lens: &[u32]) -> f64 {
+        self.prefill_components(spec, tp, prompt_lens).total()
+    }
+
+    fn decode(&self, spec: &ModelSpec, tp: u32, batch: usize, total_context: u64, max_context: u32) -> f64 {
+        self.decode_components(spec, tp, batch, total_context, max_context).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn hw() -> HardwareModel {
+        HardwareModel::new(ClusterSpec::a100_node(8))
+    }
+
+    fn glm() -> ModelSpec {
+        Registry::paper().get("chatglm3-6b").unwrap().clone()
+    }
+
+    #[test]
+    fn decode_iteration_magnitude() {
+        // chatglm3-6b, saturated batch: ~40–80 ms/iter -> ~4–6 k tok/s,
+        // consistent with the paper's 1.8 M tokens in 356 s on 1 GPU.
+        let t = hw().decode(&glm(), 1, 256, 256 * 200, 230);
+        assert!((0.03..0.09).contains(&t), "t={t}");
+        let toks_per_s = 256.0 / t;
+        assert!((3000.0..7000.0).contains(&toks_per_s), "{toks_per_s}");
+    }
+
+    #[test]
+    fn decode_has_memory_floor_at_tiny_batch() {
+        // B=1 must still pay the full weight read: >= 12 GB / 2 TB/s = 6 ms.
+        let c = hw().decode_components(&glm(), 1, 1, 200, 200);
+        assert!(c.comp >= 5.5e-3, "comp={}", c.comp);
+    }
+
+    #[test]
+    fn decode_efficiency_rises_with_batch() {
+        // Per-token cost must fall as batch grows (the paper's key
+        // sublinearity driver).
+        let h = hw();
+        let t32 = h.decode(&glm(), 1, 32, 32 * 200, 210) / 32.0;
+        let t256 = h.decode(&glm(), 1, 256, 256 * 200, 210) / 256.0;
+        assert!(t256 < t32 * 0.5, "t32/token={t32} t256/token={t256}");
+    }
+
+    #[test]
+    fn tp_helps_large_model_more_than_small() {
+        let reg = Registry::paper();
+        let big = reg.get("llama-2-70b-chat").unwrap();
+        let h = hw();
+        let t1 = h.decode(big, 2, 128, 128 * 400, 420);
+        let t8 = h.decode(big, 8, 128, 128 * 400, 420);
+        assert!(t8 < t1, "t1={t1} t8={t8}");
+        // But not 4x better: comm + overheads bite.
+        assert!(t8 > t1 / 4.0);
+    }
+
+    #[test]
+    fn tp_across_pairs_pays_pcie() {
+        let h = hw();
+        let s = glm();
+        let c2 = h.decode_components(&s, 2, 256, 256 * 200, 210);
+        let c4 = h.decode_components(&s, 4, 256, 256 * 200, 210);
+        assert!(c4.comm > c2.comm * 2.0, "nvlink {} vs pcie {}", c2.comm, c4.comm);
+    }
+
+    #[test]
+    fn prefill_throughput_reasonable() {
+        // 64 prompts x 310 tokens on a 7B model @ tp=1: tens of ms.
+        let reg = Registry::paper();
+        let spec = reg.get("mistral-7b-instruct").unwrap();
+        let lens = vec![310u32; 64];
+        let t = hw().prefill(spec, 1, &lens);
+        let toks_per_s = (64.0 * 310.0) / t;
+        assert!((5.0e3..100.0e3).contains(&toks_per_s), "{toks_per_s}");
+    }
+
+    #[test]
+    fn anchor_one_gpu_vs_eight_sublinear() {
+        // Reproduce the paper's §5.1 observation qualitatively: for a small
+        // workload, 8 GPUs of data parallelism yield far less than 8x.
+        // (Full end-to-end check lives in the engine tests; here we check
+        // the per-iteration shape: batch 256 is much more efficient than
+        // batch 32 per token.)
+        let h = hw();
+        let s = glm();
+        let full = h.decode(&s, 1, 256, 256 * 110, 130);
+        let split = h.decode(&s, 1, 32, 32 * 110, 130);
+        // Per-GPU token throughput at B=256 vs B=32: the big batch must be
+        // far more efficient, which is exactly why dp=8 over a small
+        // workload disappoints.
+        let tput_full = 256.0 / full;
+        let tput_split = 32.0 / split;
+        assert!(tput_full / tput_split > 2.0, "{}", tput_full / tput_split);
+    }
+}

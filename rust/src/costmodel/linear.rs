@@ -1,0 +1,200 @@
+//! The paper's linear per-iteration cost model (Eq. 5, Fig. 4).
+//!
+//! `t = t_comp + t_prep + t_samp`, each of the form
+//! `a_phase[B] · x_phase + b_phase[B]` with `x_comp = FLOPs`,
+//! `x_prep = B·s` (padded tokens) and `x_samp = S` (total tokens).
+//!
+//! The coefficients are *fit* per batch-size bucket against profiled
+//! iterations — here profiles of [`super::HardwareModel`], mirroring how
+//! the paper profiles vLLM on A100s. Crucially the fit only sees the three
+//! modeled components; the engine's fixed overhead and TP communication are
+//! invisible to it, so the model inherits the paper's estimation error.
+
+use std::collections::BTreeMap;
+
+use super::hardware::HardwareModel;
+use super::{flops, IterLatency};
+use crate::models::ModelSpec;
+use crate::util::linfit::{self, LinFit};
+
+/// Batch-size buckets the paper's `a[B]`, `b[B]` constants are keyed by.
+pub const B_BUCKETS: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Linear pieces for one (phase, bucket).
+#[derive(Debug, Clone, Copy)]
+struct Piece {
+    comp: LinFit,
+    prep: LinFit,
+    samp: LinFit,
+}
+
+/// The fitted Eq. 5 model. One coefficient set per batch bucket, shared
+/// across models (the inputs — FLOPs, B·s, S — carry the model identity,
+/// exactly as in the paper where the same functional form fits Llama-7B).
+#[derive(Debug, Clone)]
+pub struct LinearIterModel {
+    pieces: BTreeMap<usize, Piece>,
+    /// TP degrees divide FLOPs; efficiency differences are folded into the
+    /// per-bucket slopes at fit time using a tp=1 profile, so the planner
+    /// sees TP through the FLOPs argument alone (plus this comm surcharge
+    /// table fit per tp).
+    comm_per_layer_token: BTreeMap<u32, f64>,
+}
+
+fn bucket_of(b: usize) -> usize {
+    *B_BUCKETS
+        .iter()
+        .min_by_key(|&&c| (c as i64 - b as i64).abs())
+        .unwrap()
+}
+
+impl LinearIterModel {
+    /// Profile the hardware model over a workload sweep and fit the three
+    /// linear pieces per batch bucket (the paper's Fig. 4 procedure).
+    pub fn fit_from_profile(hw: &HardwareModel) -> Self {
+        // A mid-size dense model is the profiling vehicle (paper: Llama-7B).
+        let probe = crate::models::Registry::paper()
+            .get("mistral-7b-instruct")
+            .unwrap()
+            .clone();
+        let mut pieces = BTreeMap::new();
+        for &b in &B_BUCKETS {
+            let mut xs_comp = vec![];
+            let mut ys_comp = vec![];
+            let mut xs_prep = vec![];
+            let mut ys_prep = vec![];
+            let mut xs_samp = vec![];
+            let mut ys_samp = vec![];
+            // Sweep context lengths to vary FLOPs at fixed B. Include both
+            // decode and prefill points so one line prices both phases (the
+            // paper fits latency-vs-FLOPs lines per #seq).
+            for ctx in [32u32, 64, 128, 256, 512, 1024, 2048] {
+                let total_ctx = b as u64 * ctx as u64;
+                let c = hw.decode_components(&probe, 1, b, total_ctx, ctx);
+                xs_comp.push(flops::decode_flops(&probe, b, total_ctx));
+                ys_comp.push(c.comp);
+                xs_prep.push(b as f64 * ctx as f64);
+                ys_prep.push(c.prep);
+                xs_samp.push(total_ctx as f64);
+                ys_samp.push(c.samp);
+
+                let lens = vec![ctx; b];
+                let p = hw.prefill_components(&probe, 1, &lens);
+                xs_comp.push(flops::prefill_flops(&probe, &lens));
+                ys_comp.push(p.comp);
+            }
+            let piece = Piece {
+                comp: linfit::fit(&xs_comp, &ys_comp).expect("comp fit"),
+                prep: linfit::fit(&xs_prep, &ys_prep).expect("prep fit"),
+                samp: linfit::fit(&xs_samp, &ys_samp).expect("samp fit"),
+            };
+            pieces.insert(b, piece);
+        }
+
+        // TP comm surcharge per (layer, token): fit from two probe points.
+        let mut comm = BTreeMap::new();
+        for tp in [1u32, 2, 4, 8] {
+            let c = hw.decode_components(&probe, tp, 64, 64 * 256, 256);
+            let per = c.comm / (probe.n_layers as f64 * 64.0);
+            comm.insert(tp, per);
+        }
+        LinearIterModel { pieces, comm_per_layer_token: comm }
+    }
+
+    fn piece(&self, b: usize) -> &Piece {
+        &self.pieces[&bucket_of(b)]
+    }
+
+    fn comm(&self, spec: &ModelSpec, tp: u32, tokens: f64) -> f64 {
+        self.comm_per_layer_token.get(&tp).copied().unwrap_or(0.0)
+            * spec.n_layers as f64
+            * tokens
+    }
+
+    /// Goodness-of-fit report for Fig. 4 (r² per phase at a bucket).
+    pub fn fit_quality(&self, b: usize) -> (f64, f64, f64) {
+        let p = self.piece(b);
+        (p.comp.r2, p.prep.r2, p.samp.r2)
+    }
+}
+
+impl IterLatency for LinearIterModel {
+    fn prefill(&self, spec: &ModelSpec, tp: u32, prompt_lens: &[u32]) -> f64 {
+        let b = prompt_lens.len();
+        let p = self.piece(b);
+        let tokens: u64 = prompt_lens.iter().map(|&l| l as u64).sum();
+        let max_len = prompt_lens.iter().copied().max().unwrap_or(0);
+        let fl = flops::prefill_flops(spec, prompt_lens) / tp as f64;
+        (p.comp.predict(fl) + p.prep.predict(b as f64 * max_len as f64)
+            + p.samp.predict(tokens as f64)
+            + self.comm(spec, tp, tokens as f64))
+            .max(1e-5)
+    }
+
+    fn decode(&self, spec: &ModelSpec, tp: u32, batch: usize, total_context: u64, max_context: u32) -> f64 {
+        let p = self.piece(batch);
+        let fl = flops::decode_flops(spec, batch, total_context) / tp as f64;
+        (p.comp.predict(fl) + p.prep.predict(batch as f64 * max_context as f64)
+            + p.samp.predict(total_context as f64)
+            + self.comm(spec, tp, batch as f64))
+            .max(1e-5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::models::Registry;
+
+    fn fitted() -> (LinearIterModel, HardwareModel) {
+        let hw = HardwareModel::new(ClusterSpec::a100_node(8));
+        (LinearIterModel::fit_from_profile(&hw), hw)
+    }
+
+    #[test]
+    fn fits_are_tight() {
+        let (m, _) = fitted();
+        for &b in &[1usize, 16, 256] {
+            let (rc, rp, rs) = m.fit_quality(b);
+            assert!(rc > 0.95, "comp r2 at B={b}: {rc}");
+            assert!(rp > 0.95, "prep r2 at B={b}: {rp}");
+            assert!(rs > 0.95, "samp r2 at B={b}: {rs}");
+        }
+    }
+
+    #[test]
+    fn estimate_close_but_below_truth() {
+        // The linear model misses base overhead + comm => systematic
+        // underestimate, within ~5–40% (the paper's observed error band).
+        let (m, hw) = fitted();
+        let spec = Registry::paper().get("vicuna-13b-v1.5").unwrap().clone();
+        for (b, ctx) in [(256usize, 200u32), (64, 400), (8, 150)] {
+            let total = b as u64 * ctx as u64;
+            let est = m.decode(&spec, 1, b, total, ctx);
+            let truth = hw.decode(&spec, 1, b, total, ctx);
+            assert!(est < truth, "B={b}: est {est} >= truth {truth}");
+            assert!(est > truth * 0.5, "B={b}: est {est} too far below {truth}");
+        }
+    }
+
+    #[test]
+    fn bucket_interpolation_is_monotoneish() {
+        let (m, _) = fitted();
+        let spec = Registry::paper().get("chatglm3-6b").unwrap().clone();
+        let t64 = m.decode(&spec, 1, 64, 64 * 200, 210);
+        let t256 = m.decode(&spec, 1, 256, 256 * 200, 210);
+        assert!(t256 > t64);
+    }
+
+    #[test]
+    fn generalizes_across_models() {
+        // Fit on 7B, price a 70B: per-iteration time must scale up ~with c.
+        let (m, hw) = fitted();
+        let big = Registry::paper().get("llama-2-70b-chat").unwrap().clone();
+        let est = m.decode(&big, 8, 128, 128 * 300, 310);
+        let truth = hw.decode(&big, 8, 128, 128 * 300, 310);
+        let err = (est - truth).abs() / truth;
+        assert!(err < 0.5, "err={err} est={est} truth={truth}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Output-length sampler (§4.1): per-model eCDFs built from the No Robots
+//! trace, sampled at planning time.
+//!
+//! Given an input of length `l_in`, model max sequence `l_max` and an
+//! explicit output limit `y`:  `l_out = min(X, y, l_max - l_in)`,
+//! `X ~ F_out` — exactly the paper's formula.
+
+use std::collections::BTreeMap;
+
+use super::ecdf::Ecdf;
+use crate::models::Registry;
+use crate::util::rng::Rng;
+use crate::workload::norobots;
+
+/// Per-model output-length eCDFs, built offline (§2).
+#[derive(Debug, Clone)]
+pub struct OutputSampler {
+    ecdfs: BTreeMap<String, Ecdf>,
+}
+
+/// Trace size used to build each model's eCDF (paper: 10 000 requests).
+pub const TRACE_SIZE: usize = 10_000;
+
+impl OutputSampler {
+    /// Build eCDFs for every model in the paper registry by "running" the
+    /// No Robots trace through each (see `workload::norobots`).
+    pub fn from_norobots_trace(seed: u64) -> Self {
+        let reg = Registry::paper();
+        let mut ecdfs = BTreeMap::new();
+        for name in reg.names() {
+            let t = norobots::trace(name, TRACE_SIZE, seed ^ 0xECDF);
+            let lens = t.into_iter().map(|r| r.output_len).collect();
+            ecdfs.insert(name.to_string(), Ecdf::from_samples(lens));
+        }
+        OutputSampler { ecdfs }
+    }
+
+    pub fn ecdf(&self, model: &str) -> Option<&Ecdf> {
+        self.ecdfs.get(model)
+    }
+
+    /// Sample one output length for a request (the paper's §4.1 formula).
+    pub fn sample(
+        &self,
+        model: &str,
+        input_len: u32,
+        max_out: u32,
+        max_seq: u32,
+        rng: &mut Rng,
+    ) -> u32 {
+        let x = self
+            .ecdfs
+            .get(model)
+            .unwrap_or_else(|| panic!("no eCDF for model {model}"))
+            .sample(rng);
+        let window = max_seq.saturating_sub(input_len).max(1);
+        x.min(max_out).min(window).max(1)
+    }
+
+    /// Sample output lengths for a whole request batch.
+    pub fn sample_many(
+        &self,
+        model: &str,
+        inputs: &[u32],
+        max_out: u32,
+        max_seq: u32,
+        rng: &mut Rng,
+    ) -> Vec<u32> {
+        inputs.iter().map(|&l| self.sample(model, l, max_out, max_seq, rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::lengths::model_style;
+
+    #[test]
+    fn ecdf_exists_for_all_models() {
+        let s = OutputSampler::from_norobots_trace(1);
+        for m in Registry::paper().names() {
+            assert!(s.ecdf(m).is_some(), "{m}");
+        }
+    }
+
+    #[test]
+    fn sampler_tracks_true_distribution() {
+        // The eCDF is built from the model's true style, so sampled means
+        // must land near the true mean (finite-sample error only).
+        let s = OutputSampler::from_norobots_trace(2);
+        let mut rng = Rng::new(3);
+        for m in ["vicuna-13b-v1.5", "chatglm3-6b", "mistral-7b-instruct"] {
+            let n = 5000;
+            let mean: f64 = (0..n)
+                .map(|_| s.sample(m, 20, 100_000, 100_000, &mut rng) as f64)
+                .sum::<f64>()
+                / n as f64;
+            let truth = model_style(m).approx_mean();
+            let err = (mean - truth).abs() / truth;
+            assert!(err < 0.25, "{m}: sampled {mean} vs true {truth}");
+        }
+    }
+
+    #[test]
+    fn limits_are_enforced() {
+        let s = OutputSampler::from_norobots_trace(4);
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let l = s.sample("alpaca-13b", 30, 256, 2048, &mut rng);
+            assert!((1..=256).contains(&l));
+            // Context-window clamp: input eats almost the whole window.
+            let l2 = s.sample("alpaca-13b", 2040, 512, 2048, &mut rng);
+            assert!(l2 <= 8);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! vLLM-style inference engine simulator (§2, Fig. 3).
+//!
+//! Replays the engine's request-scheduling policy — FCFS admission,
+//! continuous batching, paged-KV block management with preemption-by-
+//! recompute — over a set of requests with known (sampled or true) output
+//! lengths, pricing every iteration with an [`IterLatency`] oracle.
+//!
+//! The same simulator serves two masters:
+//! * the **planner** steps it with eCDF-*sampled* lengths and the fitted
+//!   linear latency model (the paper's cost model), and
+//! * the **runner** steps it with *true* lengths and the hardware
+//!   ground-truth model (+ jitter) — this is the substitute for executing
+//!   on real A100s.
+
+pub mod session;
+pub mod sim;
+
+pub use sim::{EngineConfig, EngineSim, SimOutcome};
+
+
+/// A request as fed to the engine: lengths are already resolved (the
+/// planner resolves by sampling, the runner by ground truth).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineRequest {
+    pub id: u64,
+    pub input_len: u32,
+    pub output_len: u32,
+    /// Virtual time at which the request may be admitted. Use
+    /// [`EngineRequest::BLOCKED`] for chain successors that become ready
+    /// only when their predecessor (same engine) completes.
+    pub ready_time: f64,
+    /// Decode tokens already produced in a previous stage (preempted
+    /// requests re-enter with their progress; the engine re-prefills
+    /// `input_len + generated` tokens — vLLM's recompute semantics).
+    pub generated: u32,
+    /// Id of the next request in a fused self-loop chain (§4.1: "if we
+    /// fuse two models with dependency ... we dynamically update the ready
+    /// time of the input requests of the fused model during simulation").
+    pub chain_next: Option<u64>,
+    /// True when this request's KV cache survived the stage boundary (the
+    /// model kept its plan and placement): re-admission skips the
+    /// re-prefill cost. Reset by in-engine preemption (recompute).
+    pub kv_resident: bool,
+}
+
+impl EngineRequest {
+    /// Sentinel ready time for requests waiting on an in-engine chain
+    /// predecessor.
+    pub const BLOCKED: f64 = f64::INFINITY;
+
+    pub fn fresh(id: u64, input_len: u32, output_len: u32) -> Self {
+        EngineRequest {
+            id,
+            input_len,
+            output_len,
+            ready_time: 0.0,
+            generated: 0,
+            chain_next: None,
+            kv_resident: false,
+        }
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.output_len.saturating_sub(self.generated)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated >= self.output_len
+    }
+}

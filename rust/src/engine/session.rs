@@ -1,0 +1,254 @@
+//! Data-parallel model sessions and completion-time estimation.
+//!
+//! A model running under plan `(dp, tp)` is `dp` independent engine
+//! replicas, each owning a round-robin share of the request stream. The
+//! planner's "time for model M to finish workload R under plan P" (§4.1
+//! "put them all together") is the max over replica completion times plus
+//! any loading cost the caller accounts separately.
+
+use super::sim::{EngineConfig, EngineSim, SimOutcome};
+use super::EngineRequest;
+use crate::costmodel::{flops, IterLatency};
+use crate::models::ModelSpec;
+
+/// Split requests round-robin (in FCFS order) across `dp` replicas.
+/// Chained requests (fused self-loop nodes) must stay on one replica so
+/// the chain can unblock locally — they are routed by their chain root.
+pub fn split_round_robin(requests: &[EngineRequest], dp: u32) -> Vec<Vec<EngineRequest>> {
+    let dp = dp.max(1) as usize;
+    let mut parts: Vec<Vec<EngineRequest>> = vec![vec![]; dp];
+    // First pass: assign chain roots & free requests round-robin; remember
+    // id -> replica for chain members.
+    let mut assignment: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    let mut rr = 0usize;
+    for r in requests {
+        let part = if r.ready_time.is_infinite() {
+            // Chain successor: placed in pass 2.
+            continue;
+        } else {
+            let p = rr % dp;
+            rr += 1;
+            p
+        };
+        assignment.insert(r.id, part);
+        parts[part].push(*r);
+    }
+    // Pass 2: walk chains from their (already-placed) roots.
+    let mut changed = true;
+    let mut placed: std::collections::HashSet<u64> = assignment.keys().copied().collect();
+    while changed {
+        changed = false;
+        for r in requests {
+            if placed.contains(&r.id) {
+                if let Some(next) = r.chain_next {
+                    if !placed.contains(&next) {
+                        if let Some(nr) = requests.iter().find(|x| x.id == next) {
+                            let p = assignment[&r.id];
+                            assignment.insert(next, p);
+                            parts[p].push(*nr);
+                            placed.insert(next);
+                            changed = true;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Orphaned blocked requests (their predecessor finished in an earlier
+    // stage): treat as free, round-robin them.
+    for r in requests {
+        if !placed.contains(&r.id) {
+            let p = rr % dp;
+            rr += 1;
+            parts[p].push(*r);
+            placed.insert(r.id);
+        }
+    }
+    parts
+}
+
+/// Result of estimating/running a model session.
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    /// Completion time of the slowest replica (absolute virtual time).
+    pub finish_time: f64,
+    /// Per-replica outcomes.
+    pub replicas: Vec<SimOutcome>,
+    /// Completion times across replicas: (request id, time).
+    pub completions: Vec<(u64, f64)>,
+    /// Unfinished requests drained from the replicas (empty if run to
+    /// completion).
+    pub remaining: Vec<EngineRequest>,
+}
+
+/// Run a `(dp, tp)` session to completion (or `deadline`), starting at
+/// `start_time`.
+pub fn run_session(
+    spec: &ModelSpec,
+    dp: u32,
+    tp: u32,
+    lat: &dyn IterLatency,
+    cfg: &EngineConfig,
+    requests: &[EngineRequest],
+    start_time: f64,
+    deadline: Option<f64>,
+    noise_seed: u64,
+) -> SessionOutcome {
+    let parts = split_round_robin(requests, dp);
+    let mut finish: f64 = start_time;
+    let mut replicas = vec![];
+    let mut completions = vec![];
+    let mut remaining = vec![];
+    for (ri, part) in parts.into_iter().enumerate() {
+        if part.is_empty() {
+            continue;
+        }
+        let mut sim =
+            EngineSim::new(spec, tp, lat, cfg.clone(), part, start_time, noise_seed ^ ri as u64);
+        let out = sim.run(deadline);
+        finish = finish.max(out.clock);
+        completions.extend(sim.completions.iter().copied());
+        remaining.extend(sim.drain_unfinished());
+        replicas.push(out);
+    }
+    SessionOutcome { finish_time: finish, replicas, completions, remaining }
+}
+
+/// Estimated time for the session to finish its workload, relative to its
+/// start (the planner's `t_{M,P}` of §3, excluding loading).
+pub fn estimate_completion(
+    spec: &ModelSpec,
+    dp: u32,
+    tp: u32,
+    lat: &dyn IterLatency,
+    cfg: &EngineConfig,
+    requests: &[EngineRequest],
+    start_time: f64,
+) -> f64 {
+    run_session(spec, dp, tp, lat, cfg, requests, start_time, None, 0).finish_time - start_time
+}
+
+/// Remaining FLOPs in a workload (re-prefill of carried progress included),
+/// used for the stage-throughput objective `T_E = FLOPs_E / t_E`.
+pub fn remaining_flops(spec: &ModelSpec, requests: &[EngineRequest]) -> f64 {
+    let mut total = 0.0;
+    for r in requests {
+        if r.is_done() {
+            continue;
+        }
+        let prompt = r.input_len + r.generated;
+        total += flops::prefill_flops(spec, &[prompt]);
+        let l = spec.n_layers as f64;
+        let h = spec.hidden as f64;
+        let c = spec.c_matmul();
+        let rem = r.remaining() as f64;
+        // Decode steps from ctx=prompt+1 .. prompt+remaining.
+        let avg_ctx = prompt as f64 + (rem + 1.0) / 2.0;
+        total += rem * l * (2.0 * c + 4.0 * h * avg_ctx);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::costmodel::HardwareModel;
+    use crate::models::Registry;
+
+    fn fixture() -> (ModelSpec, HardwareModel, EngineConfig) {
+        let spec = Registry::paper().get("chatglm3-6b").unwrap().clone();
+        let cluster = ClusterSpec::a100_node(8);
+        let hw = HardwareModel::new(cluster.clone());
+        let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+        (spec, hw, cfg)
+    }
+
+    fn reqs(n: usize) -> Vec<EngineRequest> {
+        (0..n as u64).map(|i| EngineRequest::fresh(i, 20, 50 + (i % 100) as u32)).collect()
+    }
+
+    #[test]
+    fn round_robin_covers_everything() {
+        let rs = reqs(101);
+        let parts = split_round_robin(&rs, 4);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 101);
+        // Balanced within 1.
+        let max = parts.iter().map(|p| p.len()).max().unwrap();
+        let min = parts.iter().map(|p| p.len()).min().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn chains_stay_on_one_replica() {
+        let mut rs = reqs(10);
+        rs[0].chain_next = Some(5);
+        rs[5].ready_time = EngineRequest::BLOCKED;
+        rs[5].chain_next = Some(7);
+        rs[7].ready_time = EngineRequest::BLOCKED;
+        let parts = split_round_robin(&rs, 3);
+        let find = |id: u64| parts.iter().position(|p| p.iter().any(|r| r.id == id)).unwrap();
+        assert_eq!(find(0), find(5));
+        assert_eq!(find(5), find(7));
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn more_replicas_help_sublinearly() {
+        // A small workload split 8 ways leaves every replica with a tiny
+        // batch: speedup must be visibly below 8x (the paper's premise).
+        let (spec, hw, cfg) = fixture();
+        let rs = reqs(160);
+        let t1 = estimate_completion(&spec, 1, 1, &hw, &cfg, &rs, 0.0);
+        let t8 = estimate_completion(&spec, 8, 1, &hw, &cfg, &rs, 0.0);
+        assert!(t8 < t1);
+        assert!(t1 / t8 < 6.0, "dp=8 speedup {} should be sublinear", t1 / t8);
+        assert!(t1 / t8 > 1.2, "dp=8 speedup {} should still help", t1 / t8);
+    }
+
+    #[test]
+    fn session_deadline_returns_remaining() {
+        let (spec, hw, cfg) = fixture();
+        let rs = reqs(500);
+        let out = run_session(&spec, 2, 1, &hw, &cfg, &rs, 0.0, Some(1.0), 0);
+        assert!(!out.remaining.is_empty());
+        let done: usize = out.replicas.iter().map(|r| r.finished).sum();
+        assert_eq!(done + out.remaining.len(), 500);
+    }
+
+    #[test]
+    fn remaining_flops_accounting() {
+        let (spec, _, _) = fixture();
+        let fresh = reqs(10);
+        // Done requests contribute nothing.
+        let mut done = fresh.clone();
+        for r in done.iter_mut() {
+            r.generated = r.output_len;
+        }
+        assert_eq!(remaining_flops(&spec, &done), 0.0);
+        // Recompute semantics: carried progress is re-prefilled, so
+        // mid-progress work stays within ~15% of fresh work (same total
+        // tokens to touch), while nearly-done requests clearly cost less
+        // decode work than fresh ones.
+        let mut half = fresh.clone();
+        for r in half.iter_mut() {
+            r.generated = r.output_len / 2;
+        }
+        let f0 = remaining_flops(&spec, &fresh);
+        let f_half = remaining_flops(&spec, &half);
+        assert!(f_half > 0.0);
+        assert!((f_half - f0).abs() / f0 < 0.15, "half {f_half} vs fresh {f0}");
+    }
+
+    #[test]
+    fn start_time_offsets_finish_time() {
+        let (spec, hw, cfg) = fixture();
+        let rs = reqs(50);
+        let a = run_session(&spec, 1, 1, &hw, &cfg, &rs, 0.0, None, 0).finish_time;
+        let b = run_session(&spec, 1, 1, &hw, &cfg, &rs, 100.0, None, 0).finish_time;
+        assert!((b - a - 100.0).abs() < 1e-9);
+    }
+}

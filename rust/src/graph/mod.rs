@@ -1,0 +1,178 @@
+//! Application computation graphs (§3, Fig. 5).
+//!
+//! Nodes are LLMs, edges are data flows. Self-loops (chain summary's
+//! update-the-summary loop) are handled by *fusing*: the node keeps its
+//! identity and its requests form in-engine chains instead (§4.2 "we
+//! heuristically fuse the nodes ... with self-loops into one node").
+
+use std::collections::HashSet;
+
+
+/// One LLM node in the application graph.
+#[derive(Debug, Clone)]
+pub struct AppNode {
+    pub id: usize,
+    /// Registry name of the LLM this node runs.
+    pub model: String,
+    /// Human-readable role ("summarizer", "evaluator", …).
+    pub label: String,
+    /// Output-length limit applied to this node's requests.
+    pub max_out: u32,
+}
+
+/// A multi-LLM application graph (acyclic after self-loop fusion).
+#[derive(Debug, Clone, Default)]
+pub struct AppGraph {
+    pub nodes: Vec<AppNode>,
+    /// Directed data-flow edges (producer, consumer). No self-edges after
+    /// fusion.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl AppGraph {
+    pub fn add_node(&mut self, model: &str, label: &str, max_out: u32) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(AppNode { id, model: model.to_string(), label: label.to_string(), max_out });
+        id
+    }
+
+    pub fn add_edge(&mut self, from: usize, to: usize) {
+        assert!(from < self.nodes.len() && to < self.nodes.len());
+        assert_ne!(from, to, "self-loops must be fused into chains, not edges");
+        self.edges.push((from, to));
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Producers feeding `node`.
+    pub fn inputs_of(&self, node: usize) -> Vec<usize> {
+        self.edges.iter().filter(|&&(_, t)| t == node).map(|&(f, _)| f).collect()
+    }
+
+    /// The §3 readiness rule: a node may run in a stage iff each input
+    /// node is finished, or is itself selected in the same stage
+    /// (model-level pipeline parallelism).
+    pub fn is_ready(&self, node: usize, finished: &HashSet<usize>, in_stage: &HashSet<usize>) -> bool {
+        self.inputs_of(node)
+            .iter()
+            .all(|i| finished.contains(i) || in_stage.contains(i))
+    }
+
+    /// Nodes eligible for a new stage given finished/co-scheduled sets.
+    pub fn ready_nodes(&self, finished: &HashSet<usize>, in_stage: &HashSet<usize>) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|n| !finished.contains(n))
+            .filter(|&n| self.is_ready(n, finished, in_stage))
+            .collect()
+    }
+
+    /// Topological order of `subset` (falls back to id order inside
+    /// independent groups). Panics on cycles — graphs are acyclic by
+    /// construction.
+    pub fn topo_order(&self, subset: &[usize]) -> Vec<usize> {
+        let set: HashSet<usize> = subset.iter().copied().collect();
+        let mut indeg: std::collections::HashMap<usize, usize> =
+            subset.iter().map(|&n| (n, 0)).collect();
+        for &(f, t) in &self.edges {
+            if set.contains(&f) && set.contains(&t) {
+                *indeg.get_mut(&t).unwrap() += 1;
+            }
+        }
+        let mut queue: Vec<usize> =
+            subset.iter().copied().filter(|n| indeg[n] == 0).collect();
+        queue.sort_unstable();
+        let mut out = vec![];
+        while let Some(n) = queue.pop() {
+            out.push(n);
+            for &(f, t) in &self.edges {
+                if f == n && set.contains(&t) {
+                    let d = indeg.get_mut(&t).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        queue.push(t);
+                    }
+                }
+            }
+            queue.sort_unstable();
+            queue.reverse(); // pop smallest id first
+        }
+        assert_eq!(out.len(), subset.len(), "cycle in application graph");
+        out
+    }
+
+    /// Check acyclicity of the whole graph.
+    pub fn is_acyclic(&self) -> bool {
+        let all: Vec<usize> = (0..self.nodes.len()).collect();
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.topo_order(&all))).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> AppGraph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        let mut g = AppGraph::default();
+        for i in 0..4 {
+            g.add_node("chatglm3-6b", &format!("n{i}"), 256);
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        g
+    }
+
+    #[test]
+    fn readiness_follows_edges() {
+        let g = diamond();
+        let none = HashSet::new();
+        assert_eq!(g.ready_nodes(&none, &none), vec![0]);
+        let fin: HashSet<usize> = [0].into();
+        let ready = g.ready_nodes(&fin, &none);
+        assert_eq!(ready, vec![1, 2]);
+    }
+
+    #[test]
+    fn pipeline_readiness_with_costage() {
+        // Node 1 is ready if node 0 is in the same stage (pipeline).
+        let g = diamond();
+        let fin = HashSet::new();
+        let stage: HashSet<usize> = [0].into();
+        assert!(g.is_ready(1, &fin, &stage));
+        assert!(!g.is_ready(3, &fin, &stage));
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order(&[0, 1, 2, 3]);
+        let pos = |n: usize| order.iter().position(|&x| x == n).unwrap();
+        assert!(pos(0) < pos(1));
+        assert!(pos(0) < pos(2));
+        assert!(pos(1) < pos(3));
+        assert!(pos(2) < pos(3));
+    }
+
+    #[test]
+    fn independent_nodes_all_ready() {
+        let mut g = AppGraph::default();
+        for i in 0..6 {
+            g.add_node("alpaca-13b", &format!("m{i}"), 256);
+        }
+        let none = HashSet::new();
+        assert_eq!(g.ready_nodes(&none, &none).len(), 6);
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_edges_rejected() {
+        let mut g = AppGraph::default();
+        let n = g.add_node("alpaca-13b", "x", 256);
+        g.add_edge(n, n);
+    }
+}

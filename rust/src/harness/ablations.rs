@@ -1,0 +1,167 @@
+//! Design-choice ablations beyond the paper's own (§Perf / DESIGN.md):
+//!
+//! * `fastforward` — accuracy and speed of the event-jump simulator mode
+//!   (the optimization that keeps planning cheap) against exact
+//!   per-iteration stepping;
+//! * `noise` — robustness of the scheduling result to ground-truth
+//!   iteration jitter (how sensitive are the §5 conclusions?);
+//! * `tracesize` — cost-model estimation error vs the size of the eCDF
+//!   trace (the paper uses 10 000 requests; how few suffice?).
+
+use std::fmt::Write as _;
+
+use crate::apps::ensembling;
+use crate::baselines::PolicyKind;
+use crate::cluster::ClusterSpec;
+use crate::costmodel::{CostModel, HardwareModel};
+use crate::engine::sim::{EngineConfig, EngineSim};
+use crate::engine::EngineRequest;
+use crate::models::Registry;
+use crate::runner::{run_policy, RunOpts};
+use crate::util::rng::Rng;
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::a100_node(8)
+}
+
+/// Fast-forward vs exact: time error and wall-clock speedup.
+pub fn ablate_fastforward() -> String {
+    let mut out = String::from("=== Ablation: fast-forward simulator mode ===\n");
+    let c = cluster();
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(c.clone());
+    let mut rng = Rng::new(71);
+    for (model, n) in [("chatglm3-6b", 500usize), ("vicuna-13b-v1.5", 2000), ("llama-2-70b-chat", 300)]
+    {
+        let spec = registry.get(model).unwrap();
+        let reqs: Vec<EngineRequest> = (0..n as u64)
+            .map(|i| {
+                let o = crate::workload::lengths::true_output_len(model, 0.0, 40, 512, 4096, &mut rng);
+                EngineRequest::fresh(i, 40, o)
+            })
+            .collect();
+        let tp = if model.contains("70b") { 2 } else { 1 };
+        let mut cfg = EngineConfig::standard(spec, tp, c.mem_bytes);
+        cfg.fast_forward = false;
+        let w0 = std::time::Instant::now();
+        let exact = EngineSim::new(spec, tp, &hw, cfg.clone(), reqs.clone(), 0.0, 0).run(None);
+        let exact_wall = w0.elapsed().as_secs_f64();
+        cfg.fast_forward = true;
+        let w1 = std::time::Instant::now();
+        let fast = EngineSim::new(spec, tp, &hw, cfg, reqs, 0.0, 0).run(None);
+        let fast_wall = w1.elapsed().as_secs_f64();
+        writeln!(
+            out,
+            "{model:<22} n={n:<5} exact={:.1}s fast={:.1}s (err {:.2}%) | sim wall: {:.1}ms -> {:.1}ms ({:.0}x faster)",
+            exact.clock,
+            fast.clock,
+            100.0 * (fast.clock - exact.clock).abs() / exact.clock,
+            exact_wall * 1e3,
+            fast_wall * 1e3,
+            exact_wall / fast_wall.max(1e-9),
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Scheduling robustness to ground-truth jitter.
+pub fn ablate_noise() -> String {
+    let mut out = String::from("=== Ablation: ground-truth iteration jitter ===\n");
+    let s = ensembling::build(800, 256, 5);
+    let c = cluster();
+    for sigma in [0.0, 0.02, 0.05, 0.10] {
+        let opts = RunOpts { noise_sigma: sigma, ..Default::default() };
+        let ours = run_policy(PolicyKind::SamuLlm, &s, &c, &opts);
+        let max = run_policy(PolicyKind::MaxHeuristic, &s, &c, &opts);
+        writeln!(
+            out,
+            "sigma={sigma:<5} ours={:>6.1}s max={:>6.1}s speedup={:.2}x stages={}",
+            ours.end_to_end_time,
+            max.end_to_end_time,
+            max.end_to_end_time / ours.end_to_end_time,
+            ours.n_stages
+        )
+        .unwrap();
+    }
+    out.push_str("(conclusion shape should be jitter-invariant)\n");
+    out
+}
+
+/// eCDF trace size vs estimation error (paper uses 10 000 samples).
+pub fn ablate_tracesize() -> String {
+    let mut out = String::from("=== Ablation: eCDF trace size vs estimation error ===\n");
+    let c = cluster();
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(c.clone());
+    let model = "vicuna-13b-v1.5";
+    let spec = registry.get(model).unwrap();
+    // Ground truth run.
+    let mut rng = Rng::new(9);
+    let reqs: Vec<EngineRequest> = (0..1000u64)
+        .map(|i| {
+            let o = crate::workload::lengths::true_output_len(model, 0.08, 25, 512, 4096, &mut rng);
+            EngineRequest::fresh(i, 25, o)
+        })
+        .collect();
+    let cfg = EngineConfig::standard(spec, 1, c.mem_bytes);
+    let truth = EngineSim::new(spec, 1, &hw, cfg.clone(), reqs.clone(), 0.0, 0).run(None).clock;
+    let cm = CostModel::calibrated(&c, 1);
+
+    for trace_n in [50usize, 200, 1000, 10_000] {
+        // Build a sampler from a reduced trace.
+        let lens: Vec<u32> = crate::workload::norobots::trace(model, trace_n, 99)
+            .into_iter()
+            .map(|r| r.output_len)
+            .collect();
+        let ecdf = crate::costmodel::Ecdf::from_samples(lens);
+        let mut srng = Rng::new(4);
+        let est_reqs: Vec<EngineRequest> = reqs
+            .iter()
+            .map(|r| {
+                let o = ecdf.sample(&mut srng).min(512).max(1);
+                EngineRequest::fresh(r.id, r.input_len, o)
+            })
+            .collect();
+        let est = EngineSim::new(spec, 1, &cm.iter_model, cfg.clone(), est_reqs, 0.0, 0)
+            .run(None)
+            .clock;
+        writeln!(
+            out,
+            "trace={trace_n:<6} est={est:>6.1}s truth={truth:>6.1}s error={:>5.1}%",
+            100.0 * (est - truth).abs() / truth
+        )
+        .unwrap();
+    }
+    out.push_str("(diminishing returns past ~1000 trace samples)\n");
+    out
+}
+
+pub fn all() -> String {
+    format!("{}\n{}\n{}", ablate_fastforward(), ablate_noise(), ablate_tracesize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fastforward_ablation_reports_small_error() {
+        let text = ablate_fastforward();
+        assert!(text.contains("err"));
+        // Parse every error percentage and check they're small.
+        for line in text.lines().skip(1) {
+            if let Some(i) = line.find("err ") {
+                let rest = &line[i + 4..];
+                let pct: f64 = rest[..rest.find('%').unwrap()].parse().unwrap();
+                assert!(pct < 5.0, "fast-forward error too large: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn tracesize_ablation_runs() {
+        let text = ablate_tracesize();
+        assert!(text.matches("error=").count() == 4);
+    }
+}

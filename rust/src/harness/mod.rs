@@ -1,0 +1,488 @@
+//! Experiment harness: regenerate every table and figure of the paper's
+//! evaluation (see DESIGN.md's experiment index). Each `figN()` returns
+//! printable text with the same rows/series the paper reports; the
+//! `figures` binary dispatches on ids.
+
+pub mod ablations;
+
+use std::fmt::Write as _;
+
+use crate::apps::{chain_summary, ensembling, mixed, routing};
+use crate::baselines::PolicyKind;
+use crate::cluster::ClusterSpec;
+use crate::costmodel::{CostModel, Ecdf, HardwareModel, LinearIterModel};
+use crate::costmodel::{flops, IterLatency};
+use crate::engine::sim::{EngineConfig, EngineSim};
+use crate::engine::EngineRequest;
+use crate::metrics::{gantt, RunReport};
+use crate::models::Registry;
+use crate::runner::{run_policy, RunOpts, Scenario};
+use crate::util::rng::Rng;
+use crate::workload::{booksum, norobots, routerbench};
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::a100_node(8)
+}
+
+fn header(id: &str, caption: &str) -> String {
+    format!("=== {id}: {caption} ===\n")
+}
+
+/// Shared three-policy comparison row: "<label> ours max min (speedups)".
+fn compare_row(out: &mut String, label: &str, reports: &[RunReport]) {
+    let ours = &reports[0];
+    write!(out, "{label:<28}").unwrap();
+    for r in reports {
+        write!(
+            out,
+            " | {:>13} e2e={:>7.1}s inf={:>7.1}s extra={:>5.1}s",
+            r.policy, r.end_to_end_time, r.inference_time, r.extra_time
+        )
+        .unwrap();
+    }
+    for r in &reports[1..] {
+        write!(
+            out,
+            " | {} speedup: e2e {:.2}x inf {:.2}x",
+            r.policy,
+            r.end_to_end_time / ours.end_to_end_time,
+            r.inference_time / ours.inference_time
+        )
+        .unwrap();
+    }
+    out.push('\n');
+}
+
+fn run_all(scenario: &Scenario, opts: &RunOpts) -> Vec<RunReport> {
+    PolicyKind::ALL.iter().map(|&p| run_policy(p, scenario, &cluster(), opts)).collect()
+}
+
+/// Fig. 2: output-length eCDFs by input region / category.
+pub fn fig2() -> String {
+    let mut out = header("Fig 2", "output-length eCDFs (vicuna-13b, No Robots trace)");
+    let t = norobots::trace("vicuna-13b-v1.5", 10_000, 2024);
+    let grid: Vec<u32> = (0..=10).map(|i| i * 100).collect();
+    out.push_str("(a) by input-length region\n");
+    for (label, lens) in norobots::by_input_region(&t, &[5, 50, 120, 250, 401]) {
+        let e = Ecdf::from_samples(lens);
+        let curve: Vec<String> =
+            e.curve(&grid).iter().map(|(x, p)| format!("{x}:{p:.2}")).collect();
+        writeln!(out, "  {label:>10} {}", curve.join(" ")).unwrap();
+    }
+    out.push_str("(b) by category\n");
+    for (cat, lens) in norobots::by_category(&t) {
+        let e = Ecdf::from_samples(lens);
+        let curve: Vec<String> =
+            e.curve(&grid).iter().map(|(x, p)| format!("{x}:{p:.2}")).collect();
+        writeln!(out, "  {:>10} {}", cat.name(), curve.join(" ")).unwrap();
+    }
+    // KS spread, the quantitative version of "the eCDFs are similar".
+    let cats = norobots::by_category(&t);
+    let base = Ecdf::from_samples(cats[0].1.clone());
+    let max_ks = cats[1..]
+        .iter()
+        .map(|(_, l)| base.ks_distance(&Ecdf::from_samples(l.clone())))
+        .fold(0.0, f64::max);
+    writeln!(out, "max KS distance across categories: {max_ks:.3} (similar ⇔ small)").unwrap();
+    out
+}
+
+/// Fig. 3: running request count per iteration, "real" vs simulated.
+pub fn fig3() -> String {
+    let mut out = header(
+        "Fig 3",
+        "running requests per iteration: ground truth vs cost-model simulation (vicuna-13b, 1000 reqs)",
+    );
+    let c = cluster();
+    let registry = Registry::paper();
+    let spec = registry.get("vicuna-13b-v1.5").unwrap();
+    let hw = HardwareModel::new(c.clone());
+    let cm = CostModel::calibrated(&c, 3);
+    let mut rng_true = Rng::new(31);
+    let mut rng_est = Rng::new(77);
+
+    let mk = |lens: Vec<u32>| -> Vec<EngineRequest> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &o)| EngineRequest::fresh(i as u64, 150, o))
+            .collect()
+    };
+    let true_lens: Vec<u32> = (0..1000)
+        .map(|_| crate::workload::lengths::true_output_len("vicuna-13b-v1.5", 0.0, 150, 1024, 4096, &mut rng_true))
+        .collect();
+    let est_lens: Vec<u32> =
+        (0..1000).map(|_| cm.sampler.sample("vicuna-13b-v1.5", 150, 1024, 4096, &mut rng_est)).collect();
+
+    let run = |lens: Vec<u32>, lat: &dyn IterLatency, label: &str, out: &mut String| -> f64 {
+        let mut cfg = EngineConfig::standard(spec, 1, c.mem_bytes);
+        cfg.fast_forward = false;
+        let mut sim = EngineSim::new(spec, 1, lat, cfg, mk(lens), 0.0, 5);
+        sim.enable_trace();
+        let res = sim.run(None);
+        let trace = sim.iter_trace.as_ref().unwrap();
+        let step = (trace.len() / 24).max(1);
+        let series: Vec<String> = trace
+            .iter()
+            .step_by(step)
+            .enumerate()
+            .map(|(i, (_, n))| format!("{}:{n}", i * step))
+            .collect();
+        writeln!(out, "  {label:<10} iters={} total={:.1}s\n    {}", trace.len(), res.clock, series.join(" ")).unwrap();
+        res.clock
+    };
+    let t_real = run(true_lens, &hw, "real", &mut out);
+    let t_sim = run(est_lens, &cm.iter_model, "simulated", &mut out);
+    let load = spec.load_time(1);
+    writeln!(
+        out,
+        "estimated total (incl. load {load:.0}s): {:.0}s vs real {:.0}s  (error {:.1}%; paper: 98s vs 92s, 6.5%)",
+        t_sim + load,
+        t_real + load,
+        100.0 * (t_sim - t_real).abs() / t_real
+    )
+    .unwrap();
+    out
+}
+
+/// Fig. 4: per-iteration latency components vs their linear predictors.
+pub fn fig4() -> String {
+    let mut out = header("Fig 4", "per-iteration latency components + linear fits (7B probe)");
+    let c = cluster();
+    let hw = HardwareModel::new(c.clone());
+    let lm = LinearIterModel::fit_from_profile(&hw);
+    let registry = Registry::paper();
+    let spec = registry.get("mistral-7b-instruct").unwrap();
+    for b in [8usize, 64, 256] {
+        writeln!(out, "#seq B={b}  (x = FLOPs -> comp seconds; fits r2={:?})", lm.fit_quality(b))
+            .unwrap();
+        for ctx in [64u32, 256, 1024, 2048] {
+            let total_ctx = b as u64 * ctx as u64;
+            let comp = hw.decode_components(spec, 1, b, total_ctx, ctx);
+            let fl = flops::decode_flops(spec, b, total_ctx);
+            writeln!(
+                out,
+                "  ctx={ctx:>5} flops={fl:.2e} comp={:.4} prep={:.4} samp={:.4} | linear total={:.4} truth total={:.4}",
+                comp.comp,
+                comp.prep,
+                comp.samp,
+                lm.decode(spec, 1, b, total_ctx, ctx),
+                comp.total()
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+/// Fig. 7: ensembling running time vs #requests, out limits 256/512.
+pub fn fig7(quick: bool) -> String {
+    let mut out = header("Fig 7", "LLM ensembling: running time vs #requests (3 policies)");
+    let sizes: &[usize] = if quick { &[1000, 4000] } else { &[1000, 2000, 4000, 7000, 10000] };
+    for &max_out in &[256u32, 512] {
+        writeln!(out, "-- max output length limit = {max_out}").unwrap();
+        for &n in sizes {
+            let scenario = ensembling::build(n, max_out, 42 + n as u64);
+            let reports = run_all(&scenario, &RunOpts::default());
+            compare_row(&mut out, &format!("{n} requests"), &reports);
+        }
+    }
+    out
+}
+
+/// Table 1: routing request counts/ratios.
+pub fn table1() -> String {
+    let mut out = header("Table 1", "LLM selection frequency (RouterBench)");
+    let d = routerbench::dataset(1);
+    let total = d.len();
+    writeln!(out, "{:<28} {:>9} {:>7}", "Model", "#Request", "Ratio").unwrap();
+    for (model, _) in routerbench::TABLE1 {
+        let n = d.iter().filter(|r| r.model == model).count();
+        writeln!(out, "{model:<28} {n:>9} {:>7.2}", n as f64 / total as f64).unwrap();
+    }
+    writeln!(out, "{:<28} {total:>9} {:>7.2}", "Total:", 1.0).unwrap();
+    out
+}
+
+/// Fig. 8: routing with unknown vs known output lengths.
+pub fn fig8() -> String {
+    let mut out = header("Fig 8", "LLM routing: running time w/o and w/ known output lengths");
+    let scenario = routing::build(4096, 7);
+    for known in [false, true] {
+        let opts = RunOpts { known_lengths: known, ..Default::default() };
+        let reports = run_all(&scenario, &opts);
+        compare_row(&mut out, if known { "known lengths" } else { "unknown lengths" }, &reports);
+    }
+    out
+}
+
+/// Fig. 9: routing schedules as Gantt charts (known lengths).
+pub fn fig9() -> String {
+    let mut out = header("Fig 9", "LLM routing schedules (known output lengths)");
+    let scenario = routing::build(4096, 7);
+    let opts = RunOpts { known_lengths: true, ..Default::default() };
+    for p in PolicyKind::ALL {
+        let r = run_policy(p, &scenario, &cluster(), &opts);
+        out.push_str(&gantt::render(&r, 72));
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 10: sampled document lengths.
+pub fn fig10() -> String {
+    let mut out = header("Fig 10", "lengths of 100 sampled documents (chunks)");
+    let docs = booksum::documents(100, 42);
+    let mut lens: Vec<u32> = docs.iter().map(|d| d.n_chunks).collect();
+    let series: Vec<String> = lens.iter().map(|l| l.to_string()).collect();
+    writeln!(out, "per-doc: {}", series.join(" ")).unwrap();
+    lens.sort_unstable();
+    writeln!(
+        out,
+        "median={} max={} total={} (paper: median 3, max ~60)",
+        lens[lens.len() / 2],
+        lens.last().unwrap(),
+        booksum::total_chunks(&docs)
+    )
+    .unwrap();
+    out
+}
+
+/// Fig. 11: chain summary under varying #docs / eval times / max out len.
+pub fn fig11(quick: bool) -> String {
+    let mut out = header("Fig 11", "chain summary running time (3 policies)");
+    let opts = RunOpts::default();
+    let docs: &[usize] = if quick { &[100] } else { &[100, 300, 500] };
+    writeln!(out, "-- (a) vary #documents (eval=1, max_out=500)").unwrap();
+    for &n in docs {
+        let s = chain_summary::build(n, 1, 500, 21);
+        compare_row(&mut out, &format!("{n} docs"), &run_all(&s, &opts));
+    }
+    writeln!(out, "-- (b) vary eval times (docs=100, max_out=500)").unwrap();
+    let evals: &[u32] = if quick { &[2] } else { &[2, 4, 8] };
+    for &e in evals {
+        let s = chain_summary::build(100, e, 500, 22);
+        compare_row(&mut out, &format!("eval x{e}"), &run_all(&s, &opts));
+    }
+    writeln!(out, "-- (c) vary max output length (docs=100, eval=1)").unwrap();
+    let outs: &[u32] = if quick { &[900] } else { &[100, 500, 900] };
+    for &mo in outs {
+        let s = chain_summary::build(100, 1, mo, 23);
+        compare_row(&mut out, &format!("max_out {mo}"), &run_all(&s, &opts));
+    }
+    // GPU idle-time comparison (§5.3's analysis).
+    let s = chain_summary::build(100, 2, 500, 24);
+    let rs = run_all(&s, &opts);
+    let idle: Vec<String> =
+        rs.iter().map(|r| format!("{}={:.0} gpu·s", r.policy, r.gpu_idle_time())).collect();
+    writeln!(out, "GPU idle time: {} (paper: max 1.2x, min 1.5x of ours)", idle.join(", ")).unwrap();
+    out
+}
+
+/// Fig. 12: mixed application across workload combinations.
+pub fn fig12(quick: bool) -> String {
+    let mut out = header("Fig 12", "mixed app (chain summary + 5000-req ensembling)");
+    let opts = RunOpts::default();
+    let docs: &[usize] = if quick { &[100] } else { &[100, 200, 300, 400, 500] };
+    let n_ens = if quick { 1000 } else { 5000 };
+    for &n in docs {
+        let s = mixed::build(n, n_ens, 900, 256, 4, 33);
+        let reports = run_all(&s, &opts);
+        compare_row(&mut out, &format!("({n}, {n_ens})"), &reports);
+        // Whole-app vs sequential for Ours (§5.4's extra finding).
+        let cs = chain_summary::build(n, 4, 900, 33);
+        let en = ensembling::build(n_ens, 256, 33 ^ 0x4D49_58);
+        let r1 = run_policy(PolicyKind::SamuLlm, &cs, &cluster(), &opts);
+        let r2 = run_policy(PolicyKind::SamuLlm, &en, &cluster(), &opts);
+        let seq = r1.end_to_end_time + r2.end_to_end_time;
+        writeln!(
+            out,
+            "    ours sequential two-apps: {seq:.1}s -> whole-app is {:.2}x faster",
+            seq / reports[0].end_to_end_time
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Fig. 13: mixed-app schedules at (400, 5000).
+pub fn fig13(quick: bool) -> String {
+    let mut out = header("Fig 13", "mixed app schedules at (400 docs, 5000 ensembling reqs)");
+    let (docs, ens) = if quick { (100, 1000) } else { (400, 5000) };
+    let s = mixed::build(docs, ens, 900, 256, 4, 44);
+    for p in PolicyKind::ALL {
+        let r = run_policy(p, &s, &cluster(), &RunOpts::default());
+        out.push_str(&gantt::render(&r, 72));
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 14: ablation — no-preemption variants and known output lengths.
+pub fn fig14(quick: bool) -> String {
+    let mut out =
+        header("Fig 14", "ablation on the mixed app (500 docs, 5000 ens; eval x4; out 900/512)");
+    let (docs, ens) = if quick { (100, 1000) } else { (500, 5000) };
+    let s = mixed::build(docs, ens, 900, 512, 4, 55);
+    let c = cluster();
+    let base = RunOpts::default();
+    let ours = run_policy(PolicyKind::SamuLlm, &s, &c, &base);
+    let ours_np = run_policy(
+        PolicyKind::SamuLlm,
+        &s,
+        &c,
+        &RunOpts { no_preemption: true, ..base.clone() },
+    );
+    let ours_known = run_policy(
+        PolicyKind::SamuLlm,
+        &s,
+        &c,
+        &RunOpts { known_lengths: true, ..base.clone() },
+    );
+    let min = run_policy(PolicyKind::MinHeuristic, &s, &c, &base);
+    let min_np = run_policy(
+        PolicyKind::MinHeuristic,
+        &s,
+        &c,
+        &RunOpts { no_preemption: true, ..base.clone() },
+    );
+    let min_known = run_policy(
+        PolicyKind::MinHeuristic,
+        &s,
+        &c,
+        &RunOpts { known_lengths: true, ..base.clone() },
+    );
+    for (label, r) in [
+        ("ours", &ours),
+        ("ours (no preemption)", &ours_np),
+        ("ours (known lengths)", &ours_known),
+        ("min", &min),
+        ("min (no preemption)", &min_np),
+        ("min (known lengths)", &min_known),
+    ] {
+        writeln!(
+            out,
+            "{label:<24} e2e={:>8.1}s inf={:>8.1}s  vs ours {:.2}x",
+            r.end_to_end_time,
+            r.inference_time,
+            r.end_to_end_time / ours.end_to_end_time
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "preemption speedup: ours {:.2}x, min {:.2}x (paper: 1.0-1.2x / 1.3-1.4x)",
+        ours_np.end_to_end_time / ours.end_to_end_time,
+        min_np.end_to_end_time / min.end_to_end_time
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "cost-model error: unknown lengths {:.1}% -> known lengths {:.1}% (paper: avg 25.6% -> 17.0%)",
+        100.0 * ours.estimation_error(),
+        100.0 * ours_known.estimation_error()
+    )
+    .unwrap();
+    out
+}
+
+/// Fig. 15: Ours with vs without preemption (Gantt).
+pub fn fig15(quick: bool) -> String {
+    let mut out = header("Fig 15", "ours w/ and w/o preemption (mixed app, ens limit 256)");
+    let (docs, ens) = if quick { (100, 1000) } else { (500, 5000) };
+    let s = mixed::build(docs, ens, 900, 256, 4, 66);
+    let c = cluster();
+    let with = run_policy(PolicyKind::SamuLlm, &s, &c, &RunOpts::default());
+    let without = run_policy(
+        PolicyKind::SamuLlm,
+        &s,
+        &c,
+        &RunOpts { no_preemption: true, ..Default::default() },
+    );
+    out.push_str("(a) ours\n");
+    out.push_str(&gantt::render(&with, 72));
+    out.push_str("(b) ours, no preemption\n");
+    out.push_str(&gantt::render(&without, 72));
+    out
+}
+
+/// §5.5 error study: cost-model error ratio across all applications.
+pub fn errors(quick: bool) -> String {
+    let mut out = header("Errors", "cost-model error ratios across applications (§5.5)");
+    let c = cluster();
+    let scenarios: Vec<Scenario> = vec![
+        ensembling::build(if quick { 500 } else { 2000 }, 256, 1),
+        routing::build(4096, 2),
+        chain_summary::build(if quick { 50 } else { 200 }, 2, 500, 3),
+    ];
+    let mut errs = vec![];
+    for s in &scenarios {
+        for known in [false, true] {
+            let r = run_policy(
+                PolicyKind::SamuLlm,
+                s,
+                &c,
+                &RunOpts { known_lengths: known, ..Default::default() },
+            );
+            let e = r.estimation_error();
+            errs.push(e);
+            writeln!(
+                out,
+                "{:<38} known={known:<5} est={:>8.1}s real={:>8.1}s error={:>5.1}%",
+                s.name,
+                r.estimated_inference_time,
+                r.inference_time,
+                100.0 * e
+            )
+            .unwrap();
+        }
+    }
+    let max = errs.iter().copied().fold(0.0, f64::max);
+    writeln!(out, "max error {:.1}% (paper band: 6.5-38.7%)", 100.0 * max).unwrap();
+    out
+}
+
+/// Dispatch by figure id.
+pub fn run_figure(id: &str, quick: bool) -> Option<String> {
+    Some(match id {
+        "fig2" => fig2(),
+        "fig3" => fig3(),
+        "fig4" => fig4(),
+        "fig7" => fig7(quick),
+        "table1" => table1(),
+        "fig8" => fig8(),
+        "fig9" => fig9(),
+        "fig10" => fig10(),
+        "fig11" => fig11(quick),
+        "fig12" => fig12(quick),
+        "fig13" => fig13(quick),
+        "fig14" => fig14(quick),
+        "fig15" => fig15(quick),
+        "errors" => errors(quick),
+        "ablations" => ablations::all(),
+        _ => return None,
+    })
+}
+
+/// All known figure ids, in paper order.
+pub const ALL_FIGURES: [&str; 15] = [
+    "fig2", "fig3", "fig4", "fig7", "table1", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "fig14", "fig15", "errors", "ablations",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cheap_figures_render() {
+        for id in ["fig2", "fig4", "table1", "fig10"] {
+            let s = run_figure(id, true).unwrap();
+            assert!(s.len() > 100, "{id} output too small");
+        }
+    }
+
+    #[test]
+    fn unknown_figure_is_none() {
+        assert!(run_figure("fig99", true).is_none());
+    }
+}

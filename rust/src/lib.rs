@@ -1,0 +1,81 @@
+//! # SamuLLM — offline multi-LLM application scheduling
+//!
+//! Reproduction of *"Improving the End-to-End Efficiency of Offline
+//! Inference for Multi-LLM Applications Based on Sampling and Simulation"*
+//! (Fang, Shen, Wang, Chen, 2025).
+//!
+//! The library answers one question: given a multi-LLM application (a
+//! computation graph of LLMs), a fixed set of input requests, and a
+//! single node with `N` GPUs, in which order — and with which
+//! data/tensor-parallel execution plans — should the models run so the
+//! whole application finishes soonest?
+//!
+//! ## Layers
+//!
+//! * [`costmodel`] — the paper's sampling-then-simulation cost model:
+//!   output-length eCDF sampling, FLOPs accounting (Eqs. 1–2), the linear
+//!   per-iteration latency model (Eq. 5) fit against a profiled hardware
+//!   ground truth, and model-loading cost tables.
+//! * [`engine`] — a vLLM-style FCFS continuous-batching engine simulator
+//!   with a paged-KV block manager; both the planner (with *sampled*
+//!   lengths) and the runner (with *true* lengths) step it.
+//! * [`graph`], [`plan`], [`planner`] — the application computation graph,
+//!   execution plans/stages, and the greedy stage search (Algorithm 1).
+//! * [`runner`] — the running phase: a virtual-clock orchestrator with the
+//!   dynamic scheduler, communicator, preemption and NVLink-constrained
+//!   minimum-reload placement of §4.3.
+//! * [`baselines`] — Max-heuristic / Min-heuristic / sequential /
+//!   no-preemption competitors from §5.
+//! * [`apps`], [`workload`] — the paper's applications (ensembling,
+//!   routing, chain summary, mixed) and synthetic dataset generators
+//!   matching the published workload statistics.
+//! * [`runtime`], [`serve`] — the real path: load AOT-compiled TinyGPT
+//!   HLO artifacts via PJRT and serve batched requests end-to-end.
+//! * [`harness`] — regenerates every figure/table of the paper's
+//!   evaluation (see DESIGN.md for the experiment index).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use samullm::prelude::*;
+//! use samullm::runner::RunOpts;
+//!
+//! let cluster = ClusterSpec::a100_node(8);
+//! let scenario = apps::ensembling::build(1000, 256, 42);
+//! let report = runner::run_policy(PolicyKind::SamuLlm, &scenario, &cluster, &RunOpts::default());
+//! println!("end-to-end: {:.1}s", report.end_to_end_time);
+//! ```
+
+pub mod apps;
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod costmodel;
+pub mod engine;
+pub mod graph;
+pub mod harness;
+pub mod metrics;
+pub mod models;
+pub mod plan;
+pub mod planner;
+pub mod runner;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+pub mod workload;
+
+/// Commonly used items, re-exported for examples and binaries.
+pub mod prelude {
+    pub use crate::apps;
+    pub use crate::baselines::PolicyKind;
+    pub use crate::cluster::ClusterSpec;
+    pub use crate::costmodel::{CostModel, HardwareModel};
+    pub use crate::graph::AppGraph;
+    pub use crate::metrics::RunReport;
+    pub use crate::models::{ModelSpec, Registry};
+    pub use crate::plan::{ExecPlan, Stage};
+    pub use crate::planner::GreedyPlanner;
+    pub use crate::runner::{self, Scenario};
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::Request;
+}

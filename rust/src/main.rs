@@ -1,0 +1,184 @@
+//! SamuLLM CLI: plan and run multi-LLM applications on the simulated
+//! cluster, or serve the real TinyGPT through PJRT.
+//!
+//! Commands (offline build: hand-rolled arg parsing, no clap):
+//!   samullm run    [--app A] [--policy P] [--n-requests N] [--max-out M]
+//!                  [--n-docs D] [--gpus G] [--seed S]
+//!                  [--no-preemption] [--known-lengths] [--gantt]
+//!   samullm config <file.json>
+//!   samullm serve  [--n-requests N] [--prompt-len L] [--max-new T]
+//!                  [--artifacts DIR]
+
+use anyhow::{anyhow, Result};
+
+use samullm::apps::{chain_summary, ensembling, mixed, routing};
+use samullm::baselines::PolicyKind;
+use samullm::cluster::ClusterSpec;
+use samullm::config::{AppConfig, ExperimentConfig, PolicyConfig};
+use samullm::metrics::gantt;
+use samullm::runner::{run_policy, RunOpts};
+
+/// Tiny flag parser: `--key value` and boolean `--key`.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = vec![];
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = argv.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false);
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn parse_policy(s: &str) -> Result<PolicyKind> {
+    Ok(match s {
+        "ours" | "samullm" => PolicyKind::SamuLlm,
+        "max" | "max-heuristic" => PolicyKind::MaxHeuristic,
+        "min" | "min-heuristic" => PolicyKind::MinHeuristic,
+        other => return Err(anyhow!("unknown policy {other} (ours|max|min)")),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let app = args.get_str("app", "ensembling");
+    let n_requests: usize = args.get("n-requests", 1000);
+    let max_out: u32 = args.get("max-out", 256);
+    let n_docs: usize = args.get("n-docs", 100);
+    let gpus: u32 = args.get("gpus", 8);
+    let seed: u64 = args.get("seed", 42);
+    let scenario = match app.as_str() {
+        "ensembling" => ensembling::build(n_requests, max_out, seed),
+        "routing" => routing::build(max_out.max(512), seed),
+        "chain-summary" => chain_summary::build(n_docs, 2, max_out.max(100), seed),
+        "mixed" => mixed::build(n_docs, n_requests, 900, max_out, 4, seed),
+        other => return Err(anyhow!("unknown app {other}")),
+    };
+    let cluster = ClusterSpec::a100_node(gpus);
+    let opts = RunOpts {
+        seed,
+        no_preemption: args.has("no-preemption"),
+        known_lengths: args.has("known-lengths"),
+        ..Default::default()
+    };
+    let report = run_policy(parse_policy(&args.get_str("policy", "ours"))?, &scenario, &cluster, &opts);
+    println!("{}", report.to_json());
+    if args.has("gantt") {
+        println!("{}", gantt::render(&report, 80));
+    }
+    Ok(())
+}
+
+fn cmd_config(path: &str) -> Result<()> {
+    let cfg = ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?;
+    let scenario = match cfg.app {
+        AppConfig::Ensembling { n_requests, max_out } => {
+            ensembling::build(n_requests, max_out, cfg.seed)
+        }
+        AppConfig::Routing { max_out, .. } => routing::build(max_out, cfg.seed),
+        AppConfig::ChainSummary { n_docs, eval_times, max_out } => {
+            chain_summary::build(n_docs, eval_times, max_out, cfg.seed)
+        }
+        AppConfig::Mixed { n_docs, n_ensemble_requests, summary_max_out, ensemble_max_out } => {
+            mixed::build(n_docs, n_ensemble_requests, summary_max_out, ensemble_max_out, 4, cfg.seed)
+        }
+    };
+    let policy = match cfg.policy {
+        PolicyConfig::SamuLlm => PolicyKind::SamuLlm,
+        PolicyConfig::MaxHeuristic => PolicyKind::MaxHeuristic,
+        PolicyConfig::MinHeuristic => PolicyKind::MinHeuristic,
+    };
+    let cluster = ClusterSpec::a100_node(cfg.n_gpus);
+    let opts = RunOpts {
+        seed: cfg.seed,
+        no_preemption: cfg.no_preemption,
+        known_lengths: cfg.known_output_lengths,
+        ..Default::default()
+    };
+    let report = run_policy(policy, &scenario, &cluster, &opts);
+    println!("{}", report.to_json());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let engine = samullm::serve::ServeEngine::load(std::path::Path::new(&artifacts))?;
+    println!(
+        "loaded TinyGPT on {} (batch={}, max_seq={})",
+        engine.model().platform(),
+        engine.model().batch(),
+        engine.model().max_seq()
+    );
+    let reqs = samullm::serve::synthetic_requests(
+        args.get("n-requests", 32),
+        args.get("prompt-len", 16),
+        args.get("max-new", 16),
+        1,
+    );
+    let (_, m) = engine.serve(&reqs)?;
+    println!(
+        "served {} requests: {} tokens in {:.2}s -> {:.1} tok/s (prefills {}, decode steps {}, mean latency {:.2}s, p99 {:.2}s)",
+        m.n_requests,
+        m.total_tokens,
+        m.wall_time,
+        m.tokens_per_second,
+        m.prefills,
+        m.decode_steps,
+        m.mean_latency,
+        m.p99_latency
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "run" => cmd_run(&args),
+        "config" => {
+            let path = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: samullm config <file.json>"))?;
+            cmd_config(path)
+        }
+        "serve" => cmd_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: samullm <run|config|serve> [flags]\n  see rust/src/main.rs header for flags"
+            );
+            Ok(())
+        }
+    }
+}

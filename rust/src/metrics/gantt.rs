@@ -1,0 +1,88 @@
+//! Text Gantt rendering of run timelines (Figs. 9, 13, 15).
+
+use super::RunReport;
+
+/// Render a run's schedule as an ASCII Gantt chart: one row per node,
+/// columns are time buckets, cell digits are the GPU count the node held.
+pub fn render(report: &RunReport, width: usize) -> String {
+    let total = report.inference_time.max(1e-9);
+    let mut nodes: Vec<usize> = report
+        .timeline
+        .iter()
+        .flat_map(|s| s.entries.iter().map(|(n, _)| *n))
+        .collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "policy={} inference={:.1}s stages={}\n",
+        report.policy, report.inference_time, report.n_stages
+    ));
+    for &node in &nodes {
+        let mut row = vec![b'.'; width];
+        for s in &report.timeline {
+            if let Some((_, plan)) = s.entries.iter().find(|(n, _)| *n == node) {
+                let a = ((s.start / total) * width as f64) as usize;
+                let b = (((s.end / total) * width as f64).ceil() as usize).min(width);
+                let ch = match plan.n_gpus() {
+                    g @ 0..=9 => b'0' + g as u8,
+                    _ => b'#',
+                };
+                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                    *c = ch;
+                }
+            }
+        }
+        out.push_str(&format!("node {node:>3} |{}|\n", String::from_utf8_lossy(&row)));
+    }
+    let marks = (0..=4).map(|i| format!("{:.0}s", total * i as f64 / 4.0)).collect::<Vec<_>>();
+    out.push_str(&format!("          {}\n", marks.join(" … ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StageRecord;
+    use crate::plan::ExecPlan;
+
+    #[test]
+    fn renders_rows_per_node() {
+        let report = RunReport {
+            scenario: "x".into(),
+            policy: "ours".into(),
+            extra_time: 0.0,
+            inference_time: 100.0,
+            end_to_end_time: 100.0,
+            estimated_inference_time: f64::NAN,
+            n_stages: 2,
+            timeline: vec![
+                StageRecord {
+                    start: 0.0,
+                    end: 50.0,
+                    entries: vec![(0, ExecPlan::new(4, 1)), (1, ExecPlan::new(2, 2))],
+                    loaded_nodes: vec![0, 1],
+                    load_time: 10.0,
+                    busy_gpu_seconds: vec![200.0, 200.0],
+                },
+                StageRecord {
+                    start: 50.0,
+                    end: 100.0,
+                    entries: vec![(1, ExecPlan::new(4, 2))],
+                    loaded_nodes: vec![1],
+                    load_time: 15.0,
+                    busy_gpu_seconds: vec![400.0],
+                },
+            ],
+            n_gpus: 8,
+        };
+        let g = render(&report, 40);
+        assert!(g.contains("node   0"));
+        assert!(g.contains("node   1"));
+        // Node 0 holds 4 GPUs in the first half.
+        assert!(g.lines().find(|l| l.contains("node   0")).unwrap().contains('4'));
+        // Node 1 upgrades to 8 GPUs (4x2) in the second half.
+        assert!(g.lines().find(|l| l.contains("node   1")).unwrap().contains('8'));
+    }
+}

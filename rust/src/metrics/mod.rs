@@ -1,0 +1,188 @@
+//! Run reports, GPU-idle accounting and Gantt rendering (§5's metrics).
+
+pub mod gantt;
+
+
+use crate::plan::ExecPlan;
+
+/// What happened in one executed stage.
+#[derive(Debug, Clone)]
+pub struct StageRecord {
+    pub start: f64,
+    pub end: f64,
+    /// (node, plan) pairs that ran.
+    pub entries: Vec<(usize, ExecPlan)>,
+    /// Nodes that had to (re)load models this stage.
+    pub loaded_nodes: Vec<usize>,
+    /// Loading wall-clock paid at stage start (max over parallel loads).
+    pub load_time: f64,
+    /// Busy GPU-seconds accumulated by each entry (same order as
+    /// `entries`), loading included.
+    pub busy_gpu_seconds: Vec<f64>,
+}
+
+impl StageRecord {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+
+    pub fn gpus_used(&self) -> u32 {
+        self.entries.iter().map(|(_, p)| p.n_gpus()).sum()
+    }
+}
+
+/// End-to-end result of running one application under one policy (§5's
+/// bar charts: inference time + extra time, idle time, estimation error).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub scenario: String,
+    pub policy: String,
+    /// Scheduling/search wall-clock ("extra time", the hatched bar part).
+    pub extra_time: f64,
+    /// Virtual inference time (loading included).
+    pub inference_time: f64,
+    /// `extra_time + inference_time`.
+    pub end_to_end_time: f64,
+    /// The planner's own prediction of `inference_time` (NaN if the
+    /// policy doesn't produce one).
+    pub estimated_inference_time: f64,
+    pub n_stages: usize,
+    pub timeline: Vec<StageRecord>,
+    pub n_gpus: u32,
+}
+
+impl RunReport {
+    /// GPU idle time: gpu-seconds with no model computing (or loading) on
+    /// the GPU, summed over the whole run (§5.3's idle analysis).
+    pub fn gpu_idle_time(&self) -> f64 {
+        let mut idle = 0.0;
+        for s in &self.timeline {
+            let dur = s.duration();
+            let total = self.n_gpus as f64 * dur;
+            let busy: f64 = s.busy_gpu_seconds.iter().sum();
+            idle += (total - busy).max(0.0);
+        }
+        idle
+    }
+
+    /// Cost-model error ratio `|est - actual| / actual` (§5.5).
+    pub fn estimation_error(&self) -> f64 {
+        if self.estimated_inference_time.is_nan() {
+            f64::NAN
+        } else {
+            crate::util::stats::error_ratio(self.estimated_inference_time, self.inference_time)
+        }
+    }
+
+    /// Fraction of end-to-end time spent searching (§5.1 reports 4.5–10.5%).
+    pub fn extra_time_ratio(&self) -> f64 {
+        self.extra_time / self.end_to_end_time
+    }
+
+    /// JSON rendering (CLI output contract).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let timeline: Vec<Json> = self
+            .timeline
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("start", Json::Num(s.start)),
+                    ("end", Json::Num(s.end)),
+                    (
+                        "entries",
+                        Json::Arr(
+                            s.entries
+                                .iter()
+                                .map(|(n, p)| {
+                                    Json::obj(vec![
+                                        ("node", Json::Num(*n as f64)),
+                                        ("dp", Json::Num(p.dp as f64)),
+                                        ("tp", Json::Num(p.tp as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("load_time", Json::Num(s.load_time)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("extra_time", Json::Num(self.extra_time)),
+            ("inference_time", Json::Num(self.inference_time)),
+            ("end_to_end_time", Json::Num(self.end_to_end_time)),
+            (
+                "estimated_inference_time",
+                if self.estimated_inference_time.is_nan() {
+                    Json::Null
+                } else {
+                    Json::Num(self.estimated_inference_time)
+                },
+            ),
+            ("gpu_idle_time", Json::Num(self.gpu_idle_time())),
+            ("n_stages", Json::Num(self.n_stages as f64)),
+            ("n_gpus", Json::Num(self.n_gpus as f64)),
+            ("timeline", Json::Arr(timeline)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(start: f64, end: f64, gpus: Vec<u32>, busy: Vec<f64>) -> StageRecord {
+        StageRecord {
+            start,
+            end,
+            entries: gpus
+                .into_iter()
+                .enumerate()
+                .map(|(i, g)| (i, ExecPlan::new(g, 1)))
+                .collect(),
+            loaded_nodes: vec![],
+            load_time: 0.0,
+            busy_gpu_seconds: busy,
+        }
+    }
+
+    fn report(timeline: Vec<StageRecord>) -> RunReport {
+        let inference = timeline.last().map(|s| s.end).unwrap_or(0.0);
+        RunReport {
+            scenario: "t".into(),
+            policy: "p".into(),
+            extra_time: 10.0,
+            inference_time: inference,
+            end_to_end_time: 10.0 + inference,
+            estimated_inference_time: inference * 1.2,
+            n_stages: timeline.len(),
+            timeline,
+            n_gpus: 8,
+        }
+    }
+
+    #[test]
+    fn idle_time_counts_unused_gpus() {
+        // One stage, 100 s, 6 of 8 GPUs fully busy -> 200 gpu-s idle.
+        let r = report(vec![record(0.0, 100.0, vec![4, 2], vec![400.0, 200.0])]);
+        assert!((r.gpu_idle_time() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_time_counts_underutilized_entries() {
+        // 8 GPUs assigned but a node idles half its time.
+        let r = report(vec![record(0.0, 100.0, vec![8], vec![400.0])]);
+        assert!((r.gpu_idle_time() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_and_ratio() {
+        let r = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]);
+        assert!((r.estimation_error() - 0.2).abs() < 1e-9);
+        assert!((r.extra_time_ratio() - 10.0 / 110.0).abs() < 1e-9);
+    }
+}

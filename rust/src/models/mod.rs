@@ -1,0 +1,128 @@
+//! Model catalog: architectural specs for every LLM the paper evaluates.
+//!
+//! The cost model (Eqs. 1–2 of the paper) consumes only a handful of
+//! architectural quantities per model — layer count `L`, hidden size `h`,
+//! the matmul-weight constant `c`, parameter count, and dtype width. The
+//! registry records these for the 14 models used across the paper's four
+//! experiments (§5.1–§5.4), so the simulated substrate prices exactly the
+//! model zoo the paper ran.
+
+pub mod registry;
+
+pub use registry::Registry;
+
+
+/// Architectural description of one LLM, sufficient for the cost model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Transformer layer count (`L` in Eqs. 1–2).
+    pub n_layers: u32,
+    /// Hidden dimension (`h`).
+    pub hidden: u32,
+    /// Attention heads (used for KV-cache sizing; assumes MHA unless
+    /// `kv_heads` differs, i.e. GQA).
+    pub n_heads: u32,
+    pub kv_heads: u32,
+    /// Total parameters.
+    pub n_params: u64,
+    /// Parameters actually multiplied per token (differs from `n_params`
+    /// for MoE models such as Mixtral, where only 2/8 experts are active).
+    pub active_params: u64,
+    /// Weight bytes per element (fp16/bf16 = 2).
+    pub dtype_bytes: u32,
+    /// Maximum sequence length supported.
+    pub max_seq: u32,
+    /// Base model-loading time onto 1 GPU in seconds (profiled cost-table
+    /// anchor; §2 "we can profile the model loading time ... in advance").
+    pub base_load_time: f64,
+}
+
+impl ModelSpec {
+    /// The paper's `c`: summed size of all matmul weight matrices, i.e. the
+    /// per-layer parameters that participate in GEMMs. Embeddings don't.
+    pub fn c_matmul(&self) -> f64 {
+        // Embedding + unembedding ≈ 2 * vocab * h; vocab ≈ 32000 for the
+        // Llama-family zoo. Everything else is matmul weight.
+        let embed = 2.0 * 32_000.0 * self.hidden as f64;
+        ((self.active_params as f64) - embed).max(self.active_params as f64 * 0.5)
+            / self.n_layers as f64
+    }
+
+    /// Weight bytes a single replica occupies, split across `tp` GPUs.
+    pub fn weight_bytes_per_gpu(&self, tp: u32) -> u64 {
+        (self.n_params * self.dtype_bytes as u64).div_ceil(tp as u64)
+    }
+
+    /// KV-cache bytes for one token across all layers, split across `tp`.
+    pub fn kv_bytes_per_token(&self, tp: u32) -> u64 {
+        let head_dim = (self.hidden / self.n_heads) as u64;
+        let per_layer = 2 * self.kv_heads as u64 * head_dim * self.dtype_bytes as u64;
+        (self.n_layers as u64 * per_layer).div_ceil(tp as u64)
+    }
+
+    /// Loading time for a `(dp, tp)` plan (§2 cost table). Loading the
+    /// shards of one replica onto `tp` GPUs parallelises imperfectly, and
+    /// tensor-parallel groups pay a communicator-setup cost; `dp` replicas
+    /// load concurrently on disjoint GPUs.
+    pub fn load_time(&self, tp: u32) -> f64 {
+        let shard_fraction = 1.0 / tp as f64;
+        let comm_setup = if tp > 1 { 4.0 + 1.5 * tp as f64 } else { 0.0 };
+        // Disk/PCIe bandwidth contention: shards load mostly in parallel.
+        self.base_load_time * (0.35 + 0.65 * shard_fraction) + comm_setup
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        Registry::paper().get("chatglm3-6b").unwrap().clone()
+    }
+
+    #[test]
+    fn c_matmul_positive_and_dominant() {
+        let s = spec();
+        let c = s.c_matmul();
+        assert!(c > 0.0);
+        // c * L should recover most of the active params.
+        let total = c * s.n_layers as f64;
+        assert!(total > 0.5 * s.active_params as f64);
+        assert!(total < 1.1 * s.active_params as f64);
+    }
+
+    #[test]
+    fn weight_bytes_split_by_tp() {
+        let s = spec();
+        assert_eq!(s.weight_bytes_per_gpu(1), s.n_params * 2);
+        assert!(s.weight_bytes_per_gpu(2) <= s.weight_bytes_per_gpu(1) / 2 + 1);
+    }
+
+    #[test]
+    fn load_time_grows_with_comm_setup() {
+        let s = spec();
+        // tp=2 loads smaller shards but pays NCCL-style setup; the paper's
+        // range is 11–47 s across models/plans.
+        let t1 = s.load_time(1);
+        let t8 = s.load_time(8);
+        assert!(t1 > 0.0 && t8 > 0.0);
+        for tp in [1, 2, 4, 8] {
+            let t = s.load_time(tp);
+            assert!((3.0..60.0).contains(&t), "tp={tp} t={t}");
+        }
+    }
+
+    #[test]
+    fn kv_bytes_match_architecture() {
+        // chatglm3-6b uses GQA (2 kv heads): per-token KV is
+        // 2 (K+V) * layers * kv_heads * head_dim * dtype bytes.
+        let s = spec();
+        let head_dim = (s.hidden / s.n_heads) as u64;
+        let expect = 2 * s.n_layers as u64 * s.kv_heads as u64 * head_dim * 2;
+        assert_eq!(s.kv_bytes_per_token(1), expect);
+        // An MHA model: kv_heads == n_heads.
+        let v = Registry::paper().get("vicuna-13b-v1.5").unwrap().clone();
+        assert_eq!(v.kv_bytes_per_token(1), 2 * v.n_layers as u64 * v.hidden as u64 * 2);
+    }
+}

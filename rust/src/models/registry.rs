@@ -1,0 +1,156 @@
+//! The paper's model zoo (§5.1 ensembling, §5.2 routing, §5.3 chain summary).
+//!
+//! Architectural numbers are from the models' published configs; loading
+//! times are anchored to the paper's reported 11–47 s range (§5.1).
+
+use std::collections::BTreeMap;
+
+use super::ModelSpec;
+
+/// Lookup table of model specs by name.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    specs: BTreeMap<String, ModelSpec>,
+}
+
+fn spec(
+    name: &str,
+    n_layers: u32,
+    hidden: u32,
+    n_heads: u32,
+    kv_heads: u32,
+    n_params: u64,
+    active_params: u64,
+    max_seq: u32,
+    base_load_time: f64,
+) -> ModelSpec {
+    ModelSpec {
+        name: name.to_string(),
+        n_layers,
+        hidden,
+        n_heads,
+        kv_heads,
+        n_params,
+        active_params,
+        dtype_bytes: 2,
+        max_seq,
+        base_load_time,
+    }
+}
+
+impl Registry {
+    /// All 14 models used in the paper's experiments.
+    pub fn paper() -> Self {
+        let b = 1_000_000_000u64;
+        let mut specs = BTreeMap::new();
+        let all = vec![
+            // --- §5.1 LLM ensembling (LLM-Blender zoo, 9 models) ---
+            spec("vicuna-13b-v1.5", 40, 5120, 40, 40, 13 * b, 13 * b, 4096, 24.0),
+            spec("oasst-pythia-12b", 36, 5120, 40, 40, 12 * b, 12 * b, 2048, 22.0),
+            spec("alpaca-13b", 40, 5120, 40, 40, 13 * b, 13 * b, 2048, 24.0),
+            spec("baize-v2-13b", 40, 5120, 40, 40, 13 * b, 13 * b, 4096, 24.0),
+            spec("koala-13b", 40, 5120, 40, 40, 13 * b, 13 * b, 2048, 24.0),
+            spec("dolly-v2-12b", 36, 5120, 40, 40, 12 * b, 12 * b, 2048, 22.0),
+            spec("mpt-7b-chat", 32, 4096, 32, 32, 7 * b, 7 * b, 2048, 14.0),
+            spec("chatglm3-6b", 28, 4096, 32, 2, 6 * b, 6 * b, 8192, 11.0),
+            spec("stablelm-7b", 16, 6144, 48, 48, 7 * b, 7 * b, 4096, 14.0),
+            // --- §5.2 LLM routing (RouterBench open-source subset, 5) ---
+            spec("llama-2-70b-chat", 80, 8192, 64, 8, 70 * b, 70 * b, 4096, 47.0),
+            spec("mixtral-8x7b-instruct", 32, 4096, 32, 8, 47 * b, 13 * b, 32768, 40.0),
+            spec("wizardlm-13b-v1.2", 40, 5120, 40, 40, 13 * b, 13 * b, 4096, 24.0),
+            spec("codellama-34b-instruct", 48, 8192, 64, 8, 34 * b, 34 * b, 16384, 33.0),
+            spec("mistral-7b-instruct", 32, 4096, 32, 8, 7 * b, 7 * b, 32768, 14.0),
+        ];
+        for s in all {
+            specs.insert(s.name.clone(), s);
+        }
+        Registry { specs }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// The §5.1 ensembling zoo in the paper's listing order.
+    pub fn ensembling_models() -> Vec<&'static str> {
+        vec![
+            "vicuna-13b-v1.5",
+            "oasst-pythia-12b",
+            "alpaca-13b",
+            "baize-v2-13b",
+            "koala-13b",
+            "dolly-v2-12b",
+            "mpt-7b-chat",
+            "chatglm3-6b",
+            "stablelm-7b",
+        ]
+    }
+
+    /// The §5.2 routing zoo (Table 1 order).
+    pub fn routing_models() -> Vec<&'static str> {
+        vec![
+            "llama-2-70b-chat",
+            "mixtral-8x7b-instruct",
+            "wizardlm-13b-v1.2",
+            "codellama-34b-instruct",
+            "mistral-7b-instruct",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_fourteen_present() {
+        let r = Registry::paper();
+        assert_eq!(r.len(), 14);
+        for n in Registry::ensembling_models() {
+            assert!(r.get(n).is_some(), "{n}");
+        }
+        for n in Registry::routing_models() {
+            assert!(r.get(n).is_some(), "{n}");
+        }
+    }
+
+    #[test]
+    fn load_times_in_paper_range() {
+        // §5.1: "the model loading time ... ranges from 11s to 47s".
+        let r = Registry::paper();
+        for n in r.names() {
+            let s = r.get(n).unwrap();
+            assert!((10.0..=48.0).contains(&s.base_load_time), "{n}");
+        }
+    }
+
+    #[test]
+    fn moe_active_params_below_total() {
+        let r = Registry::paper();
+        let mixtral = r.get("mixtral-8x7b-instruct").unwrap();
+        assert!(mixtral.active_params < mixtral.n_params);
+        let dense = r.get("vicuna-13b-v1.5").unwrap();
+        assert_eq!(dense.active_params, dense.n_params);
+    }
+
+    #[test]
+    fn seventy_b_wont_fit_one_gpu() {
+        // Key premise of the scheduling problem: some models need tp > 1.
+        let r = Registry::paper();
+        let llama70 = r.get("llama-2-70b-chat").unwrap();
+        assert!(llama70.weight_bytes_per_gpu(1) > 80 * (1u64 << 30));
+        assert!(llama70.weight_bytes_per_gpu(2) < 80 * (1u64 << 30));
+    }
+}

@@ -1,0 +1,223 @@
+//! Execution plans, stages and application plans (§3).
+//!
+//! * `P = (dp, tp)` — a model execution plan (Eq. 3);
+//! * `E = ((M₁,P₁), …, (M_k,P_k))` — an execution stage (Eq. 4);
+//! * `Φ = (E₁, …, E_m)` — an application execution plan.
+
+use std::collections::HashSet;
+
+
+use crate::cluster::ClusterSpec;
+use crate::graph::AppGraph;
+use crate::models::ModelSpec;
+
+/// A model execution plan: data parallelism × tensor parallelism (Eq. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExecPlan {
+    pub dp: u32,
+    pub tp: u32,
+}
+
+impl ExecPlan {
+    pub fn new(dp: u32, tp: u32) -> Self {
+        ExecPlan { dp, tp }
+    }
+
+    /// GPUs consumed: `dp · tp`.
+    pub fn n_gpus(&self) -> u32 {
+        self.dp * self.tp
+    }
+
+    /// §3 validity: weights plus at least one sequence's KV must fit the
+    /// per-GPU memory under `tp` (no CPU offloading in this work).
+    pub fn is_valid_for(&self, spec: &ModelSpec, cluster: &ClusterSpec) -> bool {
+        if self.dp == 0 || self.tp == 0 {
+            return false;
+        }
+        if !self.tp.is_power_of_two() || self.tp > cluster.n_gpus {
+            return false;
+        }
+        if self.n_gpus() > cluster.n_gpus {
+            return false;
+        }
+        let weights = spec.weight_bytes_per_gpu(self.tp);
+        if weights >= cluster.mem_bytes {
+            return false;
+        }
+        // One max-length sequence's KV share per GPU must fit beside the
+        // weights (conservative: a quarter of max_seq suffices to admit).
+        let kv_one_seq = spec.kv_bytes_per_token(self.tp) as u64 * (spec.max_seq as u64).min(2048);
+        weights + kv_one_seq < cluster.mem_bytes
+    }
+
+    /// Enumerate all valid plans for a model on a cluster.
+    pub fn enumerate(spec: &ModelSpec, cluster: &ClusterSpec) -> Vec<ExecPlan> {
+        let mut out = vec![];
+        for tp in cluster.valid_tp() {
+            for dp in 1..=cluster.n_gpus {
+                let p = ExecPlan::new(dp, tp);
+                if p.n_gpus() <= cluster.n_gpus && p.is_valid_for(spec, cluster) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One (node, plan) entry of a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageEntry {
+    pub node: usize,
+    pub plan: ExecPlan,
+}
+
+/// An execution stage (Eq. 4): nodes running concurrently with fixed plans.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Stage {
+    pub entries: Vec<StageEntry>,
+}
+
+impl Stage {
+    pub fn n_gpus(&self) -> u32 {
+        self.entries.iter().map(|e| e.plan.n_gpus()).sum()
+    }
+
+    pub fn nodes(&self) -> HashSet<usize> {
+        self.entries.iter().map(|e| e.node).collect()
+    }
+
+    pub fn plan_of(&self, node: usize) -> Option<ExecPlan> {
+        self.entries.iter().find(|e| e.node == node).map(|e| e.plan)
+    }
+
+    /// §3 stage validity: GPU budget + per-plan validity + the readiness
+    /// rule (inputs finished or co-scheduled).
+    pub fn is_valid(
+        &self,
+        graph: &AppGraph,
+        finished: &HashSet<usize>,
+        cluster: &ClusterSpec,
+        registry: &crate::models::Registry,
+    ) -> bool {
+        if self.entries.is_empty() || self.n_gpus() > cluster.n_gpus {
+            return false;
+        }
+        let in_stage = self.nodes();
+        if in_stage.len() != self.entries.len() {
+            return false; // duplicate node
+        }
+        for e in &self.entries {
+            if finished.contains(&e.node) {
+                return false;
+            }
+            let Some(spec) = registry.get(&graph.nodes[e.node].model) else {
+                return false;
+            };
+            if !e.plan.is_valid_for(spec, cluster) {
+                return false;
+            }
+            if !graph.is_ready(e.node, finished, &in_stage) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// A full application execution plan Φ (ordered stages).
+#[derive(Debug, Clone, Default)]
+pub struct AppPlan {
+    pub stages: Vec<Stage>,
+}
+
+impl AppPlan {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn setup() -> (ClusterSpec, Registry) {
+        (ClusterSpec::a100_node(8), Registry::paper())
+    }
+
+    #[test]
+    fn small_model_has_many_plans() {
+        let (c, r) = setup();
+        let plans = ExecPlan::enumerate(r.get("chatglm3-6b").unwrap(), &c);
+        // dp in 1..=8 at tp=1 alone gives 8 plans.
+        assert!(plans.len() >= 12, "{plans:?}");
+        assert!(plans.contains(&ExecPlan::new(8, 1)));
+        assert!(plans.contains(&ExecPlan::new(1, 8)));
+    }
+
+    #[test]
+    fn huge_model_requires_tp() {
+        let (c, r) = setup();
+        let plans = ExecPlan::enumerate(r.get("llama-2-70b-chat").unwrap(), &c);
+        assert!(!plans.is_empty());
+        assert!(plans.iter().all(|p| p.tp >= 2), "70B needs >=2 GPUs: {plans:?}");
+    }
+
+    #[test]
+    fn stage_gpu_budget_enforced() {
+        let (c, r) = setup();
+        let mut g = AppGraph::default();
+        let a = g.add_node("chatglm3-6b", "a", 256);
+        let b = g.add_node("mistral-7b-instruct", "b", 256);
+        let fin = HashSet::new();
+        let ok = Stage {
+            entries: vec![
+                StageEntry { node: a, plan: ExecPlan::new(4, 1) },
+                StageEntry { node: b, plan: ExecPlan::new(2, 2) },
+            ],
+        };
+        assert!(ok.is_valid(&g, &fin, &c, &r));
+        let over = Stage {
+            entries: vec![
+                StageEntry { node: a, plan: ExecPlan::new(8, 1) },
+                StageEntry { node: b, plan: ExecPlan::new(1, 2) },
+            ],
+        };
+        assert!(!over.is_valid(&g, &fin, &c, &r));
+    }
+
+    #[test]
+    fn stage_respects_dependencies() {
+        let (c, r) = setup();
+        let mut g = AppGraph::default();
+        let a = g.add_node("vicuna-13b-v1.5", "sum", 900);
+        let b = g.add_node("llama-2-70b-chat", "eval", 256);
+        g.add_edge(a, b);
+        let fin = HashSet::new();
+        // b alone: input a neither finished nor co-scheduled -> invalid.
+        let solo = Stage { entries: vec![StageEntry { node: b, plan: ExecPlan::new(1, 2) }] };
+        assert!(!solo.is_valid(&g, &fin, &c, &r));
+        // a + b together: pipeline parallelism -> valid.
+        let both = Stage {
+            entries: vec![
+                StageEntry { node: a, plan: ExecPlan::new(2, 1) },
+                StageEntry { node: b, plan: ExecPlan::new(1, 2) },
+            ],
+        };
+        assert!(both.is_valid(&g, &fin, &c, &r));
+        // b alone after a finished -> valid.
+        let fin: HashSet<usize> = [a].into();
+        assert!(solo.is_valid(&g, &fin, &c, &r));
+    }
+
+    #[test]
+    fn finished_nodes_cannot_rerun() {
+        let (c, r) = setup();
+        let mut g = AppGraph::default();
+        let a = g.add_node("alpaca-13b", "a", 256);
+        let fin: HashSet<usize> = [a].into();
+        let s = Stage { entries: vec![StageEntry { node: a, plan: ExecPlan::new(1, 1) }] };
+        assert!(!s.is_valid(&g, &fin, &c, &r));
+    }
+}

@@ -1,0 +1,5 @@
+//! The planning phase: greedy application-plan search (§4.2, Algorithm 1).
+
+pub mod greedy;
+
+pub use greedy::{GreedyPlanner, PlannedApp};

@@ -1,0 +1,239 @@
+//! The dynamic scheduler (§4.3): follow the planned stage sequence, and
+//! when reality diverges (a different model finished first), repair the
+//! next stage instead of redoing the search:
+//!
+//! * drop entries whose node already finished;
+//! * keep an unfinished node from the previous stage running under its old
+//!   plan if the next stage doesn't mention it and GPUs remain;
+//! * if the planned stages run out while work remains, synthesize
+//!   keep-last-plan stages.
+
+use std::collections::HashMap;
+
+use crate::baselines::heuristics::smallest_valid_plan;
+use crate::cluster::ClusterSpec;
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::plan::{ExecPlan, Stage, StageEntry};
+use crate::planner::PlannedApp;
+use crate::runner::state::ExecState;
+
+/// Stateful repair-as-you-go wrapper around a [`PlannedApp`].
+pub struct DynamicScheduler {
+    planned: Option<PlannedApp>,
+    next_idx: usize,
+    /// Most recent plan each node ran with (for keep-running / fallback).
+    last_plans: HashMap<usize, ExecPlan>,
+}
+
+impl DynamicScheduler {
+    pub fn new(planned: Option<PlannedApp>) -> Self {
+        DynamicScheduler { planned, next_idx: 0, last_plans: HashMap::new() }
+    }
+
+    /// Stages consumed so far (diagnostics).
+    pub fn consumed(&self) -> usize {
+        self.next_idx
+    }
+
+    /// Produce the next stage to run.
+    pub fn next_stage(
+        &mut self,
+        graph: &AppGraph,
+        true_state: &ExecState,
+        prev_stage: Option<&Stage>,
+        cluster: &ClusterSpec,
+        registry: &Registry,
+        locked: Option<&HashMap<usize, ExecPlan>>,
+    ) -> Option<Stage> {
+        let stage = self
+            .planned_next(graph, true_state, prev_stage, cluster, locked)
+            .or_else(|| self.fallback(graph, true_state, cluster, registry, locked))?;
+        for e in &stage.entries {
+            self.last_plans.insert(e.node, e.plan);
+        }
+        Some(stage)
+    }
+
+    fn planned_next(
+        &mut self,
+        graph: &AppGraph,
+        true_state: &ExecState,
+        prev_stage: Option<&Stage>,
+        cluster: &ClusterSpec,
+        locked: Option<&HashMap<usize, ExecPlan>>,
+    ) -> Option<Stage> {
+        let planned = self.planned.as_ref()?;
+        while self.next_idx < planned.stages.len() {
+            let mut stage = planned.stages[self.next_idx].clone();
+            self.next_idx += 1;
+            // Drop finished nodes (reality may be ahead of the plan).
+            stage.entries.retain(|e| !true_state.finished_nodes.contains(&e.node));
+            // No-preemption: never change a started node's plan.
+            if let Some(locked) = locked {
+                for e in stage.entries.iter_mut() {
+                    if let Some(&p) = locked.get(&e.node) {
+                        e.plan = p;
+                    }
+                }
+            }
+            // §4.3 keep-running rule: unfinished leftovers of the previous
+            // stage join with their old plans if GPUs remain.
+            if let Some(prev) = prev_stage {
+                for e in &prev.entries {
+                    if true_state.finished_nodes.contains(&e.node) {
+                        continue;
+                    }
+                    if stage.nodes().contains(&e.node) {
+                        continue;
+                    }
+                    if stage.n_gpus() + e.plan.n_gpus() <= cluster.n_gpus {
+                        stage.entries.push(*e);
+                    }
+                }
+            }
+            // Validity repair: dependencies must hold after the edits.
+            let nodes = stage.nodes();
+            stage
+                .entries
+                .retain(|e| graph.is_ready(e.node, &true_state.finished_nodes, &nodes));
+            if !stage.entries.is_empty() && stage.n_gpus() <= cluster.n_gpus {
+                return Some(stage);
+            }
+        }
+        None
+    }
+
+    /// Plan exhausted but work remains (cost-model underestimates): keep
+    /// last-known plans, fair-share anything never scheduled.
+    fn fallback(
+        &self,
+        graph: &AppGraph,
+        true_state: &ExecState,
+        cluster: &ClusterSpec,
+        registry: &Registry,
+        locked: Option<&HashMap<usize, ExecPlan>>,
+    ) -> Option<Stage> {
+        let mut stage = Stage::default();
+        let ready = graph.ready_nodes(&true_state.finished_nodes, &stage.nodes());
+        let mut budget = cluster.n_gpus;
+        for node in ready {
+            let plan = locked
+                .and_then(|l| l.get(&node).copied())
+                .or_else(|| self.last_plans.get(&node).copied())
+                .or_else(|| {
+                    let spec = registry.get(&graph.nodes[node].model)?;
+                    smallest_valid_plan(spec, cluster, budget.max(1))
+                });
+            if let Some(plan) = plan {
+                if plan.n_gpus() <= budget {
+                    budget -= plan.n_gpus();
+                    stage.entries.push(StageEntry { node, plan });
+                }
+            }
+        }
+        (!stage.entries.is_empty()).then_some(stage)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runner::state::AppRequest;
+
+    fn ctx() -> (AppGraph, Vec<Vec<AppRequest>>, ClusterSpec, Registry) {
+        let mut g = AppGraph::default();
+        g.add_node("chatglm3-6b", "a", 256);
+        g.add_node("alpaca-13b", "b", 256);
+        g.add_node("koala-13b", "c", 256);
+        let w: Vec<Vec<AppRequest>> =
+            (0..3).map(|_| (0..50).map(|i| AppRequest::simple(i, 20, 100)).collect()).collect();
+        (g, w, ClusterSpec::a100_node(8), Registry::paper())
+    }
+
+    fn planned(stages: Vec<Vec<(usize, u32, u32)>>) -> PlannedApp {
+        PlannedApp {
+            stages: stages
+                .into_iter()
+                .map(|es| Stage {
+                    entries: es
+                        .into_iter()
+                        .map(|(n, dp, tp)| StageEntry { node: n, plan: ExecPlan::new(dp, tp) })
+                        .collect(),
+                })
+                .collect(),
+            est_windows: vec![],
+            est_first_finisher: vec![],
+            est_total: 100.0,
+            search_time: 0.1,
+        }
+    }
+
+    #[test]
+    fn follows_plan_when_reality_agrees() {
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut d = DynamicScheduler::new(Some(planned(vec![
+            vec![(0, 4, 1), (1, 4, 1)],
+            vec![(2, 8, 1)],
+        ])));
+        let s1 = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(s1.entries.len(), 2);
+        let s2 = d.next_stage(&g, &st, Some(&s1), &c, &reg, None).unwrap();
+        // Stage 2 keeps unfinished leftovers 0 and 1 running (keep-running
+        // rule) next to the planned node 2 — all fit in 8 GPUs? 8+4+4 > 8,
+        // so leftovers are dropped in plan order until they fit.
+        assert!(s2.nodes().contains(&2));
+        assert!(s2.n_gpus() <= 8);
+    }
+
+    #[test]
+    fn drops_finished_nodes_from_planned_stage() {
+        let (g, w, c, reg) = ctx();
+        let mut st = ExecState::init(&w, |_, r| r.true_output_len);
+        st.finished_nodes.insert(0);
+        let mut d = DynamicScheduler::new(Some(planned(vec![vec![(0, 4, 1), (1, 4, 1)]])));
+        let s = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(s.entries.len(), 1);
+        assert_eq!(s.entries[0].node, 1);
+    }
+
+    #[test]
+    fn keep_running_rule_preserves_leftover() {
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut d = DynamicScheduler::new(Some(planned(vec![
+            vec![(0, 4, 1), (1, 4, 1)],
+            vec![(2, 4, 1)],
+        ])));
+        let s1 = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        // Pretend node 1 finished but node 0 did not (divergence).
+        let mut st2 = st.clone();
+        st2.finished_nodes.insert(1);
+        let s2 = d.next_stage(&g, &st2, Some(&s1), &c, &reg, None).unwrap();
+        assert!(s2.nodes().contains(&2), "planned node enters");
+        assert!(s2.nodes().contains(&0), "unfinished leftover keeps running");
+        assert_eq!(s2.plan_of(0), Some(ExecPlan::new(4, 1)), "same plan as before");
+    }
+
+    #[test]
+    fn fallback_when_plan_exhausted() {
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut d = DynamicScheduler::new(Some(planned(vec![])));
+        let s = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert!(!s.entries.is_empty());
+        assert!(s.n_gpus() <= 8);
+    }
+
+    #[test]
+    fn locked_plans_override_planned_changes() {
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut locked = HashMap::new();
+        locked.insert(0usize, ExecPlan::new(1, 1));
+        let mut d = DynamicScheduler::new(Some(planned(vec![vec![(0, 8, 1)]])));
+        let s = d.next_stage(&g, &st, None, &c, &reg, Some(&locked)).unwrap();
+        assert_eq!(s.plan_of(0), Some(ExecPlan::new(1, 1)));
+    }
+}

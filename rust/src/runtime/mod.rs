@@ -1,0 +1,295 @@
+//! PJRT runtime: load the AOT-compiled TinyGPT artifacts and execute them
+//! on the CPU PJRT client — the "real" inference path proving the
+//! three-layer stack (Pallas kernel → JAX model → HLO text → rust)
+//! composes. Python never runs here.
+//!
+//! Artifacts (built by `make artifacts`):
+//! * `prefill.hlo.txt`, `decode.hlo.txt` — HLO text (NOT serialized
+//!   protos; xla_extension 0.5.1 rejects jax ≥0.5's 64-bit ids);
+//! * `weights.bin` + `model_meta.json` — parameters as runtime inputs so
+//!   the HLO stays small and rust owns every buffer.
+
+pub mod tokenizer;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// `model_meta.json` schema (see `python/compile/aot.py`).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub config: ModelDims,
+    pub params: Vec<ParamEntry>,
+    pub seed: u64,
+}
+
+impl ModelMeta {
+    /// Parse the artifact contract produced by `python/compile/aot.py`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("model_meta.json: {e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow!("config missing"))?;
+        let dim = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let config = ModelDims {
+            vocab: dim("vocab")?,
+            d_model: dim("d_model")?,
+            n_heads: dim("n_heads")?,
+            n_layers: dim("n_layers")?,
+            max_seq: dim("max_seq")?,
+            batch: dim("batch")?,
+            d_ff: dim("d_ff")?,
+            d_head: dim("d_head")?,
+        };
+        let params = v
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("params missing"))?
+            .iter()
+            .map(|p| -> Result<ParamEntry> {
+                Ok(ParamEntry {
+                    name: p
+                        .get("name")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|x| x.as_arr())
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.get("offset").and_then(|x| x.as_usize()).unwrap_or(0),
+                    bytes: p.get("bytes").and_then(|x| x.as_usize()).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelMeta { config, params, seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(0) })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub d_ff: usize,
+    pub d_head: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// A loaded TinyGPT: compiled prefill/decode executables + weights.
+///
+/// Weights live on the device as `PjRtBuffer`s (uploaded once at load);
+/// the KV caches returned by prefill/decode stay device-resident too, so
+/// the per-token hot path moves only the tiny token/pos/logits arrays
+/// across the host boundary (§Perf runtime optimization).
+pub struct TinyGpt {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+/// Output of one prefill/decode call.
+///
+/// The model state (logits prefix + both KV caches) is one flat f32 device
+/// buffer; only the `[batch, vocab]` logits prefix is copied to the host.
+pub struct StepOutput {
+    /// `[batch, vocab]` next-token logits, row-major.
+    pub logits: Vec<f32>,
+    /// Device-resident packed state `[B·V logits | k | v]` — feed it back
+    /// into the next `decode` call untouched.
+    pub state: xla::PjRtBuffer,
+}
+
+impl TinyGpt {
+    /// Load artifacts from `dir` and compile both entry points.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = ModelMeta::parse(
+            &std::fs::read_to_string(dir.join("model_meta.json"))
+                .context("read model_meta.json (run `make artifacts`)")?,
+        )?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(name).to_str().unwrap())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill = compile("prefill.hlo.txt")?;
+        let decode = compile("decode.hlo.txt")?;
+
+        // Weights: uploaded to the device once, in canonical order.
+        let blob = std::fs::read(dir.join("weights.bin")).context("read weights.bin")?;
+        let mut weights = vec![];
+        for p in &meta.params {
+            let bytes = &blob[p.offset..p.offset + p.bytes];
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            let buf = client.buffer_from_host_buffer(&floats, &p.shape, None)?;
+            weights.push(buf);
+        }
+        Ok(TinyGpt { meta, client, prefill, decode, weights })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.meta.config.batch
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.meta.config.max_seq
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.meta.config.vocab
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload an i32 host array.
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, extra: Vec<xla::PjRtBuffer>) -> Result<StepOutput> {
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        for e in &extra {
+            args.push(e);
+        }
+        let mut outputs = exe.execute_b(&args)?;
+        let mut outs = outputs.swap_remove(0);
+        anyhow::ensure!(outs.len() == 1, "expected packed state, got {} outputs", outs.len());
+        let state = outs.pop().unwrap();
+        // Read the logits prefix. (CopyRawToHost is unimplemented in the
+        // CPU plugin, so we sync the state literal — on CPU this is a
+        // memcpy — and truncate; the device buffer itself is NOT consumed
+        // and feeds the next step without re-upload.)
+        let mut logits = state.to_literal_sync()?.to_vec::<f32>()?;
+        logits.truncate(self.batch() * self.vocab());
+        Ok(StepOutput { logits, state })
+    }
+
+    /// Run the prompt phase. `tokens` is `[batch * max_seq]` (padded),
+    /// `lengths` the valid prompt length per row.
+    pub fn prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<StepOutput> {
+        let b = self.batch() as i64;
+        let s = self.max_seq() as i64;
+        anyhow::ensure!(tokens.len() as i64 == b * s, "tokens must be [B,S]");
+        anyhow::ensure!(lengths.len() as i64 == b, "lengths must be [B]");
+        let toks = self.upload_i32(tokens, &[b as usize, s as usize])?;
+        let lens = self.upload_i32(lengths, &[lengths.len()])?;
+        self.run(&self.prefill, vec![toks, lens])
+    }
+
+    /// One decode step: `token[b]` at cache position `pos[b]`. The packed
+    /// state stays on-device throughout a generation.
+    pub fn decode(
+        &self,
+        token: &[i32],
+        state: xla::PjRtBuffer,
+        pos: &[i32],
+    ) -> Result<StepOutput> {
+        let b = self.batch();
+        anyhow::ensure!(token.len() == b && pos.len() == b);
+        let tok = self.upload_i32(token, &[b])?;
+        let p = self.upload_i32(pos, &[b])?;
+        self.run(&self.decode, vec![tok, state, p])
+    }
+
+    /// Greedy next tokens from `[batch, vocab]` logits.
+    pub fn argmax(&self, logits: &[f32]) -> Vec<i32> {
+        let v = self.vocab();
+        logits
+            .chunks_exact(v)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory (repo-root relative).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        default_artifacts_dir().join("model_meta.json").exists()
+    }
+
+    #[test]
+    fn load_and_prefill_decode_roundtrip() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = TinyGpt::load(&default_artifacts_dir()).unwrap();
+        let b = m.batch();
+        let s = m.max_seq();
+        // Simple prompts: tokens 1..=8, length 8 each.
+        let mut tokens = vec![0i32; b * s];
+        for row in 0..b {
+            for i in 0..8 {
+                tokens[row * s + i] = (i + 1) as i32;
+            }
+        }
+        let lengths = vec![8i32; b];
+        let out = m.prefill(&tokens, &lengths).unwrap();
+        assert_eq!(out.logits.len(), b * m.vocab());
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+
+        let next = m.argmax(&out.logits);
+        let pos = vec![8i32; b];
+        let out2 = m.decode(&next, out.state, &pos).unwrap();
+        assert_eq!(out2.logits.len(), b * m.vocab());
+        assert!(out2.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = TinyGpt::load(&default_artifacts_dir()).unwrap();
+        let b = m.batch();
+        let s = m.max_seq();
+        let mut tokens = vec![0i32; b * s];
+        for row in 0..b {
+            for i in 0..5 {
+                tokens[row * s + i] = ((row + i) % 32 + 1) as i32;
+            }
+        }
+        let lengths = vec![5i32; b];
+        let a = m.prefill(&tokens, &lengths).unwrap();
+        let b_ = m.prefill(&tokens, &lengths).unwrap();
+        assert_eq!(a.logits, b_.logits);
+    }
+}

@@ -1,0 +1,95 @@
+//! Byte-level tokenizer for the TinyGPT vocabulary (512 entries).
+//!
+//! Layout: id 0 = PAD/BOS, ids 1–256 = raw bytes 0–255, ids 257–511 =
+//! the most common English bigrams (a fixed table — no training data is
+//! shipped, and greedy longest-match over a static merge table is enough
+//! to exercise a realistic text→ids→text path in the serving examples).
+
+/// Fixed bigram merge table filling ids 257.. (order matters: greedy
+/// longest-match prefers these over single bytes).
+const BIGRAMS: [&str; 64] = [
+    "th", "he", "in", "er", "an", "re", "on", "at", "en", "nd", "ti", "es", "or", "te", "of",
+    "ed", "is", "it", "al", "ar", "st", "to", "nt", "ng", "se", "ha", "as", "ou", "io", "le",
+    "ve", "co", "me", "de", "hi", "ri", "ro", "ic", "ne", "ea", "ra", "ce", "li", "ch", "ll",
+    "be", "ma", "si", "om", "ur", " a", " t", " s", " w", " o", "e ", "s ", "d ", "t ", "n ",
+    "r ", "y ", ", ", ". ",
+];
+
+pub const PAD: i32 = 0;
+const BYTE_BASE: i32 = 1;
+const BIGRAM_BASE: i32 = 257;
+
+/// Vocabulary size this tokenizer targets (matches TinyGPT's config).
+pub const VOCAB: usize = 512;
+
+/// Encode text into token ids (greedy bigram-then-byte).
+pub fn encode(text: &str) -> Vec<i32> {
+    let bytes = text.as_bytes();
+    let mut out = vec![];
+    let mut i = 0;
+    'outer: while i < bytes.len() {
+        if i + 1 < bytes.len() {
+            let pair = &bytes[i..i + 2];
+            for (j, bg) in BIGRAMS.iter().enumerate() {
+                if bg.as_bytes() == pair {
+                    out.push(BIGRAM_BASE + j as i32);
+                    i += 2;
+                    continue 'outer;
+                }
+            }
+        }
+        out.push(BYTE_BASE + bytes[i] as i32);
+        i += 1;
+    }
+    out
+}
+
+/// Decode token ids back into text (lossy for ids outside the map).
+pub fn decode(ids: &[i32]) -> String {
+    let mut bytes = vec![];
+    for &id in ids {
+        if id >= BYTE_BASE && id < BYTE_BASE + 256 {
+            bytes.push((id - BYTE_BASE) as u8);
+        } else if id >= BIGRAM_BASE && ((id - BIGRAM_BASE) as usize) < BIGRAMS.len() {
+            bytes.extend_from_slice(BIGRAMS[(id - BIGRAM_BASE) as usize].as_bytes());
+        }
+        // PAD and unknown ids decode to nothing.
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        for text in ["hello world", "the rain in spain", "a", "", "schedule LLMs, fast."] {
+            assert_eq!(decode(&encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let text = "héllo ✓";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let ids = encode("The quick brown fox jumps over the lazy dog! 0123456789");
+        assert!(ids.iter().all(|&id| (0..VOCAB as i32).contains(&id)));
+    }
+
+    #[test]
+    fn bigrams_compress() {
+        let text = "the theme there";
+        let ids = encode(text);
+        assert!(ids.len() < text.len(), "{} !< {}", ids.len(), text.len());
+    }
+
+    #[test]
+    fn pad_decodes_to_nothing() {
+        assert_eq!(decode(&[PAD, PAD]), "");
+    }
+}

@@ -1,0 +1,150 @@
+//! Mini benchmark harness (offline build: criterion unavailable).
+//!
+//! Criterion-flavoured API subset: named groups, warmup + timed samples,
+//! mean/median/stddev reporting, and baseline save/compare under
+//! `target/bench-results/` so before/after deltas survive across runs
+//! (used by the §Perf pass in EXPERIMENTS.md).
+
+use std::time::Instant;
+
+/// One benchmark's statistics (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+}
+
+/// A group of related benchmarks, criterion-style.
+pub struct BenchGroup {
+    group: String,
+    warmup_iters: usize,
+    sample_count: usize,
+    results: Vec<BenchStats>,
+}
+
+impl BenchGroup {
+    pub fn new(group: &str) -> Self {
+        BenchGroup {
+            group: group.to_string(),
+            warmup_iters: 2,
+            sample_count: 12,
+            results: vec![],
+        }
+    }
+
+    /// Lower sample counts for expensive benches (criterion's
+    /// `sample_size`).
+    pub fn sample_size(&mut self, n: usize) -> &mut Self {
+        self.sample_count = n.max(3);
+        self
+    }
+
+    /// Time `f`, which performs one complete iteration per call.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_count);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let stats = BenchStats {
+            name: format!("{}/{}", self.group, name),
+            samples: n,
+            mean,
+            median: samples[n / 2],
+            stddev: var.sqrt(),
+            min: samples[0],
+        };
+        let delta = compare_to_baseline(&stats);
+        println!(
+            "{:<44} mean {:>12} median {:>12} ±{:>10} (n={}){}",
+            stats.name,
+            fmt_time(stats.mean),
+            fmt_time(stats.median),
+            fmt_time(stats.stddev),
+            n,
+            delta
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Persist results as the new baseline for later comparisons.
+    pub fn finish(&self) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        for s in &self.results {
+            let path = dir.join(format!("{}.txt", sanitize(&s.name)));
+            let _ = std::fs::write(path, format!("{}\n", s.median));
+        }
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_alphanumeric() { c } else { '_' }).collect()
+}
+
+fn compare_to_baseline(s: &BenchStats) -> String {
+    let path =
+        std::path::Path::new("target/bench-results").join(format!("{}.txt", sanitize(&s.name)));
+    match std::fs::read_to_string(&path).ok().and_then(|t| t.trim().parse::<f64>().ok()) {
+        Some(old) if old > 0.0 => {
+            let pct = (s.median - old) / old * 100.0;
+            format!("  [{:+.1}% vs baseline]", pct)
+        }
+        _ => String::new(),
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3} s")
+    } else if t >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else if t >= 1e-6 {
+        format!("{:.3} µs", t * 1e6)
+    } else {
+        format!("{:.1} ns", t * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let mut g = BenchGroup::new("test");
+        g.sample_size(5);
+        let s = g.bench("sleepless", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.median && s.median <= s.mean + s.stddev * 3.0);
+        assert_eq!(s.samples, 5);
+    }
+
+    #[test]
+    fn formats_time_scales() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

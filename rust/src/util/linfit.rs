@@ -1,0 +1,77 @@
+//! Ordinary least squares for the paper's Eq. (5) linear latency pieces
+//! (`a[B] * x + b[B]`) fit against profiled iteration latencies.
+
+/// Result of a 1-D least squares fit `y ~ a*x + b`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinFit {
+    pub a: f64,
+    pub b: f64,
+    /// Coefficient of determination on the fitting data.
+    pub r2: f64,
+}
+
+impl LinFit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.a * x + self.b
+    }
+}
+
+/// Fit `y ~ a*x + b` by OLS. Returns `None` for fewer than 2 points or a
+/// degenerate (constant-x) design.
+pub fn fit(xs: &[f64], ys: &[f64]) -> Option<LinFit> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx < 1e-30 {
+        return None;
+    }
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let a = sxy / sxx;
+    let b = my - a * mx;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (a * x + b);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot < 1e-30 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Some(LinFit { a, b, r2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let f = fit(&xs, &ys).unwrap();
+        assert!((f.a - 2.0).abs() < 1e-12);
+        assert!((f.b - 1.0).abs() < 1e-12);
+        assert!(f.r2 > 0.999999);
+    }
+
+    #[test]
+    fn noisy_line_reasonable() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x + 2.0 + ((x * 7.3).sin() * 0.1)).collect();
+        let f = fit(&xs, &ys).unwrap();
+        assert!((f.a - 0.5).abs() < 0.01);
+        assert!(f.r2 > 0.99);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(fit(&[1.0], &[2.0]).is_none());
+        assert!(fit(&[2.0, 2.0], &[1.0, 3.0]).is_none());
+        assert!(fit(&[1.0, 2.0], &[1.0]).is_none());
+    }
+}

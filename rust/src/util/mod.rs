@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic RNG, statistics, least squares,
+//! plus offline-build substrates for JSON, benchmarking and property
+//! testing (the usual crates are unavailable without a network).
+
+pub mod bench;
+pub mod json;
+pub mod linfit;
+pub mod quickprop;
+pub mod rng;
+pub mod stats;

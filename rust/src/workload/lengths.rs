@@ -1,0 +1,135 @@
+//! Output-length distributions — the single source of truth for both the
+//! ground-truth request lengths and the eCDF-building trace.
+//!
+//! §2's insight: a model's output length follows a distribution that is
+//! largely independent of the request (absent explicit length
+//! instructions). We model each LLM's "style" as a log-normal with a
+//! per-model location/scale derived deterministically from its name, so
+//! the whole repo agrees on what every model's true distribution is.
+//!
+//! The *trace* (No Robots stand-in) draws from these same distributions —
+//! the planner's eCDF is therefore a finite-sample estimate of the truth,
+//! and applications may additionally apply a small per-app dataset shift
+//! (MixInstruct answers are not No Robots answers), reproducing the
+//! paper's estimation-error band.
+
+use crate::util::rng::Rng;
+
+/// A log-normal output-length distribution, truncated to `[1, cap]`.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthDist {
+    /// Location of the underlying normal (ln tokens).
+    pub mu: f64,
+    /// Scale of the underlying normal.
+    pub sigma: f64,
+    /// Hard cap (the model's practical maximum answer length).
+    pub cap: u32,
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let x = rng.lognormal(self.mu, self.sigma);
+        (x.round() as u32).clamp(1, self.cap)
+    }
+
+    /// Mean of the truncated distribution, estimated analytically from the
+    /// untruncated log-normal (good enough for sanity checks).
+    pub fn approx_mean(&self) -> f64 {
+        (self.mu + self.sigma * self.sigma / 2.0).exp().min(self.cap as f64)
+    }
+}
+
+fn name_hash(name: &str) -> u64 {
+    // FNV-1a, stable across runs/platforms.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The true output-length style of a model. Centered near the published
+/// MixInstruct statistics (avg ≈ 180, max ≈ 490 under a 512 cap) with a
+/// deterministic per-model personality: chattier models answer longer.
+pub fn model_style(model: &str) -> LengthDist {
+    let h = name_hash(model);
+    // Spread mu over ln(120)..ln(260) and sigma over 0.75..1.05.
+    let u1 = (h & 0xffff) as f64 / 65535.0;
+    let u2 = ((h >> 16) & 0xffff) as f64 / 65535.0;
+    LengthDist {
+        mu: (110.0f64).ln() + u1 * ((220.0f64).ln() - (110.0f64).ln()),
+        sigma: 0.70 + 0.25 * u2,
+        cap: 1024,
+    }
+}
+
+/// Per-application dataset shift: the app's true answers come from a
+/// slightly different distribution than the eCDF-building trace. `shift`
+/// multiplies lengths by `exp(delta)` with `|delta| <= 0.25`.
+pub fn dataset_shift(app_seed: u64) -> f64 {
+    let mut rng = Rng::new(app_seed ^ 0xD1F7_5EED);
+    rng.range_f64(-0.22, 0.22)
+}
+
+/// Draw one *true* output length for `(model, app)`, respecting the output
+/// limit and the model's context window.
+pub fn true_output_len(
+    model: &str,
+    app_shift: f64,
+    input_len: u32,
+    max_out: u32,
+    max_seq: u32,
+    rng: &mut Rng,
+) -> u32 {
+    let style = model_style(model);
+    let shifted = LengthDist { mu: style.mu + app_shift, sigma: style.sigma, cap: style.cap };
+    let x = shifted.sample(rng);
+    let window = max_seq.saturating_sub(input_len).max(1);
+    x.min(max_out).min(window).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn style_is_deterministic_per_model() {
+        let a = model_style("vicuna-13b-v1.5");
+        let b = model_style("vicuna-13b-v1.5");
+        assert_eq!(a.mu, b.mu);
+        let c = model_style("chatglm3-6b");
+        assert_ne!(a.mu, c.mu);
+    }
+
+    #[test]
+    fn sample_mean_near_mixinstruct_avg() {
+        // Across the zoo the mean should land in the ~120–300 band the
+        // MixInstruct statistics (avg 180) sit in.
+        let mut rng = Rng::new(1);
+        for m in crate::models::Registry::ensembling_models() {
+            let d = model_style(m);
+            let n = 4000;
+            let mean: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+            assert!((80.0..350.0).contains(&mean), "{m}: mean={mean}");
+        }
+    }
+
+    #[test]
+    fn true_output_respects_limits() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let l = true_output_len("alpaca-13b", 0.1, 2000, 256, 2048, &mut rng);
+            assert!(l >= 1 && l <= 48.min(256), "l={l}");
+        }
+    }
+
+    #[test]
+    fn dataset_shift_bounded_and_deterministic() {
+        let s1 = dataset_shift(42);
+        let s2 = dataset_shift(42);
+        assert_eq!(s1, s2);
+        assert!(s1.abs() <= 0.25);
+        assert_ne!(dataset_shift(1), dataset_shift(2));
+    }
+}

@@ -1,0 +1,53 @@
+//! MixInstruct stand-in (§5.1): inputs for the LLM-ensembling application.
+//!
+//! Published statistics reproduced: request input length 5–127, average 21.
+
+use super::Category;
+use crate::util::rng::Rng;
+
+/// An ensembling input: just an id + prompt length (+ category for Fig. 2
+//  style analyses). Output lengths are per-*model* and assigned when the
+//  application scenario is built.
+#[derive(Debug, Clone)]
+pub struct MixInput {
+    pub id: u64,
+    pub input_len: u32,
+    pub category: Category,
+}
+
+/// Generate `n` MixInstruct-like inputs.
+pub fn inputs(n: usize, seed: u64) -> Vec<MixInput> {
+    let mut rng = Rng::new(seed ^ 0x6D69_7869_6E73);
+    (0..n as u64)
+        .map(|id| {
+            // Log-normal-ish short prompts: median ~16, mean ~21, max 127.
+            let x = rng.lognormal((16.0f64).ln(), 0.55);
+            let input_len = (x.round() as u32).clamp(5, 127);
+            MixInput { id, input_len, category: *rng.choice(&Category::ALL) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statistics_match_published() {
+        let xs = inputs(10_000, 1);
+        assert_eq!(xs.len(), 10_000);
+        let min = xs.iter().map(|x| x.input_len).min().unwrap();
+        let max = xs.iter().map(|x| x.input_len).max().unwrap();
+        let mean = xs.iter().map(|x| x.input_len as f64).sum::<f64>() / xs.len() as f64;
+        assert!(min >= 5);
+        assert!(max <= 127);
+        assert!((15.0..28.0).contains(&mean), "mean={mean} (paper: 21)");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = inputs(50, 9);
+        let b = inputs(50, 9);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.input_len == y.input_len));
+    }
+}

@@ -1,0 +1,109 @@
+//! No Robots stand-in trace (§2, Fig. 2): the 10 000-request instruction
+//! set used to build per-model output-length eCDFs offline.
+
+use super::lengths::model_style;
+use super::Category;
+use crate::util::rng::Rng;
+
+/// One trace record: what the paper collects by running an LLM over the
+/// No Robots requests.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub category: Category,
+    pub input_len: u32,
+    pub output_len: u32,
+}
+
+/// Generate the eCDF-building trace for `model`: `n` requests across the
+/// ten categories, input lengths 5–400 (instructions are short-ish), and
+/// output lengths drawn from the model's true style — i.e. the trace is a
+/// faithful but finite sample of reality, exactly like the paper's.
+pub fn trace(model: &str, n: usize, seed: u64) -> Vec<TraceRecord> {
+    let mut rng = Rng::new(seed ^ 0x6E6F_726F_626F_7473);
+    let style = model_style(model);
+    (0..n)
+        .map(|_| {
+            let category = *rng.choice(&Category::ALL);
+            // Input length: log-uniform 5..400, category-independent.
+            let lo = (5.0f64).ln();
+            let hi = (400.0f64).ln();
+            let input_len = rng.range_f64(lo, hi).exp().round() as u32;
+            let output_len = style.sample(&mut rng);
+            TraceRecord { category, input_len, output_len }
+        })
+        .collect()
+}
+
+/// Bucket a trace by input-length region (Fig. 2a): `[0,50) [50,100) ...`.
+pub fn by_input_region(records: &[TraceRecord], edges: &[u32]) -> Vec<(String, Vec<u32>)> {
+    let mut out = vec![];
+    for w in edges.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let lens: Vec<u32> = records
+            .iter()
+            .filter(|r| r.input_len >= lo && r.input_len < hi)
+            .map(|r| r.output_len)
+            .collect();
+        out.push((format!("[{lo},{hi})"), lens));
+    }
+    out
+}
+
+/// Bucket a trace by category (Fig. 2b).
+pub fn by_category(records: &[TraceRecord]) -> Vec<(Category, Vec<u32>)> {
+    Category::ALL
+        .iter()
+        .map(|&c| {
+            (c, records.iter().filter(|r| r.category == c).map(|r| r.output_len).collect())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Ecdf;
+
+    #[test]
+    fn trace_has_requested_size_and_ranges() {
+        let t = trace("vicuna-13b-v1.5", 5000, 7);
+        assert_eq!(t.len(), 5000);
+        for r in &t {
+            assert!((5..=400).contains(&r.input_len));
+            assert!((1..=1024).contains(&r.output_len));
+        }
+    }
+
+    #[test]
+    fn ecdfs_similar_across_categories() {
+        // The Fig. 2 insight: output-length eCDFs barely depend on the
+        // request category. KS distance between category eCDFs stays small.
+        let t = trace("vicuna-13b-v1.5", 10_000, 9);
+        let cats = by_category(&t);
+        let first = Ecdf::from_samples(cats[0].1.clone());
+        for (_, lens) in &cats[1..] {
+            let e = Ecdf::from_samples(lens.clone());
+            assert!(first.ks_distance(&e) < 0.08);
+        }
+    }
+
+    #[test]
+    fn ecdfs_similar_across_input_regions() {
+        let t = trace("chatglm3-6b", 10_000, 11);
+        let regions = by_input_region(&t, &[5, 50, 120, 250, 401]);
+        let base = Ecdf::from_samples(regions[0].1.clone());
+        for (_, lens) in &regions[1..] {
+            assert!(!lens.is_empty());
+            let e = Ecdf::from_samples(lens.clone());
+            assert!(base.ks_distance(&e) < 0.08);
+        }
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let a = trace("koala-13b", 100, 3);
+        let b = trace("koala-13b", 100, 3);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.output_len == y.output_len));
+    }
+}

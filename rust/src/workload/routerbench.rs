@@ -1,0 +1,97 @@
+//! RouterBench stand-in (§5.2, Table 1): routing inputs with known
+//! best-model assignments and (optionally) known response lengths.
+//!
+//! Published statistics reproduced:
+//! * per-model routing counts (Table 1): llama-70b 408, mixtral 1267,
+//!   wizardlm 2068, codellama 456, mistral 2657 — total 6856;
+//! * input length 9–577, average 310;
+//! * output length 3–1585, average 199.
+
+use super::Category;
+use crate::util::rng::Rng;
+
+/// Table 1 of the paper: (model, request count).
+pub const TABLE1: [(&str, usize); 5] = [
+    ("llama-2-70b-chat", 408),
+    ("mixtral-8x7b-instruct", 1267),
+    ("wizardlm-13b-v1.2", 2068),
+    ("codellama-34b-instruct", 456),
+    ("mistral-7b-instruct", 2657),
+];
+
+/// One routed request; `output_len` is the *known* response length the
+/// dataset ships (used by the "known output lengths" experiment of Fig. 8).
+#[derive(Debug, Clone)]
+pub struct RoutedRequest {
+    pub id: u64,
+    pub model: &'static str,
+    pub input_len: u32,
+    pub output_len: u32,
+    pub category: Category,
+}
+
+/// Generate the full routed dataset with Table 1's exact counts.
+pub fn dataset(seed: u64) -> Vec<RoutedRequest> {
+    let mut rng = Rng::new(seed ^ 0x726F_7574_6572);
+    let mut out = vec![];
+    let mut id = 0u64;
+    for (model, count) in TABLE1 {
+        for _ in 0..count {
+            // Inputs: log-normal centered to hit mean≈310 within [9,577].
+            let input = rng.lognormal((290.0f64).ln(), 0.55);
+            let input_len = (input.round() as u32).clamp(9, 577);
+            // Outputs: mean≈199, range [3,1585].
+            let output = rng.lognormal((150.0f64).ln(), 0.85);
+            let output_len = (output.round() as u32).clamp(3, 1585);
+            out.push(RoutedRequest {
+                id,
+                model,
+                input_len,
+                output_len,
+                category: *rng.choice(&Category::ALL),
+            });
+            id += 1;
+        }
+    }
+    // Interleave models (the dataset is not sorted by route target).
+    rng.shuffle(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_counts_exact() {
+        let d = dataset(3);
+        assert_eq!(d.len(), 6856);
+        for (model, count) in TABLE1 {
+            let n = d.iter().filter(|r| r.model == model).count();
+            assert_eq!(n, count, "{model}");
+        }
+    }
+
+    #[test]
+    fn length_statistics_match_published() {
+        let d = dataset(5);
+        let in_mean = d.iter().map(|r| r.input_len as f64).sum::<f64>() / d.len() as f64;
+        let out_mean = d.iter().map(|r| r.output_len as f64).sum::<f64>() / d.len() as f64;
+        assert!((250.0..370.0).contains(&in_mean), "input mean={in_mean} (paper: 310)");
+        assert!((150.0..260.0).contains(&out_mean), "output mean={out_mean} (paper: 199)");
+        assert!(d.iter().all(|r| (9..=577).contains(&r.input_len)));
+        assert!(d.iter().all(|r| (3..=1585).contains(&r.output_len)));
+    }
+
+    #[test]
+    fn ratios_match_table1() {
+        // Ratio column of Table 1: 0.06 / 0.18 / 0.30 / 0.07 / 0.39.
+        let d = dataset(1);
+        let total = d.len() as f64;
+        let want = [0.06, 0.18, 0.30, 0.07, 0.39];
+        for ((model, _), w) in TABLE1.iter().zip(want) {
+            let ratio = d.iter().filter(|r| r.model == *model).count() as f64 / total;
+            assert!((ratio - w).abs() < 0.01, "{model}: {ratio} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! placement, planning, state) via the in-tree `quickprop` harness.
+
+use std::collections::HashMap;
+
+use samullm::cluster::{ClusterSpec, Placement};
+use samullm::costmodel::{CostModel, Ecdf, HardwareModel};
+use samullm::engine::sim::{EngineConfig, EngineSim};
+use samullm::engine::EngineRequest;
+use samullm::graph::AppGraph;
+use samullm::models::Registry;
+use samullm::plan::ExecPlan;
+use samullm::planner::GreedyPlanner;
+use samullm::prop_assert;
+use samullm::runner::state::{AppRequest, ExecState};
+use samullm::util::quickprop;
+use samullm::util::rng::Rng;
+
+fn random_requests(rng: &mut Rng, n: usize) -> Vec<EngineRequest> {
+    (0..n as u64)
+        .map(|i| {
+            EngineRequest::fresh(
+                i,
+                rng.range_u64(1, 600) as u32,
+                rng.range_u64(1, 700) as u32,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn engine_conserves_requests_and_tokens() {
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(cluster.clone());
+    quickprop::run(25, 0xE11, |rng| {
+        let name = *rng.choice(&["chatglm3-6b", "vicuna-13b-v1.5", "mistral-7b-instruct"]);
+        let spec = registry.get(name).unwrap();
+        let tp = *rng.choice(&[1u32, 2]);
+        let n = rng.range_usize(1, 400);
+        let reqs = random_requests(rng, n);
+        let want_tokens: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        let cfg = EngineConfig::standard(spec, tp, cluster.mem_bytes);
+        let mut sim = EngineSim::new(spec, tp, &hw, cfg, reqs, 0.0, rng.next_u64());
+        let out = sim.run(None);
+        prop_assert!(out.finished == n, "finished {} != {}", out.finished, n);
+        prop_assert!(
+            out.tokens_generated == want_tokens,
+            "tokens {} != {}",
+            out.tokens_generated,
+            want_tokens
+        );
+        prop_assert!(sim.is_done(), "sim not done");
+        prop_assert!(sim.free_blocks() <= sim.blocks_total(), "block leak");
+        prop_assert!(
+            sim.free_blocks() == sim.blocks_total(),
+            "blocks not all freed: {}/{}",
+            sim.free_blocks(),
+            sim.blocks_total()
+        );
+        prop_assert!(out.clock.is_finite() && out.clock > 0.0, "bad clock {}", out.clock);
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_clock_monotone_and_busy_bounded() {
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(cluster.clone());
+    let spec = registry.get("chatglm3-6b").unwrap();
+    quickprop::run(20, 0xC10C, |rng| {
+        let n = rng.range_usize(5, 150);
+        let mut reqs = random_requests(rng, n);
+        for r in reqs.iter_mut() {
+            r.ready_time = rng.range_f64(0.0, 30.0);
+        }
+        let cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes);
+        let mut sim = EngineSim::new(spec, 1, &hw, cfg, reqs, 0.0, 1);
+        let mut prev = sim.clock();
+        while sim.step() || sim.idle_until_ready() {
+            prop_assert!(sim.clock() >= prev, "clock went backwards");
+            prev = sim.clock();
+            if sim.is_done() {
+                break;
+            }
+        }
+        let out = sim.outcome();
+        prop_assert!(out.busy_time <= sim.clock() + 1e-9, "busy > wall");
+        Ok(())
+    });
+}
+
+#[test]
+fn fast_forward_agrees_with_exact() {
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(cluster.clone());
+    quickprop::run(12, 0xFA57, |rng| {
+        let spec = registry.get("mistral-7b-instruct").unwrap();
+        let n = rng.range_usize(10, 250);
+        let reqs = random_requests(rng, n);
+        let mut cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes);
+        cfg.fast_forward = false;
+        let exact = EngineSim::new(spec, 1, &hw, cfg.clone(), reqs.clone(), 0.0, 0).run(None);
+        cfg.fast_forward = true;
+        let fast = EngineSim::new(spec, 1, &hw, cfg, reqs, 0.0, 0).run(None);
+        let err = (fast.clock - exact.clock).abs() / exact.clock.max(1e-9);
+        prop_assert!(err < 0.03, "fast/exact diverged: {} vs {}", fast.clock, exact.clock);
+        prop_assert!(fast.tokens_generated == exact.tokens_generated, "token mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn placement_transitions_always_valid_and_minimal() {
+    let cluster = ClusterSpec::a100_node(8);
+    quickprop::run(60, 0x97AC, |rng| {
+        let loader = |_o: u64, tp: u32| 10.0 + tp as f64;
+        let mut placement = Placement::empty(8);
+        for _ in 0..rng.range_usize(1, 6) {
+            // Random feasible stage: owners 0..5, dp*tp <= 8 total.
+            let mut needs: Vec<(u64, u32, u32)> = vec![];
+            let mut budget = 8u32;
+            for owner in 0..rng.range_u64(1, 5) {
+                let tp = *rng.choice(&[1u32, 2, 4]);
+                if tp > budget {
+                    continue;
+                }
+                let dp = rng.range_u64(1, (budget / tp) as u64 + 1) as u32;
+                needs.push((owner, dp, tp));
+                budget -= dp * tp;
+            }
+            if needs.is_empty() {
+                continue;
+            }
+            let plan = Placement::transition(&placement, &needs, &cluster, &loader)
+                .ok_or("transition failed for feasible needs")?;
+            prop_assert!(plan.placement.is_valid(&cluster), "invalid placement");
+            // All needs satisfied.
+            for (owner, dp, tp) in &needs {
+                let got = plan
+                    .placement
+                    .groups
+                    .iter()
+                    .filter(|g| g.owner == *owner && g.tp == *tp)
+                    .count();
+                prop_assert!(got == *dp as usize, "owner {owner} got {got} != dp {dp}");
+            }
+            // Min-reload: unchanged (owner, tp) pairs from the previous
+            // placement are never in new_groups when capacity allows zero
+            // moves (checked via identity transition).
+            let again = Placement::transition(&plan.placement, &needs, &cluster, &loader)
+                .ok_or("identity transition failed")?;
+            prop_assert!(again.new_groups.is_empty(), "identity transition reloaded");
+            placement = plan.placement;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ecdf_quantile_cdf_inverse() {
+    quickprop::run(50, 0xECDF, |rng| {
+        let n = rng.range_usize(1, 500);
+        let samples: Vec<u32> = (0..n).map(|_| rng.range_u64(0, 2000) as u32).collect();
+        let e = Ecdf::from_samples(samples.clone());
+        let q = rng.uniform();
+        let x = e.quantile(q);
+        prop_assert!(e.cdf(x) + 1e-12 >= q, "cdf(quantile(q)) < q");
+        prop_assert!(x >= e.min() && x <= e.max(), "quantile out of support");
+        // CDF is monotone.
+        let a = rng.range_u64(0, 2000) as u32;
+        let b = a + rng.range_u64(0, 100) as u32;
+        prop_assert!(e.cdf(a) <= e.cdf(b), "cdf not monotone");
+        Ok(())
+    });
+}
+
+#[test]
+fn planner_stages_always_valid() {
+    let cluster = ClusterSpec::a100_node(8);
+    let cost = CostModel::calibrated(&cluster, 5);
+    let registry = Registry::paper();
+    let planner = GreedyPlanner::new(cost, registry.clone(), cluster.clone());
+    let models = Registry::ensembling_models();
+    quickprop::run(8, 0x91A0, |rng| {
+        let k = rng.range_usize(2, 6);
+        let mut graph = AppGraph::default();
+        let mut workloads = vec![];
+        for i in 0..k {
+            let m = models[rng.range_usize(0, models.len())];
+            graph.add_node(m, &format!("m{i}"), 256);
+            let n = rng.range_usize(20, 150);
+            workloads.push(
+                (0..n as u64)
+                    .map(|id| AppRequest::simple(id, rng.range_u64(5, 127) as u32, rng.range_u64(5, 256) as u32))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        let plan = planner.plan(&graph, &workloads, false, rng.next_u64());
+        prop_assert!(!plan.stages.is_empty(), "empty plan");
+        let mut finished: std::collections::HashSet<usize> = Default::default();
+        for s in &plan.stages {
+            prop_assert!(s.n_gpus() <= 8, "stage over budget: {:?}", s);
+            for e in &s.entries {
+                let spec = registry.get(&graph.nodes[e.node].model).unwrap();
+                prop_assert!(
+                    e.plan.is_valid_for(spec, &cluster),
+                    "invalid plan {:?} for {}",
+                    e.plan,
+                    spec.name
+                );
+                prop_assert!(!finished.contains(&e.node), "finished node rescheduled");
+            }
+            // Estimated windows are ordered.
+            let _ = &mut finished;
+        }
+        // Every node appears somewhere.
+        for nid in 0..k {
+            prop_assert!(
+                plan.stages.iter().any(|s| s.nodes().contains(&nid)),
+                "node {nid} never scheduled"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn exec_state_progress_is_monotone() {
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(cluster.clone());
+    quickprop::run(10, 0x57A7E, |rng| {
+        let mut graph = AppGraph::default();
+        graph.add_node("chatglm3-6b", "a", 256);
+        graph.add_node("alpaca-13b", "b", 256);
+        let w: Vec<Vec<AppRequest>> = (0..2)
+            .map(|_| {
+                (0..rng.range_u64(20, 200))
+                    .map(|id| AppRequest::simple(id, 20, rng.range_u64(10, 300) as u32))
+                    .collect()
+            })
+            .collect();
+        let mut st = ExecState::init(&w, |_, r| r.true_output_len);
+        let stage = samullm::plan::Stage {
+            entries: vec![
+                samullm::plan::StageEntry { node: 0, plan: ExecPlan::new(4, 1) },
+                samullm::plan::StageEntry { node: 1, plan: ExecPlan::new(4, 1) },
+            ],
+        };
+        let mut prev_done = 0usize;
+        let mut prev_clock = 0.0f64;
+        let mut guard = 0;
+        while !st.all_done() {
+            guard += 1;
+            prop_assert!(guard < 64, "state machine diverged");
+            let mut s2 = stage.clone();
+            s2.entries.retain(|e| !st.finished_nodes.contains(&e.node));
+            let res = st.run_stage(
+                &s2,
+                &graph,
+                &registry,
+                &hw,
+                cluster.mem_bytes,
+                &HashMap::new(),
+                false,
+                false,
+            );
+            prop_assert!(res.end + 1e-12 >= res.start, "negative stage duration");
+            prop_assert!(st.clock + 1e-12 >= prev_clock, "clock regressed");
+            prop_assert!(st.completed.len() >= prev_done, "completions regressed");
+            prev_done = st.completed.len();
+            prev_clock = st.clock;
+        }
+        let total: usize = w.iter().map(|x| x.len()).sum();
+        prop_assert!(st.completed.len() == total, "lost requests: {}", st.completed.len());
+        Ok(())
+    });
+}
