@@ -4,14 +4,12 @@
 //!
 //! Run with: `cargo run --release --example chain_summary_pipeline`
 
-use samullm::apps::chain_summary;
-use samullm::baselines::PolicyKind;
-use samullm::cluster::ClusterSpec;
 use samullm::metrics::gantt;
-use samullm::runner::{run_policy, RunOpts};
+use samullm::policy;
+use samullm::prelude::*;
 use samullm::workload::booksum;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let n_docs = 100;
     let docs = booksum::documents(n_docs, 21);
     let mut lens: Vec<u32> = docs.iter().map(|d| d.n_chunks).collect();
@@ -24,12 +22,9 @@ fn main() {
         lens.last().unwrap()
     );
 
-    let scenario = chain_summary::build(n_docs, 2, 500, 21);
-    let cluster = ClusterSpec::a100_node(8);
-    let opts = RunOpts::default();
-
-    for policy in PolicyKind::ALL {
-        let r = run_policy(policy, &scenario, &cluster, &opts);
+    let session = SamuLlm::builder().cluster(ClusterSpec::a100_node(8)).seed(21).build()?;
+    let spec = AppSpec::chain_summary(n_docs, 2, 500);
+    for r in &session.compare(&spec, &policy::PAPER)? {
         println!(
             "{:<14} end-to-end {:>7.1}s  idle {:>6.0} gpu·s  stages={}",
             r.policy,
@@ -37,12 +32,13 @@ fn main() {
             r.gpu_idle_time(),
             r.n_stages
         );
-        if policy == PolicyKind::SamuLlm {
-            println!("{}", gantt::render(&r, 72));
+        if r.policy == "ours" {
+            println!("{}", gantt::render(r, 72));
         }
     }
     println!(
         "note: node 0 = vicuna-13b summarizer (chained chunks), node 1 = llama-70b evaluator\n\
          SamuLLM hands GPUs freed by the shrinking summary workload to the evaluator."
     );
+    Ok(())
 }

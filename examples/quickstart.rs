@@ -1,25 +1,31 @@
-//! Quickstart: schedule a 9-model LLM-ensembling application on a
-//! simulated 8×A100 node and compare SamuLLM against both heuristics.
+//! Quickstart: the canonical `SamuLlm` session entry point.
+//!
+//! Build a session once (cluster + policy + seed), describe the scenario
+//! declaratively with an `AppSpec`, and run. Here: a 9-model LLM
+//! ensembling application on a simulated 8×A100 node, SamuLLM vs both
+//! heuristics (the paper's Fig. 7a leftmost group).
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use samullm::apps::ensembling;
-use samullm::baselines::PolicyKind;
-use samullm::cluster::ClusterSpec;
 use samullm::metrics::gantt;
-use samullm::runner::{run_policy, RunOpts};
+use samullm::policy;
+use samullm::prelude::*;
 
-fn main() {
-    let cluster = ClusterSpec::a100_node(8);
+fn main() -> anyhow::Result<()> {
     // 1000 MixInstruct-like requests, answered by all nine LLM-Blender
-    // models, output limit 256 (the paper's Fig. 7a leftmost group).
-    let scenario = ensembling::build(1000, 256, 42);
-    println!("scenario: {} ({} models)", scenario.name, scenario.graph.n_nodes());
+    // models, output limit 256.
+    let spec = AppSpec::ensembling(1000, 256);
 
-    let opts = RunOpts::default();
-    let mut reports = vec![];
-    for policy in PolicyKind::ALL {
-        let r = run_policy(policy, &scenario, &cluster, &opts);
+    let session = SamuLlm::builder()
+        .cluster(ClusterSpec::a100_node(8))
+        .policy("ours")
+        .seed(42)
+        .build()?;
+    println!("app: {} on {} GPUs, seed {}", spec.kind(), session.cluster().n_gpus, session.seed());
+
+    // One scenario, all three paper policies.
+    let reports = session.compare(&spec, &policy::PAPER)?;
+    for r in &reports {
         println!(
             "{:<14} end-to-end {:>7.1}s  (inference {:>7.1}s + search {:>5.1}s)  stages={} idle={:.0} gpu·s",
             r.policy,
@@ -29,7 +35,6 @@ fn main() {
             r.n_stages,
             r.gpu_idle_time()
         );
-        reports.push(r);
     }
     let ours = &reports[0];
     for other in &reports[1..] {
@@ -48,4 +53,5 @@ fn main() {
         ours.inference_time,
         100.0 * ours.estimation_error()
     );
+    Ok(())
 }

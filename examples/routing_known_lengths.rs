@@ -4,28 +4,31 @@
 //!
 //! Run with: `cargo run --release --example routing_known_lengths`
 
-use samullm::apps::routing;
-use samullm::baselines::PolicyKind;
-use samullm::cluster::ClusterSpec;
-use samullm::runner::{run_policy, RunOpts};
+use samullm::policy;
+use samullm::prelude::*;
 use samullm::workload::routerbench::TABLE1;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     println!("Table 1 routing distribution:");
     for (model, count) in TABLE1 {
         println!("  {model:<28} {count:>5}");
     }
-    let scenario = routing::build(4096, 7);
-    let cluster = ClusterSpec::a100_node(8);
 
     for known in [false, true] {
-        println!("\n--- output lengths {} ---", if known { "KNOWN" } else { "unknown (eCDF-sampled)" });
-        let opts = RunOpts { known_lengths: known, ..Default::default() };
-        let mut ours_t = 0.0;
-        for policy in PolicyKind::ALL {
-            let r = run_policy(policy, &scenario, &cluster, &opts);
-            if policy == PolicyKind::SamuLlm {
-                ours_t = r.end_to_end_time;
+        println!(
+            "\n--- output lengths {} ---",
+            if known { "KNOWN" } else { "unknown (eCDF-sampled)" }
+        );
+        let session = SamuLlm::builder()
+            .cluster(ClusterSpec::a100_node(8))
+            .seed(7)
+            .known_lengths(known)
+            .build()?;
+        let spec = AppSpec::routing(4096, false);
+        let reports = session.compare(&spec, &policy::PAPER)?;
+        let ours_t = reports[0].end_to_end_time;
+        for r in &reports {
+            if r.policy == "ours" {
                 println!(
                     "{:<14} {:>7.1}s  (estimate {:.1}s, error {:.1}%)",
                     r.policy,
@@ -43,4 +46,5 @@ fn main() {
             }
         }
     }
+    Ok(())
 }

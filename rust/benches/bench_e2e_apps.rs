@@ -3,10 +3,9 @@
 //! our framework's cost to schedule+simulate the whole application —
 //! the paper's "extra time" plus the runner's bookkeeping.
 
-use samullm::apps::{chain_summary, ensembling, mixed, routing};
-use samullm::baselines::PolicyKind;
 use samullm::cluster::ClusterSpec;
 use samullm::runner::{run_policy, RunOpts};
+use samullm::spec::AppSpec;
 use samullm::util::bench::BenchGroup;
 
 fn main() {
@@ -15,22 +14,22 @@ fn main() {
     let mut g = BenchGroup::new("e2e_apps");
     g.sample_size(4);
 
-    let s = ensembling::build(1000, 256, 42);
-    g.bench("fig7_ensembling_1k_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+    let s = AppSpec::ensembling(1000, 256).build(42).expect("spec");
+    g.bench("fig7_ensembling_1k_ours", || run_policy("ours", &s, &cluster, &opts));
     g.bench("fig7_ensembling_1k_max", || {
-        run_policy(PolicyKind::MaxHeuristic, &s, &cluster, &opts)
+        run_policy("max-heuristic", &s, &cluster, &opts)
     });
     g.bench("fig7_ensembling_1k_min", || {
-        run_policy(PolicyKind::MinHeuristic, &s, &cluster, &opts)
+        run_policy("min-heuristic", &s, &cluster, &opts)
     });
 
-    let s = routing::build(4096, 7);
-    g.bench("fig8_routing_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+    let s = AppSpec::routing(4096, false).build(7).expect("spec");
+    g.bench("fig8_routing_ours", || run_policy("ours", &s, &cluster, &opts));
 
-    let s = chain_summary::build(100, 2, 500, 7);
-    g.bench("fig11_chain_summary_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+    let s = AppSpec::chain_summary(100, 2, 500).build(7).expect("spec");
+    g.bench("fig11_chain_summary_ours", || run_policy("ours", &s, &cluster, &opts));
 
-    let s = mixed::build(100, 1000, 900, 256, 4, 7);
-    g.bench("fig12_mixed_ours", || run_policy(PolicyKind::SamuLlm, &s, &cluster, &opts));
+    let s = AppSpec::mixed(100, 1000, 900, 256, 4).build(7).expect("spec");
+    g.bench("fig12_mixed_ours", || run_policy("ours", &s, &cluster, &opts));
     g.finish();
 }

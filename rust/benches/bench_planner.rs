@@ -2,11 +2,11 @@
 //! applications. The paper reports 22–69 s on its testbed for ensembling;
 //! our target is to keep search a small fraction of end-to-end time.
 
-use samullm::apps::{chain_summary, ensembling, routing};
 use samullm::cluster::ClusterSpec;
 use samullm::costmodel::CostModel;
 use samullm::models::Registry;
 use samullm::planner::GreedyPlanner;
+use samullm::spec::AppSpec;
 use samullm::util::bench::BenchGroup;
 
 fn main() {
@@ -17,14 +17,14 @@ fn main() {
     let mut g = BenchGroup::new("planner");
     g.sample_size(5);
     for n in [1000usize, 4000] {
-        let s = ensembling::build(n, 256, 42);
+        let s = AppSpec::ensembling(n, 256).build(42).expect("spec");
         g.bench(&format!("ensembling_{n}"), || {
             planner.plan(&s.graph, &s.workloads, false, 7)
         });
     }
-    let s = routing::build(4096, 7);
+    let s = AppSpec::routing(4096, false).build(7).expect("spec");
     g.bench("routing", || planner.plan(&s.graph, &s.workloads, false, 7));
-    let s = chain_summary::build(100, 2, 500, 7);
+    let s = AppSpec::chain_summary(100, 2, 500).build(7).expect("spec");
     g.bench("chain_summary", || planner.plan(&s.graph, &s.workloads, false, 7));
     g.finish();
 }

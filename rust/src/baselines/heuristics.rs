@@ -81,10 +81,30 @@ pub fn min_heuristic_stage(
     cluster: &ClusterSpec,
     locked: &HashMap<usize, ExecPlan>,
 ) -> Option<Stage> {
+    fair_share_stage(graph, est_state, registry, cluster, locked, 0)
+}
+
+/// Fair-share stage construction shared by Min-heuristic and the
+/// round-robin baseline: pinned plans first (in node order, so results
+/// are reproducible), then ready nodes — priority order rotated left by
+/// `rotation` — get their minimum footprints, then leftover GPUs are
+/// dealt one at a time in the same order. `rotation == 0` is exactly the
+/// Min-heuristic.
+pub fn fair_share_stage(
+    graph: &AppGraph,
+    est_state: &ExecState,
+    registry: &Registry,
+    cluster: &ClusterSpec,
+    locked: &HashMap<usize, ExecPlan>,
+    rotation: usize,
+) -> Option<Stage> {
     let mut entries: Vec<StageEntry> = vec![];
     let mut gpus_left = cluster.n_gpus;
-    // Locked nodes first (unchanged plans).
-    for (&node, &plan) in locked {
+    // Locked nodes first (unchanged plans), sorted so admission under a
+    // tight budget doesn't depend on HashMap iteration order.
+    let mut pinned: Vec<(usize, ExecPlan)> = locked.iter().map(|(&n, &p)| (n, p)).collect();
+    pinned.sort_unstable_by_key(|&(n, _)| n);
+    for (node, plan) in pinned {
         if est_state.finished_nodes.contains(&node) {
             continue;
         }
@@ -100,9 +120,12 @@ pub fn min_heuristic_stage(
         .filter(|n| !in_stage.contains(n))
         .collect();
     ready.sort_unstable();
+    if !ready.is_empty() {
+        ready.rotate_left(rotation % ready.len());
+    }
 
-    // Figure out how many of the ready models fit, largest-first greedy on
-    // minimum footprints.
+    // Figure out how many of the ready models fit, greedy on minimum
+    // footprints in priority order.
     let mut chosen: Vec<(usize, u32)> = vec![]; // (node, min_gpus)
     let mut budget = gpus_left;
     for &n in &ready {

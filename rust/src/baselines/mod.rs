@@ -1,32 +1,9 @@
-//! Competitor scheduling policies (§5): Max-heuristic and Min-heuristic,
-//! plus the no-preemption variants used in the §5.5 ablation.
+//! Stage-construction primitives for the §5 competitor policies
+//! (Max-heuristic / Min-heuristic). The policy objects themselves live in
+//! [`crate::policy`]; this module keeps the reusable scheduling math.
 
 pub mod heuristics;
 
-pub use heuristics::{max_heuristic_stage, min_heuristic_stage, smallest_valid_plan};
-
-
-/// Which scheduling policy drives a run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PolicyKind {
-    /// Ours: Algorithm 1 planning + dynamic stage adjustment (§4).
-    SamuLlm,
-    /// All GPUs to one LLM at a time, best plan per the cost model (§5).
-    MaxHeuristic,
-    /// All GPUs split as evenly as possible across all ready LLMs (§5,
-    /// inspired by Saturn's Min heuristic).
-    MinHeuristic,
-}
-
-impl PolicyKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            PolicyKind::SamuLlm => "ours",
-            PolicyKind::MaxHeuristic => "max-heuristic",
-            PolicyKind::MinHeuristic => "min-heuristic",
-        }
-    }
-
-    pub const ALL: [PolicyKind; 3] =
-        [PolicyKind::SamuLlm, PolicyKind::MaxHeuristic, PolicyKind::MinHeuristic];
-}
+pub use heuristics::{
+    fair_share_stage, max_heuristic_stage, min_heuristic_stage, smallest_valid_plan,
+};

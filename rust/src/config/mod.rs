@@ -1,46 +1,24 @@
 //! Typed experiment configuration with JSON (de)serialisation (via the
 //! in-tree `util::json` — no serde offline).
 //!
-//! Every experiment in the harness is fully described by an
-//! [`ExperimentConfig`]; the CLI (`samullm config file.json`) and the
-//! figure harness both build on it, so any paper experiment can be
-//! replayed from a small JSON file.
+//! Every experiment is fully described by an [`ExperimentConfig`]: a
+//! declarative [`AppSpec`] (one of the paper's applications *or* an
+//! arbitrary custom graph), a policy name from the [`crate::policy`]
+//! registry, and the run switches. The CLI (`samullm config file.json`)
+//! replays any of them from a small JSON file.
 
 use anyhow::{anyhow, Result};
 
+use crate::policy;
+use crate::spec::AppSpec;
 use crate::util::json::Json;
-
-/// Which application to build (paper §5, Fig. 5).
-#[derive(Debug, Clone, PartialEq)]
-pub enum AppConfig {
-    /// §5.1: every model answers every request.
-    Ensembling { n_requests: usize, max_out: u32 },
-    /// §5.2: each request goes to its best model (Table 1 ratios).
-    Routing { max_out: u32, known_lengths: bool },
-    /// §5.3: chunked document summarization + summary evaluation.
-    ChainSummary { n_docs: usize, eval_times: u32, max_out: u32 },
-    /// §5.4: chain summary + ensembling run as one application.
-    Mixed {
-        n_docs: usize,
-        n_ensemble_requests: usize,
-        summary_max_out: u32,
-        ensemble_max_out: u32,
-    },
-}
-
-/// Scheduling policy selection (ours + competitors, §5).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PolicyConfig {
-    SamuLlm,
-    MaxHeuristic,
-    MinHeuristic,
-}
 
 /// A complete, replayable experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    pub app: AppConfig,
-    pub policy: PolicyConfig,
+    pub app: AppSpec,
+    /// Canonical policy name (aliases accepted on parse).
+    pub policy: String,
     pub n_gpus: u32,
     pub seed: u64,
     /// Disable preemption (§5.5 ablation).
@@ -49,93 +27,11 @@ pub struct ExperimentConfig {
     pub known_output_lengths: bool,
 }
 
-impl AppConfig {
-    fn to_json(&self) -> Json {
-        match self {
-            AppConfig::Ensembling { n_requests, max_out } => Json::obj(vec![
-                ("kind", Json::Str("ensembling".into())),
-                ("n_requests", Json::Num(*n_requests as f64)),
-                ("max_out", Json::Num(*max_out as f64)),
-            ]),
-            AppConfig::Routing { max_out, known_lengths } => Json::obj(vec![
-                ("kind", Json::Str("routing".into())),
-                ("max_out", Json::Num(*max_out as f64)),
-                ("known_lengths", Json::Bool(*known_lengths)),
-            ]),
-            AppConfig::ChainSummary { n_docs, eval_times, max_out } => Json::obj(vec![
-                ("kind", Json::Str("chain_summary".into())),
-                ("n_docs", Json::Num(*n_docs as f64)),
-                ("eval_times", Json::Num(*eval_times as f64)),
-                ("max_out", Json::Num(*max_out as f64)),
-            ]),
-            AppConfig::Mixed {
-                n_docs,
-                n_ensemble_requests,
-                summary_max_out,
-                ensemble_max_out,
-            } => Json::obj(vec![
-                ("kind", Json::Str("mixed".into())),
-                ("n_docs", Json::Num(*n_docs as f64)),
-                ("n_ensemble_requests", Json::Num(*n_ensemble_requests as f64)),
-                ("summary_max_out", Json::Num(*summary_max_out as f64)),
-                ("ensemble_max_out", Json::Num(*ensemble_max_out as f64)),
-            ]),
-        }
-    }
-
-    fn from_json(v: &Json) -> Result<Self> {
-        let kind =
-            v.get("kind").and_then(|k| k.as_str()).ok_or_else(|| anyhow!("app.kind missing"))?;
-        let num = |k: &str, d: u64| v.get(k).and_then(|x| x.as_u64()).unwrap_or(d);
-        Ok(match kind {
-            "ensembling" => AppConfig::Ensembling {
-                n_requests: num("n_requests", 1000) as usize,
-                max_out: num("max_out", 256) as u32,
-            },
-            "routing" => AppConfig::Routing {
-                max_out: num("max_out", 4096) as u32,
-                known_lengths: v.get("known_lengths").and_then(|x| x.as_bool()).unwrap_or(false),
-            },
-            "chain_summary" => AppConfig::ChainSummary {
-                n_docs: num("n_docs", 100) as usize,
-                eval_times: num("eval_times", 1) as u32,
-                max_out: num("max_out", 500) as u32,
-            },
-            "mixed" => AppConfig::Mixed {
-                n_docs: num("n_docs", 100) as usize,
-                n_ensemble_requests: num("n_ensemble_requests", 5000) as usize,
-                summary_max_out: num("summary_max_out", 900) as u32,
-                ensemble_max_out: num("ensemble_max_out", 256) as u32,
-            },
-            other => return Err(anyhow!("unknown app kind {other}")),
-        })
-    }
-}
-
-impl PolicyConfig {
-    pub fn name(&self) -> &'static str {
-        match self {
-            PolicyConfig::SamuLlm => "samullm",
-            PolicyConfig::MaxHeuristic => "max_heuristic",
-            PolicyConfig::MinHeuristic => "min_heuristic",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "samullm" | "ours" => PolicyConfig::SamuLlm,
-            "max_heuristic" | "max" => PolicyConfig::MaxHeuristic,
-            "min_heuristic" | "min" => PolicyConfig::MinHeuristic,
-            other => return Err(anyhow!("unknown policy {other}")),
-        })
-    }
-}
-
 impl ExperimentConfig {
     pub fn to_json(&self) -> String {
         Json::obj(vec![
             ("app", self.app.to_json()),
-            ("policy", Json::Str(self.policy.name().into())),
+            ("policy", Json::Str(self.policy.clone())),
             ("n_gpus", Json::Num(self.n_gpus as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("no_preemption", Json::Bool(self.no_preemption)),
@@ -147,10 +43,11 @@ impl ExperimentConfig {
     pub fn from_json(s: &str) -> Result<Self> {
         let v = Json::parse(s).map_err(|e| anyhow!("bad config json: {e}"))?;
         Ok(ExperimentConfig {
-            app: AppConfig::from_json(v.get("app").ok_or_else(|| anyhow!("app missing"))?)?,
-            policy: PolicyConfig::parse(
+            app: AppSpec::from_json(v.get("app").ok_or_else(|| anyhow!("app missing"))?)?,
+            policy: policy::canonical(
                 v.get("policy").and_then(|p| p.as_str()).unwrap_or("samullm"),
-            )?,
+            )?
+            .to_string(),
             n_gpus: v.get("n_gpus").and_then(|x| x.as_u64()).unwrap_or(8) as u32,
             seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(42),
             no_preemption: v.get("no_preemption").and_then(|x| x.as_bool()).unwrap_or(false),
@@ -169,8 +66,8 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let c = ExperimentConfig {
-            app: AppConfig::Ensembling { n_requests: 1000, max_out: 256 },
-            policy: PolicyConfig::SamuLlm,
+            app: AppSpec::ensembling(1000, 256),
+            policy: "ours".to_string(),
             n_gpus: 8,
             seed: 42,
             no_preemption: false,
@@ -189,24 +86,32 @@ mod tests {
         let c = ExperimentConfig::from_json(j).unwrap();
         assert!(!c.no_preemption);
         assert!(!c.known_output_lengths);
-        assert_eq!(c.policy, PolicyConfig::MaxHeuristic);
+        assert_eq!(c.policy, "max-heuristic");
+    }
+
+    #[test]
+    fn legacy_policy_aliases_accepted() {
+        // Seed config files used "samullm"/"max_heuristic"/"min_heuristic".
+        for (alias, canonical) in [
+            ("samullm", "ours"),
+            ("max_heuristic", "max-heuristic"),
+            ("min_heuristic", "min-heuristic"),
+        ] {
+            let j = format!(r#"{{"app":{{"kind":"ensembling"}},"policy":"{alias}"}}"#);
+            assert_eq!(ExperimentConfig::from_json(&j).unwrap().policy, canonical);
+        }
     }
 
     #[test]
     fn all_app_kinds_roundtrip() {
         for app in [
-            AppConfig::Routing { max_out: 4096, known_lengths: true },
-            AppConfig::ChainSummary { n_docs: 100, eval_times: 4, max_out: 900 },
-            AppConfig::Mixed {
-                n_docs: 400,
-                n_ensemble_requests: 5000,
-                summary_max_out: 900,
-                ensemble_max_out: 256,
-            },
+            AppSpec::routing(4096, true),
+            AppSpec::chain_summary(100, 4, 900),
+            AppSpec::mixed(400, 5000, 900, 256, 4),
         ] {
             let c = ExperimentConfig {
                 app: app.clone(),
-                policy: PolicyConfig::MinHeuristic,
+                policy: "min-heuristic".to_string(),
                 n_gpus: 8,
                 seed: 7,
                 no_preemption: true,
@@ -222,5 +127,9 @@ mod tests {
     fn rejects_garbage() {
         assert!(ExperimentConfig::from_json("{not json").is_err());
         assert!(ExperimentConfig::from_json(r#"{"app":{"kind":"nope"}}"#).is_err());
+        assert!(
+            ExperimentConfig::from_json(r#"{"app":{"kind":"ensembling"},"policy":"fifo"}"#)
+                .is_err()
+        );
     }
 }

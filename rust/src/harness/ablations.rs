@@ -10,8 +10,6 @@
 
 use std::fmt::Write as _;
 
-use crate::apps::ensembling;
-use crate::baselines::PolicyKind;
 use crate::cluster::ClusterSpec;
 use crate::costmodel::{CostModel, HardwareModel};
 use crate::engine::sim::{EngineConfig, EngineSim};
@@ -68,12 +66,12 @@ pub fn ablate_fastforward() -> String {
 /// Scheduling robustness to ground-truth jitter.
 pub fn ablate_noise() -> String {
     let mut out = String::from("=== Ablation: ground-truth iteration jitter ===\n");
-    let s = ensembling::build(800, 256, 5);
+    let s = crate::spec::AppSpec::ensembling(800, 256).build(5).expect("spec");
     let c = cluster();
     for sigma in [0.0, 0.02, 0.05, 0.10] {
         let opts = RunOpts { noise_sigma: sigma, ..Default::default() };
-        let ours = run_policy(PolicyKind::SamuLlm, &s, &c, &opts);
-        let max = run_policy(PolicyKind::MaxHeuristic, &s, &c, &opts);
+        let ours = run_policy("ours", &s, &c, &opts);
+        let max = run_policy("max-heuristic", &s, &c, &opts);
         writeln!(
             out,
             "sigma={sigma:<5} ours={:>6.1}s max={:>6.1}s speedup={:.2}x stages={}",

@@ -7,8 +7,6 @@ pub mod ablations;
 
 use std::fmt::Write as _;
 
-use crate::apps::{chain_summary, ensembling, mixed, routing};
-use crate::baselines::PolicyKind;
 use crate::cluster::ClusterSpec;
 use crate::costmodel::{CostModel, Ecdf, HardwareModel, LinearIterModel};
 use crate::costmodel::{flops, IterLatency};
@@ -16,7 +14,9 @@ use crate::engine::sim::{EngineConfig, EngineSim};
 use crate::engine::EngineRequest;
 use crate::metrics::{gantt, RunReport};
 use crate::models::Registry;
+use crate::policy;
 use crate::runner::{run_policy, RunOpts, Scenario};
+use crate::spec::AppSpec;
 use crate::util::rng::Rng;
 use crate::workload::{booksum, norobots, routerbench};
 
@@ -54,7 +54,12 @@ fn compare_row(out: &mut String, label: &str, reports: &[RunReport]) {
 }
 
 fn run_all(scenario: &Scenario, opts: &RunOpts) -> Vec<RunReport> {
-    PolicyKind::ALL.iter().map(|&p| run_policy(p, scenario, &cluster(), opts)).collect()
+    policy::PAPER.iter().map(|&p| run_policy(p, scenario, &cluster(), opts)).collect()
+}
+
+/// Scenario construction goes through the declarative spec layer only.
+fn scenario(spec: AppSpec, seed: u64) -> Scenario {
+    spec.build(seed).expect("harness specs are valid")
 }
 
 /// Fig. 2: output-length eCDFs by input region / category.
@@ -181,8 +186,8 @@ pub fn fig7(quick: bool) -> String {
     for &max_out in &[256u32, 512] {
         writeln!(out, "-- max output length limit = {max_out}").unwrap();
         for &n in sizes {
-            let scenario = ensembling::build(n, max_out, 42 + n as u64);
-            let reports = run_all(&scenario, &RunOpts::default());
+            let sc = scenario(AppSpec::ensembling(n, max_out), 42 + n as u64);
+            let reports = run_all(&sc, &RunOpts::default());
             compare_row(&mut out, &format!("{n} requests"), &reports);
         }
     }
@@ -206,10 +211,10 @@ pub fn table1() -> String {
 /// Fig. 8: routing with unknown vs known output lengths.
 pub fn fig8() -> String {
     let mut out = header("Fig 8", "LLM routing: running time w/o and w/ known output lengths");
-    let scenario = routing::build(4096, 7);
+    let sc = scenario(AppSpec::routing(4096, false), 7);
     for known in [false, true] {
         let opts = RunOpts { known_lengths: known, ..Default::default() };
-        let reports = run_all(&scenario, &opts);
+        let reports = run_all(&sc, &opts);
         compare_row(&mut out, if known { "known lengths" } else { "unknown lengths" }, &reports);
     }
     out
@@ -218,10 +223,10 @@ pub fn fig8() -> String {
 /// Fig. 9: routing schedules as Gantt charts (known lengths).
 pub fn fig9() -> String {
     let mut out = header("Fig 9", "LLM routing schedules (known output lengths)");
-    let scenario = routing::build(4096, 7);
+    let sc = scenario(AppSpec::routing(4096, false), 7);
     let opts = RunOpts { known_lengths: true, ..Default::default() };
-    for p in PolicyKind::ALL {
-        let r = run_policy(p, &scenario, &cluster(), &opts);
+    for p in policy::PAPER {
+        let r = run_policy(p, &sc, &cluster(), &opts);
         out.push_str(&gantt::render(&r, 72));
         out.push('\n');
     }
@@ -254,23 +259,23 @@ pub fn fig11(quick: bool) -> String {
     let docs: &[usize] = if quick { &[100] } else { &[100, 300, 500] };
     writeln!(out, "-- (a) vary #documents (eval=1, max_out=500)").unwrap();
     for &n in docs {
-        let s = chain_summary::build(n, 1, 500, 21);
+        let s = scenario(AppSpec::chain_summary(n, 1, 500), 21);
         compare_row(&mut out, &format!("{n} docs"), &run_all(&s, &opts));
     }
     writeln!(out, "-- (b) vary eval times (docs=100, max_out=500)").unwrap();
     let evals: &[u32] = if quick { &[2] } else { &[2, 4, 8] };
     for &e in evals {
-        let s = chain_summary::build(100, e, 500, 22);
+        let s = scenario(AppSpec::chain_summary(100, e, 500), 22);
         compare_row(&mut out, &format!("eval x{e}"), &run_all(&s, &opts));
     }
     writeln!(out, "-- (c) vary max output length (docs=100, eval=1)").unwrap();
     let outs: &[u32] = if quick { &[900] } else { &[100, 500, 900] };
     for &mo in outs {
-        let s = chain_summary::build(100, 1, mo, 23);
+        let s = scenario(AppSpec::chain_summary(100, 1, mo), 23);
         compare_row(&mut out, &format!("max_out {mo}"), &run_all(&s, &opts));
     }
     // GPU idle-time comparison (§5.3's analysis).
-    let s = chain_summary::build(100, 2, 500, 24);
+    let s = scenario(AppSpec::chain_summary(100, 2, 500), 24);
     let rs = run_all(&s, &opts);
     let idle: Vec<String> =
         rs.iter().map(|r| format!("{}={:.0} gpu·s", r.policy, r.gpu_idle_time())).collect();
@@ -285,14 +290,14 @@ pub fn fig12(quick: bool) -> String {
     let docs: &[usize] = if quick { &[100] } else { &[100, 200, 300, 400, 500] };
     let n_ens = if quick { 1000 } else { 5000 };
     for &n in docs {
-        let s = mixed::build(n, n_ens, 900, 256, 4, 33);
+        let s = scenario(AppSpec::mixed(n, n_ens, 900, 256, 4), 33);
         let reports = run_all(&s, &opts);
         compare_row(&mut out, &format!("({n}, {n_ens})"), &reports);
         // Whole-app vs sequential for Ours (§5.4's extra finding).
-        let cs = chain_summary::build(n, 4, 900, 33);
-        let en = ensembling::build(n_ens, 256, 33 ^ 0x4D49_58);
-        let r1 = run_policy(PolicyKind::SamuLlm, &cs, &cluster(), &opts);
-        let r2 = run_policy(PolicyKind::SamuLlm, &en, &cluster(), &opts);
+        let cs = scenario(AppSpec::chain_summary(n, 4, 900), 33);
+        let en = scenario(AppSpec::ensembling(n_ens, 256), 33 ^ 0x4D49_58);
+        let r1 = run_policy("ours", &cs, &cluster(), &opts);
+        let r2 = run_policy("ours", &en, &cluster(), &opts);
         let seq = r1.end_to_end_time + r2.end_to_end_time;
         writeln!(
             out,
@@ -308,8 +313,8 @@ pub fn fig12(quick: bool) -> String {
 pub fn fig13(quick: bool) -> String {
     let mut out = header("Fig 13", "mixed app schedules at (400 docs, 5000 ensembling reqs)");
     let (docs, ens) = if quick { (100, 1000) } else { (400, 5000) };
-    let s = mixed::build(docs, ens, 900, 256, 4, 44);
-    for p in PolicyKind::ALL {
+    let s = scenario(AppSpec::mixed(docs, ens, 900, 256, 4), 44);
+    for p in policy::PAPER {
         let r = run_policy(p, &s, &cluster(), &RunOpts::default());
         out.push_str(&gantt::render(&r, 72));
         out.push('\n');
@@ -322,35 +327,19 @@ pub fn fig14(quick: bool) -> String {
     let mut out =
         header("Fig 14", "ablation on the mixed app (500 docs, 5000 ens; eval x4; out 900/512)");
     let (docs, ens) = if quick { (100, 1000) } else { (500, 5000) };
-    let s = mixed::build(docs, ens, 900, 512, 4, 55);
+    let s = scenario(AppSpec::mixed(docs, ens, 900, 512, 4), 55);
     let c = cluster();
     let base = RunOpts::default();
-    let ours = run_policy(PolicyKind::SamuLlm, &s, &c, &base);
-    let ours_np = run_policy(
-        PolicyKind::SamuLlm,
-        &s,
-        &c,
-        &RunOpts { no_preemption: true, ..base.clone() },
-    );
-    let ours_known = run_policy(
-        PolicyKind::SamuLlm,
-        &s,
-        &c,
-        &RunOpts { known_lengths: true, ..base.clone() },
-    );
-    let min = run_policy(PolicyKind::MinHeuristic, &s, &c, &base);
-    let min_np = run_policy(
-        PolicyKind::MinHeuristic,
-        &s,
-        &c,
-        &RunOpts { no_preemption: true, ..base.clone() },
-    );
-    let min_known = run_policy(
-        PolicyKind::MinHeuristic,
-        &s,
-        &c,
-        &RunOpts { known_lengths: true, ..base.clone() },
-    );
+    let ours = run_policy("ours", &s, &c, &base);
+    let ours_np =
+        run_policy("ours", &s, &c, &RunOpts { no_preemption: true, ..base.clone() });
+    let ours_known =
+        run_policy("ours", &s, &c, &RunOpts { known_lengths: true, ..base.clone() });
+    let min = run_policy("min-heuristic", &s, &c, &base);
+    let min_np =
+        run_policy("min-heuristic", &s, &c, &RunOpts { no_preemption: true, ..base.clone() });
+    let min_known =
+        run_policy("min-heuristic", &s, &c, &RunOpts { known_lengths: true, ..base.clone() });
     for (label, r) in [
         ("ours", &ours),
         ("ours (no preemption)", &ours_np),
@@ -389,11 +378,11 @@ pub fn fig14(quick: bool) -> String {
 pub fn fig15(quick: bool) -> String {
     let mut out = header("Fig 15", "ours w/ and w/o preemption (mixed app, ens limit 256)");
     let (docs, ens) = if quick { (100, 1000) } else { (500, 5000) };
-    let s = mixed::build(docs, ens, 900, 256, 4, 66);
+    let s = scenario(AppSpec::mixed(docs, ens, 900, 256, 4), 66);
     let c = cluster();
-    let with = run_policy(PolicyKind::SamuLlm, &s, &c, &RunOpts::default());
+    let with = run_policy("ours", &s, &c, &RunOpts::default());
     let without = run_policy(
-        PolicyKind::SamuLlm,
+        "ours",
         &s,
         &c,
         &RunOpts { no_preemption: true, ..Default::default() },
@@ -410,15 +399,15 @@ pub fn errors(quick: bool) -> String {
     let mut out = header("Errors", "cost-model error ratios across applications (§5.5)");
     let c = cluster();
     let scenarios: Vec<Scenario> = vec![
-        ensembling::build(if quick { 500 } else { 2000 }, 256, 1),
-        routing::build(4096, 2),
-        chain_summary::build(if quick { 50 } else { 200 }, 2, 500, 3),
+        scenario(AppSpec::ensembling(if quick { 500 } else { 2000 }, 256), 1),
+        scenario(AppSpec::routing(4096, false), 2),
+        scenario(AppSpec::chain_summary(if quick { 50 } else { 200 }, 2, 500), 3),
     ];
     let mut errs = vec![];
     for s in &scenarios {
         for known in [false, true] {
             let r = run_policy(
-                PolicyKind::SamuLlm,
+                "ours",
                 s,
                 &c,
                 &RunOpts { known_lengths: known, ..Default::default() },

@@ -12,6 +12,14 @@
 //!
 //! ## Layers
 //!
+//! * [`session`] — the [`session::SamuLlm`] facade: build a session once
+//!   (cluster, policy, seed), then run declarative scenarios.
+//! * [`spec`] — declarative [`spec::AppSpec`] scenario descriptions (the
+//!   paper's four applications plus arbitrary custom graphs), JSON
+//!   round-trippable, materialised by the app-builder registry.
+//! * [`policy`] — the pluggable [`policy::Policy`] trait and the builtin
+//!   implementations (`ours`, `max-heuristic`, `min-heuristic`,
+//!   `round-robin`) behind a string registry.
 //! * [`costmodel`] — the paper's sampling-then-simulation cost model:
 //!   output-length eCDF sampling, FLOPs accounting (Eqs. 1–2), the linear
 //!   per-iteration latency model (Eq. 5) fit against a profiled hardware
@@ -24,8 +32,7 @@
 //! * [`runner`] — the running phase: a virtual-clock orchestrator with the
 //!   dynamic scheduler, communicator, preemption and NVLink-constrained
 //!   minimum-reload placement of §4.3.
-//! * [`baselines`] — Max-heuristic / Min-heuristic / sequential /
-//!   no-preemption competitors from §5.
+//! * [`baselines`] — stage-construction math behind the §5 competitors.
 //! * [`apps`], [`workload`] — the paper's applications (ensembling,
 //!   routing, chain summary, mixed) and synthetic dataset generators
 //!   matching the published workload statistics.
@@ -38,12 +45,15 @@
 //!
 //! ```no_run
 //! use samullm::prelude::*;
-//! use samullm::runner::RunOpts;
 //!
-//! let cluster = ClusterSpec::a100_node(8);
-//! let scenario = apps::ensembling::build(1000, 256, 42);
-//! let report = runner::run_policy(PolicyKind::SamuLlm, &scenario, &cluster, &RunOpts::default());
+//! let session = SamuLlm::builder()
+//!     .cluster(ClusterSpec::a100_node(8))
+//!     .policy("ours")
+//!     .seed(42)
+//!     .build()?;
+//! let report = session.run(&AppSpec::ensembling(1000, 256))?;
 //! println!("end-to-end: {:.1}s", report.end_to_end_time);
+//! # Ok::<(), anyhow::Error>(())
 //! ```
 
 pub mod apps;
@@ -58,16 +68,18 @@ pub mod metrics;
 pub mod models;
 pub mod plan;
 pub mod planner;
+pub mod policy;
 pub mod runner;
 pub mod runtime;
 pub mod serve;
+pub mod session;
+pub mod spec;
 pub mod util;
 pub mod workload;
 
 /// Commonly used items, re-exported for examples and binaries.
 pub mod prelude {
     pub use crate::apps;
-    pub use crate::baselines::PolicyKind;
     pub use crate::cluster::ClusterSpec;
     pub use crate::costmodel::{CostModel, HardwareModel};
     pub use crate::graph::AppGraph;
@@ -75,7 +87,10 @@ pub mod prelude {
     pub use crate::models::{ModelSpec, Registry};
     pub use crate::plan::{ExecPlan, Stage};
     pub use crate::planner::GreedyPlanner;
+    pub use crate::policy::{self, Policy};
     pub use crate::runner::{self, Scenario};
+    pub use crate::session::SamuLlm;
+    pub use crate::spec::AppSpec;
     pub use crate::util::rng::Rng;
     pub use crate::workload::Request;
 }

@@ -3,25 +3,44 @@
 //!
 //! Commands (offline build: hand-rolled arg parsing, no clap):
 //!   samullm run    [--app A] [--policy P] [--n-requests N] [--max-out M]
-//!                  [--n-docs D] [--gpus G] [--seed S]
+//!                  [--n-docs D] [--eval-times E] [--gpus G] [--seed S]
 //!                  [--no-preemption] [--known-lengths] [--gantt]
 //!   samullm config <file.json>
 //!   samullm serve  [--n-requests N] [--prompt-len L] [--max-new T]
 //!                  [--artifacts DIR]
+//!
+//! Apps and policies resolve against the `spec`/`policy` registries
+//! (`samullm run --app ?` / `--policy ?` lists them). Flags that don't
+//! apply to the chosen app are rejected, not ignored; unparsable flag
+//! values are errors, never silent defaults. Arbitrary user-defined
+//! graphs run via `samullm config` with an `{"app": {"kind": "custom",
+//! ...}}` spec.
 
 use anyhow::{anyhow, Result};
 
-use samullm::apps::{chain_summary, ensembling, mixed, routing};
-use samullm::baselines::PolicyKind;
-use samullm::cluster::ClusterSpec;
-use samullm::config::{AppConfig, ExperimentConfig, PolicyConfig};
+use samullm::config::ExperimentConfig;
 use samullm::metrics::gantt;
-use samullm::runner::{run_policy, RunOpts};
+use samullm::policy;
+use samullm::session::SamuLlm;
+use samullm::spec::{self, AppParams};
 
-/// Tiny flag parser: `--key value` and boolean `--key`.
+/// Tiny flag parser: `--key value` and boolean `--key`. A token after a
+/// flag counts as its value unless it is itself a flag; numeric tokens
+/// (including negative ones like `-5`) are always values.
 struct Args {
     positional: Vec<String>,
     flags: std::collections::HashMap<String, String>,
+}
+
+/// A token starts a flag iff it is `--` followed by a non-numeric name.
+/// Numeric-looking `--` tokens (`--5`) are consumed verbatim as values —
+/// they then fail strict parsing with a clear error instead of being
+/// misread as boolean flags.
+fn is_flag_token(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some(rest) => !rest.is_empty() && rest.parse::<f64>().is_err(),
+        None => false,
+    }
 }
 
 impl Args {
@@ -31,8 +50,9 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            if let Some(key) = a.strip_prefix("--") {
-                let next_is_value = argv.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false);
+            if is_flag_token(a) {
+                let key = a.trim_start_matches("--");
+                let next_is_value = argv.get(i + 1).map(|n| !is_flag_token(n)).unwrap_or(false);
                 if next_is_value {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
@@ -48,8 +68,33 @@ impl Args {
         Args { positional, flags }
     }
 
-    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
-        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse `--key`'s value, falling back to `default` only when the
+    /// flag is absent. An unparsable value is an error, never a silent
+    /// default (`--n-requests 10k` used to quietly run 1000).
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|e| anyhow!("invalid value {v:?} for --{key}: {e}"))
+            }
+        }
+    }
+
+    /// Parse `--key`'s value if present (`None` when the flag is absent).
+    fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("invalid value {v:?} for --{key}: {e}")),
+        }
     }
 
     fn get_str(&self, key: &str, default: &str) -> String {
@@ -59,39 +104,56 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
-}
 
-fn parse_policy(s: &str) -> Result<PolicyKind> {
-    Ok(match s {
-        "ours" | "samullm" => PolicyKind::SamuLlm,
-        "max" | "max-heuristic" => PolicyKind::MaxHeuristic,
-        "min" | "min-heuristic" => PolicyKind::MinHeuristic,
-        other => return Err(anyhow!("unknown policy {other} (ours|max|min)")),
-    })
+    /// Reject flags outside `known` — a typo'd flag (`--known-length`)
+    /// must error, not silently change the experiment.
+    fn expect_flags(&self, known: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !known.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let list = |xs: &[&str]| xs.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ");
+        Err(anyhow!("unknown flag(s) {}; known: {}", list(&unknown), list(known)))
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_flags(&[
+        "app",
+        "policy",
+        "n-requests",
+        "max-out",
+        "n-docs",
+        "eval-times",
+        "gpus",
+        "seed",
+        "no-preemption",
+        "known-lengths",
+        "gantt",
+    ])?;
     let app = args.get_str("app", "ensembling");
-    let n_requests: usize = args.get("n-requests", 1000);
-    let max_out: u32 = args.get("max-out", 256);
-    let n_docs: usize = args.get("n-docs", 100);
-    let gpus: u32 = args.get("gpus", 8);
-    let seed: u64 = args.get("seed", 42);
-    let scenario = match app.as_str() {
-        "ensembling" => ensembling::build(n_requests, max_out, seed),
-        "routing" => routing::build(max_out.max(512), seed),
-        "chain-summary" => chain_summary::build(n_docs, 2, max_out.max(100), seed),
-        "mixed" => mixed::build(n_docs, n_requests, 900, max_out, 4, seed),
-        other => return Err(anyhow!("unknown app {other}")),
-    };
-    let cluster = ClusterSpec::a100_node(gpus);
-    let opts = RunOpts {
-        seed,
-        no_preemption: args.has("no-preemption"),
+    let params = AppParams {
+        n_requests: args.get_opt("n-requests")?,
+        max_out: args.get_opt("max-out")?,
+        n_docs: args.get_opt("n-docs")?,
+        eval_times: args.get_opt("eval-times")?,
         known_lengths: args.has("known-lengths"),
-        ..Default::default()
     };
-    let report = run_policy(parse_policy(&args.get_str("policy", "ours"))?, &scenario, &cluster, &opts);
+    let app_spec = spec::from_cli(&app, &params)?;
+    let session = SamuLlm::builder()
+        .gpus(args.get("gpus", 8)?)
+        .policy(&args.get_str("policy", "ours"))
+        .seed(args.get("seed", 42)?)
+        .no_preemption(args.has("no-preemption"))
+        .known_lengths(args.has("known-lengths"))
+        .build()?;
+    let report = session.run(&app_spec)?;
     println!("{}", report.to_json());
     if args.has("gantt") {
         println!("{}", gantt::render(&report, 80));
@@ -101,36 +163,20 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_config(path: &str) -> Result<()> {
     let cfg = ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?;
-    let scenario = match cfg.app {
-        AppConfig::Ensembling { n_requests, max_out } => {
-            ensembling::build(n_requests, max_out, cfg.seed)
-        }
-        AppConfig::Routing { max_out, .. } => routing::build(max_out, cfg.seed),
-        AppConfig::ChainSummary { n_docs, eval_times, max_out } => {
-            chain_summary::build(n_docs, eval_times, max_out, cfg.seed)
-        }
-        AppConfig::Mixed { n_docs, n_ensemble_requests, summary_max_out, ensemble_max_out } => {
-            mixed::build(n_docs, n_ensemble_requests, summary_max_out, ensemble_max_out, 4, cfg.seed)
-        }
-    };
-    let policy = match cfg.policy {
-        PolicyConfig::SamuLlm => PolicyKind::SamuLlm,
-        PolicyConfig::MaxHeuristic => PolicyKind::MaxHeuristic,
-        PolicyConfig::MinHeuristic => PolicyKind::MinHeuristic,
-    };
-    let cluster = ClusterSpec::a100_node(cfg.n_gpus);
-    let opts = RunOpts {
-        seed: cfg.seed,
-        no_preemption: cfg.no_preemption,
-        known_lengths: cfg.known_output_lengths,
-        ..Default::default()
-    };
-    let report = run_policy(policy, &scenario, &cluster, &opts);
+    let session = SamuLlm::builder()
+        .gpus(cfg.n_gpus)
+        .policy(&cfg.policy)
+        .seed(cfg.seed)
+        .no_preemption(cfg.no_preemption)
+        .known_lengths(cfg.known_output_lengths)
+        .build()?;
+    let report = session.run(&cfg.app)?;
     println!("{}", report.to_json());
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_flags(&["n-requests", "prompt-len", "max-new", "artifacts"])?;
     let artifacts = args.get_str("artifacts", "artifacts");
     let engine = samullm::serve::ServeEngine::load(std::path::Path::new(&artifacts))?;
     println!(
@@ -140,9 +186,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.model().max_seq()
     );
     let reqs = samullm::serve::synthetic_requests(
-        args.get("n-requests", 32),
-        args.get("prompt-len", 16),
-        args.get("max-new", 16),
+        args.get("n-requests", 32)?,
+        args.get("prompt-len", 16)?,
+        args.get("max-new", 16)?,
         1,
     );
     let (_, m) = engine.serve(&reqs)?;
@@ -160,6 +206,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn usage() -> String {
+    let apps: Vec<String> = spec::builders()
+        .iter()
+        .map(|b| format!("    {:<14} {}", b.name, b.about))
+        .collect();
+    let policies: Vec<String> = policy::builtin()
+        .iter()
+        .map(|p| format!("    {:<14} {}", p.name, p.about))
+        .collect();
+    format!(
+        "usage: samullm <run|config|serve> [flags]\n\
+         \n  samullm run    [--app A] [--policy P] [--n-requests N] [--max-out M]\n\
+         \x20                [--n-docs D] [--eval-times E] [--gpus G] [--seed S]\n\
+         \x20                [--no-preemption] [--known-lengths] [--gantt]\n\
+         \x20 samullm config <file.json>   (supports custom graph specs, kind=custom)\n\
+         \x20 samullm serve  [--n-requests N] [--prompt-len L] [--max-new T] [--artifacts DIR]\n\
+         \napps:\n{}\npolicies:\n{}",
+        apps.join("\n"),
+        policies.join("\n")
+    )
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
@@ -175,10 +243,65 @@ fn main() -> Result<()> {
         }
         "serve" => cmd_serve(&args),
         _ => {
-            eprintln!(
-                "usage: samullm <run|config|serve> [flags]\n  see rust/src/main.rs header for flags"
-            );
+            eprintln!("{}", usage());
             Ok(())
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(&tokens.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn unparsable_values_are_errors_not_defaults() {
+        let a = parse(&["--n-requests", "10k"]);
+        let r: Result<usize> = a.get("n-requests", 1000);
+        let err = r.unwrap_err().to_string();
+        assert!(err.contains("10k"), "{err}");
+        // Absent flag still falls back.
+        assert_eq!(a.get::<u32>("gpus", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["--shift", "-5", "--flag"]);
+        assert_eq!(a.get::<i64>("shift", 0).unwrap(), -5);
+        assert!(a.has("flag"));
+        // Numeric-looking double-dash tokens are consumed as values (and
+        // later fail strict parsing) rather than becoming bogus flags.
+        let b = parse(&["--delta", "--3.5"]);
+        assert_eq!(b.flags.get("delta").map(|s| s.as_str()), Some("--3.5"));
+        assert!(b.get::<f64>("delta", 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let a = parse(&["--known-length"]); // typo: missing 's'
+        let err = a.expect_flags(&["known-lengths", "seed"]).unwrap_err().to_string();
+        assert!(err.contains("--known-length"), "{err}");
+        assert!(err.contains("--known-lengths"), "{err}");
+        assert!(parse(&["--seed", "7"]).expect_flags(&["known-lengths", "seed"]).is_ok());
+    }
+
+    #[test]
+    fn boolean_and_valued_flags_mix() {
+        let a = parse(&["--app", "routing", "--gantt", "--seed", "7", "pos"]);
+        assert_eq!(a.get_str("app", "x"), "routing");
+        assert!(a.has("gantt"));
+        assert_eq!(a.get::<u64>("seed", 0).unwrap(), 7);
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn get_opt_distinguishes_absent_from_invalid() {
+        let a = parse(&["--max-out", "512"]);
+        assert_eq!(a.get_opt::<u32>("max-out").unwrap(), Some(512));
+        assert_eq!(a.get_opt::<u32>("n-docs").unwrap(), None);
+        assert!(parse(&["--max-out", "big"]).get_opt::<u32>("max-out").is_err());
     }
 }

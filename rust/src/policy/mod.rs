@@ -1,0 +1,336 @@
+//! Pluggable scheduling policies: the [`Policy`] trait, the four builtin
+//! implementations, and the name registry the CLI/config resolve against.
+//!
+//! A policy is asked two things by the runner ([`crate::runner::run_with`]):
+//!
+//! 1. [`Policy::prepare`] — an optional offline planning phase (§4.2).
+//!    Returning a [`PlannedApp`] feeds the report's estimated inference
+//!    time and bills the plan's `search_time` as "extra time".
+//! 2. [`Policy::plan_stage`] — called once per execution stage with a
+//!    [`StageCtx`] view of reality: the true progress, the policy-visible
+//!    estimated state (re-sampled remaining lengths unless the §5.5
+//!    known-lengths ablation is on), the previous stage, and any plans
+//!    pinned by the no-preemption ablation.
+//!
+//! Builtin policies: `ours` (SamuLLM: Algorithm 1 planning + dynamic
+//! stage repair), `max-heuristic`, `min-heuristic` (§5 competitors), and
+//! `round-robin` (a rotating fair-share split, added to prove trait
+//! extensibility). New baselines implement the trait and register a
+//! constructor in [`builtin`] — no enum to extend, no runner changes.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::{fair_share_stage, max_heuristic_stage, min_heuristic_stage};
+use crate::cluster::ClusterSpec;
+use crate::costmodel::CostModel;
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::plan::{ExecPlan, Stage};
+use crate::planner::{GreedyPlanner, PlannedApp};
+use crate::runner::dynamic::DynamicScheduler;
+use crate::runner::state::{AppRequest, ExecState};
+use crate::runner::RunOpts;
+
+/// Everything a policy may consult during the offline planning phase.
+pub struct PlanCtx<'a> {
+    pub graph: &'a AppGraph,
+    pub workloads: &'a [Vec<AppRequest>],
+    pub cluster: &'a ClusterSpec,
+    pub registry: &'a Registry,
+    pub cost: &'a CostModel,
+    pub opts: &'a RunOpts,
+}
+
+/// Everything a policy may consult when planning the next stage.
+pub struct StageCtx<'a> {
+    pub graph: &'a AppGraph,
+    /// Ground-truth progress (completions, clock). Only `ours` reads it —
+    /// the §4.3 dynamic scheduler reacts to *actual* finishes.
+    pub true_state: &'a ExecState,
+    /// The policy-visible estimate: true progress, remaining output
+    /// lengths re-sampled from the eCDF (or true under known-lengths).
+    pub est_state: &'a ExecState,
+    pub prev_stage: Option<&'a Stage>,
+    pub cluster: &'a ClusterSpec,
+    pub registry: &'a Registry,
+    pub cost: &'a CostModel,
+    /// Plans pinned by the no-preemption ablation (`None` when preemption
+    /// is allowed).
+    pub locked: Option<&'a HashMap<usize, ExecPlan>>,
+}
+
+/// A scheduling policy: optionally plans offline, then produces execution
+/// stages until the application completes.
+pub trait Policy {
+    /// Stable display name (becomes `RunReport::policy`).
+    fn name(&self) -> &'static str;
+
+    /// Offline planning phase (§4.2). The default — no plan — suits pure
+    /// dynamic policies; the report's estimate is NaN in that case.
+    fn prepare(&mut self, _ctx: &PlanCtx) -> Option<PlannedApp> {
+        None
+    }
+
+    /// Produce the next execution stage, or `None` if the policy cannot
+    /// schedule any unfinished work (the runner treats that as a bug).
+    fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage>;
+}
+
+// ---------------------------------------------------------------------------
+// Builtin implementations.
+// ---------------------------------------------------------------------------
+
+/// Ours (§4): Algorithm 1 greedy planning + dynamic stage adjustment.
+pub struct SamuLlmPolicy {
+    sched: DynamicScheduler,
+}
+
+impl SamuLlmPolicy {
+    pub fn new() -> Self {
+        SamuLlmPolicy { sched: DynamicScheduler::new(None) }
+    }
+}
+
+impl Default for SamuLlmPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for SamuLlmPolicy {
+    fn name(&self) -> &'static str {
+        "ours"
+    }
+
+    fn prepare(&mut self, ctx: &PlanCtx) -> Option<PlannedApp> {
+        let mut p =
+            GreedyPlanner::new(ctx.cost.clone(), ctx.registry.clone(), ctx.cluster.clone());
+        p.no_preemption = ctx.opts.no_preemption;
+        let plan = p.plan(ctx.graph, ctx.workloads, ctx.opts.known_lengths, ctx.opts.seed);
+        self.sched = DynamicScheduler::new(Some(plan.clone()));
+        Some(plan)
+    }
+
+    fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage> {
+        self.sched.next_stage(
+            ctx.graph,
+            ctx.true_state,
+            ctx.prev_stage,
+            ctx.cluster,
+            ctx.registry,
+            ctx.locked,
+        )
+    }
+}
+
+/// Max-heuristic (§5): all GPUs to one ready LLM at a time, best plan per
+/// the cost model.
+pub struct MaxHeuristic;
+
+impl Policy for MaxHeuristic {
+    fn name(&self) -> &'static str {
+        "max-heuristic"
+    }
+
+    fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage> {
+        max_heuristic_stage(ctx.graph, ctx.est_state, ctx.registry, ctx.cluster, &ctx.cost.iter_model)
+    }
+}
+
+/// Min-heuristic (§5): all GPUs split as evenly as possible across all
+/// ready LLMs (inspired by Saturn's Min heuristic).
+pub struct MinHeuristic;
+
+impl Policy for MinHeuristic {
+    fn name(&self) -> &'static str {
+        "min-heuristic"
+    }
+
+    fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage> {
+        let locked = ctx.locked.cloned().unwrap_or_default();
+        min_heuristic_stage(ctx.graph, ctx.est_state, ctx.registry, ctx.cluster, &locked)
+    }
+}
+
+/// Round-robin GPU split: like Min it shares the node across ready LLMs,
+/// but the priority order rotates every stage, so each model periodically
+/// gets first pick of the leftover GPUs. A deliberately simple baseline
+/// that exists to prove the [`Policy`] trait extends without touching the
+/// runner.
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        RoundRobin { cursor: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage> {
+        let locked = ctx.locked.cloned().unwrap_or_default();
+        let rotation = self.cursor;
+        self.cursor = self.cursor.wrapping_add(1);
+        fair_share_stage(ctx.graph, ctx.est_state, ctx.registry, ctx.cluster, &locked, rotation)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Name registry.
+// ---------------------------------------------------------------------------
+
+/// A registered policy: canonical name, accepted aliases, constructor.
+pub struct PolicyInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub about: &'static str,
+    pub build: fn() -> Box<dyn Policy>,
+}
+
+fn mk_ours() -> Box<dyn Policy> {
+    Box::new(SamuLlmPolicy::new())
+}
+
+fn mk_max() -> Box<dyn Policy> {
+    Box::new(MaxHeuristic)
+}
+
+fn mk_min() -> Box<dyn Policy> {
+    Box::new(MinHeuristic)
+}
+
+fn mk_round_robin() -> Box<dyn Policy> {
+    Box::new(RoundRobin::new())
+}
+
+/// All registered policies, in help order.
+pub fn builtin() -> &'static [PolicyInfo] {
+    static BUILTIN: &[PolicyInfo] = &[
+        PolicyInfo {
+            name: "ours",
+            aliases: &["samullm"],
+            about: "SamuLLM: Algorithm 1 planning + dynamic stage adjustment (§4)",
+            build: mk_ours,
+        },
+        PolicyInfo {
+            name: "max-heuristic",
+            aliases: &["max", "max_heuristic"],
+            about: "all GPUs to one LLM at a time, best plan per the cost model (§5)",
+            build: mk_max,
+        },
+        PolicyInfo {
+            name: "min-heuristic",
+            aliases: &["min", "min_heuristic"],
+            about: "all GPUs split as evenly as possible across ready LLMs (§5)",
+            build: mk_min,
+        },
+        PolicyInfo {
+            name: "round-robin",
+            aliases: &["rr", "round_robin"],
+            about: "fair-share split with rotating priority (extensibility baseline)",
+            build: mk_round_robin,
+        },
+    ];
+    BUILTIN
+}
+
+/// The three §5 paper policies, in report order (`ours` first).
+pub const PAPER: [&str; 3] = ["ours", "max-heuristic", "min-heuristic"];
+
+fn lookup(name: &str) -> Option<&'static PolicyInfo> {
+    builtin().iter().find(|p| p.name == name || p.aliases.contains(&name))
+}
+
+/// Registered canonical policy names, in help order.
+pub fn names() -> Vec<&'static str> {
+    builtin().iter().map(|p| p.name).collect()
+}
+
+/// Resolve a name or alias to its canonical policy name.
+pub fn canonical(name: &str) -> Result<&'static str> {
+    lookup(name)
+        .map(|p| p.name)
+        .ok_or_else(|| anyhow!("unknown policy {name} (known: {})", names().join("|")))
+}
+
+/// Instantiate a fresh policy by name or alias.
+pub fn create(name: &str) -> Result<Box<dyn Policy>> {
+    lookup(name)
+        .map(|p| (p.build)())
+        .ok_or_else(|| anyhow!("unknown policy {name} (known: {})", names().join("|")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        assert_eq!(canonical("ours").unwrap(), "ours");
+        assert_eq!(canonical("samullm").unwrap(), "ours");
+        assert_eq!(canonical("max").unwrap(), "max-heuristic");
+        assert_eq!(canonical("min_heuristic").unwrap(), "min-heuristic");
+        assert_eq!(canonical("rr").unwrap(), "round-robin");
+        assert!(canonical("fifo").is_err());
+        for info in builtin() {
+            assert_eq!((info.build)().name(), info.name);
+        }
+    }
+
+    #[test]
+    fn paper_policies_are_registered() {
+        for p in PAPER {
+            assert!(create(p).is_ok(), "{p} missing from registry");
+        }
+    }
+
+    #[test]
+    fn round_robin_produces_valid_rotating_stages() {
+        use crate::runner::state::AppRequest;
+        let cluster = ClusterSpec::a100_node(8);
+        let registry = Registry::paper();
+        let cost = CostModel::calibrated(&cluster, 1);
+        let mut graph = AppGraph::default();
+        for (i, m) in ["chatglm3-6b", "alpaca-13b", "koala-13b"].iter().enumerate() {
+            graph.add_node(m, &format!("m{i}"), 256);
+        }
+        let w: Vec<Vec<AppRequest>> =
+            (0..3).map(|_| (0..50).map(|i| AppRequest::simple(i, 20, 100)).collect()).collect();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut p = RoundRobin::new();
+        let mut firsts = vec![];
+        for _ in 0..3 {
+            let ctx = StageCtx {
+                graph: &graph,
+                true_state: &st,
+                est_state: &st,
+                prev_stage: None,
+                cluster: &cluster,
+                registry: &registry,
+                cost: &cost,
+                locked: None,
+            };
+            let stage = p.plan_stage(&ctx).unwrap();
+            assert!(stage.n_gpus() <= 8);
+            assert_eq!(stage.entries.len(), 3, "all three small models fit");
+            firsts.push(stage.entries[0].node);
+        }
+        // The priority rotates: three stages start with three different nodes.
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 3, "rotation not observed");
+    }
+}

@@ -2,6 +2,12 @@
 //! policy against the ground-truth substrate, with the dynamic scheduler,
 //! NVLink-constrained minimum-reload placement, and full reporting.
 //!
+//! Policies are trait objects ([`crate::policy::Policy`]); the runner
+//! never knows which concrete policy it drives. [`run_with`] is the core
+//! loop, [`run_policy`] the by-name convenience, and
+//! [`crate::session::SamuLlm`] the session facade that owns a reusable
+//! [`RunContext`].
+//!
 //! The "communicator" of Fig. 6 is realised by the completion log inside
 //! [`state::ExecState`]: node outputs become dependent requests' ready
 //! times (templates and payload routing carry no cost in virtual time).
@@ -13,14 +19,13 @@ pub use state::{AppRequest, ExecState};
 
 use std::collections::HashMap;
 
-use crate::baselines::{max_heuristic_stage, min_heuristic_stage, PolicyKind};
 use crate::cluster::{ClusterSpec, Placement};
 use crate::costmodel::{CostModel, HardwareModel};
 use crate::graph::AppGraph;
 use crate::metrics::{RunReport, StageRecord};
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage};
-use crate::planner::GreedyPlanner;
+use crate::policy::{self, PlanCtx, Policy, StageCtx};
 use crate::util::rng::Rng;
 
 /// A runnable experiment: the application graph plus per-node workloads
@@ -49,29 +54,64 @@ impl Default for RunOpts {
     }
 }
 
-/// Run `scenario` under `policy` and report §5's metrics.
+/// Shared run wiring for one cluster: the model registry, the calibrated
+/// cost model and the hardware ground truth. Build once (a session does)
+/// and reuse across runs.
+pub struct RunContext {
+    pub registry: Registry,
+    pub cost: CostModel,
+    pub hw: HardwareModel,
+    pub cluster: ClusterSpec,
+}
+
+impl RunContext {
+    pub fn new(cluster: &ClusterSpec, seed: u64) -> Self {
+        RunContext {
+            registry: Registry::paper(),
+            cost: CostModel::calibrated(cluster, seed),
+            hw: HardwareModel::new(cluster.clone()),
+            cluster: cluster.clone(),
+        }
+    }
+}
+
+/// Run `scenario` under the registry policy named `policy` and report
+/// §5's metrics. Panics on an unknown policy name — use
+/// [`crate::session::SamuLlm`] for validated-up-front configuration.
 pub fn run_policy(
-    policy: PolicyKind,
+    policy: &str,
     scenario: &Scenario,
     cluster: &ClusterSpec,
     opts: &RunOpts,
 ) -> RunReport {
-    let registry = Registry::paper();
-    let cost = CostModel::calibrated(cluster, opts.seed);
-    let hw = HardwareModel::new(cluster.clone());
+    let mut p = policy::create(policy).expect("unknown policy name");
+    let ctx = RunContext::new(cluster, opts.seed);
+    run_with(p.as_mut(), scenario, &ctx, opts)
+}
+
+/// Run `scenario` under an instantiated policy, reusing `ctx`'s wiring.
+pub fn run_with(
+    policy: &mut dyn Policy,
+    scenario: &Scenario,
+    ctx: &RunContext,
+    opts: &RunOpts,
+) -> RunReport {
+    let RunContext { registry, cost, hw, cluster } = ctx;
     let graph = &scenario.graph;
 
     // ---- planning phase -------------------------------------------------
     let mut extra_time = 0.0;
-    let planned = if policy == PolicyKind::SamuLlm {
-        let mut p = GreedyPlanner::new(cost.clone(), registry.clone(), cluster.clone());
-        p.no_preemption = opts.no_preemption;
-        let plan = p.plan(graph, &scenario.workloads, opts.known_lengths, opts.seed);
+    let planned = policy.prepare(&PlanCtx {
+        graph,
+        workloads: &scenario.workloads,
+        cluster,
+        registry,
+        cost,
+        opts,
+    });
+    if let Some(plan) = &planned {
         extra_time += plan.search_time;
-        Some(plan)
-    } else {
-        None
-    };
+    }
 
     // ---- running phase ---------------------------------------------------
     let mut true_state = ExecState::init(&scenario.workloads, |_, r| r.true_output_len);
@@ -87,7 +127,6 @@ pub fn run_policy(
             .unwrap_or(0.0)
     };
 
-    let mut dyn_sched = dynamic::DynamicScheduler::new(planned.clone());
     let mut timeline: Vec<StageRecord> = vec![];
     let mut locked: HashMap<usize, ExecPlan> = HashMap::new();
     let mut prev_stage: Option<Stage> = None;
@@ -104,27 +143,20 @@ pub fn run_policy(
         // Policies see an estimate of reality: true progress, sampled (or
         // known) remaining lengths, no jitter.
         let decision_t0 = std::time::Instant::now();
-        let est_state = estimate_view(&true_state, graph, &cost, &registry, opts, &mut est_rng);
-        let stage = match policy {
-            PolicyKind::SamuLlm => dyn_sched.next_stage(
-                graph,
-                &true_state,
-                prev_stage.as_ref(),
-                cluster,
-                &registry,
-                if opts.no_preemption { Some(&locked) } else { None },
-            ),
-            PolicyKind::MaxHeuristic => {
-                max_heuristic_stage(graph, &est_state, &registry, cluster, &cost.iter_model)
-            }
-            PolicyKind::MinHeuristic => {
-                let lock_arg = if opts.no_preemption { locked.clone() } else { HashMap::new() };
-                min_heuristic_stage(graph, &est_state, &registry, cluster, &lock_arg)
-            }
-        };
+        let est_state = estimate_view(&true_state, graph, cost, registry, opts, &mut est_rng);
+        let stage = policy.plan_stage(&StageCtx {
+            graph,
+            true_state: &true_state,
+            est_state: &est_state,
+            prev_stage: prev_stage.as_ref(),
+            cluster,
+            registry,
+            cost,
+            locked: if opts.no_preemption { Some(&locked) } else { None },
+        });
         extra_time += decision_t0.elapsed().as_secs_f64();
         let Some(stage) = stage else {
-            panic!("policy {policy:?} produced no stage with unfinished work");
+            panic!("policy {} produced no stage with unfinished work", policy.name());
         };
         debug_assert!(stage.n_gpus() <= cluster.n_gpus);
 
@@ -147,8 +179,8 @@ pub fn run_policy(
         let res = true_state.run_stage(
             &stage,
             graph,
-            &registry,
-            &hw,
+            registry,
+            hw,
             cluster.mem_bytes,
             &load_delay,
             false,
@@ -160,8 +192,8 @@ pub fn run_policy(
             true_state.run_stage(
                 &stage,
                 graph,
-                &registry,
-                &hw,
+                registry,
+                hw,
                 cluster.mem_bytes,
                 &load_delay,
                 false,
@@ -234,13 +266,13 @@ fn estimate_view(
     est
 }
 
-/// Convenience: run all three policies and return their reports.
+/// Convenience: run the three §5 paper policies and return their reports.
 pub fn compare_policies(
     scenario: &Scenario,
     cluster: &ClusterSpec,
     opts: &RunOpts,
 ) -> Vec<RunReport> {
-    PolicyKind::ALL.iter().map(|&p| run_policy(p, scenario, cluster, opts)).collect()
+    policy::PAPER.iter().map(|&p| run_policy(p, scenario, cluster, opts)).collect()
 }
 
 #[cfg(test)]
@@ -274,7 +306,7 @@ mod tests {
     fn samullm_completes_and_reports() {
         let cluster = ClusterSpec::a100_node(8);
         let sc = tiny_ensemble(4, 120, 1);
-        let r = run_policy(PolicyKind::SamuLlm, &sc, &cluster, &RunOpts::default());
+        let r = run_policy("ours", &sc, &cluster, &RunOpts::default());
         assert!(r.inference_time > 0.0);
         assert!(r.n_stages >= 1);
         assert!(!r.estimated_inference_time.is_nan());
@@ -287,12 +319,12 @@ mod tests {
     fn all_policies_complete_same_workload() {
         let cluster = ClusterSpec::a100_node(8);
         let sc = tiny_ensemble(5, 100, 2);
-        for p in PolicyKind::ALL {
+        for p in policy::names() {
             let r = run_policy(p, &sc, &cluster, &RunOpts::default());
-            assert!(r.inference_time > 0.0, "{p:?}");
+            assert!(r.inference_time > 0.0, "{p}");
             // Every stage fits the cluster.
             for s in &r.timeline {
-                assert!(s.gpus_used() <= 8, "{p:?} stage over budget");
+                assert!(s.gpus_used() <= 8, "{p} stage over budget");
             }
         }
     }
@@ -302,8 +334,8 @@ mod tests {
         // The paper's headline: for small workloads Max wastes GPUs.
         let cluster = ClusterSpec::a100_node(8);
         let sc = tiny_ensemble(6, 150, 3);
-        let ours = run_policy(PolicyKind::SamuLlm, &sc, &cluster, &RunOpts::default());
-        let max = run_policy(PolicyKind::MaxHeuristic, &sc, &cluster, &RunOpts::default());
+        let ours = run_policy("ours", &sc, &cluster, &RunOpts::default());
+        let max = run_policy("max-heuristic", &sc, &cluster, &RunOpts::default());
         assert!(
             ours.inference_time < max.inference_time * 1.15,
             "ours {} vs max {}",
@@ -317,13 +349,13 @@ mod tests {
         let cluster = ClusterSpec::a100_node(8);
         let sc = tiny_ensemble(5, 150, 4);
         let opts = RunOpts { no_preemption: true, ..Default::default() };
-        for p in [PolicyKind::SamuLlm, PolicyKind::MinHeuristic] {
+        for p in ["ours", "min-heuristic", "round-robin"] {
             let r = run_policy(p, &sc, &cluster, &opts);
             let mut seen: HashMap<usize, ExecPlan> = HashMap::new();
             for s in &r.timeline {
                 for (n, plan) in &s.entries {
                     if let Some(prev) = seen.get(n) {
-                        assert_eq!(prev, plan, "{p:?}: node {n} plan changed");
+                        assert_eq!(prev, plan, "{p}: node {n} plan changed");
                     }
                     seen.insert(*n, *plan);
                 }
@@ -335,9 +367,9 @@ mod tests {
     fn known_lengths_reduces_estimation_error() {
         let cluster = ClusterSpec::a100_node(8);
         let sc = tiny_ensemble(3, 200, 5);
-        let unknown = run_policy(PolicyKind::SamuLlm, &sc, &cluster, &RunOpts::default());
+        let unknown = run_policy("ours", &sc, &cluster, &RunOpts::default());
         let known = run_policy(
-            PolicyKind::SamuLlm,
+            "ours",
             &sc,
             &cluster,
             &RunOpts { known_lengths: true, ..Default::default() },

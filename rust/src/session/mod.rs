@@ -1,0 +1,229 @@
+//! The [`SamuLlm`] session facade — the canonical entry point of the
+//! library.
+//!
+//! A session owns everything `run_policy` used to re-assemble on every
+//! call: the model [`Registry`], the calibrated [`CostModel`], the
+//! hardware ground truth and the cluster description (bundled in a
+//! [`RunContext`]). Callers describe *what* to run with an
+//! [`AppSpec`] and the session takes care of materialisation, policy
+//! instantiation and execution:
+//!
+//! ```no_run
+//! use samullm::prelude::*;
+//!
+//! let session = SamuLlm::builder()
+//!     .cluster(ClusterSpec::a100_node(8))
+//!     .policy("ours")
+//!     .seed(42)
+//!     .build()?;
+//! let report = session.run(&AppSpec::ensembling(1000, 256))?;
+//! println!("end-to-end: {:.1}s", report.end_to_end_time);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The builder validates the policy name against the
+//! [`crate::policy`] registry at `build()` time, so misconfiguration
+//! fails before any (expensive) planning starts.
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::metrics::RunReport;
+use crate::policy;
+use crate::runner::{self, RunContext, RunOpts, Scenario};
+use crate::spec::AppSpec;
+
+/// Configured session: a cluster, a policy, a seed, and the shared
+/// cost-model wiring. Create one with [`SamuLlm::builder`].
+pub struct SamuLlm {
+    ctx: RunContext,
+    policy: &'static str,
+    opts: RunOpts,
+}
+
+/// Builder for [`SamuLlm`]. Defaults: 8×A100 node, policy `"ours"`,
+/// seed 42, preemption on, sampled output lengths, 2% ground-truth
+/// iteration jitter (the paper's §5 setup).
+pub struct SamuLlmBuilder {
+    cluster: ClusterSpec,
+    /// A100-node GPU count requested via [`SamuLlmBuilder::gpus`];
+    /// validated (and turned into a cluster) at `build()` time so bad
+    /// counts error instead of panicking.
+    gpus: Option<u32>,
+    policy: String,
+    seed: u64,
+    no_preemption: bool,
+    known_lengths: bool,
+    noise_sigma: f64,
+}
+
+impl SamuLlm {
+    pub fn builder() -> SamuLlmBuilder {
+        SamuLlmBuilder {
+            cluster: ClusterSpec::a100_node(8),
+            gpus: None,
+            policy: "ours".to_string(),
+            seed: 42,
+            no_preemption: false,
+            known_lengths: false,
+            noise_sigma: 0.02,
+        }
+    }
+
+    /// The session's canonical policy name.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.ctx.cluster
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.opts.seed
+    }
+
+    /// Materialise `spec` with the session seed and run it under the
+    /// session policy. Spec-level run modes (e.g. routing's
+    /// `known_lengths`) are honoured here.
+    pub fn run(&self, spec: &AppSpec) -> Result<RunReport> {
+        let scenario = spec.build(self.opts.seed)?;
+        let mut opts = self.opts.clone();
+        opts.known_lengths |= spec.wants_known_lengths();
+        self.execute(self.policy, &scenario, &opts)
+    }
+
+    /// Run a pre-built [`Scenario`] under the session policy.
+    pub fn run_scenario(&self, scenario: &Scenario) -> Result<RunReport> {
+        self.execute(self.policy, scenario, &self.opts)
+    }
+
+    /// Run the same spec under several policies (paper-style comparisons),
+    /// reusing the session's scenario materialisation and wiring.
+    pub fn compare(&self, spec: &AppSpec, policies: &[&str]) -> Result<Vec<RunReport>> {
+        let scenario = spec.build(self.opts.seed)?;
+        let mut opts = self.opts.clone();
+        opts.known_lengths |= spec.wants_known_lengths();
+        policies.iter().map(|p| self.execute(p, &scenario, &opts)).collect()
+    }
+
+    fn execute(&self, policy: &str, scenario: &Scenario, opts: &RunOpts) -> Result<RunReport> {
+        let mut policy = policy::create(policy)?;
+        Ok(runner::run_with(policy.as_mut(), scenario, &self.ctx, opts))
+    }
+}
+
+impl SamuLlmBuilder {
+    /// The hardware to schedule on (default: `ClusterSpec::a100_node(8)`).
+    pub fn cluster(mut self, cluster: ClusterSpec) -> Self {
+        self.cluster = cluster;
+        self.gpus = None;
+        self
+    }
+
+    /// Convenience: an `n`-GPU A100 node. `n` must be a power of two
+    /// (checked at `build()`, which errors instead of panicking).
+    pub fn gpus(mut self, n: u32) -> Self {
+        self.gpus = Some(n);
+        self
+    }
+
+    /// Scheduling policy by registry name or alias (default `"ours"`).
+    pub fn policy(mut self, name: &str) -> Self {
+        self.policy = name.to_string();
+        self
+    }
+
+    /// Seed for workload generation, cost-model calibration and planning.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Disable preemption (§5.5 ablation).
+    pub fn no_preemption(mut self, on: bool) -> Self {
+        self.no_preemption = on;
+        self
+    }
+
+    /// Give every policy the true output lengths (§5.5 ablation).
+    pub fn known_lengths(mut self, on: bool) -> Self {
+        self.known_lengths = on;
+        self
+    }
+
+    /// Ground-truth per-iteration jitter σ (default 0.02).
+    pub fn noise_sigma(mut self, sigma: f64) -> Self {
+        self.noise_sigma = sigma;
+        self
+    }
+
+    /// Validate the configuration and assemble the session wiring.
+    pub fn build(self) -> Result<SamuLlm> {
+        let policy = policy::canonical(&self.policy)?;
+        let cluster = match self.gpus {
+            Some(n) => {
+                if n == 0 || !n.is_power_of_two() {
+                    return Err(anyhow!("gpu count must be a power of two, got {n}"));
+                }
+                ClusterSpec::a100_node(n)
+            }
+            None => self.cluster,
+        };
+        if cluster.n_gpus == 0 || !cluster.n_gpus.is_power_of_two() {
+            return Err(anyhow!(
+                "cluster gpu count must be a power of two, got {}",
+                cluster.n_gpus
+            ));
+        }
+        let opts = RunOpts {
+            seed: self.seed,
+            no_preemption: self.no_preemption,
+            known_lengths: self.known_lengths,
+            noise_sigma: self.noise_sigma,
+        };
+        Ok(SamuLlm { ctx: RunContext::new(&cluster, self.seed), policy, opts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_policy_name() {
+        assert!(SamuLlm::builder().policy("nope").build().is_err());
+        let s = SamuLlm::builder().policy("samullm").build().unwrap();
+        assert_eq!(s.policy_name(), "ours");
+        assert_eq!(s.seed(), 42);
+    }
+
+    #[test]
+    fn builder_validates_gpu_count_without_panicking() {
+        assert!(SamuLlm::builder().gpus(6).build().is_err());
+        assert!(SamuLlm::builder().gpus(0).build().is_err());
+        let s = SamuLlm::builder().gpus(4).build().unwrap();
+        assert_eq!(s.cluster().n_gpus, 4);
+    }
+
+    #[test]
+    fn session_runs_a_small_spec() {
+        let session =
+            SamuLlm::builder().gpus(8).policy("min").seed(3).build().unwrap();
+        let spec = AppSpec::ensembling(60, 128);
+        let r = session.run(&spec).unwrap();
+        assert_eq!(r.policy, "min-heuristic");
+        assert!(r.inference_time > 0.0);
+        assert!(r.n_stages >= 1);
+    }
+
+    #[test]
+    fn compare_runs_each_policy_once() {
+        let session = SamuLlm::builder().seed(5).build().unwrap();
+        let spec = AppSpec::ensembling(50, 128);
+        let reports = session.compare(&spec, &policy::PAPER).unwrap();
+        assert_eq!(reports.len(), 3);
+        let names: Vec<&str> = reports.iter().map(|r| r.policy.as_str()).collect();
+        assert_eq!(names, vec!["ours", "max-heuristic", "min-heuristic"]);
+    }
+}

@@ -1,0 +1,750 @@
+//! Declarative scenario descriptions ([`AppSpec`]) and the app-builder
+//! registry — the single place where application names become runnable
+//! [`Scenario`]s.
+//!
+//! An `AppSpec` fully describes *what* to run: either one of the paper's
+//! four applications with its parameters, or a user-defined computation
+//! graph (`Custom`) whose nodes carry their own workload generators. It
+//! serialises via [`crate::util::json`] so arbitrary applications can be
+//! replayed from a small JSON file (`samullm config app.json`), and it
+//! materialises into a [`Scenario`] with [`AppSpec::build`] — the one
+//! match block in the codebase that constructs application graphs.
+//!
+//! The CLI goes through [`from_cli`], which looks the app name up in the
+//! [`builders`] registry; each [`AppBuilder`] applies its own defaults and
+//! *rejects* knobs that don't apply to it (no silently-dropped flags).
+
+use anyhow::{anyhow, Result};
+
+use crate::apps::{chain_summary, ensembling, mixed, routing};
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::runner::{AppRequest, Scenario};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::lengths;
+
+/// A declarative description of a multi-LLM application scenario.
+///
+/// The four builtin variants mirror the paper's §5 applications and
+/// delegate to the exact seed builders, so a spec plus a seed reproduces
+/// the published workloads bit-for-bit. `Custom` opens the framework to
+/// arbitrary graphs: any registry models, any edges, per-node workload
+/// generators.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AppSpec {
+    /// §5.1: every model answers every request.
+    Ensembling { n_requests: usize, max_out: u32 },
+    /// §5.2: each request goes to its best model (Table 1 ratios). The
+    /// `known_lengths` flag turns on the §5.5 known-output-length mode
+    /// for the whole run (honoured by [`crate::session::SamuLlm::run`]).
+    Routing { max_out: u32, known_lengths: bool },
+    /// §5.3: chunked document summarization + summary evaluation.
+    ChainSummary { n_docs: usize, eval_times: u32, max_out: u32 },
+    /// §5.4: chain summary + ensembling run as one application.
+    Mixed {
+        n_docs: usize,
+        n_ensemble_requests: usize,
+        summary_max_out: u32,
+        ensemble_max_out: u32,
+        eval_times: u32,
+    },
+    /// A user-defined computation graph: nodes with per-node workload
+    /// generators plus data-flow edges (producer, consumer).
+    Custom { name: String, nodes: Vec<NodeSpec>, edges: Vec<(usize, usize)> },
+}
+
+/// One node of a [`AppSpec::Custom`] graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Registry name of the LLM this node runs (see [`Registry::paper`]).
+    pub model: String,
+    /// Human-readable role label.
+    pub label: String,
+    /// Output-length limit applied to this node's requests.
+    pub max_out: u32,
+    /// How this node's requests are produced.
+    pub workload: WorkloadGen,
+}
+
+/// Per-node workload generator for custom graphs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadGen {
+    /// Explicit request list (replayed traces); ids are assigned by
+    /// position. Output lengths are clamped to the node's `max_out` and
+    /// the model's context window.
+    Explicit { requests: Vec<RequestSpec> },
+    /// `n_requests` synthetic requests: input lengths uniform in
+    /// `[input_min, input_max]`, true output lengths drawn from the
+    /// model's No-Robots-style length distribution capped at `max_out`.
+    Synthetic { n_requests: usize, input_min: u32, input_max: u32 },
+}
+
+/// One explicit request of [`WorkloadGen::Explicit`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestSpec {
+    pub input_len: u32,
+    pub output_len: u32,
+}
+
+// ---------------------------------------------------------------------------
+// Convenience constructors (the harness and examples build specs with these).
+// ---------------------------------------------------------------------------
+
+impl AppSpec {
+    pub fn ensembling(n_requests: usize, max_out: u32) -> AppSpec {
+        AppSpec::Ensembling { n_requests, max_out }
+    }
+
+    pub fn routing(max_out: u32, known_lengths: bool) -> AppSpec {
+        AppSpec::Routing { max_out, known_lengths }
+    }
+
+    pub fn chain_summary(n_docs: usize, eval_times: u32, max_out: u32) -> AppSpec {
+        AppSpec::ChainSummary { n_docs, eval_times, max_out }
+    }
+
+    pub fn mixed(
+        n_docs: usize,
+        n_ensemble_requests: usize,
+        summary_max_out: u32,
+        ensemble_max_out: u32,
+        eval_times: u32,
+    ) -> AppSpec {
+        AppSpec::Mixed {
+            n_docs,
+            n_ensemble_requests,
+            summary_max_out,
+            ensemble_max_out,
+            eval_times,
+        }
+    }
+
+    /// The spec's kind name as the CLI registry spells it. Note the JSON
+    /// `kind` field canonically uses `chain_summary` (underscore) for
+    /// [`AppSpec::ChainSummary`]; [`AppSpec::from_json`] accepts both
+    /// spellings.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AppSpec::Ensembling { .. } => "ensembling",
+            AppSpec::Routing { .. } => "routing",
+            AppSpec::ChainSummary { .. } => "chain-summary",
+            AppSpec::Mixed { .. } => "mixed",
+            AppSpec::Custom { .. } => "custom",
+        }
+    }
+
+    /// Whether this spec asks for the known-output-lengths ablation mode.
+    pub fn wants_known_lengths(&self) -> bool {
+        matches!(self, AppSpec::Routing { known_lengths: true, .. })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Materialisation: AppSpec -> Scenario.
+// ---------------------------------------------------------------------------
+
+impl AppSpec {
+    /// Materialise the spec into a runnable [`Scenario`]. The builtin
+    /// variants call the seed app builders verbatim, so results are
+    /// bit-identical to the pre-spec code paths for the same seed.
+    pub fn build(&self, seed: u64) -> Result<Scenario> {
+        Ok(match self {
+            AppSpec::Ensembling { n_requests, max_out } => {
+                ensembling::build(*n_requests, *max_out, seed)
+            }
+            AppSpec::Routing { max_out, .. } => routing::build(*max_out, seed),
+            AppSpec::ChainSummary { n_docs, eval_times, max_out } => {
+                chain_summary::build(*n_docs, *eval_times, *max_out, seed)
+            }
+            AppSpec::Mixed {
+                n_docs,
+                n_ensemble_requests,
+                summary_max_out,
+                ensemble_max_out,
+                eval_times,
+            } => mixed::build(
+                *n_docs,
+                *n_ensemble_requests,
+                *summary_max_out,
+                *ensemble_max_out,
+                *eval_times,
+                seed,
+            ),
+            AppSpec::Custom { name, nodes, edges } => build_custom(name, nodes, edges, seed)?,
+        })
+    }
+}
+
+/// Materialise a custom graph spec (validated; never panics on bad input).
+fn build_custom(
+    name: &str,
+    nodes: &[NodeSpec],
+    edges: &[(usize, usize)],
+    seed: u64,
+) -> Result<Scenario> {
+    if nodes.is_empty() {
+        return Err(anyhow!("custom spec needs at least one node"));
+    }
+    let registry = Registry::paper();
+    for &(f, t) in edges {
+        if f >= nodes.len() || t >= nodes.len() {
+            return Err(anyhow!("edge ({f},{t}) out of range for {} nodes", nodes.len()));
+        }
+        if f == t {
+            return Err(anyhow!(
+                "self-loop edge ({f},{f}): fuse self-loops into request chains instead"
+            ));
+        }
+    }
+    let mut graph = AppGraph::default();
+    let mut workloads: Vec<Vec<AppRequest>> = vec![];
+    let shift = lengths::dataset_shift(seed ^ 0xC057);
+    for (i, node) in nodes.iter().enumerate() {
+        let spec = registry.get(&node.model).ok_or_else(|| {
+            anyhow!(
+                "node {i}: unknown model {:?} (known: {})",
+                node.model,
+                registry.names().join(", ")
+            )
+        })?;
+        if node.max_out == 0 {
+            return Err(anyhow!("node {i}: max_out must be positive"));
+        }
+        graph.add_node(&node.model, &node.label, node.max_out);
+        let mut rng = Rng::new(seed ^ 0xC057_0000 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let window = |input_len: u32| spec.max_seq.saturating_sub(input_len).max(1);
+        let reqs: Vec<AppRequest> = match &node.workload {
+            WorkloadGen::Explicit { requests } => {
+                if requests.is_empty() {
+                    return Err(anyhow!("node {i}: explicit workload has no requests"));
+                }
+                requests
+                    .iter()
+                    .enumerate()
+                    .map(|(id, r)| {
+                        let input_len = r.input_len.max(1);
+                        let out =
+                            r.output_len.min(node.max_out).min(window(input_len)).max(1);
+                        AppRequest::simple(id as u64, input_len, out)
+                    })
+                    .collect()
+            }
+            WorkloadGen::Synthetic { n_requests, input_min, input_max } => {
+                if *n_requests == 0 {
+                    return Err(anyhow!("node {i}: synthetic workload needs n_requests > 0"));
+                }
+                let lo = (*input_min).max(1);
+                let hi = (*input_max).max(lo);
+                if hi >= spec.max_seq {
+                    return Err(anyhow!(
+                        "node {i}: input_max {hi} exceeds {}'s context window {}",
+                        node.model,
+                        spec.max_seq
+                    ));
+                }
+                (0..*n_requests as u64)
+                    .map(|id| {
+                        let input_len = rng.range_u64(lo as u64, hi as u64 + 1) as u32;
+                        let out = lengths::true_output_len(
+                            &node.model,
+                            shift,
+                            input_len,
+                            node.max_out,
+                            spec.max_seq,
+                            &mut rng,
+                        );
+                        AppRequest::simple(id, input_len, out)
+                    })
+                    .collect()
+            }
+        };
+        workloads.push(reqs);
+    }
+    for &(f, t) in edges {
+        graph.add_edge(f, t);
+    }
+    if !graph.is_acyclic() {
+        return Err(anyhow!("custom graph has a cycle"));
+    }
+    let name = if name.is_empty() { "custom".to_string() } else { name.to_string() };
+    Ok(Scenario { name, graph, workloads })
+}
+
+// ---------------------------------------------------------------------------
+// CLI builder registry.
+// ---------------------------------------------------------------------------
+
+/// Optional knobs collected from the CLI. Builders apply their own
+/// defaults and reject knobs that don't apply to their app, so no flag is
+/// ever silently dropped.
+#[derive(Debug, Clone, Default)]
+pub struct AppParams {
+    pub n_requests: Option<usize>,
+    pub max_out: Option<u32>,
+    pub n_docs: Option<usize>,
+    pub eval_times: Option<u32>,
+    pub known_lengths: bool,
+}
+
+/// A named app builder: CLI params -> [`AppSpec`].
+pub struct AppBuilder {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub build: fn(&AppParams) -> Result<AppSpec>,
+}
+
+/// All registered app builders, in CLI help order.
+pub fn builders() -> &'static [AppBuilder] {
+    static BUILDERS: &[AppBuilder] = &[
+        AppBuilder {
+            name: "ensembling",
+            about: "9-model LLM ensembling over MixInstruct-like inputs (§5.1)",
+            build: cli_ensembling,
+        },
+        AppBuilder {
+            name: "routing",
+            about: "RouterBench routing, Table-1 skew, fixed 6856-request dataset (§5.2)",
+            build: cli_routing,
+        },
+        AppBuilder {
+            name: "chain-summary",
+            about: "chunked document summarization + evaluation pipeline (§5.3)",
+            build: cli_chain_summary,
+        },
+        AppBuilder {
+            name: "mixed",
+            about: "chain summary + ensembling as one computation graph (§5.4)",
+            build: cli_mixed,
+        },
+    ];
+    BUILDERS
+}
+
+/// Registered app names, in help order.
+pub fn app_names() -> Vec<&'static str> {
+    builders().iter().map(|b| b.name).collect()
+}
+
+/// Build a spec for a named app from CLI params (registry lookup — the
+/// CLI never matches on app names itself).
+pub fn from_cli(app: &str, params: &AppParams) -> Result<AppSpec> {
+    let builder = builders()
+        .iter()
+        .find(|b| b.name == app)
+        .ok_or_else(|| anyhow!("unknown app {app} (known: {})", app_names().join("|")))?;
+    (builder.build)(params)
+}
+
+fn reject(given: bool, app: &str, flag: &str, why: &str) -> Result<()> {
+    if given {
+        Err(anyhow!("{app} does not accept {flag}: {why}"))
+    } else {
+        Ok(())
+    }
+}
+
+fn cli_ensembling(p: &AppParams) -> Result<AppSpec> {
+    reject(p.n_docs.is_some(), "ensembling", "--n-docs", "it has no documents")?;
+    reject(p.eval_times.is_some(), "ensembling", "--eval-times", "it has no evaluator")?;
+    Ok(AppSpec::ensembling(p.n_requests.unwrap_or(1000), p.max_out.unwrap_or(256)))
+}
+
+fn cli_routing(p: &AppParams) -> Result<AppSpec> {
+    reject(
+        p.n_requests.is_some(),
+        "routing",
+        "--n-requests",
+        "it replays the fixed 6856-request RouterBench dataset",
+    )?;
+    reject(p.n_docs.is_some(), "routing", "--n-docs", "it has no documents")?;
+    reject(p.eval_times.is_some(), "routing", "--eval-times", "it has no evaluator")?;
+    // An explicit --max-out is honoured as given; the seed CLI silently
+    // clamped values below 512 up to 512.
+    Ok(AppSpec::routing(p.max_out.unwrap_or(512), p.known_lengths))
+}
+
+fn cli_chain_summary(p: &AppParams) -> Result<AppSpec> {
+    reject(
+        p.n_requests.is_some(),
+        "chain-summary",
+        "--n-requests",
+        "its request count follows from --n-docs and --eval-times",
+    )?;
+    // An explicit --max-out is honoured as given; the seed CLI silently
+    // clamped values below 100 up to 100.
+    Ok(AppSpec::chain_summary(
+        p.n_docs.unwrap_or(100),
+        p.eval_times.unwrap_or(2),
+        p.max_out.unwrap_or(256),
+    ))
+}
+
+fn cli_mixed(p: &AppParams) -> Result<AppSpec> {
+    Ok(AppSpec::mixed(
+        p.n_docs.unwrap_or(100),
+        p.n_requests.unwrap_or(1000),
+        900,
+        p.max_out.unwrap_or(256),
+        p.eval_times.unwrap_or(4),
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialisation via util::json.
+// ---------------------------------------------------------------------------
+
+impl AppSpec {
+    pub fn to_json(&self) -> Json {
+        match self {
+            AppSpec::Ensembling { n_requests, max_out } => Json::obj(vec![
+                ("kind", Json::Str("ensembling".into())),
+                ("n_requests", Json::Num(*n_requests as f64)),
+                ("max_out", Json::Num(*max_out as f64)),
+            ]),
+            AppSpec::Routing { max_out, known_lengths } => Json::obj(vec![
+                ("kind", Json::Str("routing".into())),
+                ("max_out", Json::Num(*max_out as f64)),
+                ("known_lengths", Json::Bool(*known_lengths)),
+            ]),
+            AppSpec::ChainSummary { n_docs, eval_times, max_out } => Json::obj(vec![
+                ("kind", Json::Str("chain_summary".into())),
+                ("n_docs", Json::Num(*n_docs as f64)),
+                ("eval_times", Json::Num(*eval_times as f64)),
+                ("max_out", Json::Num(*max_out as f64)),
+            ]),
+            AppSpec::Mixed {
+                n_docs,
+                n_ensemble_requests,
+                summary_max_out,
+                ensemble_max_out,
+                eval_times,
+            } => Json::obj(vec![
+                ("kind", Json::Str("mixed".into())),
+                ("n_docs", Json::Num(*n_docs as f64)),
+                ("n_ensemble_requests", Json::Num(*n_ensemble_requests as f64)),
+                ("summary_max_out", Json::Num(*summary_max_out as f64)),
+                ("ensemble_max_out", Json::Num(*ensemble_max_out as f64)),
+                ("eval_times", Json::Num(*eval_times as f64)),
+            ]),
+            AppSpec::Custom { name, nodes, edges } => Json::obj(vec![
+                ("kind", Json::Str("custom".into())),
+                ("name", Json::Str(name.clone())),
+                ("nodes", Json::Arr(nodes.iter().map(node_to_json).collect())),
+                (
+                    "edges",
+                    Json::Arr(
+                        edges
+                            .iter()
+                            .map(|&(f, t)| {
+                                Json::Arr(vec![Json::Num(f as f64), Json::Num(t as f64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        }
+    }
+
+    /// Parse a spec from a JSON value. Builtin kinds keep the seed config
+    /// defaults for missing fields; custom graphs are fully explicit.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind =
+            v.get("kind").and_then(|k| k.as_str()).ok_or_else(|| anyhow!("app.kind missing"))?;
+        let num = |k: &str, d: u64| v.get(k).and_then(|x| x.as_u64()).unwrap_or(d);
+        Ok(match kind {
+            "ensembling" => AppSpec::Ensembling {
+                n_requests: num("n_requests", 1000) as usize,
+                max_out: num("max_out", 256) as u32,
+            },
+            "routing" => AppSpec::Routing {
+                max_out: num("max_out", 4096) as u32,
+                known_lengths: v.get("known_lengths").and_then(|x| x.as_bool()).unwrap_or(false),
+            },
+            "chain_summary" | "chain-summary" => AppSpec::ChainSummary {
+                n_docs: num("n_docs", 100) as usize,
+                eval_times: num("eval_times", 1) as u32,
+                max_out: num("max_out", 500) as u32,
+            },
+            "mixed" => AppSpec::Mixed {
+                n_docs: num("n_docs", 100) as usize,
+                n_ensemble_requests: num("n_ensemble_requests", 5000) as usize,
+                summary_max_out: num("summary_max_out", 900) as u32,
+                ensemble_max_out: num("ensemble_max_out", 256) as u32,
+                eval_times: num("eval_times", 4) as u32,
+            },
+            "custom" => {
+                let nodes = v
+                    .get("nodes")
+                    .and_then(|n| n.as_arr())
+                    .ok_or_else(|| anyhow!("custom spec needs a nodes array"))?
+                    .iter()
+                    .map(node_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let edges = match v.get("edges").and_then(|e| e.as_arr()) {
+                    None => vec![],
+                    Some(arr) => arr
+                        .iter()
+                        .map(|e| {
+                            let pair = e.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                                anyhow!("edges must be [from, to] pairs, got {}", e.to_string())
+                            })?;
+                            let f = pair[0].as_usize().ok_or_else(|| anyhow!("bad edge from"))?;
+                            let t = pair[1].as_usize().ok_or_else(|| anyhow!("bad edge to"))?;
+                            Ok((f, t))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                AppSpec::Custom {
+                    name: v
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .unwrap_or("custom")
+                        .to_string(),
+                    nodes,
+                    edges,
+                }
+            }
+            other => return Err(anyhow!("unknown app kind {other}")),
+        })
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a spec from a JSON document string.
+    pub fn parse(s: &str) -> Result<Self> {
+        let v = Json::parse(s).map_err(|e| anyhow!("bad spec json: {e}"))?;
+        Self::from_json(&v)
+    }
+}
+
+fn node_to_json(n: &NodeSpec) -> Json {
+    let workload = match &n.workload {
+        WorkloadGen::Explicit { requests } => Json::obj(vec![
+            ("kind", Json::Str("explicit".into())),
+            (
+                "requests",
+                Json::Arr(
+                    requests
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("input_len", Json::Num(r.input_len as f64)),
+                                ("output_len", Json::Num(r.output_len as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        WorkloadGen::Synthetic { n_requests, input_min, input_max } => Json::obj(vec![
+            ("kind", Json::Str("synthetic".into())),
+            ("n_requests", Json::Num(*n_requests as f64)),
+            ("input_min", Json::Num(*input_min as f64)),
+            ("input_max", Json::Num(*input_max as f64)),
+        ]),
+    };
+    Json::obj(vec![
+        ("model", Json::Str(n.model.clone())),
+        ("label", Json::Str(n.label.clone())),
+        ("max_out", Json::Num(n.max_out as f64)),
+        ("workload", workload),
+    ])
+}
+
+fn node_from_json(v: &Json) -> Result<NodeSpec> {
+    let model = v
+        .get("model")
+        .and_then(|m| m.as_str())
+        .ok_or_else(|| anyhow!("node.model missing"))?
+        .to_string();
+    let label =
+        v.get("label").and_then(|l| l.as_str()).unwrap_or(model.as_str()).to_string();
+    let max_out = v
+        .get("max_out")
+        .and_then(|m| m.as_u64())
+        .ok_or_else(|| anyhow!("node.max_out missing"))? as u32;
+    let w = v.get("workload").ok_or_else(|| anyhow!("node.workload missing"))?;
+    let kind = w
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .ok_or_else(|| anyhow!("workload.kind missing"))?;
+    let workload = match kind {
+        "explicit" => WorkloadGen::Explicit {
+            requests: w
+                .get("requests")
+                .and_then(|r| r.as_arr())
+                .ok_or_else(|| anyhow!("explicit workload needs a requests array"))?
+                .iter()
+                .map(|r| {
+                    Ok(RequestSpec {
+                        input_len: r
+                            .get("input_len")
+                            .and_then(|x| x.as_u64())
+                            .ok_or_else(|| anyhow!("request.input_len missing"))?
+                            as u32,
+                        output_len: r
+                            .get("output_len")
+                            .and_then(|x| x.as_u64())
+                            .ok_or_else(|| anyhow!("request.output_len missing"))?
+                            as u32,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "synthetic" => WorkloadGen::Synthetic {
+            n_requests: w
+                .get("n_requests")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("synthetic workload needs n_requests"))?,
+            input_min: w.get("input_min").and_then(|x| x.as_u64()).unwrap_or(5) as u32,
+            input_max: w.get("input_max").and_then(|x| x.as_u64()).unwrap_or(127) as u32,
+        },
+        other => return Err(anyhow!("unknown workload kind {other}")),
+    };
+    Ok(NodeSpec { model, label, max_out, workload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_custom() -> AppSpec {
+        AppSpec::Custom {
+            name: "two-stage".into(),
+            nodes: vec![
+                NodeSpec {
+                    model: "vicuna-13b-v1.5".into(),
+                    label: "draft".into(),
+                    max_out: 300,
+                    workload: WorkloadGen::Synthetic {
+                        n_requests: 40,
+                        input_min: 10,
+                        input_max: 120,
+                    },
+                },
+                NodeSpec {
+                    model: "mistral-7b-instruct".into(),
+                    label: "refine".into(),
+                    max_out: 128,
+                    workload: WorkloadGen::Explicit {
+                        requests: vec![
+                            RequestSpec { input_len: 30, output_len: 64 },
+                            RequestSpec { input_len: 45, output_len: 9000 },
+                        ],
+                    },
+                },
+            ],
+            edges: vec![(0, 1)],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_all_variants() {
+        for spec in [
+            AppSpec::ensembling(1000, 256),
+            AppSpec::routing(4096, true),
+            AppSpec::chain_summary(100, 4, 900),
+            AppSpec::mixed(400, 5000, 900, 256, 4),
+            sample_custom(),
+        ] {
+            let back = AppSpec::parse(&spec.to_json_string()).unwrap();
+            assert_eq!(back, spec);
+            // Stable: a second round-trip serialises identically.
+            assert_eq!(back.to_json_string(), spec.to_json_string());
+        }
+    }
+
+    #[test]
+    fn builtin_specs_match_seed_builders() {
+        // The spec path must be bit-identical to calling the app builders
+        // directly (the pre-spec code path).
+        let spec = AppSpec::ensembling(200, 256);
+        let via_spec = spec.build(42).unwrap();
+        let direct = crate::apps::ensembling::build(200, 256, 42);
+        assert_eq!(via_spec.name, direct.name);
+        assert_eq!(via_spec.graph.n_nodes(), direct.graph.n_nodes());
+        for (a, b) in via_spec.workloads.iter().zip(&direct.workloads) {
+            assert_eq!(a.len(), b.len());
+            assert!(a
+                .iter()
+                .zip(b)
+                .all(|(x, y)| x.input_len == y.input_len
+                    && x.true_output_len == y.true_output_len));
+        }
+    }
+
+    #[test]
+    fn cli_defaults_match_seed_cli() {
+        // Seed CLI: ensembling(1000, 256), routing(512), chain(100, 2, 256),
+        // mixed(100, 1000, 900, 256, 4).
+        let p = AppParams::default();
+        assert_eq!(from_cli("ensembling", &p).unwrap(), AppSpec::ensembling(1000, 256));
+        assert_eq!(from_cli("routing", &p).unwrap(), AppSpec::routing(512, false));
+        assert_eq!(
+            from_cli("chain-summary", &p).unwrap(),
+            AppSpec::chain_summary(100, 2, 256)
+        );
+        assert_eq!(from_cli("mixed", &p).unwrap(), AppSpec::mixed(100, 1000, 900, 256, 4));
+    }
+
+    #[test]
+    fn cli_rejects_inapplicable_flags() {
+        let p = AppParams { n_requests: Some(5000), ..Default::default() };
+        let err = from_cli("routing", &p).unwrap_err().to_string();
+        assert!(err.contains("RouterBench"), "{err}");
+        let p = AppParams { n_docs: Some(10), ..Default::default() };
+        assert!(from_cli("ensembling", &p).is_err());
+        assert!(from_cli("nonsense", &AppParams::default()).is_err());
+    }
+
+    #[test]
+    fn custom_spec_builds_valid_scenario() {
+        let spec = sample_custom();
+        let sc = spec.build(7).unwrap();
+        assert_eq!(sc.graph.n_nodes(), 2);
+        assert_eq!(sc.graph.edges, vec![(0, 1)]);
+        assert_eq!(sc.workloads[0].len(), 40);
+        assert_eq!(sc.workloads[1].len(), 2);
+        // Synthetic lengths respect bounds; explicit outputs are clamped.
+        for r in &sc.workloads[0] {
+            assert!((10..=120).contains(&r.input_len));
+            assert!(r.true_output_len >= 1 && r.true_output_len <= 300);
+        }
+        assert!(sc.workloads[1][1].true_output_len <= 128);
+        // Deterministic per seed.
+        let again = spec.build(7).unwrap();
+        assert!(sc.workloads[0]
+            .iter()
+            .zip(&again.workloads[0])
+            .all(|(a, b)| a.true_output_len == b.true_output_len));
+    }
+
+    #[test]
+    fn custom_spec_rejects_bad_graphs() {
+        let mut bad = sample_custom();
+        if let AppSpec::Custom { edges, .. } = &mut bad {
+            edges.push((1, 0)); // cycle 0 -> 1 -> 0
+        }
+        assert!(bad.build(1).is_err());
+        let mut oob = sample_custom();
+        if let AppSpec::Custom { edges, .. } = &mut oob {
+            *edges = vec![(0, 5)];
+        }
+        assert!(oob.build(1).is_err());
+        let unknown = AppSpec::Custom {
+            name: "x".into(),
+            nodes: vec![NodeSpec {
+                model: "gpt-17".into(),
+                label: "x".into(),
+                max_out: 64,
+                workload: WorkloadGen::Synthetic { n_requests: 5, input_min: 5, input_max: 10 },
+            }],
+            edges: vec![],
+        };
+        assert!(unknown.build(1).is_err());
+    }
+}

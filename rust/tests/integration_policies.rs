@@ -1,24 +1,28 @@
 //! Integration tests: whole applications, all policies, paper-shape
 //! assertions (who wins, roughly by how much) — the §5 claims as tests.
 
-use samullm::apps::{chain_summary, ensembling, mixed, routing};
-use samullm::baselines::PolicyKind;
 use samullm::cluster::ClusterSpec;
-use samullm::runner::{run_policy, RunOpts};
+use samullm::policy;
+use samullm::runner::{run_policy, RunOpts, Scenario};
+use samullm::spec::AppSpec;
 
 fn cluster() -> ClusterSpec {
     ClusterSpec::a100_node(8)
+}
+
+fn scenario(spec: AppSpec, seed: u64) -> Scenario {
+    spec.build(seed).expect("valid spec")
 }
 
 #[test]
 fn ensembling_small_workload_ours_beats_max() {
     // Fig. 7 shape at the small end: Max wastes GPUs on underfilled
     // models; Ours should win clearly (paper: 1.1-2.4x).
-    let s = ensembling::build(1000, 256, 42);
+    let s = scenario(AppSpec::ensembling(1000, 256), 42);
     let opts = RunOpts::default();
-    let ours = run_policy(PolicyKind::SamuLlm, &s, &cluster(), &opts);
-    let max = run_policy(PolicyKind::MaxHeuristic, &s, &cluster(), &opts);
-    let min = run_policy(PolicyKind::MinHeuristic, &s, &cluster(), &opts);
+    let ours = run_policy("ours", &s, &cluster(), &opts);
+    let max = run_policy("max-heuristic", &s, &cluster(), &opts);
+    let min = run_policy("min-heuristic", &s, &cluster(), &opts);
     let speedup_max = max.end_to_end_time / ours.end_to_end_time;
     let speedup_min = min.end_to_end_time / ours.end_to_end_time;
     assert!(speedup_max > 1.05, "vs max: {speedup_max:.2}x (paper 1.1-2.4x)");
@@ -30,11 +34,11 @@ fn ensembling_small_workload_ours_beats_max() {
 fn ensembling_advantage_shrinks_with_scale() {
     // Fig. 7 shape: as #requests grows, Ours' edge over Max narrows.
     let opts = RunOpts::default();
-    let small = ensembling::build(800, 256, 1);
-    let large = ensembling::build(6000, 256, 1);
-    let edge = |s: &samullm::runner::Scenario| {
-        let ours = run_policy(PolicyKind::SamuLlm, s, &cluster(), &opts);
-        let max = run_policy(PolicyKind::MaxHeuristic, s, &cluster(), &opts);
+    let small = scenario(AppSpec::ensembling(800, 256), 1);
+    let large = scenario(AppSpec::ensembling(6000, 256), 1);
+    let edge = |s: &Scenario| {
+        let ours = run_policy("ours", s, &cluster(), &opts);
+        let max = run_policy("max-heuristic", s, &cluster(), &opts);
         max.inference_time / ours.inference_time
     };
     let e_small = edge(&small);
@@ -48,10 +52,10 @@ fn ensembling_advantage_shrinks_with_scale() {
 #[test]
 fn routing_skewed_workloads_ours_beats_max() {
     // Fig. 8 shape (paper: 1.4-1.8x vs Max, ~1.0-1.1x vs Min).
-    let s = routing::build(4096, 7);
+    let s = scenario(AppSpec::routing(4096, false), 7);
     let opts = RunOpts::default();
-    let ours = run_policy(PolicyKind::SamuLlm, &s, &cluster(), &opts);
-    let max = run_policy(PolicyKind::MaxHeuristic, &s, &cluster(), &opts);
+    let ours = run_policy("ours", &s, &cluster(), &opts);
+    let max = run_policy("max-heuristic", &s, &cluster(), &opts);
     let speedup = max.end_to_end_time / ours.end_to_end_time;
     assert!(speedup > 1.1, "vs max: {speedup:.2}x (paper 1.4-1.8x)");
 }
@@ -59,10 +63,10 @@ fn routing_skewed_workloads_ours_beats_max() {
 #[test]
 fn chain_summary_idle_time_ordering() {
     // §5.3: Min wastes the most GPU time, Ours the least (ratios ~1.2/1.5).
-    let s = chain_summary::build(100, 2, 500, 24);
+    let s = scenario(AppSpec::chain_summary(100, 2, 500), 24);
     let opts = RunOpts::default();
-    let ours = run_policy(PolicyKind::SamuLlm, &s, &cluster(), &opts);
-    let min = run_policy(PolicyKind::MinHeuristic, &s, &cluster(), &opts);
+    let ours = run_policy("ours", &s, &cluster(), &opts);
+    let min = run_policy("min-heuristic", &s, &cluster(), &opts);
     assert!(
         min.end_to_end_time > ours.end_to_end_time * 0.95,
         "ours {:.0}s vs min {:.0}s",
@@ -82,12 +86,12 @@ fn mixed_whole_app_roughly_matches_sequential() {
     // greedy's first-GPU-per-model bias starves the chain-summary
     // critical path early at small doc counts). Assert the parity band.
     let opts = RunOpts::default();
-    let whole = mixed::build(100, 3000, 900, 256, 4, 33);
-    let r_whole = run_policy(PolicyKind::SamuLlm, &whole, &cluster(), &opts);
-    let cs = chain_summary::build(100, 4, 900, 33);
-    let en = ensembling::build(3000, 256, 33 ^ 0x4D49_58);
-    let r_cs = run_policy(PolicyKind::SamuLlm, &cs, &cluster(), &opts);
-    let r_en = run_policy(PolicyKind::SamuLlm, &en, &cluster(), &opts);
+    let whole = scenario(AppSpec::mixed(100, 3000, 900, 256, 4), 33);
+    let r_whole = run_policy("ours", &whole, &cluster(), &opts);
+    let cs = scenario(AppSpec::chain_summary(100, 4, 900), 33);
+    let en = scenario(AppSpec::ensembling(3000, 256), 33 ^ 0x4D49_58);
+    let r_cs = run_policy("ours", &cs, &cluster(), &opts);
+    let r_en = run_policy("ours", &en, &cluster(), &opts);
     let sequential = r_cs.end_to_end_time + r_en.end_to_end_time;
     let ratio = r_whole.end_to_end_time / sequential;
     assert!(
@@ -101,14 +105,14 @@ fn mixed_whole_app_roughly_matches_sequential() {
 #[test]
 fn preemption_ablation_shapes() {
     // §5.5 Fig. 14: no-preemption hurts Min more than Ours.
-    let s = mixed::build(60, 600, 900, 512, 2, 55);
+    let s = scenario(AppSpec::mixed(60, 600, 900, 512, 2), 55);
     let c = cluster();
     let base = RunOpts::default();
     let np = RunOpts { no_preemption: true, ..base.clone() };
-    let ours = run_policy(PolicyKind::SamuLlm, &s, &c, &base);
-    let ours_np = run_policy(PolicyKind::SamuLlm, &s, &c, &np);
-    let min = run_policy(PolicyKind::MinHeuristic, &s, &c, &base);
-    let min_np = run_policy(PolicyKind::MinHeuristic, &s, &c, &np);
+    let ours = run_policy("ours", &s, &c, &base);
+    let ours_np = run_policy("ours", &s, &c, &np);
+    let min = run_policy("min-heuristic", &s, &c, &base);
+    let min_np = run_policy("min-heuristic", &s, &c, &np);
     let ours_cost = ours_np.inference_time / ours.inference_time;
     let min_cost = min_np.inference_time / min.inference_time;
     assert!(ours_cost > 0.85, "ours np cost {ours_cost:.2} (paper 1.0-1.2x)");
@@ -120,24 +124,24 @@ fn extra_time_stays_small_fraction() {
     // §5.1: search time is 4.5-10.5% of end-to-end on the paper's
     // testbed; ours must stay well below that (virtual inference time is
     // hundreds of seconds, search is sub-second).
-    let s = ensembling::build(2000, 256, 3);
-    let r = run_policy(PolicyKind::SamuLlm, &s, &cluster(), &RunOpts::default());
+    let s = scenario(AppSpec::ensembling(2000, 256), 3);
+    let r = run_policy("ours", &s, &cluster(), &RunOpts::default());
     assert!(r.extra_time_ratio() < 0.11, "extra ratio {:.3}", r.extra_time_ratio());
 }
 
 #[test]
 fn estimation_error_within_paper_band() {
     // §5.5: 6.5-38.7% unknown lengths; known lengths tighter on average.
-    let s = ensembling::build(1500, 256, 9);
+    let s = scenario(AppSpec::ensembling(1500, 256), 9);
     let c = cluster();
-    let unk = run_policy(PolicyKind::SamuLlm, &s, &c, &RunOpts::default());
+    let unk = run_policy("ours", &s, &c, &RunOpts::default());
     assert!(
         unk.estimation_error() < 0.5,
         "unknown-lengths error {:.2}",
         unk.estimation_error()
     );
     let known = run_policy(
-        PolicyKind::SamuLlm,
+        "ours",
         &s,
         &c,
         &RunOpts { known_lengths: true, ..Default::default() },
@@ -147,14 +151,14 @@ fn estimation_error_within_paper_band() {
 
 #[test]
 fn reports_are_consistent() {
-    let s = routing::build(2048, 11);
-    for p in PolicyKind::ALL {
+    let s = scenario(AppSpec::routing(2048, false), 11);
+    for p in policy::names() {
         let r = run_policy(p, &s, &cluster(), &RunOpts::default());
         assert!((r.end_to_end_time - r.extra_time - r.inference_time).abs() < 1e-9);
         assert_eq!(r.n_stages, r.timeline.len());
         // Timeline is contiguous and monotone.
         for w in r.timeline.windows(2) {
-            assert!(w[0].end <= w[1].start + 1e-6, "{p:?} timeline overlap");
+            assert!(w[0].end <= w[1].start + 1e-6, "{p} timeline overlap");
         }
         assert!(r.timeline.last().unwrap().end <= r.inference_time + 1e-6);
         // JSON renders and reparses.
