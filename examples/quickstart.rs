@@ -27,15 +27,23 @@ fn main() -> anyhow::Result<()> {
     let reports = session.compare(&spec, &policy::PAPER)?;
     for r in &reports {
         println!(
-            "{:<14} end-to-end {:>7.1}s  (inference {:>7.1}s + search {:>5.1}s)  stages={} idle={:.0} gpu·s",
+            "{:<14} end-to-end {:>7.1}s  (inference {:>7.1}s + scheduling {:>5.1}s, search {:>5.1}s)  stages={} idle={:.0} gpu·s",
             r.policy,
             r.end_to_end_time,
             r.inference_time,
             r.extra_time,
+            r.search_time,
             r.n_stages,
             r.gpu_idle_time()
         );
     }
+    println!(
+        "planner evaluation: {} threads, {} candidates, cache {} hits / {} misses",
+        reports[0].planner.threads,
+        reports[0].planner.candidates,
+        reports[0].planner.cache_hits,
+        reports[0].planner.cache_misses
+    );
     let ours = &reports[0];
     for other in &reports[1..] {
         println!(

@@ -1,30 +1,97 @@
-//! Planner search time ("extra time" in §5): Algorithm 1 over the paper's
-//! applications. The paper reports 22–69 s on its testbed for ensembling;
-//! our target is to keep search a small fraction of end-to-end time.
+//! Planner search time ("extra time" in §5): Algorithm 1 over the four
+//! paper applications, sequential vs parallel + memoized evaluation.
+//!
+//! Emits `BENCH_planner.json` (schema documented in
+//! `docs/PLANNER_PERF.md`): per app the median sequential and
+//! parallel+cached search times, the speedup, the cache counters, and a
+//! plan-parity bit asserting the two searches committed identical stages
+//! and `est_total`. Run with:
+//!
+//! ```text
+//! cargo bench --bench bench_planner
+//! ```
+
+use std::sync::Arc;
 
 use samullm::cluster::ClusterSpec;
 use samullm::costmodel::CostModel;
 use samullm::models::Registry;
-use samullm::planner::GreedyPlanner;
+use samullm::planner::{GreedyPlanner, SimCache};
+use samullm::runner::Scenario;
 use samullm::spec::AppSpec;
 use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
+
+fn planner(cost: &CostModel, cluster: &ClusterSpec) -> GreedyPlanner {
+    GreedyPlanner::new(cost.clone(), Registry::paper(), cluster.clone())
+}
 
 fn main() {
     let cluster = ClusterSpec::a100_node(8);
     let cost = CostModel::calibrated(&cluster, 1);
-    let planner = GreedyPlanner::new(cost, Registry::paper(), cluster);
+    let threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+
+    let apps: Vec<(&str, Scenario)> = vec![
+        ("ensembling", AppSpec::ensembling(1000, 256).build(42).expect("spec")),
+        ("routing", AppSpec::routing(4096, false).build(7).expect("spec")),
+        ("chain_summary", AppSpec::chain_summary(100, 2, 500).build(7).expect("spec")),
+        ("mixed", AppSpec::mixed(100, 1000, 900, 256, 4).build(7).expect("spec")),
+    ];
 
     let mut g = BenchGroup::new("planner");
     g.sample_size(5);
-    for n in [1000usize, 4000] {
-        let s = AppSpec::ensembling(n, 256).build(42).expect("spec");
-        g.bench(&format!("ensembling_{n}"), || {
-            planner.plan(&s.graph, &s.workloads, false, 7)
-        });
+    let mut rows: Vec<Json> = vec![];
+    for (name, s) in &apps {
+        // Sequential reference: one thread, private per-search memo only
+        // (the pre-evaluator behavior).
+        let mut seq = planner(&cost, &cluster);
+        seq.threads = 1;
+        let seq_median = g
+            .bench(&format!("{name}_sequential"), || {
+                seq.plan(&s.graph, &s.workloads, false, 7)
+            })
+            .median;
+
+        // Parallel + cached: worker threads plus a cache shared across
+        // samples — the warm repeated-search scenario.
+        let cache = Arc::new(SimCache::new());
+        let mut par = planner(&cost, &cluster);
+        par.threads = threads;
+        par.cache = Some(cache.clone());
+        let par_median = g
+            .bench(&format!("{name}_parallel_cached"), || {
+                par.plan(&s.graph, &s.workloads, false, 7)
+            })
+            .median;
+
+        // Parity: both searches must commit identical plans + estimates.
+        let a = seq.plan(&s.graph, &s.workloads, false, 7);
+        let b = par.plan(&s.graph, &s.workloads, false, 7);
+        let identical =
+            a.stages == b.stages && a.est_total.to_bits() == b.est_total.to_bits();
+        assert!(identical, "{name}: parallel+cached plan diverged from sequential");
+
+        rows.push(Json::obj(vec![
+            ("app", Json::Str(name.to_string())),
+            ("sequential_s", Json::Num(seq_median)),
+            ("parallel_cached_s", Json::Num(par_median)),
+            ("speedup", Json::Num(seq_median / par_median.max(1e-12))),
+            ("cache_hits", Json::Num(cache.hits() as f64)),
+            ("cache_misses", Json::Num(cache.misses() as f64)),
+            ("identical_plans", Json::Bool(identical)),
+            ("est_total_s", Json::Num(a.est_total)),
+            ("n_stages", Json::Num(a.stages.len() as f64)),
+        ]));
     }
-    let s = AppSpec::routing(4096, false).build(7).expect("spec");
-    g.bench("routing", || planner.plan(&s.graph, &s.workloads, false, 7));
-    let s = AppSpec::chain_summary(100, 2, 500).build(7).expect("spec");
-    g.bench("chain_summary", || planner.plan(&s.graph, &s.workloads, false, 7));
     g.finish();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("planner".to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("apps", Json::Arr(rows)),
+    ])
+    .to_string();
+    std::fs::write("BENCH_planner.json", format!("{doc}\n")).expect("write BENCH_planner.json");
+    println!("wrote BENCH_planner.json ({threads} threads)");
 }

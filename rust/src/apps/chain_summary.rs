@@ -8,7 +8,9 @@ use crate::runner::{AppRequest, Scenario};
 use crate::util::rng::Rng;
 use crate::workload::{booksum, lengths};
 
+/// The model summarizing document chunks.
 pub const SUMMARIZER: &str = "vicuna-13b-v1.5";
+/// The model judging final summaries.
 pub const EVALUATOR: &str = "llama-2-70b-chat";
 
 /// Build the chain-summary scenario.

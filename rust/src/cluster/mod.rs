@@ -13,6 +13,7 @@ pub use placement::{Placement, ReloadPlan};
 /// Hardware description of the node.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
+    /// Number of GPUs on the node (a power of two).
     pub n_gpus: u32,
     /// Usable HBM per GPU in bytes (80 GB minus runtime reserve).
     pub mem_bytes: u64,

@@ -19,11 +19,14 @@ use super::ClusterSpec;
 pub struct Group {
     /// Owning application node.
     pub owner: u64,
+    /// Tensor-parallel degree (= block width in GPUs).
     pub tp: u32,
+    /// First GPU of the aligned block.
     pub start: u32,
 }
 
 impl Group {
+    /// The GPU ids this group occupies.
     pub fn gpus(&self) -> impl Iterator<Item = u32> + '_ {
         self.start..self.start + self.tp
     }
@@ -32,7 +35,9 @@ impl Group {
 /// Assignment of replicas to GPU blocks.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Placement {
+    /// Cluster GPU count.
     pub n_gpus: u32,
+    /// Placed replica groups.
     pub groups: Vec<Group>,
 }
 
@@ -40,7 +45,9 @@ pub struct Placement {
 /// (re)loaded, and the wall-clock loading cost per owner.
 #[derive(Debug, Clone)]
 pub struct ReloadPlan {
+    /// The placement after the transition.
     pub placement: Placement,
+    /// Replicas that had to be (re)loaded.
     pub new_groups: Vec<Group>,
     /// Max load time across newly loaded replicas (loads are parallel).
     pub load_time: f64,
@@ -49,6 +56,7 @@ pub struct ReloadPlan {
 }
 
 impl Placement {
+    /// A placement with every GPU free.
     pub fn empty(n_gpus: u32) -> Self {
         Placement { n_gpus, groups: vec![] }
     }
@@ -64,6 +72,7 @@ impl Placement {
         m
     }
 
+    /// GPUs currently occupied by some replica.
     pub fn gpus_used(&self) -> u32 {
         self.groups.iter().map(|g| g.tp).sum()
     }

@@ -16,18 +16,27 @@ use crate::util::json::Json;
 /// A complete, replayable experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// What to run: one of the paper's apps or a custom graph.
     pub app: AppSpec,
     /// Canonical policy name (aliases accepted on parse).
     pub policy: String,
+    /// Cluster GPU count (an A100 node).
     pub n_gpus: u32,
+    /// Seed for workload generation, calibration and planning.
     pub seed: u64,
     /// Disable preemption (§5.5 ablation).
     pub no_preemption: bool,
     /// Let every policy see the true output lengths (§5.5 ablation).
     pub known_output_lengths: bool,
+    /// Planner candidate-evaluation worker threads (`0` = auto); search
+    /// speed only, never results.
+    pub threads: usize,
+    /// Memoize planner simulations across searches (default on).
+    pub sim_cache: bool,
 }
 
 impl ExperimentConfig {
+    /// Serialize to a compact JSON document.
     pub fn to_json(&self) -> String {
         Json::obj(vec![
             ("app", self.app.to_json()),
@@ -36,10 +45,13 @@ impl ExperimentConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("no_preemption", Json::Bool(self.no_preemption)),
             ("known_output_lengths", Json::Bool(self.known_output_lengths)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("sim_cache", Json::Bool(self.sim_cache)),
         ])
         .to_string()
     }
 
+    /// Parse a config document; missing switches keep the seed defaults.
     pub fn from_json(s: &str) -> Result<Self> {
         let v = Json::parse(s).map_err(|e| anyhow!("bad config json: {e}"))?;
         Ok(ExperimentConfig {
@@ -55,6 +67,8 @@ impl ExperimentConfig {
                 .get("known_output_lengths")
                 .and_then(|x| x.as_bool())
                 .unwrap_or(false),
+            threads: v.get("threads").and_then(|x| x.as_usize()).unwrap_or(0),
+            sim_cache: v.get("sim_cache").and_then(|x| x.as_bool()).unwrap_or(true),
         })
     }
 }
@@ -72,11 +86,15 @@ mod tests {
             seed: 42,
             no_preemption: false,
             known_output_lengths: false,
+            threads: 4,
+            sim_cache: false,
         };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.app, c.app);
         assert_eq!(back.policy, c.policy);
         assert_eq!(back.seed, 42);
+        assert_eq!(back.threads, 4);
+        assert!(!back.sim_cache);
     }
 
     #[test]
@@ -87,6 +105,9 @@ mod tests {
         assert!(!c.no_preemption);
         assert!(!c.known_output_lengths);
         assert_eq!(c.policy, "max-heuristic");
+        // Planner knobs default to auto threads + caching on.
+        assert_eq!(c.threads, 0);
+        assert!(c.sim_cache);
     }
 
     #[test]
@@ -116,6 +137,8 @@ mod tests {
                 seed: 7,
                 no_preemption: true,
                 known_output_lengths: true,
+                threads: 0,
+                sim_cache: true,
             };
             let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
             assert_eq!(back.app, app);

@@ -16,10 +16,12 @@ impl Ecdf {
         Ecdf { sorted: samples }
     }
 
+    /// Number of observations.
     pub fn len(&self) -> usize {
         self.sorted.len()
     }
 
+    /// Whether the eCDF holds no observations (never true by construction).
     pub fn is_empty(&self) -> bool {
         self.sorted.is_empty()
     }
@@ -43,14 +45,17 @@ impl Ecdf {
         self.quantile(rng.uniform())
     }
 
+    /// Mean of the observations.
     pub fn mean(&self) -> f64 {
         self.sorted.iter().map(|&v| v as f64).sum::<f64>() / self.sorted.len() as f64
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> u32 {
         self.sorted[0]
     }
 
+    /// Largest observation.
     pub fn max(&self) -> u32 {
         *self.sorted.last().unwrap()
     }

@@ -23,14 +23,20 @@ use crate::models::ModelSpec;
 /// linear cost model — the gap is the paper's residual estimation error.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct IterComponents {
+    /// Matmul/attention compute time.
     pub comp: f64,
+    /// Input-preparation time.
     pub prep: f64,
+    /// Token-sampling time.
     pub samp: f64,
+    /// Fixed engine/scheduler overhead.
     pub base: f64,
+    /// Tensor-parallel all-reduce time.
     pub comm: f64,
 }
 
 impl IterComponents {
+    /// Sum of all five components.
     pub fn total(&self) -> f64 {
         self.comp + self.prep + self.samp + self.base + self.comm
     }
@@ -39,22 +45,30 @@ impl IterComponents {
 /// Ground-truth per-iteration latency model (see module docs).
 #[derive(Debug, Clone)]
 pub struct HardwareModel {
+    /// The hardware being modeled.
     pub cluster: ClusterSpec,
     /// Peak decode MXU/tensor-core efficiency at infinite batch.
     pub eff_dec_max: f64,
     /// Batch size at which decode efficiency reaches half its max.
     pub eff_dec_knee: f64,
+    /// Peak prefill efficiency at infinite batched tokens.
     pub eff_pref_max: f64,
+    /// Batched-token count at which prefill efficiency reaches half max.
     pub eff_pref_knee: f64,
     /// Fixed per-iteration engine overhead (seconds).
     pub base_overhead: f64,
+    /// Input-preparation constant (seconds per iteration).
     pub prep_const: f64,
+    /// Input-preparation cost per padded token (seconds).
     pub prep_per_padded_token: f64,
+    /// Sampling constant (seconds per iteration).
     pub samp_const: f64,
+    /// Sampling cost per running sequence (seconds).
     pub samp_per_token: f64,
 }
 
 impl HardwareModel {
+    /// The calibrated A100 ground-truth model for `cluster`.
     pub fn new(cluster: ClusterSpec) -> Self {
         HardwareModel {
             cluster,

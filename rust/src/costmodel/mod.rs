@@ -54,8 +54,11 @@ pub trait IterLatency {
 /// the cluster description it was calibrated for.
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Per-model output-length eCDF sampler.
     pub sampler: OutputSampler,
+    /// The fitted Eq. 5 per-iteration latency model.
     pub iter_model: LinearIterModel,
+    /// The cluster the model was calibrated for.
     pub cluster: ClusterSpec,
 }
 

@@ -35,6 +35,7 @@ impl OutputSampler {
         OutputSampler { ecdfs }
     }
 
+    /// The eCDF built for `model`, if registered.
     pub fn ecdf(&self, model: &str) -> Option<&Ecdf> {
         self.ecdfs.get(model)
     }

@@ -3,7 +3,8 @@
 //! Replays the engine's request-scheduling policy — FCFS admission,
 //! continuous batching, paged-KV block management with preemption-by-
 //! recompute — over a set of requests with known (sampled or true) output
-//! lengths, pricing every iteration with an [`IterLatency`] oracle.
+//! lengths, pricing every iteration with an
+//! [`crate::costmodel::IterLatency`] oracle.
 //!
 //! The same simulator serves two masters:
 //! * the **planner** steps it with eCDF-*sampled* lengths and the fitted
@@ -22,8 +23,11 @@ pub use sim::{EngineConfig, EngineSim, SimOutcome};
 /// planner resolves by sampling, the runner by ground truth).
 #[derive(Debug, Clone, Copy)]
 pub struct EngineRequest {
+    /// Request id, unique within its node.
     pub id: u64,
+    /// Prompt length in tokens.
     pub input_len: u32,
+    /// Resolved output length in tokens.
     pub output_len: u32,
     /// Virtual time at which the request may be admitted. Use
     /// [`EngineRequest::BLOCKED`] for chain successors that become ready
@@ -48,6 +52,7 @@ impl EngineRequest {
     /// predecessor.
     pub const BLOCKED: f64 = f64::INFINITY;
 
+    /// A request ready at time 0 with no progress, chain or resident KV.
     pub fn fresh(id: u64, input_len: u32, output_len: u32) -> Self {
         EngineRequest {
             id,
@@ -60,10 +65,12 @@ impl EngineRequest {
         }
     }
 
+    /// Decode tokens still to generate.
     pub fn remaining(&self) -> u32 {
         self.output_len.saturating_sub(self.generated)
     }
 
+    /// Whether the request generated its full output.
     pub fn is_done(&self) -> bool {
         self.generated >= self.output_len
     }

@@ -97,15 +97,23 @@ struct Slot {
 }
 
 /// Aggregate result of driving a simulation.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimOutcome {
+    /// Requests that completed.
     pub finished: usize,
+    /// Virtual time at the end of the run (absolute for stage replays;
+    /// relative when the simulation started at a canonical origin, as in
+    /// [`crate::runner::state::ExecState::simulate_node_fast`]).
     pub clock: f64,
     /// Time spent actually executing iterations (vs waiting for inputs).
     pub busy_time: f64,
+    /// Decode iterations executed (fast-forwarded runs count each step).
     pub decode_iterations: u64,
+    /// Prefill iterations executed.
     pub prefill_iterations: u64,
+    /// Preemption-by-recompute events.
     pub preemptions: u64,
+    /// Output tokens produced.
     pub tokens_generated: u64,
 }
 
@@ -138,6 +146,8 @@ pub struct EngineSim<'a> {
 }
 
 impl<'a> EngineSim<'a> {
+    /// Build a replica simulator over `requests`, starting its clock at
+    /// `start_time`. KV capacity is derived from the config's budget.
     pub fn new(
         spec: &'a ModelSpec,
         tp: u32,
@@ -199,22 +209,27 @@ impl<'a> EngineSim<'a> {
         self.fcfs_counter += 1;
     }
 
+    /// Current virtual time.
     pub fn clock(&self) -> f64 {
         self.clock
     }
 
+    /// Total KV blocks the replica owns.
     pub fn blocks_total(&self) -> u64 {
         self.blocks_total
     }
 
+    /// KV blocks currently free.
     pub fn free_blocks(&self) -> u64 {
         self.free_blocks
     }
 
+    /// Whether every request completed.
     pub fn is_done(&self) -> bool {
         self.slots.iter().all(|s| s.state == ReqState::Done)
     }
 
+    /// Requests not yet completed.
     pub fn n_unfinished(&self) -> usize {
         self.slots.iter().filter(|s| s.state != ReqState::Done).count()
     }
@@ -560,10 +575,12 @@ impl<'a> EngineSim<'a> {
         out
     }
 
+    /// The accumulated outcome so far.
     pub fn outcome(&self) -> &SimOutcome {
         &self.outcome
     }
 
+    /// Record a (clock, running-count) point per iteration (Fig. 3).
     pub fn enable_trace(&mut self) {
         self.iter_trace = Some(vec![]);
     }

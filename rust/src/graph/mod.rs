@@ -11,6 +11,7 @@ use std::collections::HashSet;
 /// One LLM node in the application graph.
 #[derive(Debug, Clone)]
 pub struct AppNode {
+    /// Node id (index into [`AppGraph::nodes`]).
     pub id: usize,
     /// Registry name of the LLM this node runs.
     pub model: String,
@@ -23,6 +24,7 @@ pub struct AppNode {
 /// A multi-LLM application graph (acyclic after self-loop fusion).
 #[derive(Debug, Clone, Default)]
 pub struct AppGraph {
+    /// The LLM nodes, indexed by id.
     pub nodes: Vec<AppNode>,
     /// Directed data-flow edges (producer, consumer). No self-edges after
     /// fusion.
@@ -30,18 +32,22 @@ pub struct AppGraph {
 }
 
 impl AppGraph {
+    /// Append an LLM node; returns its id.
     pub fn add_node(&mut self, model: &str, label: &str, max_out: u32) -> usize {
         let id = self.nodes.len();
         self.nodes.push(AppNode { id, model: model.to_string(), label: label.to_string(), max_out });
         id
     }
 
+    /// Add a data-flow edge `from -> to`. Panics on out-of-range ids or
+    /// self-loops (fuse those into request chains instead).
     pub fn add_edge(&mut self, from: usize, to: usize) {
         assert!(from < self.nodes.len() && to < self.nodes.len());
         assert_ne!(from, to, "self-loops must be fused into chains, not edges");
         self.edges.push((from, to));
     }
 
+    /// Number of nodes.
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }

@@ -135,6 +135,7 @@ pub fn ablate_tracesize() -> String {
     out
 }
 
+/// Run every ablation and concatenate their reports.
 pub fn all() -> String {
     format!("{}\n{}\n{}", ablate_fastforward(), ablate_noise(), ablate_tracesize())
 }

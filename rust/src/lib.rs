@@ -56,6 +56,8 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod baselines;
 pub mod cluster;

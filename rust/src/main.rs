@@ -5,6 +5,7 @@
 //!   samullm run    [--app A] [--policy P] [--n-requests N] [--max-out M]
 //!                  [--n-docs D] [--eval-times E] [--gpus G] [--seed S]
 //!                  [--no-preemption] [--known-lengths] [--gantt]
+//!                  [--threads T] [--no-sim-cache]
 //!   samullm config <file.json>
 //!   samullm serve  [--n-requests N] [--prompt-len L] [--max-new T]
 //!                  [--artifacts DIR]
@@ -135,6 +136,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "seed",
         "no-preemption",
         "known-lengths",
+        "threads",
+        "no-sim-cache",
         "gantt",
     ])?;
     let app = args.get_str("app", "ensembling");
@@ -152,6 +155,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .seed(args.get("seed", 42)?)
         .no_preemption(args.has("no-preemption"))
         .known_lengths(args.has("known-lengths"))
+        .threads(args.get("threads", 0)?)
+        .sim_cache(!args.has("no-sim-cache"))
         .build()?;
     let report = session.run(&app_spec)?;
     println!("{}", report.to_json());
@@ -169,6 +174,8 @@ fn cmd_config(path: &str) -> Result<()> {
         .seed(cfg.seed)
         .no_preemption(cfg.no_preemption)
         .known_lengths(cfg.known_output_lengths)
+        .threads(cfg.threads)
+        .sim_cache(cfg.sim_cache)
         .build()?;
     let report = session.run(&cfg.app)?;
     println!("{}", report.to_json());
@@ -220,6 +227,7 @@ fn usage() -> String {
          \n  samullm run    [--app A] [--policy P] [--n-requests N] [--max-out M]\n\
          \x20                [--n-docs D] [--eval-times E] [--gpus G] [--seed S]\n\
          \x20                [--no-preemption] [--known-lengths] [--gantt]\n\
+         \x20                [--threads T] [--no-sim-cache]   (planner search speed knobs)\n\
          \x20 samullm config <file.json>   (supports custom graph specs, kind=custom)\n\
          \x20 samullm serve  [--n-requests N] [--prompt-len L] [--max-new T] [--artifacts DIR]\n\
          \napps:\n{}\npolicies:\n{}",

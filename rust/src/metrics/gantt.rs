@@ -53,6 +53,8 @@ mod tests {
             scenario: "x".into(),
             policy: "ours".into(),
             extra_time: 0.0,
+            search_time: 0.0,
+            planner: Default::default(),
             inference_time: 100.0,
             end_to_end_time: 100.0,
             estimated_inference_time: f64::NAN,

@@ -4,11 +4,14 @@ pub mod gantt;
 
 
 use crate::plan::ExecPlan;
+use crate::planner::eval::EvalStats;
 
 /// What happened in one executed stage.
 #[derive(Debug, Clone)]
 pub struct StageRecord {
+    /// Stage start (absolute virtual time).
     pub start: f64,
+    /// Stage end (absolute virtual time).
     pub end: f64,
     /// (node, plan) pairs that ran.
     pub entries: Vec<(usize, ExecPlan)>,
@@ -22,10 +25,12 @@ pub struct StageRecord {
 }
 
 impl StageRecord {
+    /// Stage duration in virtual seconds.
     pub fn duration(&self) -> f64 {
         self.end - self.start
     }
 
+    /// GPUs the stage occupied.
     pub fn gpus_used(&self) -> u32 {
         self.entries.iter().map(|(_, p)| p.n_gpus()).sum()
     }
@@ -35,10 +40,19 @@ impl StageRecord {
 /// bar charts: inference time + extra time, idle time, estimation error).
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// Scenario (application) name.
     pub scenario: String,
+    /// Canonical policy name that produced this run.
     pub policy: String,
     /// Scheduling/search wall-clock ("extra time", the hatched bar part).
     pub extra_time: f64,
+    /// Algorithm 1's own wall-clock share of `extra_time`
+    /// ([`crate::planner::PlannedApp::search_time`]); `0.0` for policies
+    /// that don't plan offline.
+    pub search_time: f64,
+    /// Planner candidate-evaluation counters (threads, cache hits and
+    /// misses); all-zero for policies that don't plan offline.
+    pub planner: EvalStats,
     /// Virtual inference time (loading included).
     pub inference_time: f64,
     /// `extra_time + inference_time`.
@@ -46,8 +60,11 @@ pub struct RunReport {
     /// The planner's own prediction of `inference_time` (NaN if the
     /// policy doesn't produce one).
     pub estimated_inference_time: f64,
+    /// Number of executed stages.
     pub n_stages: usize,
+    /// Per-stage execution records.
     pub timeline: Vec<StageRecord>,
+    /// Cluster GPU count the run was scheduled on.
     pub n_gpus: u32,
 }
 
@@ -112,6 +129,17 @@ impl RunReport {
             ("scenario", Json::Str(self.scenario.clone())),
             ("policy", Json::Str(self.policy.clone())),
             ("extra_time", Json::Num(self.extra_time)),
+            ("search_time", Json::Num(self.search_time)),
+            (
+                "planner",
+                Json::obj(vec![
+                    ("threads", Json::Num(self.planner.threads as f64)),
+                    ("candidates", Json::Num(self.planner.candidates as f64)),
+                    ("cache_hits", Json::Num(self.planner.cache_hits as f64)),
+                    ("cache_misses", Json::Num(self.planner.cache_misses as f64)),
+                    ("dep_dry_runs", Json::Num(self.planner.dep_dry_runs as f64)),
+                ]),
+            ),
             ("inference_time", Json::Num(self.inference_time)),
             ("end_to_end_time", Json::Num(self.end_to_end_time)),
             (
@@ -156,6 +184,8 @@ mod tests {
             scenario: "t".into(),
             policy: "p".into(),
             extra_time: 10.0,
+            search_time: 8.0,
+            planner: EvalStats { candidates: 4, cache_hits: 3, cache_misses: 1, dep_dry_runs: 0, threads: 2 },
             inference_time: inference,
             end_to_end_time: 10.0 + inference,
             estimated_inference_time: inference * 1.2,
@@ -184,5 +214,16 @@ mod tests {
         let r = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]);
         assert!((r.estimation_error() - 0.2).abs() < 1e-9);
         assert!((r.extra_time_ratio() - 10.0 / 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_reports_search_time_and_planner_counters() {
+        // The §5.1 "extra time" decomposition must reach experiment JSON.
+        let j = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]).to_json();
+        assert!(j.contains("\"search_time\":8"), "{j}");
+        assert!(j.contains("\"planner\":{"), "{j}");
+        assert!(j.contains("\"cache_hits\":3"), "{j}");
+        assert!(j.contains("\"candidates\":4"), "{j}");
+        assert!(j.contains("\"threads\":2"), "{j}");
     }
 }

@@ -15,6 +15,7 @@ pub use registry::Registry;
 /// Architectural description of one LLM, sufficient for the cost model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
+    /// Registry name.
     pub name: String,
     /// Transformer layer count (`L` in Eqs. 1–2).
     pub n_layers: u32,
@@ -23,6 +24,7 @@ pub struct ModelSpec {
     /// Attention heads (used for KV-cache sizing; assumes MHA unless
     /// `kv_heads` differs, i.e. GQA).
     pub n_heads: u32,
+    /// KV heads (`< n_heads` for GQA models).
     pub kv_heads: u32,
     /// Total parameters.
     pub n_params: u64,

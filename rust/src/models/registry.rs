@@ -67,18 +67,22 @@ impl Registry {
         Registry { specs }
     }
 
+    /// The spec registered under `name`.
     pub fn get(&self, name: &str) -> Option<&ModelSpec> {
         self.specs.get(name)
     }
 
+    /// All registered model names, sorted.
     pub fn names(&self) -> Vec<&str> {
         self.specs.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Number of registered models.
     pub fn len(&self) -> usize {
         self.specs.len()
     }
 
+    /// Whether the registry is empty.
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }

@@ -14,11 +14,14 @@ use crate::models::ModelSpec;
 /// A model execution plan: data parallelism × tensor parallelism (Eq. 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ExecPlan {
+    /// Data-parallel replica count.
     pub dp: u32,
+    /// Tensor-parallel degree per replica.
     pub tp: u32,
 }
 
 impl ExecPlan {
+    /// The plan `(dp, tp)`.
     pub fn new(dp: u32, tp: u32) -> Self {
         ExecPlan { dp, tp }
     }
@@ -68,25 +71,31 @@ impl ExecPlan {
 /// One (node, plan) entry of a stage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StageEntry {
+    /// Graph node (LLM) id.
     pub node: usize,
+    /// Execution plan the node runs with in this stage.
     pub plan: ExecPlan,
 }
 
 /// An execution stage (Eq. 4): nodes running concurrently with fixed plans.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Stage {
+    /// The (node, plan) pairs running concurrently.
     pub entries: Vec<StageEntry>,
 }
 
 impl Stage {
+    /// Total GPUs the stage occupies.
     pub fn n_gpus(&self) -> u32 {
         self.entries.iter().map(|e| e.plan.n_gpus()).sum()
     }
 
+    /// The set of node ids in the stage.
     pub fn nodes(&self) -> HashSet<usize> {
         self.entries.iter().map(|e| e.node).collect()
     }
 
+    /// The plan `node` runs with in this stage, if it is scheduled.
     pub fn plan_of(&self, node: usize) -> Option<ExecPlan> {
         self.entries.iter().find(|e| e.node == node).map(|e| e.plan)
     }
@@ -128,10 +137,12 @@ impl Stage {
 /// A full application execution plan Φ (ordered stages).
 #[derive(Debug, Clone, Default)]
 pub struct AppPlan {
+    /// Ordered execution stages.
     pub stages: Vec<Stage>,
 }
 
 impl AppPlan {
+    /// Number of stages in the plan.
     pub fn n_stages(&self) -> usize {
         self.stages.len()
     }

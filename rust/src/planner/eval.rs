@@ -1,0 +1,407 @@
+//! Parallel, memoized candidate evaluation for Algorithm 1.
+//!
+//! One greedy iteration of [`crate::planner::GreedyPlanner`] scores every
+//! `(node, plan)` extension of the stage under construction. Each score
+//! is an independent what-if simulation, so the [`Evaluator`] runs them
+//! concurrently on `std::thread::scope` workers and memoizes the
+//! single-node simulations in a [`SimCache`].
+//!
+//! ## Determinism contract
+//!
+//! The parallel + cached search commits to producing **exactly** the
+//! plans (and `est_total`) the sequential search would:
+//!
+//! * every candidate's score is a pure function of `(state, candidate,
+//!   prev_plans)` — worker threads only decide *when* a score is
+//!   computed, never its value;
+//! * scores are reduced in candidate-enumeration order with a strict
+//!   `>` comparison, so ties resolve to the same candidate the
+//!   sequential loop would keep;
+//! * cache hits are bit-identical to fresh simulations because the fast
+//!   estimator prices candidates in relative virtual time (see
+//!   [`crate::runner::state::ExecState::simulate_node_fast`]) and the
+//!   [`SimKey`] covers every input the outcome depends on.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::ClusterSpec;
+use crate::costmodel::CostModel;
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::plan::{ExecPlan, Stage};
+use crate::planner::simcache::{SimCache, SimKey};
+use crate::runner::state::ExecState;
+
+/// Score of one candidate stage: the §3 objective `T_E = Σ_i FLOPs_i/t_i`
+/// plus the GPUs it consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct StageEval {
+    /// Stage throughput (FLOPs per second of estimated completion time).
+    pub throughput: f64,
+    /// GPUs the candidate stage occupies.
+    pub gpus: u32,
+}
+
+/// Counters describing one planner search's evaluation work (reported
+/// via [`crate::metrics::RunReport`] so planner overhead is visible in
+/// experiment JSON).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvalStats {
+    /// Candidate stages scored across all greedy iterations.
+    pub candidates: u64,
+    /// Single-node simulations answered by the [`SimCache`].
+    pub cache_hits: u64,
+    /// Single-node simulations that ran fresh (cache misses).
+    pub cache_misses: u64,
+    /// Full dry-run simulations for stages with intra-stage dependencies
+    /// (never cached — they depend on the whole multi-node state).
+    pub dep_dry_runs: u64,
+    /// Worker threads the evaluator ran with (1 = sequential).
+    pub threads: usize,
+}
+
+/// Scores candidate stages for the greedy search, concurrently and
+/// through the memo cache. Borrowed wiring only — one evaluator lives
+/// for the duration of a single [`crate::planner::GreedyPlanner::plan`]
+/// call.
+pub struct Evaluator<'a> {
+    cost: &'a CostModel,
+    registry: &'a Registry,
+    cluster: &'a ClusterSpec,
+    cache: &'a SimCache,
+    threads: usize,
+    candidates: AtomicU64,
+    dep_dry_runs: AtomicU64,
+    hits0: u64,
+    misses0: u64,
+}
+
+impl<'a> Evaluator<'a> {
+    /// Wire an evaluator to the planner's cost model and a (possibly
+    /// shared) simulation cache. `threads` is clamped to ≥ 1.
+    pub fn new(
+        cost: &'a CostModel,
+        registry: &'a Registry,
+        cluster: &'a ClusterSpec,
+        threads: usize,
+        cache: &'a SimCache,
+    ) -> Self {
+        Evaluator {
+            cost,
+            registry,
+            cluster,
+            cache,
+            threads: threads.max(1),
+            candidates: AtomicU64::new(0),
+            dep_dry_runs: AtomicU64::new(0),
+            hits0: cache.hits(),
+            misses0: cache.misses(),
+        }
+    }
+
+    /// Worker threads this evaluator scores candidates with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluation counters accumulated since construction (cache counters
+    /// are deltas against the shared cache's state at construction, so a
+    /// reused cache reports per-search numbers).
+    pub fn stats(&self) -> EvalStats {
+        EvalStats {
+            candidates: self.candidates.load(Ordering::Relaxed),
+            cache_hits: self.cache.hits() - self.hits0,
+            cache_misses: self.cache.misses() - self.misses0,
+            dep_dry_runs: self.dep_dry_runs.load(Ordering::Relaxed),
+            threads: self.threads,
+        }
+    }
+
+    /// Score every candidate, returning evaluations in candidate order.
+    ///
+    /// Per-node workload fingerprints are computed once per call (the
+    /// state is fixed for one greedy iteration) and shared by every
+    /// candidate. With more than one thread the candidates are pulled off
+    /// a shared atomic counter (dynamic load balancing — simulation costs
+    /// vary wildly between a 1-GPU and an 8-GPU plan), but results land
+    /// in an index-ordered vector, so the caller's reduction is
+    /// independent of scheduling. When every lookup would hit the cache
+    /// and no candidate needs a dry run (the warm re-search case), no
+    /// threads are spawned at all — scoring is then pure table lookups
+    /// and spawn/join overhead would dominate.
+    pub fn eval_all(
+        &self,
+        graph: &AppGraph,
+        state: &ExecState,
+        candidates: &[Stage],
+        prev_plans: &HashMap<usize, ExecPlan>,
+    ) -> Vec<StageEval> {
+        self.candidates.fetch_add(candidates.len() as u64, Ordering::Relaxed);
+        let n = candidates.len();
+        let mut fps: HashMap<usize, u64> = HashMap::new();
+        for c in candidates {
+            for e in &c.entries {
+                fps.entry(e.node).or_insert_with(|| state.node_workload_fingerprint(e.node));
+            }
+        }
+        let parallel = self.threads > 1
+            && n > 1
+            && candidates.iter().any(|c| self.needs_simulation(graph, state, c, prev_plans, &fps));
+        if !parallel {
+            return candidates
+                .iter()
+                .map(|c| self.eval_stage_with_fps(graph, state, c, prev_plans, &fps))
+                .collect();
+        }
+        let slots: Vec<Mutex<Option<StageEval>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(n) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let eval =
+                        self.eval_stage_with_fps(graph, state, &candidates[i], prev_plans, &fps);
+                    *slots[i].lock().unwrap() = Some(eval);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every candidate evaluated"))
+            .collect()
+    }
+
+    /// Score one candidate stage (§3's `T_E = Σ_i FLOPs_i / t_i`, per-node
+    /// completion times from the cost model's simulation).
+    ///
+    /// Independent nodes go through the fast single-node estimator behind
+    /// the memo cache; stages containing intra-stage dependencies are
+    /// evaluated by a full dry run (topological simulation, §4.1), which
+    /// depends on the entire multi-node state and is never cached.
+    pub fn eval_stage(
+        &self,
+        graph: &AppGraph,
+        state: &ExecState,
+        stage: &Stage,
+        prev_plans: &HashMap<usize, ExecPlan>,
+    ) -> StageEval {
+        self.eval_stage_with_fps(graph, state, stage, prev_plans, &HashMap::new())
+    }
+
+    /// Whether scoring `stage` would run any simulation (a dep dry run or
+    /// a cache miss), as opposed to being answered entirely from the
+    /// cache. Pure peek: no counters, no inserts.
+    fn needs_simulation(
+        &self,
+        graph: &AppGraph,
+        state: &ExecState,
+        stage: &Stage,
+        prev_plans: &HashMap<usize, ExecPlan>,
+        fps: &HashMap<usize, u64>,
+    ) -> bool {
+        if stage_has_dep(graph, state, stage) {
+            return true;
+        }
+        let load = load_delays(self.registry, graph, stage, prev_plans);
+        stage.entries.iter().any(|e| {
+            let delay = load.get(&e.node).copied().unwrap_or(0.0);
+            let fp = fps[&e.node];
+            !self.cache.contains(&SimKey::new(&graph.nodes[e.node].model, e.plan, fp, delay))
+        })
+    }
+
+    fn eval_stage_with_fps(
+        &self,
+        graph: &AppGraph,
+        state: &ExecState,
+        stage: &Stage,
+        prev_plans: &HashMap<usize, ExecPlan>,
+        fps: &HashMap<usize, u64>,
+    ) -> StageEval {
+        let has_dep = stage_has_dep(graph, state, stage);
+        let load = load_delays(self.registry, graph, stage, prev_plans);
+
+        let mut throughput = 0.0;
+        if has_dep {
+            self.dep_dry_runs.fetch_add(1, Ordering::Relaxed);
+            let mut scratch = state.clone();
+            let res = scratch.run_stage(
+                stage,
+                graph,
+                self.registry,
+                &self.cost.iter_model,
+                self.cluster.mem_bytes,
+                &load,
+                true,
+                false,
+            );
+            for n in &res.nodes {
+                let t = (n.projected_finish - res.start).max(1e-6);
+                throughput += state.node_remaining_flops(n.node, graph, self.registry) / t;
+            }
+        } else {
+            for e in &stage.entries {
+                let delay = load.get(&e.node).copied().unwrap_or(0.0);
+                let model = &graph.nodes[e.node].model;
+                let fp = fps
+                    .get(&e.node)
+                    .copied()
+                    .unwrap_or_else(|| state.node_workload_fingerprint(e.node));
+                let key = SimKey::new(model, e.plan, fp, delay);
+                let outcome = self.cache.get_or_compute(key, || {
+                    state.simulate_node_fast(
+                        e.node,
+                        e.plan,
+                        graph,
+                        self.registry,
+                        &self.cost.iter_model,
+                        self.cluster.mem_bytes,
+                        delay,
+                    )
+                });
+                let t = outcome.clock.max(1e-6);
+                throughput += state.node_remaining_flops(e.node, graph, self.registry) / t;
+            }
+        }
+        StageEval { throughput, gpus: stage.n_gpus() }
+    }
+}
+
+/// Whether `stage` contains an unfinished intra-stage producer→consumer
+/// edge (model-level pipeline parallelism), which forces the dry-run
+/// evaluation path.
+fn stage_has_dep(graph: &AppGraph, state: &ExecState, stage: &Stage) -> bool {
+    let nodes = stage.nodes();
+    graph
+        .edges
+        .iter()
+        .any(|(f, t)| nodes.contains(f) && nodes.contains(t) && !state.finished_nodes.contains(f))
+}
+
+/// Loading cost per node for a stage, relative to the previous stage's
+/// plans (the planner's placement approximation; the runner refines it
+/// with the real NVLink-constrained placement).
+pub fn load_delays(
+    registry: &Registry,
+    graph: &AppGraph,
+    stage: &Stage,
+    prev_plans: &HashMap<usize, ExecPlan>,
+) -> HashMap<usize, f64> {
+    let mut out = HashMap::new();
+    for e in &stage.entries {
+        let kept = prev_plans.get(&e.node) == Some(&e.plan);
+        if !kept {
+            // New or changed plan: load at least the changed replicas.
+            // (dp growth with same tp keeps old replicas; approximate
+            // with one full load since loads run in parallel anyway.)
+            let spec = registry.get(&graph.nodes[e.node].model).expect("model");
+            out.insert(e.node, spec.load_time(e.plan.tp));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runner::state::AppRequest;
+
+    fn fixture() -> (AppGraph, ExecState, CostModel, Registry, ClusterSpec) {
+        let cluster = ClusterSpec::a100_node(8);
+        let cost = CostModel::calibrated(&cluster, 11);
+        let mut g = AppGraph::default();
+        g.add_node("chatglm3-6b", "a", 256);
+        g.add_node("mistral-7b-instruct", "b", 256);
+        let w: Vec<Vec<AppRequest>> = vec![
+            (0..120).map(|i| AppRequest::simple(i, 20, 80)).collect(),
+            (0..90).map(|i| AppRequest::simple(i, 30, 60)).collect(),
+        ];
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        (g, st, cost, Registry::paper(), cluster)
+    }
+
+    fn stage(entries: &[(usize, u32, u32)]) -> Stage {
+        Stage {
+            entries: entries
+                .iter()
+                .map(|&(n, dp, tp)| crate::plan::StageEntry {
+                    node: n,
+                    plan: ExecPlan::new(dp, tp),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn parallel_eval_matches_sequential_exactly() {
+        let (g, st, cost, reg, cluster) = fixture();
+        let prev = HashMap::new();
+        let candidates: Vec<Stage> = vec![
+            stage(&[(0, 1, 1)]),
+            stage(&[(0, 2, 1)]),
+            stage(&[(0, 4, 1)]),
+            stage(&[(1, 1, 1)]),
+            stage(&[(1, 2, 1)]),
+            stage(&[(0, 2, 1), (1, 2, 1)]),
+            stage(&[(0, 4, 1), (1, 4, 1)]),
+        ];
+        let seq_cache = SimCache::new();
+        let seq = Evaluator::new(&cost, &reg, &cluster, 1, &seq_cache);
+        let base = seq.eval_all(&g, &st, &candidates, &prev);
+        for threads in [2, 4, 8] {
+            let cache = SimCache::new();
+            let par = Evaluator::new(&cost, &reg, &cluster, threads, &cache);
+            let evals = par.eval_all(&g, &st, &candidates, &prev);
+            assert_eq!(evals.len(), base.len());
+            for (a, b) in evals.iter().zip(&base) {
+                assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "threads={threads}");
+                assert_eq!(a.gpus, b.gpus);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_evaluation_hits_the_cache() {
+        let (g, st, cost, reg, cluster) = fixture();
+        let prev = HashMap::new();
+        let cache = SimCache::new();
+        let ev = Evaluator::new(&cost, &reg, &cluster, 1, &cache);
+        let candidates = vec![stage(&[(0, 2, 1)]), stage(&[(0, 2, 1), (1, 1, 1)])];
+        let first = ev.eval_all(&g, &st, &candidates, &prev);
+        let again = ev.eval_all(&g, &st, &candidates, &prev);
+        for (a, b) in first.iter().zip(&again) {
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        }
+        let stats = ev.stats();
+        assert_eq!(stats.candidates, 4);
+        // Second pass is all hits; (0, 2x1) also repeats inside pass one.
+        assert!(stats.cache_hits >= 3, "{stats:?}");
+        assert!(stats.cache_misses >= 2, "{stats:?}");
+    }
+
+    #[test]
+    fn dependent_stages_use_the_dry_run_path() {
+        let (mut g, _, cost, reg, cluster) = fixture();
+        g.add_edge(0, 1);
+        let w: Vec<Vec<AppRequest>> = vec![
+            (0..40).map(|i| AppRequest::simple(i, 20, 80)).collect(),
+            (0..40)
+                .map(|i| AppRequest { dep: Some((0, i)), ..AppRequest::simple(i, 30, 60) })
+                .collect(),
+        ];
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let cache = SimCache::new();
+        let ev = Evaluator::new(&cost, &reg, &cluster, 2, &cache);
+        let evals =
+            ev.eval_all(&g, &st, &[stage(&[(0, 2, 1), (1, 2, 1)])], &HashMap::new());
+        assert!(evals[0].throughput > 0.0);
+        let stats = ev.stats();
+        assert_eq!(stats.dep_dry_runs, 1);
+        assert_eq!(stats.cache_hits + stats.cache_misses, 0, "dep path must not cache");
+    }
+}

@@ -8,18 +8,22 @@
 //! *estimated* state and repeats until every model finishes.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
 use crate::costmodel::CostModel;
 use crate::graph::AppGraph;
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage, StageEntry};
+use crate::planner::eval::{EvalStats, Evaluator, StageEval};
+use crate::planner::simcache::SimCache;
 use crate::runner::state::{AppRequest, ExecState};
 use crate::util::rng::Rng;
 
 /// The planner's output: stages plus the estimated timeline.
 #[derive(Debug, Clone)]
 pub struct PlannedApp {
+    /// The stage sequence Φ = (E₁, …, E_m) the search committed to.
     pub stages: Vec<Stage>,
     /// Estimated (start, end) window per stage.
     pub est_windows: Vec<(f64, f64)>,
@@ -30,20 +34,54 @@ pub struct PlannedApp {
     pub est_total: f64,
     /// Wall-clock seconds the search itself took ("extra time").
     pub search_time: f64,
+    /// Candidate-evaluation counters (threads, cache hits/misses) for the
+    /// search that produced this plan.
+    pub eval: EvalStats,
 }
 
 /// Greedy planner bundling the cost model and cluster description.
 pub struct GreedyPlanner {
+    /// The sampling-then-simulation cost model candidates are priced with.
     pub cost: CostModel,
+    /// Model registry resolving graph nodes to [`crate::models::ModelSpec`]s.
     pub registry: Registry,
+    /// The hardware the plans must fit.
     pub cluster: ClusterSpec,
     /// Restrict plan changes for already-running nodes (§5.5 ablation).
     pub no_preemption: bool,
+    /// Candidate-evaluation worker threads (`0` = auto-detect, capped at
+    /// 8). Any value yields plans identical to `threads = 1`.
+    pub threads: usize,
+    /// Shared memoized simulation cache. `None` still memoizes within one
+    /// [`GreedyPlanner::plan`] call via a private per-search cache; supply
+    /// a shared cache (e.g. [`crate::runner::RunContext::sim_cache`]) to
+    /// also reuse outcomes across searches — e.g. a session re-running or
+    /// comparing scenarios.
+    pub cache: Option<Arc<SimCache>>,
 }
 
 impl GreedyPlanner {
+    /// A planner with default evaluation settings (auto threads, private
+    /// per-search cache).
     pub fn new(cost: CostModel, registry: Registry, cluster: ClusterSpec) -> Self {
-        GreedyPlanner { cost, registry, cluster, no_preemption: false }
+        GreedyPlanner {
+            cost,
+            registry,
+            cluster,
+            no_preemption: false,
+            threads: 0,
+            cache: None,
+        }
+    }
+
+    /// The worker-thread count `plan` will actually use: `threads`, or
+    /// the machine's available parallelism (capped at 8) when 0.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+        }
     }
 
     /// Plan an application. `known_lengths` feeds true output lengths to
@@ -74,10 +112,26 @@ impl GreedyPlanner {
         let mut prev_plans: HashMap<usize, ExecPlan> = HashMap::new();
         let mut guard = 0usize;
 
+        let local_cache;
+        let cache: &SimCache = match &self.cache {
+            Some(shared) => shared.as_ref(),
+            None => {
+                local_cache = SimCache::new();
+                &local_cache
+            }
+        };
+        let evaluator = Evaluator::new(
+            &self.cost,
+            &self.registry,
+            &self.cluster,
+            self.resolved_threads(),
+            cache,
+        );
+
         while !state.all_done() {
             guard += 1;
             assert!(guard <= 4 * graph.n_nodes() + 64, "planner failed to converge");
-            let stage = self.build_stage(graph, &state, &prev_plans);
+            let stage = self.build_stage(graph, &state, &prev_plans, &evaluator);
             assert!(!stage.entries.is_empty(), "no valid stage found");
             let load = self.load_delays(graph, &stage, &prev_plans);
             let res = state.run_stage(
@@ -109,6 +163,7 @@ impl GreedyPlanner {
             est_first_finisher: est_first,
             est_total: state.clock,
             search_time: t0.elapsed().as_secs_f64(),
+            eval: evaluator.stats(),
         }
     }
 
@@ -121,93 +176,49 @@ impl GreedyPlanner {
         stage: &Stage,
         prev_plans: &HashMap<usize, ExecPlan>,
     ) -> HashMap<usize, f64> {
-        let mut out = HashMap::new();
-        for e in &stage.entries {
-            let kept = prev_plans.get(&e.node) == Some(&e.plan);
-            if !kept {
-                // New or changed plan: load at least the changed replicas.
-                // (dp growth with same tp keeps old replicas; approximate
-                // with one full load since loads run in parallel anyway.)
-                let spec = self.registry.get(&graph.nodes[e.node].model).expect("model");
-                out.insert(e.node, spec.load_time(e.plan.tp));
-            }
-        }
-        out
+        crate::planner::eval::load_delays(&self.registry, graph, stage, prev_plans)
     }
 
     /// One outer-loop iteration of Algorithm 1 (lines 3–23): grow a stage
     /// by per-GPU throughput gain until no candidate improves it.
+    ///
+    /// Candidate *generation* (cheap) stays sequential here; candidate
+    /// *scoring* (the simulations) is delegated to the [`Evaluator`],
+    /// which fans it out over worker threads and the memo cache. The
+    /// reduction walks scores in enumeration order with a strict `>`, so
+    /// the committed stage is identical to the sequential search's.
     fn build_stage(
         &self,
         graph: &AppGraph,
         state: &ExecState,
         prev_plans: &HashMap<usize, ExecPlan>,
+        evaluator: &Evaluator,
     ) -> Stage {
         let mut best = Stage::default();
         let mut best_eval = StageEval { throughput: 0.0, gpus: 0 };
-        // Per-(node, plan, loaded) completion-time cache for independent
-        // nodes — the memoization that keeps the search fast.
-        let mut cache: HashMap<(usize, ExecPlan), f64> = HashMap::new();
 
         loop {
-            let in_stage = best.nodes();
-            let ready = graph.ready_nodes(&state.finished_nodes, &in_stage);
-            let mut best_gain = f64::NEG_INFINITY;
-            let mut best_candidate: Option<(Stage, StageEval)> = None;
+            let candidates = self.candidate_stages(graph, state, prev_plans, &best);
+            if candidates.is_empty() {
+                break;
+            }
+            let evals = evaluator.eval_all(graph, state, &candidates, prev_plans);
 
-            for &node in &ready {
-                let spec = self.registry.get(&graph.nodes[node].model).expect("model");
-                let current = best.plan_of(node);
-                if self.no_preemption {
-                    // A node already planned keeps its plan forever.
-                    if prev_plans.contains_key(&node) && current.is_some() {
-                        continue;
-                    }
-                }
-                for plan in ExecPlan::enumerate(spec, &self.cluster) {
-                    let candidate = match current {
-                        Some(p_old) => {
-                            if self.no_preemption {
-                                continue;
-                            }
-                            // Replace only with strictly more GPUs (line 11).
-                            if plan.n_gpus() <= p_old.n_gpus() {
-                                continue;
-                            }
-                            let mut s = best.clone();
-                            s.entries.retain(|e| e.node != node);
-                            s.entries.push(StageEntry { node, plan });
-                            s
-                        }
-                        None => {
-                            let mut s = best.clone();
-                            s.entries.push(StageEntry { node, plan });
-                            s
-                        }
-                    };
-                    if candidate.n_gpus() > self.cluster.n_gpus {
-                        continue;
-                    }
-                    if !candidate.is_valid(graph, &state.finished_nodes, &self.cluster, &self.registry)
-                    {
-                        continue;
-                    }
-                    let eval = self.eval_stage(graph, state, &candidate, prev_plans, &mut cache);
-                    let dg = (candidate.n_gpus() - best.n_gpus()) as f64;
-                    if dg <= 0.0 {
-                        continue;
-                    }
-                    let gain = (eval.throughput - best_eval.throughput) / dg;
-                    if gain > best_gain {
-                        best_gain = gain;
-                        best_candidate = Some((candidate, eval));
-                    }
+            let mut best_gain = f64::NEG_INFINITY;
+            let mut best_candidate: Option<(usize, StageEval)> = None;
+            for (i, eval) in evals.iter().enumerate() {
+                // dg > 0 is guaranteed by candidate_stages.
+                let dg = (candidates[i].n_gpus() - best.n_gpus()) as f64;
+                let gain = (eval.throughput - best_eval.throughput) / dg;
+                if gain > best_gain {
+                    best_gain = gain;
+                    best_candidate = Some((i, *eval));
                 }
             }
 
             match best_candidate {
-                Some((stage, eval)) if best_gain > 0.0 => {
-                    best = stage;
+                Some((i, eval)) if best_gain > 0.0 => {
+                    best = candidates[i].clone();
                     best_eval = eval;
                 }
                 _ => break,
@@ -216,78 +227,67 @@ impl GreedyPlanner {
         best
     }
 
-    /// Stage throughput `T_E = Σ_i FLOPs_i / t_i` (§3), with per-node
-    /// completion times from the cost model's simulation. Independent
-    /// nodes are cached; stages containing intra-stage dependencies are
-    /// evaluated by a full dry run (topological simulation, §4.1).
-    fn eval_stage(
+    /// Enumerate every valid one-step extension of `best` (Algorithm 1's
+    /// inner loop over ready nodes × plans), in the deterministic order
+    /// the sequential search scored them: ready nodes ascending, plans in
+    /// [`ExecPlan::enumerate`] order. Candidates that could never win
+    /// (no GPU growth, over budget, invalid) are filtered here so the
+    /// evaluator only prices real contenders.
+    fn candidate_stages(
         &self,
         graph: &AppGraph,
         state: &ExecState,
-        stage: &Stage,
         prev_plans: &HashMap<usize, ExecPlan>,
-        cache: &mut HashMap<(usize, ExecPlan), f64>,
-    ) -> StageEval {
-        let nodes = stage.nodes();
-        let has_dep = graph
-            .edges
-            .iter()
-            .any(|(f, t)| nodes.contains(f) && nodes.contains(t) && !state.finished_nodes.contains(f));
-        let load = self.load_delays(graph, stage, prev_plans);
-
-        let mut throughput = 0.0;
-        if has_dep {
-            let mut scratch = state.clone();
-            let res = scratch.run_stage(
-                stage,
-                graph,
-                &self.registry,
-                &self.cost.iter_model,
-                self.cluster.mem_bytes,
-                &load,
-                true,
-                false,
-            );
-            for n in &res.nodes {
-                let t = (n.projected_finish - res.start).max(1e-6);
-                throughput +=
-                    state.node_remaining_flops(n.node, graph, &self.registry) / t;
+        best: &Stage,
+    ) -> Vec<Stage> {
+        let in_stage = best.nodes();
+        let ready = graph.ready_nodes(&state.finished_nodes, &in_stage);
+        let mut out = vec![];
+        for &node in &ready {
+            let spec = self.registry.get(&graph.nodes[node].model).expect("model");
+            let current = best.plan_of(node);
+            if self.no_preemption {
+                // A node already planned keeps its plan forever.
+                if prev_plans.contains_key(&node) && current.is_some() {
+                    continue;
+                }
             }
-        } else {
-            for e in &stage.entries {
-                let t = *cache.entry((e.node, e.plan)).or_insert_with(|| {
-                    let single = Stage { entries: vec![*e] };
-                    let delay = self
-                        .load_delays(graph, &single, prev_plans)
-                        .get(&e.node)
-                        .copied()
-                        .unwrap_or(0.0);
-                    // Heaviest-replica shortcut: ~dp x cheaper than the
-                    // full session, exact for dp=1.
-                    state
-                        .estimate_node_time_fast(
-                            e.node,
-                            e.plan,
-                            graph,
-                            &self.registry,
-                            &self.cost.iter_model,
-                            self.cluster.mem_bytes,
-                            delay,
-                        )
-                        .max(1e-6)
-                });
-                throughput += state.node_remaining_flops(e.node, graph, &self.registry) / t;
+            for plan in ExecPlan::enumerate(spec, &self.cluster) {
+                let candidate = match current {
+                    Some(p_old) => {
+                        if self.no_preemption {
+                            continue;
+                        }
+                        // Replace only with strictly more GPUs (line 11).
+                        if plan.n_gpus() <= p_old.n_gpus() {
+                            continue;
+                        }
+                        let mut s = best.clone();
+                        s.entries.retain(|e| e.node != node);
+                        s.entries.push(StageEntry { node, plan });
+                        s
+                    }
+                    None => {
+                        let mut s = best.clone();
+                        s.entries.push(StageEntry { node, plan });
+                        s
+                    }
+                };
+                if candidate.n_gpus() <= best.n_gpus() {
+                    continue;
+                }
+                if candidate.n_gpus() > self.cluster.n_gpus {
+                    continue;
+                }
+                if !candidate.is_valid(graph, &state.finished_nodes, &self.cluster, &self.registry)
+                {
+                    continue;
+                }
+                out.push(candidate);
             }
         }
-        StageEval { throughput, gpus: stage.n_gpus() }
+        out
     }
-}
-
-#[derive(Debug, Clone, Copy)]
-struct StageEval {
-    throughput: f64,
-    #[allow(dead_code)]
-    gpus: u32,
 }
 
 #[cfg(test)]
@@ -403,6 +403,40 @@ mod tests {
                 seen.insert(e.node, e.plan);
             }
         }
+    }
+
+    #[test]
+    fn parallel_cached_search_matches_sequential_on_mixed_app() {
+        // The tentpole guarantee: the parallel, memoized evaluator commits
+        // byte-identical stage sequences and estimates for any thread
+        // count, shared cache or not.
+        let sc = crate::spec::AppSpec::mixed(6, 60, 300, 128, 2).build(42).unwrap();
+        let mut seq = planner();
+        seq.threads = 1; // the sequential reference path, private cache
+        let base = seq.plan(&sc.graph, &sc.workloads, false, 42);
+        assert!(!base.stages.is_empty());
+
+        let shared = std::sync::Arc::new(SimCache::new());
+        for threads in [1usize, 2, 8] {
+            let mut p = planner();
+            p.threads = threads;
+            p.cache = Some(shared.clone());
+            let plan = p.plan(&sc.graph, &sc.workloads, false, 42);
+            assert_eq!(plan.stages, base.stages, "threads={threads}");
+            assert_eq!(
+                plan.est_total.to_bits(),
+                base.est_total.to_bits(),
+                "threads={threads}: {} vs {}",
+                plan.est_total,
+                base.est_total
+            );
+            assert_eq!(plan.est_windows.len(), base.est_windows.len());
+            assert_eq!(plan.eval.threads, threads.max(1));
+            assert!(plan.eval.candidates > 0);
+        }
+        // Re-planning the same state against the shared cache must hit:
+        // the 2nd and 3rd searches repeat the 1st search's keys exactly.
+        assert!(shared.hits() > 0, "shared cache saw no reuse");
     }
 
     #[test]

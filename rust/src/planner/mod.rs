@@ -1,5 +1,17 @@
 //! The planning phase: greedy application-plan search (§4.2, Algorithm 1).
+//!
+//! [`greedy`] runs the stage-by-stage search; [`eval`] scores candidate
+//! stages concurrently with a deterministic reduction; [`simcache`]
+//! memoizes the underlying single-node simulations so unchanged
+//! candidates are never re-simulated — across greedy iterations, and
+//! across whole searches when they share one
+//! [`crate::runner::RunContext::sim_cache`] (a session re-running or
+//! comparing scenarios plans against a warm cache).
 
+pub mod eval;
 pub mod greedy;
+pub mod simcache;
 
+pub use eval::{EvalStats, Evaluator};
 pub use greedy::{GreedyPlanner, PlannedApp};
+pub use simcache::{SimCache, SimCacheStats, SimKey};

@@ -1,0 +1,296 @@
+//! Memoized simulation outcomes for planner candidate scoring.
+//!
+//! Algorithm 1 re-scores the same `(model, plan)` candidates over and
+//! over: across greedy iterations only the committed node's workload
+//! changes, and when one [`crate::runner::RunContext`] plans several
+//! searches (repeated or compared runs of a session) whole workloads
+//! recur verbatim. [`SimCache`] memoizes the fast single-node simulation
+//! behind a key that captures *everything* the outcome depends on —
+//! model, plan, and a fingerprint of the node's remaining workload
+//! (request ready state included) — so a hit is guaranteed to return
+//! exactly what a fresh simulation would.
+//!
+//! Exactness matters: the planner's parity guarantee (parallel + cached
+//! search ≡ sequential search) holds because cached values are
+//! bit-identical to recomputed ones. Simulations are priced in *relative*
+//! virtual time (see [`crate::runner::state::ExecState::simulate_node_fast`]),
+//! so an outcome computed at clock `t` is valid verbatim at any other
+//! clock.
+//!
+//! A `SimCache` is scoped to one cost model + cluster (one
+//! [`crate::runner::RunContext`]); sharing it across differently
+//! calibrated contexts would alias keys to different truths.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::engine::sim::SimOutcome;
+use crate::plan::ExecPlan;
+
+/// Incremental FNV-1a hasher over 64-bit words (deterministic across
+/// runs and platforms, unlike `DefaultHasher` state).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    /// Start a fresh hash with the FNV-1a offset basis.
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Mix one word into the hash.
+    pub fn push(&mut self, word: u64) {
+        for byte in word.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// Final hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cache key: everything a fast single-node candidate simulation depends
+/// on besides the (fixed per cache) cost model, cluster memory and
+/// registry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SimKey {
+    /// Registry name of the candidate's model.
+    pub model: String,
+    /// Candidate execution plan `(dp, tp)`.
+    pub plan: ExecPlan,
+    /// Fingerprint of the node's remaining workload as the estimator sees
+    /// it (request ids, lengths, progress, chain/block structure and
+    /// ready state; see
+    /// [`crate::runner::state::ExecState::node_workload_fingerprint`]).
+    pub workload_fp: u64,
+    /// Exact bit pattern of the model-loading delay ahead of the
+    /// simulation (`0.0` when the plan is kept resident). Bits, not a
+    /// rounded value: a hit must reproduce a fresh run exactly.
+    pub load_bits: u64,
+}
+
+impl SimKey {
+    /// Build a key from the estimator's inputs.
+    pub fn new(model: &str, plan: ExecPlan, workload_fp: u64, load_delay: f64) -> Self {
+        SimKey { model: model.to_string(), plan, workload_fp, load_bits: load_delay.to_bits() }
+    }
+}
+
+/// Point-in-time counters of a [`SimCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimCacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to run a fresh simulation.
+    pub misses: u64,
+    /// Distinct keys currently stored.
+    pub entries: usize,
+}
+
+/// Thread-safe memo table of single-node simulation outcomes.
+///
+/// Interior mutability (a mutex around the map, atomics for counters)
+/// lets one cache hang off a shared `&`[`crate::runner::RunContext`] and
+/// serve concurrent evaluator threads. The mutex is never held while a
+/// simulation runs, so parallel misses proceed without serializing; two
+/// threads racing on the same key both compute the same value and the
+/// insert is idempotent.
+#[derive(Debug, Default)]
+pub struct SimCache {
+    map: Mutex<HashMap<SimKey, SimOutcome>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SimCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        SimCache::default()
+    }
+
+    /// Whether `key` is present, without touching the hit/miss counters
+    /// (used by the evaluator to decide if spawning workers is worth it).
+    pub fn contains(&self, key: &SimKey) -> bool {
+        self.map.lock().unwrap().contains_key(key)
+    }
+
+    /// Look `key` up, counting the hit or miss.
+    pub fn lookup(&self, key: &SimKey) -> Option<SimOutcome> {
+        let found = self.map.lock().unwrap().get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Store an outcome (idempotent for racing equal computations).
+    pub fn insert(&self, key: SimKey, outcome: SimOutcome) {
+        self.map.lock().unwrap().insert(key, outcome);
+    }
+
+    /// Return the cached outcome for `key`, or run `compute` (outside the
+    /// lock) and memoize its result.
+    pub fn get_or_compute(
+        &self,
+        key: SimKey,
+        compute: impl FnOnce() -> SimOutcome,
+    ) -> SimOutcome {
+        if let Some(hit) = self.lookup(&key) {
+            return hit;
+        }
+        let outcome = compute();
+        self.insert(key, outcome.clone());
+        outcome
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that missed so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct keys stored.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> SimCacheStats {
+        SimCacheStats { hits: self.hits(), misses: self.misses(), entries: self.len() }
+    }
+
+    /// Drop all entries and reset the counters.
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::costmodel::CostModel;
+    use crate::models::Registry;
+    use crate::runner::state::{AppRequest, ExecState};
+
+    fn fixture() -> (ExecState, Registry, CostModel, ClusterSpec) {
+        let cluster = ClusterSpec::a100_node(8);
+        let cost = CostModel::calibrated(&cluster, 11);
+        let w: Vec<Vec<AppRequest>> = vec![
+            (0..80).map(|i| AppRequest::simple(i, 25, 60 + (i % 40) as u32)).collect(),
+        ];
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        (st, Registry::paper(), cost, cluster)
+    }
+
+    fn graph() -> crate::graph::AppGraph {
+        let mut g = crate::graph::AppGraph::default();
+        g.add_node("chatglm3-6b", "a", 256);
+        g
+    }
+
+    #[test]
+    fn hit_returns_the_same_outcome_as_a_fresh_simulation() {
+        let (st, reg, cost, cluster) = fixture();
+        let g = graph();
+        let plan = ExecPlan::new(2, 1);
+        let fresh = st.simulate_node_fast(
+            0,
+            plan,
+            &g,
+            &reg,
+            &cost.iter_model,
+            cluster.mem_bytes,
+            0.0,
+        );
+        let cache = SimCache::new();
+        let key = SimKey::new("chatglm3-6b", plan, st.node_workload_fingerprint(0), 0.0);
+        let first = cache.get_or_compute(key.clone(), || {
+            st.simulate_node_fast(0, plan, &g, &reg, &cost.iter_model, cluster.mem_bytes, 0.0)
+        });
+        // Second lookup must be served from the cache...
+        let second = cache.get_or_compute(key.clone(), || panic!("expected a cache hit"));
+        // ...and both must equal a from-scratch simulation, bit for bit.
+        assert_eq!(first, fresh);
+        assert_eq!(second, fresh);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn workload_changes_invalidate_the_key() {
+        let (st, _, _, _) = fixture();
+        let fp0 = st.node_workload_fingerprint(0);
+        // Progress on a single request must change the fingerprint.
+        let mut progressed = st.clone();
+        progressed.nodes[0][3].generated += 1;
+        assert_ne!(progressed.node_workload_fingerprint(0), fp0);
+        // Completing a request (it drops out of the remaining set) too.
+        let mut completed = st.clone();
+        completed.nodes[0][0].generated = completed.nodes[0][0].output_len;
+        assert_ne!(completed.node_workload_fingerprint(0), fp0);
+        // An untouched clone keeps the exact fingerprint.
+        assert_eq!(st.clone().node_workload_fingerprint(0), fp0);
+        // And distinct keys are distinct cache entries, not overwrites.
+        let cache = SimCache::new();
+        let plan = ExecPlan::new(1, 1);
+        let k0 = SimKey::new("chatglm3-6b", plan, fp0, 0.0);
+        let k1 = SimKey::new("chatglm3-6b", plan, progressed.node_workload_fingerprint(0), 0.0);
+        cache.insert(k0.clone(), SimOutcome { clock: 1.0, ..Default::default() });
+        cache.insert(k1.clone(), SimOutcome { clock: 2.0, ..Default::default() });
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.lookup(&k0).unwrap().clock, 1.0);
+        assert_eq!(cache.lookup(&k1).unwrap().clock, 2.0);
+    }
+
+    #[test]
+    fn load_delay_and_plan_are_part_of_the_key() {
+        let (st, _, _, _) = fixture();
+        let fp = st.node_workload_fingerprint(0);
+        let a = SimKey::new("chatglm3-6b", ExecPlan::new(2, 1), fp, 0.0);
+        let b = SimKey::new("chatglm3-6b", ExecPlan::new(2, 1), fp, 11.5);
+        let c = SimKey::new("chatglm3-6b", ExecPlan::new(4, 1), fp, 0.0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        let cache = SimCache::new();
+        cache.insert(a, SimOutcome::default());
+        assert!(cache.lookup(&b).is_none());
+        assert!(cache.lookup(&c).is_none());
+        assert_eq!(cache.stats(), SimCacheStats { hits: 0, misses: 2, entries: 1 });
+    }
+
+    #[test]
+    fn clear_resets_counters_and_entries() {
+        let cache = SimCache::new();
+        let key = SimKey::new("m", ExecPlan::new(1, 1), 7, 0.0);
+        cache.get_or_compute(key.clone(), SimOutcome::default);
+        cache.get_or_compute(key, || panic!("hit expected"));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+}

@@ -35,16 +35,27 @@ use crate::runner::RunOpts;
 
 /// Everything a policy may consult during the offline planning phase.
 pub struct PlanCtx<'a> {
+    /// The application computation graph.
     pub graph: &'a AppGraph,
+    /// Per-node request workloads (ground-truth lengths attached).
     pub workloads: &'a [Vec<AppRequest>],
+    /// The hardware to schedule on.
     pub cluster: &'a ClusterSpec,
+    /// Model registry.
     pub registry: &'a Registry,
+    /// The calibrated cost model.
     pub cost: &'a CostModel,
+    /// Run switches (seed, ablations, planner threads).
     pub opts: &'a RunOpts,
+    /// Shared memoized simulation cache from the owning
+    /// [`crate::runner::RunContext`] (`None` when `opts.sim_cache` is
+    /// off; planners then memoize privately per search).
+    pub sim_cache: Option<&'a std::sync::Arc<crate::planner::SimCache>>,
 }
 
 /// Everything a policy may consult when planning the next stage.
 pub struct StageCtx<'a> {
+    /// The application computation graph.
     pub graph: &'a AppGraph,
     /// Ground-truth progress (completions, clock). Only `ours` reads it —
     /// the §4.3 dynamic scheduler reacts to *actual* finishes.
@@ -52,9 +63,13 @@ pub struct StageCtx<'a> {
     /// The policy-visible estimate: true progress, remaining output
     /// lengths re-sampled from the eCDF (or true under known-lengths).
     pub est_state: &'a ExecState,
+    /// The stage that just executed, if any.
     pub prev_stage: Option<&'a Stage>,
+    /// The hardware to schedule on.
     pub cluster: &'a ClusterSpec,
+    /// Model registry.
     pub registry: &'a Registry,
+    /// The calibrated cost model.
     pub cost: &'a CostModel,
     /// Plans pinned by the no-preemption ablation (`None` when preemption
     /// is allowed).
@@ -88,6 +103,7 @@ pub struct SamuLlmPolicy {
 }
 
 impl SamuLlmPolicy {
+    /// A fresh policy (plans on `prepare`).
     pub fn new() -> Self {
         SamuLlmPolicy { sched: DynamicScheduler::new(None) }
     }
@@ -108,6 +124,8 @@ impl Policy for SamuLlmPolicy {
         let mut p =
             GreedyPlanner::new(ctx.cost.clone(), ctx.registry.clone(), ctx.cluster.clone());
         p.no_preemption = ctx.opts.no_preemption;
+        p.threads = ctx.opts.threads;
+        p.cache = ctx.sim_cache.cloned();
         let plan = p.plan(ctx.graph, ctx.workloads, ctx.opts.known_lengths, ctx.opts.seed);
         self.sched = DynamicScheduler::new(Some(plan.clone()));
         Some(plan)
@@ -164,6 +182,7 @@ pub struct RoundRobin {
 }
 
 impl RoundRobin {
+    /// A fresh rotation starting at node priority 0.
     pub fn new() -> Self {
         RoundRobin { cursor: 0 }
     }
@@ -194,9 +213,13 @@ impl Policy for RoundRobin {
 
 /// A registered policy: canonical name, accepted aliases, constructor.
 pub struct PolicyInfo {
+    /// Canonical name (`RunReport::policy`).
     pub name: &'static str,
+    /// Accepted aliases (legacy config spellings included).
     pub aliases: &'static [&'static str],
+    /// One-line description for `--policy ?` help.
     pub about: &'static str,
+    /// Constructor for a fresh instance.
     pub build: fn() -> Box<dyn Policy>,
 }
 

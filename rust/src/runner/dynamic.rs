@@ -27,6 +27,7 @@ pub struct DynamicScheduler {
 }
 
 impl DynamicScheduler {
+    /// Wrap a planned app (or nothing, for pure fallback scheduling).
     pub fn new(planned: Option<PlannedApp>) -> Self {
         DynamicScheduler { planned, next_idx: 0, last_plans: HashMap::new() }
     }
@@ -166,6 +167,7 @@ mod tests {
             est_first_finisher: vec![],
             est_total: 100.0,
             search_time: 0.1,
+            eval: Default::default(),
         }
     }
 

@@ -18,6 +18,7 @@ pub mod state;
 pub use state::{AppRequest, ExecState};
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::cluster::{ClusterSpec, Placement};
 use crate::costmodel::{CostModel, HardwareModel};
@@ -25,6 +26,8 @@ use crate::graph::AppGraph;
 use crate::metrics::{RunReport, StageRecord};
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage};
+use crate::planner::eval::EvalStats;
+use crate::planner::SimCache;
 use crate::policy::{self, PlanCtx, Policy, StageCtx};
 use crate::util::rng::Rng;
 
@@ -32,45 +35,74 @@ use crate::util::rng::Rng;
 /// with ground-truth output lengths.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Scenario name (becomes `RunReport::scenario`).
     pub name: String,
+    /// The application computation graph.
     pub graph: AppGraph,
+    /// Per-node request workloads with ground-truth output lengths.
     pub workloads: Vec<Vec<AppRequest>>,
 }
 
 /// Runner options (ablation switches of §5.5 included).
 #[derive(Debug, Clone)]
 pub struct RunOpts {
+    /// Seed for workload materialisation, sampling and planning.
     pub seed: u64,
+    /// Disable preemption (§5.5 ablation).
     pub no_preemption: bool,
     /// Give every policy the true output lengths (§5.5 cost-model study).
     pub known_lengths: bool,
     /// Ground-truth per-iteration jitter.
     pub noise_sigma: f64,
+    /// Planner candidate-evaluation worker threads (`0` = auto). Plans
+    /// are identical for every value — only search wall-clock changes.
+    pub threads: usize,
+    /// Let the planner memoize simulations in the context's shared
+    /// [`SimCache`] (on by default; results are identical either way).
+    pub sim_cache: bool,
 }
 
 impl Default for RunOpts {
     fn default() -> Self {
-        RunOpts { seed: 7, no_preemption: false, known_lengths: false, noise_sigma: 0.02 }
+        RunOpts {
+            seed: 7,
+            no_preemption: false,
+            known_lengths: false,
+            noise_sigma: 0.02,
+            threads: 0,
+            sim_cache: true,
+        }
     }
 }
 
 /// Shared run wiring for one cluster: the model registry, the calibrated
-/// cost model and the hardware ground truth. Build once (a session does)
-/// and reuse across runs.
+/// cost model, the hardware ground truth and the planner's memoized
+/// simulation cache. Build once (a session does) and reuse across runs.
 pub struct RunContext {
+    /// Model registry resolving graph nodes to specs.
     pub registry: Registry,
+    /// The calibrated sampling-then-simulation cost model.
     pub cost: CostModel,
+    /// Ground-truth latency oracle the running phase executes against.
     pub hw: HardwareModel,
+    /// The cluster both phases schedule onto.
     pub cluster: ClusterSpec,
+    /// Memoized planner simulations, shared across every planning search
+    /// this context hosts (each `Policy::prepare` call — so repeated and
+    /// compared runs plan against a warm cache).
+    pub sim_cache: Arc<SimCache>,
 }
 
 impl RunContext {
+    /// Assemble the wiring for `cluster`, calibrating the cost model with
+    /// `seed`.
     pub fn new(cluster: &ClusterSpec, seed: u64) -> Self {
         RunContext {
             registry: Registry::paper(),
             cost: CostModel::calibrated(cluster, seed),
             hw: HardwareModel::new(cluster.clone()),
             cluster: cluster.clone(),
+            sim_cache: Arc::new(SimCache::new()),
         }
     }
 }
@@ -96,7 +128,7 @@ pub fn run_with(
     ctx: &RunContext,
     opts: &RunOpts,
 ) -> RunReport {
-    let RunContext { registry, cost, hw, cluster } = ctx;
+    let RunContext { registry, cost, hw, cluster, sim_cache } = ctx;
     let graph = &scenario.graph;
 
     // ---- planning phase -------------------------------------------------
@@ -108,9 +140,14 @@ pub fn run_with(
         registry,
         cost,
         opts,
+        sim_cache: opts.sim_cache.then_some(sim_cache),
     });
+    let mut search_time = 0.0;
+    let mut planner_stats = EvalStats::default();
     if let Some(plan) = &planned {
         extra_time += plan.search_time;
+        search_time = plan.search_time;
+        planner_stats = plan.eval;
     }
 
     // ---- running phase ---------------------------------------------------
@@ -228,6 +265,8 @@ pub fn run_with(
         scenario: scenario.name.clone(),
         policy: policy.name().to_string(),
         extra_time,
+        search_time,
+        planner: planner_stats,
         inference_time,
         end_to_end_time: extra_time + inference_time,
         estimated_inference_time: planned.map(|p| p.est_total).unwrap_or(f64::NAN),
@@ -310,6 +349,12 @@ mod tests {
         assert!(r.inference_time > 0.0);
         assert!(r.n_stages >= 1);
         assert!(!r.estimated_inference_time.is_nan());
+        // The §5 "extra time" decomposition is visible in the report:
+        // Algorithm 1's search time plus its evaluation counters.
+        assert!(r.search_time > 0.0);
+        assert!(r.extra_time >= r.search_time);
+        assert!(r.planner.candidates > 0);
+        assert!(r.planner.threads >= 1);
         // Cost-model error in the paper's observed band (≤ ~50%).
         assert!(r.estimation_error() < 0.6, "error {}", r.estimation_error());
         assert!(r.end_to_end_time >= r.inference_time);
@@ -322,6 +367,11 @@ mod tests {
         for p in policy::names() {
             let r = run_policy(p, &sc, &cluster, &RunOpts::default());
             assert!(r.inference_time > 0.0, "{p}");
+            // Non-planning policies report zero search time (not NaN).
+            if p != "ours" {
+                assert_eq!(r.search_time, 0.0, "{p}");
+                assert_eq!(r.planner.candidates, 0, "{p}");
+            }
             // Every stage fits the cluster.
             for s in &r.timeline {
                 assert!(s.gpus_used() <= 8, "{p} stage over budget");

@@ -24,7 +24,9 @@ use crate::plan::Stage;
 /// One application-level request (graph semantics attached).
 #[derive(Debug, Clone, Copy)]
 pub struct AppRequest {
+    /// Request id, unique within its node.
     pub id: u64,
+    /// Prompt length in tokens.
     pub input_len: u32,
     /// Ground-truth output length (hidden from the planner).
     pub true_output_len: u32,
@@ -37,6 +39,7 @@ pub struct AppRequest {
 }
 
 impl AppRequest {
+    /// A dependency-free, chain-free request.
     pub fn simple(id: u64, input_len: u32, true_output_len: u32) -> Self {
         AppRequest {
             id,
@@ -53,16 +56,25 @@ impl AppRequest {
 /// true for the runner) and progress.
 #[derive(Debug, Clone, Copy)]
 pub struct StatefulReq {
+    /// Request id, unique within its node.
     pub id: u64,
+    /// Prompt length in tokens.
     pub input_len: u32,
+    /// Resolved output length (sampled for the planner, true for the
+    /// runner).
     pub output_len: u32,
+    /// Tokens generated so far.
     pub generated: u32,
+    /// Next request in this node's fused self-loop chain.
     pub chain_next: Option<u64>,
+    /// True if an in-node chain predecessor must complete first.
     pub chain_blocked: bool,
+    /// Cross-node dependency: (producer node, producer request id).
     pub dep: Option<(usize, u64)>,
 }
 
 impl StatefulReq {
+    /// Whether the request generated its full output.
     pub fn is_done(&self) -> bool {
         self.generated >= self.output_len
     }
@@ -71,6 +83,7 @@ impl StatefulReq {
 /// Per-node stage outcome.
 #[derive(Debug, Clone)]
 pub struct NodeStageResult {
+    /// Graph node id.
     pub node: usize,
     /// Absolute virtual finish time of the node's whole remaining
     /// workload (pass-1 estimate; equals actual when it finishes first).
@@ -86,8 +99,11 @@ pub struct NodeStageResult {
 /// Result of executing one stage.
 #[derive(Debug, Clone)]
 pub struct StageResult {
+    /// Stage start (absolute virtual time).
     pub start: f64,
+    /// Stage end (the first-finish boundary, or all-done for run-to-end).
     pub end: f64,
+    /// Per-node outcomes.
     pub nodes: Vec<NodeStageResult>,
 }
 
@@ -98,10 +114,13 @@ pub struct ExecState {
     pub nodes: Vec<Vec<StatefulReq>>,
     /// Completion log: (node, request) -> absolute completion time.
     pub completed: HashMap<(usize, u64), f64>,
+    /// Nodes whose whole workload has completed.
     pub finished_nodes: HashSet<usize>,
+    /// Current absolute virtual time.
     pub clock: f64,
     /// Ground-truth jitter σ (None for planner estimates).
     pub noise_sigma: Option<f64>,
+    /// Seed for the jitter stream.
     pub noise_seed: u64,
 }
 
@@ -139,10 +158,12 @@ impl ExecState {
         }
     }
 
+    /// Whether every node finished its workload.
     pub fn all_done(&self) -> bool {
         self.finished_nodes.len() == self.nodes.len()
     }
 
+    /// Ids of nodes with remaining work, ascending.
     pub fn unfinished_nodes(&self) -> Vec<usize> {
         (0..self.nodes.len()).filter(|n| !self.finished_nodes.contains(n)).collect()
     }
@@ -167,11 +188,10 @@ impl ExecState {
     }
 
     /// Fast completion-time estimate for a single `(node, plan)` candidate:
-    /// DP replicas are statistically symmetric, so simulating only the
-    /// heaviest round-robin share bounds the session finish time at 1/dp
-    /// of the cost. Used by the planner's candidate scoring (not by state
-    /// commits, which remain exact). Only valid for nodes whose
-    /// dependencies are all satisfied (no same-stage producers).
+    /// the duration (seconds since the would-be stage start, loading
+    /// included, clamped to ≥ 1 µs) of the outcome returned by
+    /// [`ExecState::simulate_node_fast`]. Used by the planner's candidate
+    /// scoring (not by state commits, which remain exact).
     pub fn estimate_node_time_fast(
         &self,
         node: usize,
@@ -182,12 +202,41 @@ impl ExecState {
         mem_bytes: u64,
         load_delay: f64,
     ) -> f64 {
+        self.simulate_node_fast(node, plan, graph, registry, lat, mem_bytes, load_delay)
+            .clock
+            .max(1e-6)
+    }
+
+    /// Fast single-node candidate simulation: DP replicas are
+    /// statistically symmetric, so simulating only the heaviest
+    /// round-robin share bounds the session finish time at 1/dp of the
+    /// cost. Only valid for nodes whose dependencies are all satisfied
+    /// (no same-stage producers).
+    ///
+    /// The returned outcome is expressed in *relative* virtual time: its
+    /// `clock` is the duration since the would-be stage start (loading
+    /// delay included), independent of `self.clock`. That translation
+    /// invariance is what makes the result safe to memoize in a
+    /// [`crate::planner::SimCache`] and replay at any later clock.
+    pub fn simulate_node_fast(
+        &self,
+        node: usize,
+        plan: crate::plan::ExecPlan,
+        graph: &AppGraph,
+        registry: &Registry,
+        lat: &dyn IterLatency,
+        mem_bytes: u64,
+        load_delay: f64,
+    ) -> crate::engine::sim::SimOutcome {
         let spec = registry.get(&graph.nodes[node].model).expect("model");
-        let start = self.clock + load_delay;
+        // Simulate at a canonical origin (stage start = 0) so equal
+        // workloads produce bit-equal outcomes regardless of the absolute
+        // clock — floating-point accumulation is origin-sensitive.
+        let start = load_delay;
         let reqs =
             self.build_engine_requests(node, start, &HashMap::new(), load_delay == 0.0);
         if reqs.is_empty() {
-            return load_delay.max(1e-6);
+            return crate::engine::sim::SimOutcome { clock: load_delay, ..Default::default() };
         }
         let parts = crate::engine::session::split_round_robin(&reqs, plan.dp);
         let heaviest = parts
@@ -211,7 +260,52 @@ impl ExecState {
             start,
             0,
         );
-        sim.run(None).clock - self.clock
+        sim.run(None)
+    }
+
+    /// Fingerprint of this node's remaining workload exactly as
+    /// [`ExecState::simulate_node_fast`] will see it: per live request —
+    /// id, input length, resolved output length, progress, chain link and
+    /// ready state (every runnable request is ready exactly at stage
+    /// start; chain-blocked successors get a sentinel — if finer-grained
+    /// ready times ever appear here, they must be folded into this hash).
+    /// Requests whose cross-node producer has not completed are excluded,
+    /// mirroring the estimator.
+    ///
+    /// Two states with equal fingerprints (same model, plan, load delay)
+    /// are guaranteed the same simulation outcome, which is what lets
+    /// [`crate::planner::SimCache`] hits replace fresh simulations
+    /// without disturbing planner parity.
+    pub fn node_workload_fingerprint(&self, node: usize) -> u64 {
+        use crate::planner::simcache::Fnv;
+        let done_ids: HashSet<u64> = self.nodes[node]
+            .iter()
+            .filter(|r| r.is_done())
+            .map(|r| r.id)
+            .collect();
+        let mut h = Fnv::new();
+        for r in &self.nodes[node] {
+            if r.is_done() {
+                continue;
+            }
+            if let Some(dep) = r.dep {
+                if !self.completed.contains_key(&dep) {
+                    // Excluded from the simulation, hence from the key.
+                    continue;
+                }
+            }
+            let blocked =
+                r.chain_blocked && !Self::chain_pred_done(&self.nodes[node], r.id, &done_ids);
+            // All runnable requests become ready exactly at stage start;
+            // blocked chain successors get a sentinel.
+            let ready_q: u64 = if blocked { u64::MAX } else { 0 };
+            h.push(r.id);
+            h.push((r.input_len as u64) << 32 | r.output_len as u64);
+            h.push(r.generated as u64);
+            h.push(r.chain_next.map(|c| c ^ 0x8000_0000_0000_0000).unwrap_or(u64::MAX - 1));
+            h.push(ready_q);
+        }
+        h.finish()
     }
 
     /// Materialise engine requests for `node` at stage start, resolving

@@ -20,8 +20,11 @@ use crate::util::json::Json;
 /// `model_meta.json` schema (see `python/compile/aot.py`).
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
+    /// Model dimensions the executables were compiled for.
     pub config: ModelDims,
+    /// Parameter directory into `weights.bin`.
     pub params: Vec<ParamEntry>,
+    /// Seed the weights were initialized with.
     pub seed: u64,
 }
 
@@ -71,7 +74,9 @@ impl ModelMeta {
     }
 }
 
+/// TinyGPT dimensions baked into the compiled HLO.
 #[derive(Debug, Clone)]
+#[allow(missing_docs)] // standard transformer dimension names
 pub struct ModelDims {
     pub vocab: usize,
     pub d_model: usize,
@@ -83,11 +88,16 @@ pub struct ModelDims {
     pub d_head: usize,
 }
 
+/// One parameter tensor's location inside `weights.bin`.
 #[derive(Debug, Clone)]
 pub struct ParamEntry {
+    /// Parameter name (canonical order matters).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Byte offset into the blob.
     pub offset: usize,
+    /// Byte length in the blob.
     pub bytes: usize,
 }
 
@@ -98,6 +108,7 @@ pub struct ParamEntry {
 /// the per-token hot path moves only the tiny token/pos/logits arrays
 /// across the host boundary (§Perf runtime optimization).
 pub struct TinyGpt {
+    /// The artifact contract the executables were loaded under.
     pub meta: ModelMeta,
     client: xla::PjRtClient,
     prefill: xla::PjRtLoadedExecutable,
@@ -149,18 +160,22 @@ impl TinyGpt {
         Ok(TinyGpt { meta, client, prefill, decode, weights })
     }
 
+    /// Compiled batch size.
     pub fn batch(&self) -> usize {
         self.meta.config.batch
     }
 
+    /// Compiled maximum sequence length.
     pub fn max_seq(&self) -> usize {
         self.meta.config.max_seq
     }
 
+    /// Vocabulary size.
     pub fn vocab(&self) -> usize {
         self.meta.config.vocab
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

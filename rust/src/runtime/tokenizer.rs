@@ -15,6 +15,7 @@ const BIGRAMS: [&str; 64] = [
     "r ", "y ", ", ", ". ",
 ];
 
+/// Padding / beginning-of-sequence token id.
 pub const PAD: i32 = 0;
 const BYTE_BASE: i32 = 1;
 const BIGRAM_BASE: i32 = 257;

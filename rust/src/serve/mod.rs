@@ -14,15 +14,20 @@ use crate::runtime::TinyGpt;
 /// One serving request: prompt tokens and a generation budget.
 #[derive(Debug, Clone)]
 pub struct ServeRequest {
+    /// Request id.
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget in tokens.
     pub max_new_tokens: usize,
 }
 
 /// Per-request result.
 #[derive(Debug, Clone)]
 pub struct ServeResult {
+    /// Request id.
     pub id: u64,
+    /// Generated token ids.
     pub generated: Vec<i32>,
     /// Seconds from serve() start to this request's completion.
     pub latency: f64,
@@ -30,6 +35,7 @@ pub struct ServeResult {
 
 /// Aggregate metrics of one serve run.
 #[derive(Debug, Clone)]
+#[allow(missing_docs)] // field names are the metrics themselves
 pub struct ServeMetrics {
     pub n_requests: usize,
     pub total_tokens: u64,
@@ -47,10 +53,12 @@ pub struct ServeEngine {
 }
 
 impl ServeEngine {
+    /// Load the TinyGPT artifacts and wrap them in an engine.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         Ok(ServeEngine { model: TinyGpt::load(artifacts_dir)? })
     }
 
+    /// The underlying loaded model.
     pub fn model(&self) -> &TinyGpt {
         &self.model
     }

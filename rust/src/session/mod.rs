@@ -2,9 +2,9 @@
 //! library.
 //!
 //! A session owns everything `run_policy` used to re-assemble on every
-//! call: the model [`Registry`], the calibrated [`CostModel`], the
-//! hardware ground truth and the cluster description (bundled in a
-//! [`RunContext`]). Callers describe *what* to run with an
+//! call: the model [`crate::models::Registry`], the calibrated
+//! [`crate::costmodel::CostModel`], the hardware ground truth and the
+//! cluster description (bundled in a [`RunContext`]). Callers describe *what* to run with an
 //! [`AppSpec`] and the session takes care of materialisation, policy
 //! instantiation and execution:
 //!
@@ -55,9 +55,12 @@ pub struct SamuLlmBuilder {
     no_preemption: bool,
     known_lengths: bool,
     noise_sigma: f64,
+    threads: usize,
+    sim_cache: bool,
 }
 
 impl SamuLlm {
+    /// Start configuring a session (see [`SamuLlmBuilder`] defaults).
     pub fn builder() -> SamuLlmBuilder {
         SamuLlmBuilder {
             cluster: ClusterSpec::a100_node(8),
@@ -67,6 +70,8 @@ impl SamuLlm {
             no_preemption: false,
             known_lengths: false,
             noise_sigma: 0.02,
+            threads: 0,
+            sim_cache: true,
         }
     }
 
@@ -75,10 +80,12 @@ impl SamuLlm {
         self.policy
     }
 
+    /// The cluster this session schedules onto.
     pub fn cluster(&self) -> &ClusterSpec {
         &self.ctx.cluster
     }
 
+    /// The session seed (workloads, calibration, planning).
     pub fn seed(&self) -> u64 {
         self.opts.seed
     }
@@ -158,6 +165,22 @@ impl SamuLlmBuilder {
         self
     }
 
+    /// Planner candidate-evaluation worker threads (default `0` = auto,
+    /// capped at 8). Plans are identical for every value — threads only
+    /// change search wall-clock, never results.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Memoize planner simulations in the session's shared
+    /// [`crate::planner::SimCache`] (default on). Hits are bit-identical
+    /// to fresh simulations, so this too only affects search wall-clock.
+    pub fn sim_cache(mut self, on: bool) -> Self {
+        self.sim_cache = on;
+        self
+    }
+
     /// Validate the configuration and assemble the session wiring.
     pub fn build(self) -> Result<SamuLlm> {
         let policy = policy::canonical(&self.policy)?;
@@ -181,6 +204,8 @@ impl SamuLlmBuilder {
             no_preemption: self.no_preemption,
             known_lengths: self.known_lengths,
             noise_sigma: self.noise_sigma,
+            threads: self.threads,
+            sim_cache: self.sim_cache,
         };
         Ok(SamuLlm { ctx: RunContext::new(&cluster, self.seed), policy, opts })
     }
@@ -215,6 +240,48 @@ mod tests {
         assert_eq!(r.policy, "min-heuristic");
         assert!(r.inference_time > 0.0);
         assert!(r.n_stages >= 1);
+    }
+
+    #[test]
+    fn planner_knobs_do_not_change_results() {
+        // threads / sim_cache steer search wall-clock only: virtual-time
+        // results must be bit-identical across every configuration.
+        let spec = AppSpec::ensembling(60, 128);
+        let run = |threads: usize, cache: bool| {
+            SamuLlm::builder()
+                .gpus(8)
+                .seed(3)
+                .threads(threads)
+                .sim_cache(cache)
+                .build()
+                .unwrap()
+                .run(&spec)
+                .unwrap()
+        };
+        let base = run(1, false);
+        for (threads, cache) in [(2, false), (4, true), (0, true)] {
+            let r = run(threads, cache);
+            assert_eq!(r.inference_time.to_bits(), base.inference_time.to_bits());
+            assert_eq!(
+                r.estimated_inference_time.to_bits(),
+                base.estimated_inference_time.to_bits()
+            );
+            assert_eq!(r.n_stages, base.n_stages);
+        }
+    }
+
+    #[test]
+    fn session_sim_cache_reuses_planning_across_runs() {
+        // One session, same spec twice: the second search must be served
+        // entirely from the shared cache (and change nothing).
+        let session = SamuLlm::builder().gpus(8).policy("ours").seed(3).build().unwrap();
+        let spec = AppSpec::ensembling(60, 128);
+        let r1 = session.run(&spec).unwrap();
+        let r2 = session.run(&spec).unwrap();
+        assert_eq!(r1.inference_time.to_bits(), r2.inference_time.to_bits());
+        assert!(r1.planner.cache_misses > 0);
+        assert_eq!(r2.planner.cache_misses, 0, "{:?}", r2.planner);
+        assert!(r2.planner.cache_hits > 0);
     }
 
     #[test]

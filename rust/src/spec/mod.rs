@@ -34,24 +34,53 @@ use crate::workload::lengths;
 #[derive(Debug, Clone, PartialEq)]
 pub enum AppSpec {
     /// §5.1: every model answers every request.
-    Ensembling { n_requests: usize, max_out: u32 },
+    Ensembling {
+        /// Number of ensembling requests.
+        n_requests: usize,
+        /// Output-length limit.
+        max_out: u32,
+    },
     /// §5.2: each request goes to its best model (Table 1 ratios). The
     /// `known_lengths` flag turns on the §5.5 known-output-length mode
     /// for the whole run (honoured by [`crate::session::SamuLlm::run`]).
-    Routing { max_out: u32, known_lengths: bool },
+    Routing {
+        /// Output-length limit.
+        max_out: u32,
+        /// Run with true output lengths (§5.5 mode for the whole run).
+        known_lengths: bool,
+    },
     /// §5.3: chunked document summarization + summary evaluation.
-    ChainSummary { n_docs: usize, eval_times: u32, max_out: u32 },
+    ChainSummary {
+        /// Number of documents to summarize.
+        n_docs: usize,
+        /// Evaluations per document summary.
+        eval_times: u32,
+        /// Summarizer output-length limit.
+        max_out: u32,
+    },
     /// §5.4: chain summary + ensembling run as one application.
     Mixed {
+        /// Number of chain-summary documents.
         n_docs: usize,
+        /// Number of ensembling requests.
         n_ensemble_requests: usize,
+        /// Summarizer output-length limit.
         summary_max_out: u32,
+        /// Ensembling output-length limit.
         ensemble_max_out: u32,
+        /// Evaluations per document summary.
         eval_times: u32,
     },
     /// A user-defined computation graph: nodes with per-node workload
     /// generators plus data-flow edges (producer, consumer).
-    Custom { name: String, nodes: Vec<NodeSpec>, edges: Vec<(usize, usize)> },
+    Custom {
+        /// Scenario name (defaults to "custom" when empty).
+        name: String,
+        /// The graph's LLM nodes.
+        nodes: Vec<NodeSpec>,
+        /// Data-flow edges (producer index, consumer index).
+        edges: Vec<(usize, usize)>,
+    },
 }
 
 /// One node of a [`AppSpec::Custom`] graph.
@@ -73,17 +102,30 @@ pub enum WorkloadGen {
     /// Explicit request list (replayed traces); ids are assigned by
     /// position. Output lengths are clamped to the node's `max_out` and
     /// the model's context window.
-    Explicit { requests: Vec<RequestSpec> },
+    Explicit {
+        /// The requests, in submission order.
+        requests: Vec<RequestSpec>,
+    },
     /// `n_requests` synthetic requests: input lengths uniform in
     /// `[input_min, input_max]`, true output lengths drawn from the
     /// model's No-Robots-style length distribution capped at `max_out`.
-    Synthetic { n_requests: usize, input_min: u32, input_max: u32 },
+    Synthetic {
+        /// Number of requests to generate.
+        n_requests: usize,
+        /// Minimum input length (inclusive).
+        input_min: u32,
+        /// Maximum input length (inclusive).
+        input_max: u32,
+    },
 }
 
 /// One explicit request of [`WorkloadGen::Explicit`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RequestSpec {
+    /// Prompt length in tokens (clamped to ≥ 1).
     pub input_len: u32,
+    /// Ground-truth output length (clamped to the node's `max_out` and
+    /// the model's context window).
     pub output_len: u32,
 }
 
@@ -92,18 +134,22 @@ pub struct RequestSpec {
 // ---------------------------------------------------------------------------
 
 impl AppSpec {
+    /// The §5.1 ensembling app: every model answers every request.
     pub fn ensembling(n_requests: usize, max_out: u32) -> AppSpec {
         AppSpec::Ensembling { n_requests, max_out }
     }
 
+    /// The §5.2 routing app over the fixed RouterBench dataset.
     pub fn routing(max_out: u32, known_lengths: bool) -> AppSpec {
         AppSpec::Routing { max_out, known_lengths }
     }
 
+    /// The §5.3 chain-summary app (summarize chunks, then evaluate).
     pub fn chain_summary(n_docs: usize, eval_times: u32, max_out: u32) -> AppSpec {
         AppSpec::ChainSummary { n_docs, eval_times, max_out }
     }
 
+    /// The §5.4 mixed app: chain summary + ensembling as one graph.
     pub fn mixed(
         n_docs: usize,
         n_ensemble_requests: usize,
@@ -280,17 +326,25 @@ fn build_custom(
 /// ever silently dropped.
 #[derive(Debug, Clone, Default)]
 pub struct AppParams {
+    /// `--n-requests` (ensembling/mixed).
     pub n_requests: Option<usize>,
+    /// `--max-out` output-length limit.
     pub max_out: Option<u32>,
+    /// `--n-docs` (chain-summary/mixed).
     pub n_docs: Option<usize>,
+    /// `--eval-times` (chain-summary/mixed).
     pub eval_times: Option<u32>,
+    /// `--known-lengths` (§5.5 ablation; a spec-level mode for routing).
     pub known_lengths: bool,
 }
 
 /// A named app builder: CLI params -> [`AppSpec`].
 pub struct AppBuilder {
+    /// CLI app name.
     pub name: &'static str,
+    /// One-line description for `--app ?` help.
     pub about: &'static str,
+    /// Build the spec, rejecting inapplicable params.
     pub build: fn(&AppParams) -> Result<AppSpec>,
 }
 
@@ -395,6 +449,7 @@ fn cli_mixed(p: &AppParams) -> Result<AppSpec> {
 // ---------------------------------------------------------------------------
 
 impl AppSpec {
+    /// Serialize to a [`Json`] value (round-trips via [`AppSpec::from_json`]).
     pub fn to_json(&self) -> Json {
         match self {
             AppSpec::Ensembling { n_requests, max_out } => Json::obj(vec![

@@ -10,11 +10,17 @@ use std::time::Instant;
 /// One benchmark's statistics (seconds per iteration).
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// `group/name` label.
     pub name: String,
+    /// Number of timed samples.
     pub samples: usize,
+    /// Mean seconds per iteration.
     pub mean: f64,
+    /// Median seconds per iteration (the baseline-comparison statistic).
     pub median: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
+    /// Fastest sample.
     pub min: f64,
 }
 
@@ -27,6 +33,7 @@ pub struct BenchGroup {
 }
 
 impl BenchGroup {
+    /// A named group with default warmup and sample counts.
     pub fn new(group: &str) -> Self {
         BenchGroup {
             group: group.to_string(),

@@ -4,13 +4,16 @@
 /// Result of a 1-D least squares fit `y ~ a*x + b`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinFit {
+    /// Slope.
     pub a: f64,
+    /// Intercept.
     pub b: f64,
     /// Coefficient of determination on the fitting data.
     pub r2: f64,
 }
 
 impl LinFit {
+    /// Evaluate the fitted line at `x`.
     pub fn predict(&self, x: f64) -> f64 {
         self.a * x + self.b
     }

@@ -27,6 +27,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[1].wrapping_mul(5)).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -55,6 +56,7 @@ impl Rng {
         lo + self.next_u64() % (hi - lo)
     }
 
+    /// Uniform integer in `[lo, hi)` as usize. Panics if `lo >= hi`.
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }

@@ -2,6 +2,7 @@
 
 /// Summary of a sample: count, mean, min/max, percentiles.
 #[derive(Debug, Clone, PartialEq)]
+#[allow(missing_docs)] // field names are the statistics themselves
 pub struct Summary {
     pub n: usize,
     pub mean: f64,

@@ -13,7 +13,9 @@ pub const CHUNK_TOKENS: u32 = 2048;
 /// A sampled document: its id and number of 2048-token chunks.
 #[derive(Debug, Clone)]
 pub struct Document {
+    /// Document id.
     pub id: u64,
+    /// Number of 2048-token chunks.
     pub n_chunks: u32,
 }
 

@@ -27,6 +27,7 @@ pub struct LengthDist {
 }
 
 impl LengthDist {
+    /// Draw one capped log-normal length.
     pub fn sample(&self, rng: &mut Rng) -> u32 {
         let x = rng.lognormal(self.mu, self.sigma);
         (x.round() as u32).clamp(1, self.cap)

@@ -6,12 +6,15 @@ use super::Category;
 use crate::util::rng::Rng;
 
 /// An ensembling input: just an id + prompt length (+ category for Fig. 2
-//  style analyses). Output lengths are per-*model* and assigned when the
-//  application scenario is built.
+/// style analyses). Output lengths are per-*model* and assigned when the
+/// application scenario is built.
 #[derive(Debug, Clone)]
 pub struct MixInput {
+    /// Request id.
     pub id: u64,
+    /// Prompt length in tokens.
     pub input_len: u32,
+    /// Instruction category.
     pub category: Category,
 }
 

@@ -21,6 +21,7 @@ pub mod routerbench;
 
 /// The ten No Robots instruction categories (Fig. 2b).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // the variants are the category names themselves
 pub enum Category {
     Generation,
     OpenQa,
@@ -35,6 +36,7 @@ pub enum Category {
 }
 
 impl Category {
+    /// All ten categories, in Fig. 2b order.
     pub const ALL: [Category; 10] = [
         Category::Generation,
         Category::OpenQa,
@@ -48,6 +50,7 @@ impl Category {
         Category::Extract,
     ];
 
+    /// Human-readable category name (Fig. 2b labels).
     pub fn name(&self) -> &'static str {
         match self {
             Category::Generation => "Generation",
@@ -71,9 +74,13 @@ impl Category {
 /// sample lengths from the eCDF instead.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Request id, unique within its node.
     pub id: u64,
+    /// Prompt length in tokens.
     pub input_len: u32,
+    /// Ground-truth output length (hidden from the planner).
     pub true_output_len: u32,
+    /// Instruction category the request was drawn from.
     pub category: Category,
     /// Virtual time at which the request becomes available (0 for offline
     /// requests; set by the communicator for dependent models).
@@ -83,6 +90,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// An offline request: ready at time 0, no grouping tag.
     pub fn offline(id: u64, input_len: u32, true_output_len: u32, category: Category) -> Self {
         Request { id, input_len, true_output_len, category, ready_time: 0.0, tag: 0 }
     }

@@ -9,8 +9,11 @@ use crate::util::rng::Rng;
 /// No Robots requests.
 #[derive(Debug, Clone)]
 pub struct TraceRecord {
+    /// Instruction category.
     pub category: Category,
+    /// Prompt length in tokens.
     pub input_len: u32,
+    /// Observed output length in tokens.
     pub output_len: u32,
 }
 

@@ -23,10 +23,15 @@ pub const TABLE1: [(&str, usize); 5] = [
 /// dataset ships (used by the "known output lengths" experiment of Fig. 8).
 #[derive(Debug, Clone)]
 pub struct RoutedRequest {
+    /// Request id.
     pub id: u64,
+    /// The model the router sends this request to.
     pub model: &'static str,
+    /// Prompt length in tokens.
     pub input_len: u32,
+    /// Known response length the dataset ships.
     pub output_len: u32,
+    /// Instruction category.
     pub category: Category,
 }
 
