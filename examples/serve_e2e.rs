@@ -1,13 +1,15 @@
 //! END-TO-END DRIVER: load the real TinyGPT (Pallas attention kernel →
-//! JAX model → AOT HLO text → PJRT CPU) and serve batched requests,
-//! reporting latency and throughput. This proves all three layers of the
-//! stack compose with Python completely off the request path.
+//! JAX model → AOT HLO text → PJRT CPU) and serve requests through the
+//! unified execution API with continuous batching, reporting latency and
+//! throughput. This proves all three layers of the stack compose with
+//! Python completely off the request path.
 //!
 //! Prerequisite: `make artifacts` (runs python once, build-time only).
 //! Run with: `cargo run --release --example serve_e2e`
 
+use samullm::exec::pjrt::PjrtBackend;
 use samullm::runtime::default_artifacts_dir;
-use samullm::serve::{synthetic_requests, ServeEngine};
+use samullm::serve::{serve_requests, synthetic_requests};
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
@@ -15,25 +17,22 @@ fn main() -> anyhow::Result<()> {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(1);
     }
-    let engine = ServeEngine::load(&dir)?;
-    let m = engine.model();
+    let mut backend = PjrtBackend::load(&dir)?;
     println!(
-        "TinyGPT loaded on PJRT '{}': {} layers, d_model {}, batch {}, max_seq {} ({} params)",
-        m.platform(),
-        m.meta.config.n_layers,
-        m.meta.config.d_model,
-        m.batch(),
-        m.max_seq(),
-        m.meta.params.iter().map(|p| p.shape.iter().product::<usize>()).sum::<usize>()
+        "TinyGPT loaded on PJRT '{}': batch {}, max_seq {} — continuous batching via the \
+         shared vLLM-v0 scheduling core",
+        backend.platform(),
+        backend.batch(),
+        backend.max_seq(),
     );
 
     // A real small workload: 64 prompts, 16 prompt tokens, 24 new tokens.
-    let requests = synthetic_requests(64, 16, 24, 7);
-    println!("serving {} batched requests...", requests.len());
-    let (results, metrics) = engine.serve(&requests)?;
+    let (requests, prompts) = synthetic_requests(64, 16, 24, 7);
+    println!("serving {} requests...", requests.len());
+    let (results, metrics) = serve_requests(&mut backend, &requests, &prompts)?;
 
     println!(
-        "\n== results ==\n requests      : {}\n tokens        : {}\n wall time     : {:.2} s\n throughput    : {:.1} tok/s\n prefills      : {}\n decode steps  : {}\n mean latency  : {:.3} s\n p99 latency   : {:.3} s",
+        "\n== results ==\n requests      : {}\n tokens        : {}\n wall time     : {:.2} s\n throughput    : {:.1} tok/s\n prefills      : {}\n decode steps  : {}\n mean latency  : {:.3} s\n p50 latency   : {:.3} s\n p99 latency   : {:.3} s",
         metrics.n_requests,
         metrics.total_tokens,
         metrics.wall_time,
@@ -41,14 +40,15 @@ fn main() -> anyhow::Result<()> {
         metrics.prefills,
         metrics.decode_steps,
         metrics.mean_latency,
+        metrics.p50_latency,
         metrics.p99_latency
     );
     // Show a couple of generations to prove tokens flow end to end.
     for r in results.iter().take(3) {
-        println!("request {:>2}: generated {:?}", r.id, &r.generated);
+        println!("request {:>2}: generated {:?}", r.id, &r.tokens);
     }
     // Sanity: all budgets met.
-    assert!(results.iter().all(|r| r.generated.len() == 24));
+    assert!(results.iter().all(|r| r.tokens.len() == 24));
     println!("\nE2E OK — three-layer stack verified (record in EXPERIMENTS.md)");
     Ok(())
 }

@@ -1,13 +1,18 @@
 //! Text serving: tokenizes real prompt strings, serves them through the
-//! AOT-compiled TinyGPT on PJRT, and decodes the generations back to text
-//! (garbage-in-style text, of course — the weights are random — but the
-//! full tokenize → prefill → decode → detokenize loop is real).
+//! AOT-compiled TinyGPT on PJRT via the unified execution API, and
+//! decodes the generations back to text (garbage-in-style text, of course
+//! — the weights are random — but the full tokenize → prefill → decode →
+//! detokenize loop is real, continuous batching included).
 //!
 //! Prerequisite: `make artifacts`.
 //! Run with: `cargo run --release --example serve_text`
 
+use std::collections::HashMap;
+
+use samullm::engine::EngineRequest;
+use samullm::exec::pjrt::PjrtBackend;
 use samullm::runtime::{default_artifacts_dir, tokenizer};
-use samullm::serve::{ServeEngine, ServeRequest};
+use samullm::serve::serve_requests;
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
@@ -15,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(1);
     }
-    let engine = ServeEngine::load(&dir)?;
+    let mut backend = PjrtBackend::load(&dir)?;
 
     let prompts = [
         "Summarize the following document: ",
@@ -27,26 +32,24 @@ fn main() -> anyhow::Result<()> {
         "Data parallelism replicates the model ",
         "Preemption lets the scheduler reclaim ",
     ];
-    let requests: Vec<ServeRequest> = prompts
-        .iter()
-        .enumerate()
-        .map(|(i, p)| ServeRequest {
-            id: i as u64,
-            prompt: tokenizer::encode(p),
-            max_new_tokens: 16,
-        })
-        .collect();
+    let mut requests = vec![];
+    let mut prompt_tokens: HashMap<u64, Vec<i32>> = HashMap::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let toks = tokenizer::encode(p);
+        requests.push(EngineRequest::fresh(i as u64, toks.len().max(1) as u32, 16));
+        prompt_tokens.insert(i as u64, toks);
+    }
 
     println!("serving {} text prompts through TinyGPT...", requests.len());
-    let (results, metrics) = engine.serve(&requests)?;
+    let (results, metrics) = serve_requests(&mut backend, &requests, &prompt_tokens)?;
     for r in &results {
-        let text = tokenizer::decode(&r.generated);
+        let text = tokenizer::decode(&r.tokens);
         println!(
             "[{}] {:?} -> {:?} ({} tokens, {:.2}s)",
             r.id,
             prompts[r.id as usize],
             text,
-            r.generated.len(),
+            r.tokens.len(),
             r.latency
         );
     }

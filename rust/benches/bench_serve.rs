@@ -1,0 +1,140 @@
+//! Serving-discipline benchmark: the retired static-bucket loop (kept
+//! here as an inline reference implementation) vs the unified
+//! continuous-batching `PjrtBackend` on the same synthetic requests.
+//!
+//! Static buckets drain a whole batch before admitting the next one, so
+//! mixed output lengths leave seats idle; continuous batching refills a
+//! seat the moment its request completes. The gap shows up directly in
+//! wall time and decode-step counts.
+//!
+//! Requires `make artifacts`; skipped gracefully (and records the skip in
+//! `BENCH_serve.json`) when they are absent.
+
+use samullm::exec::pjrt::PjrtBackend;
+use samullm::runtime::{default_artifacts_dir, TinyGpt};
+use samullm::serve::{serve_requests, synthetic_requests};
+use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
+
+/// The old `ServeEngine::serve` static-bucket loop, preserved verbatim in
+/// spirit as the comparison baseline: fill a bucket of up to `batch()`
+/// prompts, prefill once, decode until every request in the bucket hits
+/// its budget, then move to the next bucket.
+fn serve_static_buckets(
+    model: &TinyGpt,
+    requests: &[(u64, Vec<i32>, usize)],
+) -> anyhow::Result<(u64, u64, u64)> {
+    let b = model.batch();
+    let s = model.max_seq();
+    let mut prefills = 0u64;
+    let mut decode_steps = 0u64;
+    let mut total_tokens = 0u64;
+    for bucket in requests.chunks(b) {
+        let mut tokens = vec![0i32; b * s];
+        let mut lengths = vec![1i32; b];
+        let mut budgets = vec![0usize; b];
+        for (row, (_, prompt, max_new)) in bucket.iter().enumerate() {
+            let plen = prompt.len().min(s - max_new.min(s - 1) - 1).max(1);
+            tokens[row * s..row * s + plen].copy_from_slice(&prompt[..plen]);
+            lengths[row] = plen as i32;
+            budgets[row] = max_new.min(s - plen - 1);
+        }
+        let out = model.prefill(&tokens, &lengths)?;
+        prefills += 1;
+        let mut state = out.state;
+        let mut next = model.argmax(&out.logits);
+        let mut pos: Vec<i32> = lengths.clone();
+        let mut produced = vec![0usize; b];
+        for row in 0..bucket.len() {
+            if budgets[row] > 0 {
+                produced[row] = 1;
+                total_tokens += 1;
+            }
+        }
+        let max_budget = budgets.iter().copied().max().unwrap_or(0);
+        for _step in 1..max_budget {
+            if (0..bucket.len()).all(|r| produced[r] >= budgets[r]) {
+                break;
+            }
+            let out = model.decode(&next, state, &pos)?;
+            decode_steps += 1;
+            state = out.state;
+            let sampled = model.argmax(&out.logits);
+            for row in 0..bucket.len() {
+                if produced[row] >= budgets[row] {
+                    continue;
+                }
+                pos[row] += 1;
+                next[row] = sampled[row];
+                produced[row] += 1;
+                total_tokens += 1;
+            }
+        }
+    }
+    Ok((prefills, decode_steps, total_tokens))
+}
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("bench_serve skipped: run `make artifacts` first");
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("serve".to_string())),
+            ("skipped", Json::Bool(true)),
+            ("reason", Json::Str("artifacts missing (make artifacts)".to_string())),
+        ])
+        .to_string();
+        std::fs::write("BENCH_serve.json", format!("{doc}\n")).expect("write BENCH_serve.json");
+        return;
+    }
+
+    // Mixed-length workload: the regime where static buckets waste seats.
+    let n = 48;
+    let (requests, prompts) = synthetic_requests(n, 12, 4, 11);
+    let mut mixed = requests.clone();
+    for (i, r) in mixed.iter_mut().enumerate() {
+        r.output_len = 4 + (i as u32 % 5) * 6; // 4..28 tokens
+    }
+    let bucket_reqs: Vec<(u64, Vec<i32>, usize)> = mixed
+        .iter()
+        .map(|r| (r.id, prompts[&r.id].clone(), r.output_len as usize))
+        .collect();
+
+    let model = TinyGpt::load(&dir).expect("load artifacts");
+    let mut g = BenchGroup::new("serve");
+    g.sample_size(5);
+
+    let static_median = g
+        .bench("static_buckets", || serve_static_buckets(&model, &bucket_reqs).unwrap())
+        .median;
+    let (s_prefills, s_decodes, s_tokens) = serve_static_buckets(&model, &bucket_reqs).unwrap();
+
+    let mut backend = PjrtBackend::load(&dir).unwrap();
+    let continuous_median = g
+        .bench("continuous_batching", || {
+            serve_requests(&mut backend, &mixed, &prompts).unwrap()
+        })
+        .median;
+    let (results, metrics) = serve_requests(&mut backend, &mixed, &prompts).unwrap();
+    assert_eq!(results.len(), n, "continuous batching must complete everything");
+    g.finish();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("skipped", Json::Bool(false)),
+        ("n_requests", Json::Num(n as f64)),
+        ("static_buckets_s", Json::Num(static_median)),
+        ("continuous_batching_s", Json::Num(continuous_median)),
+        ("speedup", Json::Num(static_median / continuous_median.max(1e-12))),
+        ("static_prefills", Json::Num(s_prefills as f64)),
+        ("static_decode_steps", Json::Num(s_decodes as f64)),
+        ("static_tokens", Json::Num(s_tokens as f64)),
+        ("continuous_prefills", Json::Num(metrics.prefills as f64)),
+        ("continuous_decode_steps", Json::Num(metrics.decode_steps as f64)),
+        ("continuous_tokens", Json::Num(metrics.total_tokens as f64)),
+        ("continuous_p99_latency_s", Json::Num(metrics.p99_latency)),
+    ])
+    .to_string();
+    std::fs::write("BENCH_serve.json", format!("{doc}\n")).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

@@ -38,20 +38,20 @@ fn main() {
     for n in [1000usize, 10000] {
         let reqs = requests(n, 3);
         g.bench(&format!("fast_forward_{n}"), || {
-            let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+            let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
             let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
             sim.run(None)
         });
         if n == 1000 {
             g.bench(&format!("exact_{n}"), || {
-                let mut cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+                let mut cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
                 cfg.fast_forward = false;
                 let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
                 sim.run(None)
             });
         }
         g.bench(&format!("linear_model_{n}"), || {
-            let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+            let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
             let mut sim = EngineSim::new(&spec, 1, &cm.iter_model, cfg, reqs.clone(), 0.0, 0);
             sim.run(None)
         });

@@ -4,6 +4,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::cluster::ClusterSpec;
 use crate::costmodel::IterLatency;
+use crate::exec::SimBackend;
 use crate::graph::AppGraph;
 use crate::models::{ModelSpec, Registry};
 use crate::plan::{ExecPlan, Stage, StageEntry};
@@ -52,15 +53,16 @@ pub fn max_heuristic_stage(
         }
         let stage = Stage { entries: vec![StageEntry { node, plan }] };
         let mut scratch = est_state.clone();
+        let mut backend = SimBackend::new(lat, cluster.mem_bytes);
         let res = scratch.run_stage(
             &stage,
             graph,
             registry,
-            lat,
-            cluster.mem_bytes,
+            &mut backend,
             &HashMap::new(),
             true,
             false,
+            None,
         );
         let t = res.end - res.start;
         if best.map(|(bt, _)| t < bt).unwrap_or(true) {

@@ -9,6 +9,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::exec;
 use crate::policy;
 use crate::spec::AppSpec;
 use crate::util::json::Json;
@@ -20,6 +21,11 @@ pub struct ExperimentConfig {
     pub app: AppSpec,
     /// Canonical policy name (aliases accepted on parse).
     pub policy: String,
+    /// Canonical execution backend name (`"sim"` or `"pjrt"`; aliases
+    /// accepted on parse).
+    pub backend: String,
+    /// Artifacts directory for the `pjrt` backend (`None` = default).
+    pub artifacts: Option<String>,
     /// Cluster GPU count (an A100 node).
     pub n_gpus: u32,
     /// Seed for workload generation, calibration and planning.
@@ -41,6 +47,14 @@ impl ExperimentConfig {
         Json::obj(vec![
             ("app", self.app.to_json()),
             ("policy", Json::Str(self.policy.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            (
+                "artifacts",
+                match &self.artifacts {
+                    Some(dir) => Json::Str(dir.clone()),
+                    None => Json::Null,
+                },
+            ),
             ("n_gpus", Json::Num(self.n_gpus as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("no_preemption", Json::Bool(self.no_preemption)),
@@ -60,6 +74,14 @@ impl ExperimentConfig {
                 v.get("policy").and_then(|p| p.as_str()).unwrap_or("samullm"),
             )?
             .to_string(),
+            backend: exec::canonical(
+                v.get("backend").and_then(|b| b.as_str()).unwrap_or("sim"),
+            )?
+            .to_string(),
+            artifacts: v
+                .get("artifacts")
+                .and_then(|a| a.as_str())
+                .map(|s| s.to_string()),
             n_gpus: v.get("n_gpus").and_then(|x| x.as_u64()).unwrap_or(8) as u32,
             seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(42),
             no_preemption: v.get("no_preemption").and_then(|x| x.as_bool()).unwrap_or(false),
@@ -82,6 +104,8 @@ mod tests {
         let c = ExperimentConfig {
             app: AppSpec::ensembling(1000, 256),
             policy: "ours".to_string(),
+            backend: "pjrt".to_string(),
+            artifacts: Some("custom/artifacts".to_string()),
             n_gpus: 8,
             seed: 42,
             no_preemption: false,
@@ -92,6 +116,8 @@ mod tests {
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.app, c.app);
         assert_eq!(back.policy, c.policy);
+        assert_eq!(back.backend, "pjrt");
+        assert_eq!(back.artifacts.as_deref(), Some("custom/artifacts"));
         assert_eq!(back.seed, 42);
         assert_eq!(back.threads, 4);
         assert!(!back.sim_cache);
@@ -108,6 +134,17 @@ mod tests {
         // Planner knobs default to auto threads + caching on.
         assert_eq!(c.threads, 0);
         assert!(c.sim_cache);
+        // Backend defaults to the simulated substrate.
+        assert_eq!(c.backend, "sim");
+        assert!(c.artifacts.is_none());
+    }
+
+    #[test]
+    fn backend_aliases_and_rejection() {
+        let j = r#"{"app":{"kind":"ensembling"},"backend":"real"}"#;
+        assert_eq!(ExperimentConfig::from_json(j).unwrap().backend, "pjrt");
+        let j = r#"{"app":{"kind":"ensembling"},"backend":"cuda"}"#;
+        assert!(ExperimentConfig::from_json(j).is_err());
     }
 
     #[test]
@@ -133,6 +170,8 @@ mod tests {
             let c = ExperimentConfig {
                 app: app.clone(),
                 policy: "min-heuristic".to_string(),
+                backend: "sim".to_string(),
+                artifacts: None,
                 n_gpus: 8,
                 seed: 7,
                 no_preemption: true,

@@ -13,10 +13,12 @@
 //!   ground-truth model (+ jitter) — this is the substitute for executing
 //!   on real A100s.
 
+pub mod sched;
 pub mod session;
 pub mod sim;
 
-pub use sim::{EngineConfig, EngineSim, SimOutcome};
+pub use sched::{EngineConfig, EngineEvent, EventKind, SimOutcome, StepExec, StepReq};
+pub use sim::EngineSim;
 
 
 /// A request as fed to the engine: lengths are already resolved (the

@@ -1,0 +1,913 @@
+//! The extracted vLLM-v0 scheduling core, shared by every execution
+//! backend (§4.3's running phase meets §4.2's simulator).
+//!
+//! [`SchedCore`] owns the *scheduling discipline* — FCFS admission bounded
+//! by `max_num_seqs`/`max_batch_tokens`, continuous batching, paged-KV
+//! block accounting with preemption-by-recompute, ready times and fused
+//! request chains — but not the *iteration execution*. Each iteration is
+//! delegated to a [`StepExec`]:
+//!
+//! * [`crate::engine::sim::OracleStep`] **prices** iterations with an
+//!   [`crate::costmodel::IterLatency`] oracle in virtual time (supports
+//!   the fast-forward decode-span approximation) — this is the classic
+//!   [`crate::engine::EngineSim`], bit-identical to the pre-extraction
+//!   simulator;
+//! * [`crate::exec::pjrt::PjrtStep`] **executes** iterations on the real
+//!   PJRT runtime ([`crate::runtime::TinyGpt`]) and reports measured
+//!   wall-clock durations, so the same scheduler drives real serving.
+//!
+//! The core also emits a unified stream of timestamped [`EngineEvent`]s
+//! (`Admitted`/`Prefill`/`Decode`/`Preempted`/`Completed`) from which the
+//! runner and metrics layers build stage records, run reports and Gantt
+//! charts identically for every backend.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use anyhow::{anyhow, Result};
+
+use super::EngineRequest;
+use crate::models::ModelSpec;
+use crate::util::rng::Rng;
+
+const GIB: f64 = (1u64 << 30) as f64;
+
+/// Engine scheduling parameters (vLLM defaults).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Maximum running requests per iteration (vLLM `max_num_seqs`).
+    pub max_num_seqs: usize,
+    /// Maximum prompt tokens batched into one prefill iteration.
+    pub max_batch_tokens: u64,
+    /// Tokens per KV block.
+    pub block_tokens: u32,
+    /// Blocks kept free as admission watermark.
+    pub watermark_blocks: u64,
+    /// Enable event-jump acceleration for uniform decode runs (only
+    /// honoured when the executor can price a span — see
+    /// [`StepExec::decode_span`]).
+    pub fast_forward: bool,
+    /// Per-iteration multiplicative jitter σ (ground-truth realism);
+    /// `None` for the planner's deterministic estimates.
+    pub noise_sigma: Option<f64>,
+    /// GPU memory available for KV blocks (set from cluster + weights).
+    pub kv_bytes_budget: u64,
+}
+
+impl EngineConfig {
+    /// Standard config for a model replica under `tp`, on a cluster with
+    /// `mem_bytes` per GPU.
+    ///
+    /// Errors (instead of silently producing a zero-block KV budget that
+    /// would wedge the engine with no admissible requests) when the
+    /// weights don't fit beside the per-GPU memory, or when the remaining
+    /// KV budget cannot hold even one block above the admission watermark.
+    pub fn standard(spec: &ModelSpec, tp: u32, mem_bytes: u64) -> Result<Self> {
+        let weights = spec.weight_bytes_per_gpu(tp);
+        if weights >= mem_bytes {
+            return Err(anyhow!(
+                "{}: weights need {:.1} GiB/GPU under tp={tp} but only {:.1} GiB are \
+                 available — no KV budget remains (use a larger tp or more memory)",
+                spec.name,
+                weights as f64 / GIB,
+                mem_bytes as f64 / GIB,
+            ));
+        }
+        let kv_budget = (mem_bytes - weights) * tp as u64;
+        let cfg = EngineConfig {
+            max_num_seqs: 256,
+            max_batch_tokens: 4096,
+            block_tokens: 16,
+            watermark_blocks: 8,
+            fast_forward: true,
+            noise_sigma: None,
+            kv_bytes_budget: kv_budget,
+        };
+        let block_bytes =
+            cfg.block_tokens as u64 * spec.kv_bytes_per_token(tp) * tp as u64;
+        if kv_budget < block_bytes.saturating_mul(cfg.watermark_blocks + 1) {
+            return Err(anyhow!(
+                "{}: KV budget {:.2} GiB under tp={tp} cannot hold one block above the \
+                 admission watermark — the engine would never admit a request",
+                spec.name,
+                kv_budget as f64 / GIB,
+            ));
+        }
+        Ok(cfg)
+    }
+
+    /// A plan is infeasible if the weights don't fit or not even one
+    /// max-length sequence's KV fits beside them (§3's validity rule).
+    pub fn feasible(&self, spec: &ModelSpec, tp: u32, mem_bytes: u64) -> bool {
+        if spec.weight_bytes_per_gpu(tp) >= mem_bytes {
+            return false;
+        }
+        let per_seq = spec.kv_bytes_per_token(tp) * tp as u64 * spec.max_seq as u64;
+        self.kv_bytes_budget >= per_seq / 4
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ReqState {
+    Blocked,
+    Waiting,
+    Running,
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    req: EngineRequest,
+    state: ReqState,
+    /// Tokens currently materialised in KV (prompt + generated so far).
+    ctx: u32,
+    blocks: u64,
+    /// Admission order, for preempt-latest-first.
+    admit_seq: u64,
+}
+
+/// Aggregate result of driving a scheduling core to (partial) completion.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimOutcome {
+    /// Requests that completed.
+    pub finished: usize,
+    /// Virtual time at the end of the run (absolute for stage replays;
+    /// relative when the simulation started at a canonical origin, as in
+    /// [`crate::runner::state::ExecState::simulate_node_fast`]).
+    pub clock: f64,
+    /// Time spent actually executing iterations (vs waiting for inputs).
+    pub busy_time: f64,
+    /// Decode iterations executed (fast-forwarded runs count each step).
+    pub decode_iterations: u64,
+    /// Prefill iterations executed.
+    pub prefill_iterations: u64,
+    /// Preemption-by-recompute events.
+    pub preemptions: u64,
+    /// Output tokens produced.
+    pub tokens_generated: u64,
+}
+
+/// A scheduler-side view of one request inside an iteration, handed to the
+/// [`StepExec`] that prices or executes the iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct StepReq {
+    /// Request id.
+    pub id: u64,
+    /// Prompt length in tokens.
+    pub input_len: u32,
+    /// Decode tokens produced before this iteration.
+    pub generated: u32,
+    /// Tokens materialised in KV (prompt + generated, +1 once admitted).
+    pub ctx: u32,
+    /// Whether the request's KV survived a stage boundary (re-admission
+    /// skips the re-prefill *price*; real executors rebuild state anyway).
+    pub kv_resident: bool,
+}
+
+/// One timestamped entry of the unified engine event stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineEvent {
+    /// Graph node the engine runs (0 when standalone).
+    pub node: usize,
+    /// Data-parallel replica index within the node.
+    pub replica: usize,
+    /// Clock at which the event was recorded (virtual seconds for the sim
+    /// backend, measured seconds for real backends).
+    pub t: f64,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+/// Event payloads of the unified stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A waiting request joined a prefill batch.
+    Admitted {
+        /// Request id.
+        req: u64,
+    },
+    /// A prefill iteration executed.
+    Prefill {
+        /// Requests in the batch.
+        batch: usize,
+        /// Prompt tokens processed (KV-resident re-admissions count 1).
+        new_tokens: u64,
+        /// Iteration latency in seconds (jitter included).
+        dur: f64,
+    },
+    /// One decode iteration — or a fast-forwarded uniform run of `iters`.
+    Decode {
+        /// Running requests in the batch.
+        batch: usize,
+        /// Iterations covered by this event (1 unless fast-forwarded).
+        iters: u32,
+        /// Total KV context across the batch before the iteration(s).
+        total_ctx: u64,
+        /// Longest context in the batch before the iteration(s).
+        max_ctx: u32,
+        /// Total latency of the covered iterations (jitter included).
+        dur: f64,
+    },
+    /// A running request was preempted by recompute (KV blocks reclaimed).
+    Preempted {
+        /// Request id.
+        req: u64,
+    },
+    /// A request generated its full output.
+    Completed {
+        /// Request id.
+        req: u64,
+    },
+}
+
+/// How one scheduler iteration is priced or executed. See module docs.
+pub trait StepExec {
+    /// Execute (or price) one prefill iteration over `admitted` (in FCFS
+    /// batch order); `running` is the set of already-running requests
+    /// (real executors rebuild device state for them). Returns the
+    /// iteration latency in seconds, before jitter.
+    fn prefill(&mut self, admitted: &[StepReq], running: &[StepReq]) -> f64;
+
+    /// Execute (or price) one decode iteration over `running`. Returns the
+    /// iteration latency in seconds, before jitter.
+    fn decode(&mut self, running: &[StepReq]) -> f64;
+
+    /// Price a uniform run of `n` decode iterations at once (fast-forward
+    /// acceleration, midpoint-context pricing). Return `None` when every
+    /// iteration must actually execute (real hardware); the core then
+    /// falls back to single-iteration decodes.
+    fn decode_span(&mut self, running: &[StepReq], n: u32) -> Option<f64>;
+
+    /// Cheap single-iteration latency estimate at the current context,
+    /// used only to bound fast-forward jumps against a deadline. Never
+    /// executes anything.
+    fn estimate_decode(&self, running: &[StepReq]) -> f64;
+
+    /// The first error the executor encountered, if any (real executors
+    /// surface device failures here; pricing executors never fail).
+    fn take_error(&mut self) -> Option<anyhow::Error> {
+        None
+    }
+}
+
+type ReadyKey = Reverse<(u64, u64, usize)>; // (ready_time bits, fcfs seq, slot)
+
+/// The shared single-replica scheduling core. See module docs.
+pub struct SchedCore<X: StepExec> {
+    exec: X,
+    cfg: EngineConfig,
+    blocks_total: u64,
+    free_blocks: u64,
+    slots: Vec<Slot>,
+    waiting: BinaryHeap<ReadyKey>,
+    running: Vec<usize>,
+    id_to_slot: HashMap<u64, usize>,
+    clock: f64,
+    outcome: SimOutcome,
+    admit_counter: u64,
+    fcfs_counter: u64,
+    noise: Option<Rng>,
+    /// Active run() deadline — bounds fast-forward jumps so a stage replay
+    /// never overshoots its stage-end boundary.
+    deadline: Option<f64>,
+    events: Option<Vec<EngineEvent>>,
+    ev_node: usize,
+    ev_replica: usize,
+    scratch_admit: Vec<StepReq>,
+    scratch_run: Vec<StepReq>,
+    /// Completion times per request id (for the communicator).
+    pub completions: Vec<(u64, f64)>,
+    /// Optional (clock, running-count) trace for Fig. 3.
+    pub iter_trace: Option<Vec<(f64, usize)>>,
+}
+
+/// Fill `dst` with step views of the slots named by `idxs`, in order.
+fn fill_step_reqs(dst: &mut Vec<StepReq>, slots: &[Slot], idxs: &[usize]) {
+    dst.clear();
+    dst.extend(idxs.iter().map(|&i| {
+        let s = &slots[i];
+        StepReq {
+            id: s.req.id,
+            input_len: s.req.input_len,
+            generated: s.req.generated,
+            ctx: s.ctx,
+            kv_resident: s.req.kv_resident,
+        }
+    }));
+}
+
+impl<X: StepExec> SchedCore<X> {
+    /// Build a scheduling core over `requests`, starting its clock at
+    /// `start_time`. KV capacity is `cfg.kv_bytes_budget / block_bytes`
+    /// blocks (`block_bytes` = bytes one KV block occupies — model- and
+    /// tp-dependent for priced simulations, nominal for real executors).
+    pub fn with_exec(
+        exec: X,
+        cfg: EngineConfig,
+        block_bytes: u64,
+        requests: Vec<EngineRequest>,
+        start_time: f64,
+        noise_seed: u64,
+    ) -> Self {
+        let blocks_total = (cfg.kv_bytes_budget / block_bytes.max(1)).max(1);
+        let noise = cfg.noise_sigma.map(|_| Rng::new(noise_seed ^ 0x5EED_0E0E));
+        let mut core = SchedCore {
+            exec,
+            cfg,
+            blocks_total,
+            free_blocks: blocks_total,
+            slots: Vec::with_capacity(requests.len()),
+            waiting: BinaryHeap::with_capacity(requests.len()),
+            running: vec![],
+            id_to_slot: HashMap::with_capacity(requests.len()),
+            clock: start_time,
+            outcome: SimOutcome::default(),
+            admit_counter: 0,
+            fcfs_counter: 0,
+            noise,
+            deadline: None,
+            events: None,
+            ev_node: 0,
+            ev_replica: 0,
+            scratch_admit: vec![],
+            scratch_run: vec![],
+            completions: vec![],
+            iter_trace: None,
+        };
+        for req in requests {
+            core.push_request(req);
+        }
+        core
+    }
+
+    fn push_request(&mut self, req: EngineRequest) {
+        let idx = self.slots.len();
+        let state = if req.is_done() {
+            self.outcome.finished += 1;
+            ReqState::Done
+        } else if req.ready_time.is_infinite() {
+            ReqState::Blocked
+        } else {
+            ReqState::Waiting
+        };
+        self.id_to_slot.insert(req.id, idx);
+        self.slots.push(Slot { req, state, ctx: 0, blocks: 0, admit_seq: 0 });
+        if state == ReqState::Waiting {
+            self.enqueue_waiting(idx);
+        }
+    }
+
+    fn enqueue_waiting(&mut self, idx: usize) {
+        let t = self.slots[idx].req.ready_time.max(0.0);
+        self.waiting.push(Reverse((t.to_bits(), self.fcfs_counter, idx)));
+        self.fcfs_counter += 1;
+    }
+
+    /// Current virtual (or measured) time.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Total KV blocks the replica owns.
+    pub fn blocks_total(&self) -> u64 {
+        self.blocks_total
+    }
+
+    /// KV blocks currently free.
+    pub fn free_blocks(&self) -> u64 {
+        self.free_blocks
+    }
+
+    /// Whether every request completed.
+    pub fn is_done(&self) -> bool {
+        self.slots.iter().all(|s| s.state == ReqState::Done)
+    }
+
+    /// Requests not yet completed.
+    pub fn n_unfinished(&self) -> usize {
+        self.slots.iter().filter(|s| s.state != ReqState::Done).count()
+    }
+
+    /// Mutable access to the step executor (backends read errors and
+    /// harvest produced tokens through this).
+    pub fn exec_mut(&mut self) -> &mut X {
+        &mut self.exec
+    }
+
+    /// Record timestamped [`EngineEvent`]s for this run, labelled with the
+    /// given graph node and replica index.
+    pub fn enable_events(&mut self, node: usize, replica: usize) {
+        self.ev_node = node;
+        self.ev_replica = replica;
+        self.events = Some(vec![]);
+    }
+
+    /// Take the recorded event stream (empty unless
+    /// [`SchedCore::enable_events`] was called before running).
+    pub fn take_events(&mut self) -> Vec<EngineEvent> {
+        self.events.take().unwrap_or_default()
+    }
+
+    fn emit(&mut self, kind: EventKind) {
+        if let Some(evs) = &mut self.events {
+            evs.push(EngineEvent {
+                node: self.ev_node,
+                replica: self.ev_replica,
+                t: self.clock,
+                kind,
+            });
+        }
+    }
+
+    fn jitter(&mut self, t: f64) -> f64 {
+        match (&mut self.noise, self.cfg.noise_sigma) {
+            (Some(rng), Some(sigma)) => t * (1.0 + sigma * rng.normal()).max(0.2),
+            _ => t,
+        }
+    }
+
+    fn blocks_for(&self, tokens: u32) -> u64 {
+        (tokens as u64).div_ceil(self.cfg.block_tokens as u64)
+    }
+
+    /// Earliest ready time among waiting requests.
+    fn next_ready(&self) -> Option<f64> {
+        self.waiting.peek().map(|Reverse((bits, _, _))| f64::from_bits(*bits))
+    }
+
+    /// Try to build a prefill batch (FCFS by ready time, token/block bounded).
+    fn admit(&mut self) -> Vec<usize> {
+        let mut batch = vec![];
+        let mut batch_tokens = 0u64;
+        while let Some(&Reverse((bits, _, idx))) = self.waiting.peek() {
+            if self.running.len() + batch.len() >= self.cfg.max_num_seqs {
+                break;
+            }
+            if f64::from_bits(bits) > self.clock {
+                break; // FCFS: don't skip over not-yet-ready requests
+            }
+            let slot = &self.slots[idx];
+            debug_assert_eq!(slot.state, ReqState::Waiting);
+            let prompt = slot.req.input_len + slot.req.generated;
+            // KV-resident requests re-enter without re-prefilling their
+            // carried context; they only cost one admission token.
+            let prefill_tokens = if slot.req.kv_resident && slot.req.generated > 0 {
+                1
+            } else {
+                prompt
+            };
+            if batch_tokens + prefill_tokens as u64 > self.cfg.max_batch_tokens && !batch.is_empty() {
+                break;
+            }
+            let need = self.blocks_for(prompt + 1);
+            if self.free_blocks < need + self.cfg.watermark_blocks {
+                break;
+            }
+            self.waiting.pop();
+            self.free_blocks -= need;
+            let slot = &mut self.slots[idx];
+            slot.blocks = need;
+            slot.ctx = prompt + 1; // prefill emits the first output token
+            slot.state = ReqState::Running;
+            slot.admit_seq = self.admit_counter;
+            self.admit_counter += 1;
+            batch_tokens += prefill_tokens as u64;
+            batch.push(idx);
+        }
+        batch
+    }
+
+    fn finish(&mut self, idx: usize) {
+        let (id, next) = {
+            let slot = &mut self.slots[idx];
+            slot.state = ReqState::Done;
+            self.free_blocks += slot.blocks;
+            slot.blocks = 0;
+            (slot.req.id, slot.req.chain_next)
+        };
+        self.outcome.finished += 1;
+        self.completions.push((id, self.clock));
+        self.emit(EventKind::Completed { req: id });
+        if let Some(nid) = next {
+            if let Some(&nidx) = self.id_to_slot.get(&nid) {
+                if self.slots[nidx].state == ReqState::Blocked {
+                    self.slots[nidx].req.ready_time = self.clock;
+                    self.slots[nidx].state = ReqState::Waiting;
+                    self.enqueue_waiting(nidx);
+                }
+            }
+        }
+    }
+
+    /// Preempt the most recently admitted running request (recompute).
+    fn preempt_latest(&mut self) -> bool {
+        let Some(pos) = self
+            .running
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &i)| self.slots[i].admit_seq)
+            .map(|(p, _)| p)
+        else {
+            return false;
+        };
+        let idx = self.running.swap_remove(pos);
+        let slot = &mut self.slots[idx];
+        self.free_blocks += slot.blocks;
+        slot.blocks = 0;
+        slot.ctx = 0;
+        slot.state = ReqState::Waiting;
+        slot.req.ready_time = self.clock;
+        slot.req.kv_resident = false; // recompute: KV is gone
+        let id = slot.req.id;
+        self.outcome.preemptions += 1;
+        self.emit(EventKind::Preempted { req: id });
+        self.enqueue_waiting(idx);
+        true
+    }
+
+    fn record_trace(&mut self) {
+        if let Some(tr) = &mut self.iter_trace {
+            tr.push((self.clock, self.running.len()));
+        }
+    }
+
+    /// Run one scheduling step. Returns `false` if nothing could be done
+    /// right now (caller decides whether to idle-advance).
+    pub fn step(&mut self) -> bool {
+        let batch = self.admit();
+        if !batch.is_empty() {
+            if self.events.is_some() {
+                for &i in &batch {
+                    let id = self.slots[i].req.id;
+                    self.emit(EventKind::Admitted { req: id });
+                }
+            }
+            fill_step_reqs(&mut self.scratch_admit, &self.slots, &batch);
+            fill_step_reqs(&mut self.scratch_run, &self.slots, &self.running);
+            let t = self.exec.prefill(&self.scratch_admit, &self.scratch_run);
+            let t = self.jitter(t);
+            self.clock += t;
+            self.outcome.busy_time += t;
+            self.outcome.prefill_iterations += 1;
+            if self.events.is_some() {
+                let new_tokens: u64 = self
+                    .scratch_admit
+                    .iter()
+                    .map(|r| {
+                        if r.kv_resident && r.generated > 0 {
+                            1
+                        } else {
+                            (r.input_len + r.generated) as u64
+                        }
+                    })
+                    .sum();
+                self.emit(EventKind::Prefill { batch: batch.len(), new_tokens, dur: t });
+            }
+            for &i in &batch {
+                self.slots[i].req.generated += 1;
+                self.outcome.tokens_generated += 1;
+                if self.slots[i].req.is_done() {
+                    self.finish(i);
+                } else {
+                    self.running.push(i);
+                }
+            }
+            self.record_trace();
+            return true;
+        }
+
+        if self.running.is_empty() {
+            return false;
+        }
+
+        if self.cfg.fast_forward {
+            self.decode_run()
+        } else {
+            self.decode_once()
+        }
+    }
+
+    /// One decode iteration, exact.
+    fn decode_once(&mut self) -> bool {
+        // Grow KV; preempt on OOM.
+        let mut i = 0;
+        while i < self.running.len() {
+            let idx = self.running[i];
+            let need_block = self.slots[idx].ctx % self.cfg.block_tokens == 0;
+            if need_block {
+                while self.free_blocks < 1 {
+                    if self.running.len() <= 1 || !self.preempt_latest() {
+                        break;
+                    }
+                }
+                if self.slots[idx].state != ReqState::Running {
+                    // preempt_latest evicted `idx` itself; running[i] now
+                    // holds a different request — revisit this position.
+                    continue;
+                }
+                if self.free_blocks >= 1 {
+                    self.free_blocks -= 1;
+                    self.slots[idx].blocks += 1;
+                }
+            }
+            i += 1;
+        }
+        let batch = self.running.len();
+        if batch == 0 {
+            return false;
+        }
+        fill_step_reqs(&mut self.scratch_run, &self.slots, &self.running);
+        let t = self.exec.decode(&self.scratch_run);
+        let t = self.jitter(t);
+        self.clock += t;
+        self.outcome.busy_time += t;
+        self.outcome.decode_iterations += 1;
+        self.outcome.tokens_generated += batch as u64;
+        if self.events.is_some() {
+            let total_ctx: u64 = self.scratch_run.iter().map(|r| r.ctx as u64).sum();
+            let max_ctx = self.scratch_run.iter().map(|r| r.ctx).max().unwrap_or(0);
+            self.emit(EventKind::Decode { batch, iters: 1, total_ctx, max_ctx, dur: t });
+        }
+        let mut j = 0;
+        while j < self.running.len() {
+            let idx = self.running[j];
+            let slot = &mut self.slots[idx];
+            slot.ctx += 1;
+            slot.req.generated += 1;
+            if slot.req.is_done() {
+                self.running.swap_remove(j);
+                self.finish(idx);
+            } else {
+                j += 1;
+            }
+        }
+        self.record_trace();
+        true
+    }
+
+    /// Fast path: jump over `n` uniform decode iterations where `n` is
+    /// bounded by the next completion, the next admission-ready prompt,
+    /// and the block budget. The executor prices the run at its midpoint
+    /// context; executors that must materialise every token decline the
+    /// span and the core falls back to exact single iterations.
+    fn decode_run(&mut self) -> bool {
+        let batch = self.running.len();
+        let min_remaining = self
+            .running
+            .iter()
+            .map(|&i| self.slots[i].req.remaining())
+            .min()
+            .unwrap_or(0)
+            .max(1);
+        // Admission is impossible while the running set is full, no matter
+        // how many prompts are ready — only a completion (already bounded
+        // by `min_remaining`) can open a slot.
+        let until_ready = if self.running.len() >= self.cfg.max_num_seqs {
+            u32::MAX
+        } else {
+            match self.next_ready() {
+                Some(t) if t > self.clock => u32::MAX,
+                Some(_) => 1, // a prompt is admissible now -> go exact
+                None => u32::MAX,
+            }
+        };
+        let spare = self.free_blocks.saturating_sub(self.cfg.watermark_blocks);
+        let until_oom = if spare == 0 {
+            1
+        } else {
+            ((spare * self.cfg.block_tokens as u64) / batch as u64).max(1).min(u32::MAX as u64)
+                as u32
+        };
+        let mut n = min_remaining.min(until_oom).min(until_ready).max(1);
+        // Deadline bound: estimate the per-iteration cost at the current
+        // context and cap the jump so the clock lands at most one
+        // iteration past the deadline (stage replays depend on this).
+        if let Some(d) = self.deadline {
+            fill_step_reqs(&mut self.scratch_run, &self.slots, &self.running);
+            let t_est = self.exec.estimate_decode(&self.scratch_run).max(1e-9);
+            let room = ((d - self.clock) / t_est).ceil();
+            if room < n as f64 {
+                n = (room.max(1.0)) as u32;
+            }
+        }
+        let n = n;
+        if n <= 2 {
+            return self.decode_once();
+        }
+
+        fill_step_reqs(&mut self.scratch_run, &self.slots, &self.running);
+        let Some(t_span) = self.exec.decode_span(&self.scratch_run, n) else {
+            return self.decode_once();
+        };
+        let t = self.jitter(t_span);
+        self.clock += t;
+        self.outcome.busy_time += t;
+        self.outcome.decode_iterations += n as u64;
+        self.outcome.tokens_generated += n as u64 * batch as u64;
+        if self.events.is_some() {
+            let total_ctx: u64 = self.scratch_run.iter().map(|r| r.ctx as u64).sum();
+            let max_ctx = self.scratch_run.iter().map(|r| r.ctx).max().unwrap_or(0);
+            self.emit(EventKind::Decode { batch, iters: n, total_ctx, max_ctx, dur: t });
+        }
+
+        let bt = self.cfg.block_tokens as u64;
+        let mut blocks_used = 0u64;
+        let mut j = 0;
+        while j < self.running.len() {
+            let idx = self.running[j];
+            let slot = &mut self.slots[idx];
+            let old_ctx = slot.ctx;
+            slot.ctx += n;
+            slot.req.generated += n;
+            let new_blocks = (slot.ctx as u64).div_ceil(bt) - (old_ctx as u64).div_ceil(bt);
+            blocks_used += new_blocks;
+            slot.blocks += new_blocks;
+            if slot.req.is_done() {
+                self.running.swap_remove(j);
+                self.finish(idx);
+            } else {
+                j += 1;
+            }
+        }
+        self.free_blocks = self.free_blocks.saturating_sub(blocks_used);
+        self.record_trace();
+        true
+    }
+
+    /// Advance the clock while nothing is runnable (pipeline idling).
+    /// Returns `false` if there is nothing to wait for (done, or blocked
+    /// on a chain predecessor that lives in another engine).
+    pub fn idle_until_ready(&mut self) -> bool {
+        match self.next_ready() {
+            Some(t) if t > self.clock => {
+                self.clock = t;
+                true
+            }
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    /// Run to completion (or until `deadline`). Returns the outcome so far.
+    ///
+    /// If requests are ready but can never be admitted (e.g. a
+    /// hand-crafted config with a zero KV budget), the run bails out with
+    /// the partial outcome instead of spinning forever.
+    pub fn run(&mut self, deadline: Option<f64>) -> SimOutcome {
+        self.deadline = deadline;
+        loop {
+            if let Some(d) = deadline {
+                if self.clock >= d {
+                    break;
+                }
+            }
+            if self.step() {
+                continue;
+            }
+            let before = self.clock;
+            if !self.idle_until_ready() {
+                break;
+            }
+            if self.clock <= before && !self.step() {
+                // Wedged: ready work that can never be admitted.
+                break;
+            }
+        }
+        self.deadline = None;
+        self.outcome.clock = self.clock;
+        self.outcome.clone()
+    }
+
+    /// Extract unfinished requests (for stage transitions / preemption).
+    /// Running requests keep their generated progress but lose KV state —
+    /// they will re-prefill `input + generated` tokens when re-admitted.
+    pub fn drain_unfinished(&mut self) -> Vec<EngineRequest> {
+        let mut out = vec![];
+        for slot in &mut self.slots {
+            if slot.state != ReqState::Done {
+                out.push(slot.req);
+                slot.state = ReqState::Done;
+            }
+        }
+        self.running.clear();
+        self.waiting.clear();
+        out
+    }
+
+    /// The accumulated outcome so far.
+    pub fn outcome(&self) -> &SimOutcome {
+        &self.outcome
+    }
+
+    /// Record a (clock, running-count) point per iteration (Fig. 3).
+    pub fn enable_trace(&mut self) {
+        self.iter_trace = Some(vec![]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::models::Registry;
+
+    #[test]
+    fn standard_config_errors_when_weights_do_not_fit() {
+        let reg = Registry::paper();
+        let spec = reg.get("llama-2-70b-chat").unwrap();
+        // A 70B model cannot fit a single 16 GiB GPU under tp=1.
+        let err = EngineConfig::standard(spec, 1, 16u64 << 30).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("llama-2-70b-chat"), "{msg}");
+        assert!(msg.contains("tp=1"), "{msg}");
+        // The same model under a sane cluster is fine.
+        assert!(EngineConfig::standard(spec, 4, ClusterSpec::a100_node(8).mem_bytes).is_ok());
+    }
+
+    #[test]
+    fn standard_config_errors_on_watermark_starvation() {
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap();
+        // Barely more memory than the weights: KV budget below one block
+        // above the watermark must be rejected, not wedge the engine.
+        let weights = spec.weight_bytes_per_gpu(1);
+        let err = EngineConfig::standard(spec, 1, weights + 1024).unwrap_err();
+        assert!(err.to_string().contains("watermark"), "{err}");
+    }
+
+    #[test]
+    fn run_bails_out_instead_of_wedging_on_zero_blocks() {
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap().clone();
+        let hw = crate::costmodel::HardwareModel::new(ClusterSpec::a100_node(8));
+        let mut cfg =
+            EngineConfig::standard(&spec, 1, ClusterSpec::a100_node(8).mem_bytes).unwrap();
+        // Hand-craft a degenerate budget the constructor would reject.
+        cfg.kv_bytes_budget = 1;
+        let reqs = vec![EngineRequest::fresh(0, 64, 32)];
+        let mut sim = crate::engine::EngineSim::new(&spec, 1, &hw, cfg, reqs, 0.0, 0);
+        let out = sim.run(None);
+        assert_eq!(out.finished, 0, "nothing is admissible");
+        assert!(!sim.is_done());
+    }
+
+    #[test]
+    fn event_stream_covers_the_request_lifecycle() {
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap().clone();
+        let cluster = ClusterSpec::a100_node(8);
+        let hw = crate::costmodel::HardwareModel::new(cluster.clone());
+        let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
+        let reqs: Vec<EngineRequest> =
+            (0..20).map(|i| EngineRequest::fresh(i, 25, 40)).collect();
+        let mut sim = crate::engine::EngineSim::new(&spec, 1, &hw, cfg, reqs, 0.0, 0);
+        sim.enable_events(3, 1);
+        let out = sim.run(None);
+        let events = sim.take_events();
+        assert!(!events.is_empty());
+        assert!(events.iter().all(|e| e.node == 3 && e.replica == 1));
+        let count = |f: fn(&EventKind) -> bool| events.iter().filter(|e| f(&e.kind)).count();
+        assert_eq!(count(|k| matches!(k, EventKind::Admitted { .. })), 20);
+        assert_eq!(count(|k| matches!(k, EventKind::Completed { .. })), 20);
+        let prefills = count(|k| matches!(k, EventKind::Prefill { .. })) as u64;
+        assert_eq!(prefills, out.prefill_iterations);
+        let decode_iters: u64 = events
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Decode { iters, .. } => Some(iters as u64),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(decode_iters, out.decode_iterations);
+        // Event durations add up to the busy time.
+        let dur: f64 = events
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Prefill { dur, .. } | EventKind::Decode { dur, .. } => Some(dur),
+                _ => None,
+            })
+            .sum();
+        assert!((dur - out.busy_time).abs() < 1e-9, "dur {dur} vs busy {}", out.busy_time);
+        // Timestamps are monotone.
+        assert!(events.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn events_do_not_change_results() {
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap().clone();
+        let cluster = ClusterSpec::a100_node(8);
+        let hw = crate::costmodel::HardwareModel::new(cluster.clone());
+        let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
+        let reqs: Vec<EngineRequest> =
+            (0..64).map(|i| EngineRequest::fresh(i, 20, 30 + (i % 17) as u32)).collect();
+        let quiet =
+            crate::engine::EngineSim::new(&spec, 1, &hw, cfg.clone(), reqs.clone(), 0.0, 0)
+                .run(None);
+        let mut traced = crate::engine::EngineSim::new(&spec, 1, &hw, cfg, reqs, 0.0, 0);
+        traced.enable_events(0, 0);
+        let loud = traced.run(None);
+        assert_eq!(quiet.clock.to_bits(), loud.clock.to_bits());
+        assert_eq!(quiet, loud);
+    }
+}

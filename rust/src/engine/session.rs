@@ -6,6 +6,7 @@
 //! "put them all together") is the max over replica completion times plus
 //! any loading cost the caller accounts separately.
 
+use super::sched::EngineEvent;
 use super::sim::{EngineConfig, EngineSim, SimOutcome};
 use super::EngineRequest;
 use crate::costmodel::{flops, IterLatency};
@@ -83,6 +84,7 @@ pub struct SessionOutcome {
 
 /// Run a `(dp, tp)` session to completion (or `deadline`), starting at
 /// `start_time`.
+#[allow(clippy::too_many_arguments)] // established engine-session signature
 pub fn run_session(
     spec: &ModelSpec,
     dp: u32,
@@ -94,20 +96,50 @@ pub fn run_session(
     deadline: Option<f64>,
     noise_seed: u64,
 ) -> SessionOutcome {
+    run_session_traced(
+        spec, dp, tp, lat, cfg, requests, start_time, deadline, noise_seed, 0, None,
+    )
+}
+
+/// [`run_session`] with an optional unified event stream: per-replica
+/// [`EngineEvent`]s are appended to `trace`, labelled with `node` and the
+/// replica index. Results are identical whether or not events are
+/// recorded.
+#[allow(clippy::too_many_arguments)] // established engine-session signature
+pub fn run_session_traced(
+    spec: &ModelSpec,
+    dp: u32,
+    tp: u32,
+    lat: &dyn IterLatency,
+    cfg: &EngineConfig,
+    requests: &[EngineRequest],
+    start_time: f64,
+    deadline: Option<f64>,
+    noise_seed: u64,
+    node: usize,
+    trace: Option<&mut Vec<EngineEvent>>,
+) -> SessionOutcome {
     let parts = split_round_robin(requests, dp);
     let mut finish: f64 = start_time;
     let mut replicas = vec![];
     let mut completions = vec![];
     let mut remaining = vec![];
+    let mut trace = trace;
     for (ri, part) in parts.into_iter().enumerate() {
         if part.is_empty() {
             continue;
         }
         let mut sim =
             EngineSim::new(spec, tp, lat, cfg.clone(), part, start_time, noise_seed ^ ri as u64);
+        if trace.is_some() {
+            sim.enable_events(node, ri);
+        }
         let out = sim.run(deadline);
         finish = finish.max(out.clock);
         completions.extend(sim.completions.iter().copied());
+        if let Some(t) = trace.as_mut() {
+            t.extend(sim.take_events());
+        }
         remaining.extend(sim.drain_unfinished());
         replicas.push(out);
     }
@@ -160,7 +192,7 @@ mod tests {
         let spec = Registry::paper().get("chatglm3-6b").unwrap().clone();
         let cluster = ClusterSpec::a100_node(8);
         let hw = HardwareModel::new(cluster.clone());
-        let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes);
+        let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
         (spec, hw, cfg)
     }
 

@@ -1,4 +1,6 @@
-//! The single-replica engine simulator.
+//! The virtual-time engine simulator: the shared scheduling core
+//! ([`crate::engine::sched::SchedCore`]) priced by an
+//! [`crate::costmodel::IterLatency`] oracle.
 //!
 //! Implements the vLLM-v0 scheduling loop:
 //! 1. if prompts are waiting, KV blocks are available and the running set
@@ -20,132 +22,78 @@
 //! context, so the approximation error is the roofline crossover only.
 //! This is what makes planning cheap (§4.2 "our request scheduling
 //! simulator processes different execution plans in parallel").
+//!
+//! The scheduling discipline itself lives in [`crate::engine::sched`] and
+//! is shared with the real PJRT execution path
+//! ([`crate::exec::pjrt::PjrtBackend`]); this module contributes only the
+//! oracle-priced [`StepExec`] implementation.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
-
+pub use super::sched::{EngineConfig, SimOutcome};
+use super::sched::{SchedCore, StepExec, StepReq};
 use super::EngineRequest;
 use crate::costmodel::IterLatency;
 use crate::models::ModelSpec;
-use crate::util::rng::Rng;
 
-/// Engine scheduling parameters (vLLM defaults).
-#[derive(Debug, Clone)]
-pub struct EngineConfig {
-    /// Maximum running requests per iteration (vLLM `max_num_seqs`).
-    pub max_num_seqs: usize,
-    /// Maximum prompt tokens batched into one prefill iteration.
-    pub max_batch_tokens: u64,
-    /// Tokens per KV block.
-    pub block_tokens: u32,
-    /// Blocks kept free as admission watermark.
-    pub watermark_blocks: u64,
-    /// Enable event-jump acceleration for uniform decode runs.
-    pub fast_forward: bool,
-    /// Per-iteration multiplicative jitter σ (ground-truth realism);
-    /// `None` for the planner's deterministic estimates.
-    pub noise_sigma: Option<f64>,
-    /// GPU memory available for KV blocks (set from cluster + weights).
-    pub kv_bytes_budget: u64,
-}
-
-impl EngineConfig {
-    /// Standard config for a model replica under `tp`, on a cluster with
-    /// `mem_bytes` per GPU.
-    pub fn standard(spec: &ModelSpec, tp: u32, mem_bytes: u64) -> Self {
-        let weights = spec.weight_bytes_per_gpu(tp);
-        let kv_budget = mem_bytes.saturating_sub(weights) * tp as u64;
-        EngineConfig {
-            max_num_seqs: 256,
-            max_batch_tokens: 4096,
-            block_tokens: 16,
-            watermark_blocks: 8,
-            fast_forward: true,
-            noise_sigma: None,
-            kv_bytes_budget: kv_budget,
-        }
-    }
-
-    /// A plan is infeasible if the weights don't fit or not even one
-    /// max-length sequence's KV fits beside them (§3's validity rule).
-    pub fn feasible(&self, spec: &ModelSpec, tp: u32, mem_bytes: u64) -> bool {
-        if spec.weight_bytes_per_gpu(tp) >= mem_bytes {
-            return false;
-        }
-        let per_seq = spec.kv_bytes_per_token(tp) as u64 * tp as u64 * spec.max_seq as u64;
-        self.kv_bytes_budget >= per_seq / 4
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum ReqState {
-    Blocked,
-    Waiting,
-    Running,
-    Done,
-}
-
-#[derive(Debug, Clone)]
-struct Slot {
-    req: EngineRequest,
-    state: ReqState,
-    /// Tokens currently materialised in KV (prompt + generated so far).
-    ctx: u32,
-    blocks: u64,
-    /// Admission order, for preempt-latest-first.
-    admit_seq: u64,
-}
-
-/// Aggregate result of driving a simulation.
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct SimOutcome {
-    /// Requests that completed.
-    pub finished: usize,
-    /// Virtual time at the end of the run (absolute for stage replays;
-    /// relative when the simulation started at a canonical origin, as in
-    /// [`crate::runner::state::ExecState::simulate_node_fast`]).
-    pub clock: f64,
-    /// Time spent actually executing iterations (vs waiting for inputs).
-    pub busy_time: f64,
-    /// Decode iterations executed (fast-forwarded runs count each step).
-    pub decode_iterations: u64,
-    /// Prefill iterations executed.
-    pub prefill_iterations: u64,
-    /// Preemption-by-recompute events.
-    pub preemptions: u64,
-    /// Output tokens produced.
-    pub tokens_generated: u64,
-}
-
-type ReadyKey = Reverse<(u64, u64, usize)>; // (ready_time bits, fcfs seq, slot)
-
-/// Single-replica engine simulator. See module docs.
-pub struct EngineSim<'a> {
+/// [`StepExec`] that *prices* iterations with an [`IterLatency`] oracle in
+/// virtual time — never executes anything. This is the planner's and the
+/// virtual running phase's executor.
+pub struct OracleStep<'a> {
     spec: &'a ModelSpec,
     tp: u32,
     lat: &'a dyn IterLatency,
-    cfg: EngineConfig,
-    blocks_total: u64,
-    free_blocks: u64,
-    slots: Vec<Slot>,
-    waiting: BinaryHeap<ReadyKey>,
-    running: Vec<usize>,
-    id_to_slot: HashMap<u64, usize>,
-    clock: f64,
-    outcome: SimOutcome,
-    admit_counter: u64,
-    fcfs_counter: u64,
-    noise: Option<Rng>,
-    /// Active run() deadline — bounds fast-forward jumps so a stage replay
-    /// never overshoots its stage-end boundary.
-    deadline: Option<f64>,
-    /// Completion times per request id (for the communicator).
-    pub completions: Vec<(u64, f64)>,
-    /// Optional (clock, running-count) trace for Fig. 3.
-    pub iter_trace: Option<Vec<(f64, usize)>>,
 }
 
-impl<'a> EngineSim<'a> {
+impl<'a> OracleStep<'a> {
+    /// Price iterations of `spec` under `tp` with the given oracle.
+    pub fn new(spec: &'a ModelSpec, tp: u32, lat: &'a dyn IterLatency) -> Self {
+        OracleStep { spec, tp, lat }
+    }
+
+    fn decode_at(&self, running: &[StepReq]) -> f64 {
+        let total_ctx: u64 = running.iter().map(|r| r.ctx as u64).sum();
+        let max_ctx = running.iter().map(|r| r.ctx).max().unwrap_or(0);
+        self.lat.decode(self.spec, self.tp, running.len(), total_ctx, max_ctx)
+    }
+}
+
+impl StepExec for OracleStep<'_> {
+    fn prefill(&mut self, admitted: &[StepReq], _running: &[StepReq]) -> f64 {
+        let lens: Vec<u32> = admitted
+            .iter()
+            .map(|r| {
+                if r.kv_resident && r.generated > 0 {
+                    1
+                } else {
+                    r.input_len + r.generated
+                }
+            })
+            .collect();
+        self.lat.prefill(self.spec, self.tp, &lens)
+    }
+
+    fn decode(&mut self, running: &[StepReq]) -> f64 {
+        self.decode_at(running)
+    }
+
+    fn decode_span(&mut self, running: &[StepReq], n: u32) -> Option<f64> {
+        let batch = running.len();
+        let total_ctx0: u64 = running.iter().map(|r| r.ctx as u64).sum();
+        let mid = n as u64 / 2;
+        let total_ctx_mid = total_ctx0 + mid * batch as u64;
+        let max_ctx_mid = running.iter().map(|r| r.ctx).max().unwrap_or(0) + mid as u32;
+        Some(self.lat.decode(self.spec, self.tp, batch, total_ctx_mid, max_ctx_mid) * n as f64)
+    }
+
+    fn estimate_decode(&self, running: &[StepReq]) -> f64 {
+        self.decode_at(running)
+    }
+}
+
+/// Single-replica engine simulator: the scheduling core under an oracle
+/// executor. See module docs.
+pub type EngineSim<'a> = SchedCore<OracleStep<'a>>;
+
+impl<'a> SchedCore<OracleStep<'a>> {
     /// Build a replica simulator over `requests`, starting its clock at
     /// `start_time`. KV capacity is derived from the config's budget.
     pub fn new(
@@ -157,432 +105,15 @@ impl<'a> EngineSim<'a> {
         start_time: f64,
         noise_seed: u64,
     ) -> Self {
-        let block_bytes = cfg.block_tokens as u64 * spec.kv_bytes_per_token(tp) as u64 * tp as u64;
-        let blocks_total = (cfg.kv_bytes_budget / block_bytes.max(1)).max(1);
-        let noise = cfg.noise_sigma.map(|_| Rng::new(noise_seed ^ 0x5EED_0E0E));
-        let mut sim = EngineSim {
-            spec,
-            tp,
-            lat,
+        let block_bytes = cfg.block_tokens as u64 * spec.kv_bytes_per_token(tp) * tp as u64;
+        SchedCore::with_exec(
+            OracleStep::new(spec, tp, lat),
             cfg,
-            blocks_total,
-            free_blocks: blocks_total,
-            slots: Vec::with_capacity(requests.len()),
-            waiting: BinaryHeap::with_capacity(requests.len()),
-            running: vec![],
-            id_to_slot: HashMap::with_capacity(requests.len()),
-            clock: start_time,
-            outcome: SimOutcome::default(),
-            admit_counter: 0,
-            fcfs_counter: 0,
-            noise,
-            deadline: None,
-            completions: vec![],
-            iter_trace: None,
-        };
-        for req in requests {
-            sim.push_request(req);
-        }
-        sim
-    }
-
-    fn push_request(&mut self, req: EngineRequest) {
-        let idx = self.slots.len();
-        let state = if req.is_done() {
-            self.outcome.finished += 1;
-            ReqState::Done
-        } else if req.ready_time.is_infinite() {
-            ReqState::Blocked
-        } else {
-            ReqState::Waiting
-        };
-        self.id_to_slot.insert(req.id, idx);
-        self.slots.push(Slot { req, state, ctx: 0, blocks: 0, admit_seq: 0 });
-        if state == ReqState::Waiting {
-            self.enqueue_waiting(idx);
-        }
-    }
-
-    fn enqueue_waiting(&mut self, idx: usize) {
-        let t = self.slots[idx].req.ready_time.max(0.0);
-        self.waiting.push(Reverse((t.to_bits(), self.fcfs_counter, idx)));
-        self.fcfs_counter += 1;
-    }
-
-    /// Current virtual time.
-    pub fn clock(&self) -> f64 {
-        self.clock
-    }
-
-    /// Total KV blocks the replica owns.
-    pub fn blocks_total(&self) -> u64 {
-        self.blocks_total
-    }
-
-    /// KV blocks currently free.
-    pub fn free_blocks(&self) -> u64 {
-        self.free_blocks
-    }
-
-    /// Whether every request completed.
-    pub fn is_done(&self) -> bool {
-        self.slots.iter().all(|s| s.state == ReqState::Done)
-    }
-
-    /// Requests not yet completed.
-    pub fn n_unfinished(&self) -> usize {
-        self.slots.iter().filter(|s| s.state != ReqState::Done).count()
-    }
-
-    fn jitter(&mut self, t: f64) -> f64 {
-        match (&mut self.noise, self.cfg.noise_sigma) {
-            (Some(rng), Some(sigma)) => t * (1.0 + sigma * rng.normal()).max(0.2),
-            _ => t,
-        }
-    }
-
-    fn blocks_for(&self, tokens: u32) -> u64 {
-        (tokens as u64).div_ceil(self.cfg.block_tokens as u64)
-    }
-
-    /// Earliest ready time among waiting requests.
-    fn next_ready(&self) -> Option<f64> {
-        self.waiting.peek().map(|Reverse((bits, _, _))| f64::from_bits(*bits))
-    }
-
-    /// Try to build a prefill batch (FCFS by ready time, token/block bounded).
-    fn admit(&mut self) -> Vec<usize> {
-        let mut batch = vec![];
-        let mut batch_tokens = 0u64;
-        while let Some(&Reverse((bits, _, idx))) = self.waiting.peek() {
-            if self.running.len() + batch.len() >= self.cfg.max_num_seqs {
-                break;
-            }
-            if f64::from_bits(bits) > self.clock {
-                break; // FCFS: don't skip over not-yet-ready requests
-            }
-            let slot = &self.slots[idx];
-            debug_assert_eq!(slot.state, ReqState::Waiting);
-            let prompt = slot.req.input_len + slot.req.generated;
-            // KV-resident requests re-enter without re-prefilling their
-            // carried context; they only cost one admission token.
-            let prefill_tokens = if slot.req.kv_resident && slot.req.generated > 0 {
-                1
-            } else {
-                prompt
-            };
-            if batch_tokens + prefill_tokens as u64 > self.cfg.max_batch_tokens && !batch.is_empty() {
-                break;
-            }
-            let need = self.blocks_for(prompt + 1);
-            if self.free_blocks < need + self.cfg.watermark_blocks {
-                break;
-            }
-            self.waiting.pop();
-            self.free_blocks -= need;
-            let slot = &mut self.slots[idx];
-            slot.blocks = need;
-            slot.ctx = prompt + 1; // prefill emits the first output token
-            slot.state = ReqState::Running;
-            slot.admit_seq = self.admit_counter;
-            self.admit_counter += 1;
-            batch_tokens += prefill_tokens as u64;
-            batch.push(idx);
-        }
-        batch
-    }
-
-    fn finish(&mut self, idx: usize) {
-        let (id, next) = {
-            let slot = &mut self.slots[idx];
-            slot.state = ReqState::Done;
-            self.free_blocks += slot.blocks;
-            slot.blocks = 0;
-            (slot.req.id, slot.req.chain_next)
-        };
-        self.outcome.finished += 1;
-        self.completions.push((id, self.clock));
-        if let Some(nid) = next {
-            if let Some(&nidx) = self.id_to_slot.get(&nid) {
-                if self.slots[nidx].state == ReqState::Blocked {
-                    self.slots[nidx].req.ready_time = self.clock;
-                    self.slots[nidx].state = ReqState::Waiting;
-                    self.enqueue_waiting(nidx);
-                }
-            }
-        }
-    }
-
-    /// Preempt the most recently admitted running request (recompute).
-    fn preempt_latest(&mut self) -> bool {
-        let Some(pos) = self
-            .running
-            .iter()
-            .enumerate()
-            .max_by_key(|&(_, &i)| self.slots[i].admit_seq)
-            .map(|(p, _)| p)
-        else {
-            return false;
-        };
-        let idx = self.running.swap_remove(pos);
-        let slot = &mut self.slots[idx];
-        self.free_blocks += slot.blocks;
-        slot.blocks = 0;
-        slot.ctx = 0;
-        slot.state = ReqState::Waiting;
-        slot.req.ready_time = self.clock;
-        slot.req.kv_resident = false; // recompute: KV is gone
-        self.outcome.preemptions += 1;
-        self.enqueue_waiting(idx);
-        true
-    }
-
-    fn record_trace(&mut self) {
-        if let Some(tr) = &mut self.iter_trace {
-            tr.push((self.clock, self.running.len()));
-        }
-    }
-
-    /// Run one scheduling step. Returns `false` if nothing could be done
-    /// right now (caller decides whether to idle-advance).
-    pub fn step(&mut self) -> bool {
-        let batch = self.admit();
-        if !batch.is_empty() {
-            let lens: Vec<u32> = batch
-                .iter()
-                .map(|&i| {
-                    let r = &self.slots[i].req;
-                    if r.kv_resident && r.generated > 0 {
-                        1
-                    } else {
-                        r.input_len + r.generated
-                    }
-                })
-                .collect();
-            let t = self.lat.prefill(self.spec, self.tp, &lens);
-            let t = self.jitter(t);
-            self.clock += t;
-            self.outcome.busy_time += t;
-            self.outcome.prefill_iterations += 1;
-            for &i in &batch {
-                self.slots[i].req.generated += 1;
-                self.outcome.tokens_generated += 1;
-                if self.slots[i].req.is_done() {
-                    self.finish(i);
-                } else {
-                    self.running.push(i);
-                }
-            }
-            self.record_trace();
-            return true;
-        }
-
-        if self.running.is_empty() {
-            return false;
-        }
-
-        if self.cfg.fast_forward {
-            self.decode_run()
-        } else {
-            self.decode_once()
-        }
-    }
-
-    /// One decode iteration, exact.
-    fn decode_once(&mut self) -> bool {
-        // Grow KV; preempt on OOM.
-        let mut i = 0;
-        while i < self.running.len() {
-            let idx = self.running[i];
-            let need_block = self.slots[idx].ctx % self.cfg.block_tokens == 0;
-            if need_block {
-                while self.free_blocks < 1 {
-                    if self.running.len() <= 1 || !self.preempt_latest() {
-                        break;
-                    }
-                }
-                if self.slots[idx].state != ReqState::Running {
-                    // preempt_latest evicted `idx` itself; running[i] now
-                    // holds a different request — revisit this position.
-                    continue;
-                }
-                if self.free_blocks >= 1 {
-                    self.free_blocks -= 1;
-                    self.slots[idx].blocks += 1;
-                }
-            }
-            i += 1;
-        }
-        let batch = self.running.len();
-        if batch == 0 {
-            return false;
-        }
-        let total_ctx: u64 = self.running.iter().map(|&i| self.slots[i].ctx as u64).sum();
-        let max_ctx = self.running.iter().map(|&i| self.slots[i].ctx).max().unwrap();
-        let t = self.lat.decode(self.spec, self.tp, batch, total_ctx, max_ctx);
-        let t = self.jitter(t);
-        self.clock += t;
-        self.outcome.busy_time += t;
-        self.outcome.decode_iterations += 1;
-        self.outcome.tokens_generated += batch as u64;
-        let mut j = 0;
-        while j < self.running.len() {
-            let idx = self.running[j];
-            let slot = &mut self.slots[idx];
-            slot.ctx += 1;
-            slot.req.generated += 1;
-            if slot.req.is_done() {
-                self.running.swap_remove(j);
-                self.finish(idx);
-            } else {
-                j += 1;
-            }
-        }
-        self.record_trace();
-        true
-    }
-
-    /// Fast path: jump over `n` uniform decode iterations where `n` is
-    /// bounded by the next completion, the next admission-ready prompt,
-    /// and the block budget. Prices the run at its midpoint context.
-    fn decode_run(&mut self) -> bool {
-        let batch = self.running.len();
-        let min_remaining = self
-            .running
-            .iter()
-            .map(|&i| self.slots[i].req.remaining())
-            .min()
-            .unwrap_or(0)
-            .max(1);
-        // Admission is impossible while the running set is full, no matter
-        // how many prompts are ready — only a completion (already bounded
-        // by `min_remaining`) can open a slot.
-        let until_ready = if self.running.len() >= self.cfg.max_num_seqs {
-            u32::MAX
-        } else {
-            match self.next_ready() {
-                Some(t) if t > self.clock => u32::MAX,
-                Some(_) => 1, // a prompt is admissible now -> go exact
-                None => u32::MAX,
-            }
-        };
-        let spare = self.free_blocks.saturating_sub(self.cfg.watermark_blocks);
-        let until_oom = if spare == 0 {
-            1
-        } else {
-            ((spare * self.cfg.block_tokens as u64) / batch as u64).max(1).min(u32::MAX as u64)
-                as u32
-        };
-        let mut n = min_remaining.min(until_oom).min(until_ready).max(1);
-        // Deadline bound: estimate the per-iteration cost at the current
-        // context and cap the jump so the clock lands at most one
-        // iteration past the deadline (stage replays depend on this).
-        if let Some(d) = self.deadline {
-            let total_ctx0: u64 = self.running.iter().map(|&i| self.slots[i].ctx as u64).sum();
-            let max_ctx0 = self.running.iter().map(|&i| self.slots[i].ctx).max().unwrap();
-            let t_est = self.lat.decode(self.spec, self.tp, batch, total_ctx0, max_ctx0).max(1e-9);
-            let room = ((d - self.clock) / t_est).ceil();
-            if room < n as f64 {
-                n = (room.max(1.0)) as u32;
-            }
-        }
-        let n = n;
-        if n <= 2 {
-            return self.decode_once();
-        }
-
-        let total_ctx0: u64 = self.running.iter().map(|&i| self.slots[i].ctx as u64).sum();
-        let mid = n as u64 / 2;
-        let total_ctx_mid = total_ctx0 + mid * batch as u64;
-        let max_ctx_mid =
-            self.running.iter().map(|&i| self.slots[i].ctx).max().unwrap() + mid as u32;
-        let t_one = self.lat.decode(self.spec, self.tp, batch, total_ctx_mid, max_ctx_mid);
-        let t = self.jitter(t_one * n as f64);
-        self.clock += t;
-        self.outcome.busy_time += t;
-        self.outcome.decode_iterations += n as u64;
-        self.outcome.tokens_generated += n as u64 * batch as u64;
-
-        let bt = self.cfg.block_tokens as u64;
-        let mut blocks_used = 0u64;
-        let mut j = 0;
-        while j < self.running.len() {
-            let idx = self.running[j];
-            let slot = &mut self.slots[idx];
-            let old_ctx = slot.ctx;
-            slot.ctx += n;
-            slot.req.generated += n;
-            let new_blocks = (slot.ctx as u64).div_ceil(bt) - (old_ctx as u64).div_ceil(bt);
-            blocks_used += new_blocks;
-            slot.blocks += new_blocks;
-            if slot.req.is_done() {
-                self.running.swap_remove(j);
-                self.finish(idx);
-            } else {
-                j += 1;
-            }
-        }
-        self.free_blocks = self.free_blocks.saturating_sub(blocks_used);
-        self.record_trace();
-        true
-    }
-
-    /// Advance the clock while nothing is runnable (pipeline idling).
-    /// Returns `false` if there is nothing to wait for (done, or blocked
-    /// on a chain predecessor that lives in another engine).
-    pub fn idle_until_ready(&mut self) -> bool {
-        match self.next_ready() {
-            Some(t) if t > self.clock => {
-                self.clock = t;
-                true
-            }
-            Some(_) => true,
-            None => false,
-        }
-    }
-
-    /// Run to completion (or until `deadline`). Returns the outcome so far.
-    pub fn run(&mut self, deadline: Option<f64>) -> SimOutcome {
-        self.deadline = deadline;
-        loop {
-            if let Some(d) = deadline {
-                if self.clock >= d {
-                    break;
-                }
-            }
-            if !self.step() && !self.idle_until_ready() {
-                break;
-            }
-        }
-        self.deadline = None;
-        self.outcome.clock = self.clock;
-        self.outcome.clone()
-    }
-
-    /// Extract unfinished requests (for stage transitions / preemption).
-    /// Running requests keep their generated progress but lose KV state —
-    /// they will re-prefill `input + generated` tokens when re-admitted.
-    pub fn drain_unfinished(&mut self) -> Vec<EngineRequest> {
-        let mut out = vec![];
-        for slot in &mut self.slots {
-            if slot.state != ReqState::Done {
-                out.push(slot.req);
-                slot.state = ReqState::Done;
-            }
-        }
-        self.running.clear();
-        self.waiting.clear();
-        out
-    }
-
-    /// The accumulated outcome so far.
-    pub fn outcome(&self) -> &SimOutcome {
-        &self.outcome
-    }
-
-    /// Record a (clock, running-count) point per iteration (Fig. 3).
-    pub fn enable_trace(&mut self) {
-        self.iter_trace = Some(vec![]);
+            block_bytes,
+            requests,
+            start_time,
+            noise_seed,
+        )
     }
 }
 
@@ -592,6 +123,7 @@ mod tests {
     use crate::cluster::ClusterSpec;
     use crate::costmodel::HardwareModel;
     use crate::models::Registry;
+    use crate::util::rng::Rng;
 
     fn fixture() -> (crate::models::ModelSpec, HardwareModel) {
         let reg = Registry::paper();
@@ -616,7 +148,7 @@ mod tests {
     #[test]
     fn completes_all_requests() {
         let (spec, hw) = fixture();
-        let cfg = EngineConfig::standard(&spec, 1, ClusterSpec::a100_node(8).mem_bytes);
+        let cfg = EngineConfig::standard(&spec, 1, ClusterSpec::a100_node(8).mem_bytes).unwrap();
         let mut s = sim(&spec, &hw, cfg, reqs(100, 20, 50));
         let out = s.run(None);
         assert_eq!(out.finished, 100);
@@ -630,7 +162,7 @@ mod tests {
     fn fast_forward_matches_exact_closely() {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let mut cfg = EngineConfig::standard(&spec, 1, mem);
+        let mut cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         cfg.fast_forward = false;
         let t_exact = sim(&spec, &hw, cfg.clone(), reqs(200, 25, 120)).run(None).clock;
         cfg.fast_forward = true;
@@ -645,7 +177,7 @@ mod tests {
         // inference-only on 1 GPU. Average output ≈ 180 tokens.
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let cfg = EngineConfig::standard(&spec, 1, mem);
+        let cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         let mut rng = Rng::new(1);
         let rs: Vec<EngineRequest> = (0..1000)
             .map(|i| {
@@ -665,7 +197,7 @@ mod tests {
         // (the paper's central observation).
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let cfg = EngineConfig::standard(&spec, 1, mem);
+        let cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         let mut rng = Rng::new(2);
         let all: Vec<EngineRequest> = (0..1000)
             .map(|i| {
@@ -687,7 +219,7 @@ mod tests {
     fn respects_ready_times() {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let cfg = EngineConfig::standard(&spec, 1, mem);
+        let cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         let mut rs = reqs(10, 30, 20);
         for (i, r) in rs.iter_mut().enumerate() {
             r.ready_time = 100.0 + i as f64;
@@ -703,7 +235,7 @@ mod tests {
     fn chain_successors_unblock_in_order() {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let cfg = EngineConfig::standard(&spec, 1, mem);
+        let cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         // A 3-link chain: 0 -> 1 -> 2, plus an independent request 3.
         let mut rs = reqs(4, 50, 30);
         rs[0].chain_next = Some(1);
@@ -720,8 +252,9 @@ mod tests {
     #[test]
     fn preemption_by_recompute_under_block_pressure() {
         let (spec, hw) = fixture();
-        let mut cfg = EngineConfig::standard(&spec, 1, ClusterSpec::a100_node(8).mem_bytes);
-        cfg.kv_bytes_budget = 3000 * spec.kv_bytes_per_token(1) as u64;
+        let mut cfg =
+            EngineConfig::standard(&spec, 1, ClusterSpec::a100_node(8).mem_bytes).unwrap();
+        cfg.kv_bytes_budget = 3000 * spec.kv_bytes_per_token(1);
         cfg.fast_forward = false;
         let mut s = sim(&spec, &hw, cfg, reqs(16, 100, 800));
         let out = s.run(None);
@@ -733,7 +266,7 @@ mod tests {
     fn drain_unfinished_preserves_progress() {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let cfg = EngineConfig::standard(&spec, 1, mem);
+        let cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         let mut s = sim(&spec, &hw, cfg, reqs(100, 20, 400));
         s.run(Some(2.0));
         let rest = s.drain_unfinished();
@@ -749,7 +282,7 @@ mod tests {
     fn trace_records_running_counts() {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let mut cfg = EngineConfig::standard(&spec, 1, mem);
+        let mut cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         cfg.fast_forward = false;
         let mut s = sim(&spec, &hw, cfg, reqs(50, 20, 60));
         s.enable_trace();
@@ -764,7 +297,7 @@ mod tests {
     fn noise_changes_clock_but_not_results() {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
-        let mut cfg = EngineConfig::standard(&spec, 1, mem);
+        let mut cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
         cfg.noise_sigma = Some(0.03);
         let t_a = EngineSim::new(&spec, 1, &hw, cfg.clone(), reqs(64, 20, 80), 0.0, 1)
             .run(None)

@@ -1,0 +1,387 @@
+//! One execution API: the [`ExecBackend`] trait unifying the simulated
+//! substrate and the real PJRT serving path.
+//!
+//! A backend consumes [`EngineRequest`]s for one graph node under one
+//! [`ExecPlan`] ([`NodeRun`]) and returns a [`NodeOutcome`]: completion
+//! times, carried-progress leftovers, per-replica outcomes and a unified
+//! stream of timestamped [`EngineEvent`]s. The runner and metrics layers
+//! build `StageRecord`s, `RunReport`s and Gantt charts from that outcome
+//! identically for every backend.
+//!
+//! Two backends ship:
+//! * [`SimBackend`] — prices iterations of the shared vLLM-v0 scheduling
+//!   core ([`crate::engine::sched::SchedCore`]) with an
+//!   [`IterLatency`] oracle in virtual time. Bit-identical to the
+//!   pre-refactor execution path (the planner's what-if simulations and
+//!   the §5 experiments run through it unchanged).
+//! * [`pjrt::PjrtBackend`] — drives the *same* scheduling core against
+//!   real [`crate::runtime::TinyGpt`] `prefill`/`decode` executions on the
+//!   PJRT runtime, with measured wall-clock iteration latencies replacing
+//!   the oracle (continuous batching replaces `serve`'s former
+//!   static-bucket loop).
+//!
+//! Backend selection threads through the whole stack:
+//! `SamuLlm::builder().backend("sim"|"pjrt")`, the experiment-config JSON
+//! `backend` key, and the CLI (`samullm run --backend pjrt`).
+
+pub mod pjrt;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::costmodel::IterLatency;
+use crate::engine::sched::{EngineConfig, EngineEvent, EventKind, SimOutcome};
+use crate::engine::session::run_session_traced;
+use crate::engine::EngineRequest;
+use crate::models::ModelSpec;
+use crate::plan::ExecPlan;
+
+/// How a backend's clock relates to reality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendMode {
+    /// Virtual time priced by an oracle: stages can be projected
+    /// (dry-run) and replayed against a deadline — the paper's simulated
+    /// substrate.
+    Virtual,
+    /// Measured wall-clock time on real hardware: execution is
+    /// irreversible, so stages run each node's remaining workload to
+    /// completion (no dry runs, no deadline replays).
+    Measured,
+}
+
+/// One node-execution request handed to a backend: `requests` of one
+/// graph node under one plan, starting at `start_time`.
+pub struct NodeRun<'a> {
+    /// Graph node id (labels the event stream).
+    pub node: usize,
+    /// Registry name of the node's model.
+    pub model: &'a str,
+    /// Architectural spec of the node's model (sizing + pricing).
+    pub spec: &'a ModelSpec,
+    /// Execution plan `(dp, tp)` the node runs under.
+    pub plan: ExecPlan,
+    /// The node's runnable requests (lengths resolved, ready times set).
+    pub requests: &'a [EngineRequest],
+    /// Absolute start time (virtual or measured seconds).
+    pub start_time: f64,
+    /// Optional stop time (virtual backends only; measured backends run
+    /// to completion).
+    pub deadline: Option<f64>,
+    /// Ground-truth jitter σ for virtual backends (`None` = exact).
+    pub noise_sigma: Option<f64>,
+    /// Seed for the jitter stream.
+    pub noise_seed: u64,
+    /// Record the unified [`EngineEvent`] stream in the outcome.
+    pub collect_events: bool,
+}
+
+/// What a backend reports back after executing one [`NodeRun`].
+#[derive(Debug, Clone, Default)]
+pub struct NodeOutcome {
+    /// Completion time of the slowest replica (absolute).
+    pub finish_time: f64,
+    /// Per-replica aggregate outcomes (busy time, iterations, tokens).
+    pub replicas: Vec<SimOutcome>,
+    /// Completion times across replicas: (request id, time).
+    pub completions: Vec<(u64, f64)>,
+    /// Unfinished requests with carried progress (empty when run to
+    /// completion).
+    pub remaining: Vec<EngineRequest>,
+    /// Unified event stream (empty unless `collect_events` was set).
+    pub events: Vec<EngineEvent>,
+    /// Real token generations per completed request (real backends only;
+    /// the simulated substrate generates no tokens).
+    pub generations: Vec<(u64, Vec<i32>)>,
+}
+
+/// A pluggable execution substrate. See module docs.
+pub trait ExecBackend {
+    /// Registry name of the backend (`"sim"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend's clock is virtual or measured.
+    fn mode(&self) -> BackendMode;
+
+    /// Execute (or simulate) one node's requests. Virtual backends are
+    /// infallible; real backends surface device errors.
+    fn run_node(&mut self, run: &NodeRun) -> Result<NodeOutcome>;
+}
+
+// ---------------------------------------------------------------------------
+// The simulated substrate.
+// ---------------------------------------------------------------------------
+
+/// The virtual-time backend: the shared scheduling core priced by an
+/// [`IterLatency`] oracle. Numerically identical to the pre-`ExecBackend`
+/// execution path for every seed.
+pub struct SimBackend<'a> {
+    lat: &'a dyn IterLatency,
+    mem_bytes: u64,
+}
+
+impl<'a> SimBackend<'a> {
+    /// A backend pricing iterations with `lat` on GPUs with `mem_bytes`
+    /// of HBM each.
+    pub fn new(lat: &'a dyn IterLatency, mem_bytes: u64) -> Self {
+        SimBackend { lat, mem_bytes }
+    }
+}
+
+impl ExecBackend for SimBackend<'_> {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn mode(&self) -> BackendMode {
+        BackendMode::Virtual
+    }
+
+    fn run_node(&mut self, run: &NodeRun) -> Result<NodeOutcome> {
+        let cfg = EngineConfig {
+            noise_sigma: run.noise_sigma,
+            ..EngineConfig::standard(run.spec, run.plan.tp, self.mem_bytes)
+                .with_context(|| format!("node {} ({})", run.node, run.model))?
+        };
+        let mut events = run.collect_events.then(Vec::new);
+        let out = run_session_traced(
+            run.spec,
+            run.plan.dp,
+            run.plan.tp,
+            self.lat,
+            &cfg,
+            run.requests,
+            run.start_time,
+            run.deadline,
+            run.noise_seed,
+            run.node,
+            events.as_mut(),
+        );
+        Ok(NodeOutcome {
+            finish_time: out.finish_time,
+            replicas: out.replicas,
+            completions: out.completions,
+            remaining: out.remaining,
+            events: events.unwrap_or_default(),
+            generations: vec![],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event summaries (what reaches run reports).
+// ---------------------------------------------------------------------------
+
+/// Aggregate view of an [`EngineEvent`] stream — the stage-level digest
+/// that reaches [`crate::metrics::StageRecord`]s and report JSON (the raw
+/// stream can run to thousands of events per stage).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EventSummary {
+    /// Requests admitted into prefill batches.
+    pub admitted: u64,
+    /// Prefill iterations executed.
+    pub prefills: u64,
+    /// Decode iterations executed (fast-forwarded spans count each step).
+    pub decode_iters: u64,
+    /// Preemption-by-recompute events.
+    pub preemptions: u64,
+    /// Requests completed.
+    pub completions: u64,
+    /// Summed iteration latency (busy seconds across replicas).
+    pub busy_time: f64,
+}
+
+impl EventSummary {
+    /// Fold one event into the summary.
+    pub fn add(&mut self, ev: &EngineEvent) {
+        match ev.kind {
+            EventKind::Admitted { .. } => self.admitted += 1,
+            EventKind::Prefill { dur, .. } => {
+                self.prefills += 1;
+                self.busy_time += dur;
+            }
+            EventKind::Decode { iters, dur, .. } => {
+                self.decode_iters += iters as u64;
+                self.busy_time += dur;
+            }
+            EventKind::Preempted { .. } => self.preemptions += 1,
+            EventKind::Completed { .. } => self.completions += 1,
+        }
+    }
+
+    /// Summarize a whole stream.
+    pub fn from_events(events: &[EngineEvent]) -> Self {
+        let mut s = EventSummary::default();
+        for ev in events {
+            s.add(ev);
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend name registry (CLI / config / session validation).
+// ---------------------------------------------------------------------------
+
+/// A registered backend name with its aliases and help line.
+pub struct BackendInfo {
+    /// Canonical name.
+    pub name: &'static str,
+    /// Accepted aliases.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `--backend ?` help.
+    pub about: &'static str,
+}
+
+/// All registered backends, in help order.
+pub fn builtin() -> &'static [BackendInfo] {
+    static BUILTIN: &[BackendInfo] = &[
+        BackendInfo {
+            name: "sim",
+            aliases: &["simulated", "virtual"],
+            about: "virtual-time substrate priced by the hardware model (default)",
+        },
+        BackendInfo {
+            name: "pjrt",
+            aliases: &["real", "tinygpt"],
+            about: "real PJRT serving of the AOT-compiled TinyGPT (needs `make artifacts`)",
+        },
+    ];
+    BUILTIN
+}
+
+/// Registered canonical backend names, in help order.
+pub fn names() -> Vec<&'static str> {
+    builtin().iter().map(|b| b.name).collect()
+}
+
+/// Resolve a name or alias to its canonical backend name.
+pub fn canonical(name: &str) -> Result<&'static str> {
+    builtin()
+        .iter()
+        .find(|b| b.name == name || b.aliases.contains(&name))
+        .map(|b| b.name)
+        .ok_or_else(|| anyhow!("unknown backend {name} (known: {})", names().join("|")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::costmodel::HardwareModel;
+    use crate::engine::session::run_session;
+    use crate::models::Registry;
+
+    #[test]
+    fn backend_names_resolve() {
+        assert_eq!(canonical("sim").unwrap(), "sim");
+        assert_eq!(canonical("virtual").unwrap(), "sim");
+        assert_eq!(canonical("pjrt").unwrap(), "pjrt");
+        assert_eq!(canonical("real").unwrap(), "pjrt");
+        assert!(canonical("cuda").is_err());
+        assert_eq!(names(), vec!["sim", "pjrt"]);
+    }
+
+    #[test]
+    fn sim_backend_matches_direct_session_bit_for_bit() {
+        // The SimBackend must be a pure repackaging of run_session under
+        // the standard config — same floats, same completions.
+        let cluster = ClusterSpec::a100_node(8);
+        let hw = HardwareModel::new(cluster.clone());
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap();
+        let reqs: Vec<EngineRequest> =
+            (0..120).map(|i| EngineRequest::fresh(i, 20, 40 + (i % 31) as u32)).collect();
+        let plan = ExecPlan::new(4, 1);
+
+        let mut backend = SimBackend::new(&hw, cluster.mem_bytes);
+        let out = backend
+            .run_node(&NodeRun {
+                node: 0,
+                model: "chatglm3-6b",
+                spec,
+                plan,
+                requests: &reqs,
+                start_time: 5.0,
+                deadline: None,
+                noise_sigma: Some(0.02),
+                noise_seed: 99,
+                collect_events: false,
+            })
+            .unwrap();
+
+        let cfg = EngineConfig {
+            noise_sigma: Some(0.02),
+            ..EngineConfig::standard(spec, plan.tp, cluster.mem_bytes).unwrap()
+        };
+        let direct = run_session(spec, plan.dp, plan.tp, &hw, &cfg, &reqs, 5.0, None, 99);
+        assert_eq!(out.finish_time.to_bits(), direct.finish_time.to_bits());
+        assert_eq!(out.completions, direct.completions);
+        assert_eq!(out.replicas.len(), direct.replicas.len());
+        assert!(out.generations.is_empty());
+    }
+
+    #[test]
+    fn sim_backend_collects_events_without_changing_results() {
+        let cluster = ClusterSpec::a100_node(8);
+        let hw = HardwareModel::new(cluster.clone());
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap();
+        let reqs: Vec<EngineRequest> =
+            (0..60).map(|i| EngineRequest::fresh(i, 15, 25)).collect();
+        let run = |collect: bool| {
+            SimBackend::new(&hw, cluster.mem_bytes)
+                .run_node(&NodeRun {
+                    node: 2,
+                    model: "chatglm3-6b",
+                    spec,
+                    plan: ExecPlan::new(2, 1),
+                    requests: &reqs,
+                    start_time: 0.0,
+                    deadline: None,
+                    noise_sigma: None,
+                    noise_seed: 0,
+                    collect_events: collect,
+                })
+                .unwrap()
+        };
+        let quiet = run(false);
+        let loud = run(true);
+        assert_eq!(quiet.finish_time.to_bits(), loud.finish_time.to_bits());
+        assert!(quiet.events.is_empty());
+        assert!(!loud.events.is_empty());
+        assert!(loud.events.iter().all(|e| e.node == 2));
+        // Both dp replicas appear in the stream.
+        let replicas: std::collections::HashSet<usize> =
+            loud.events.iter().map(|e| e.replica).collect();
+        assert_eq!(replicas.len(), 2);
+        let summary = EventSummary::from_events(&loud.events);
+        assert_eq!(summary.completions, 60);
+        assert_eq!(summary.admitted, 60);
+        let busy: f64 = loud.replicas.iter().map(|r| r.busy_time).sum();
+        assert!((summary.busy_time - busy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_backend_reports_infeasible_plans_descriptively() {
+        let hw = HardwareModel::new(ClusterSpec::a100_node(8));
+        let reg = Registry::paper();
+        let spec = reg.get("llama-2-70b-chat").unwrap();
+        let reqs = [EngineRequest::fresh(0, 10, 10)];
+        let err = SimBackend::new(&hw, 16u64 << 30)
+            .run_node(&NodeRun {
+                node: 7,
+                model: "llama-2-70b-chat",
+                spec,
+                plan: ExecPlan::new(1, 1),
+                requests: &reqs,
+                start_time: 0.0,
+                deadline: None,
+                noise_sigma: None,
+                noise_seed: 0,
+                collect_events: false,
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 7"), "{msg}");
+        assert!(msg.contains("llama-2-70b-chat"), "{msg}");
+    }
+}

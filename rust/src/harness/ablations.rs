@@ -39,7 +39,7 @@ pub fn ablate_fastforward() -> String {
             })
             .collect();
         let tp = if model.contains("70b") { 2 } else { 1 };
-        let mut cfg = EngineConfig::standard(spec, tp, c.mem_bytes);
+        let mut cfg = EngineConfig::standard(spec, tp, c.mem_bytes).unwrap();
         cfg.fast_forward = false;
         let w0 = std::time::Instant::now();
         let exact = EngineSim::new(spec, tp, &hw, cfg.clone(), reqs.clone(), 0.0, 0).run(None);
@@ -102,7 +102,7 @@ pub fn ablate_tracesize() -> String {
             EngineRequest::fresh(i, 25, o)
         })
         .collect();
-    let cfg = EngineConfig::standard(spec, 1, c.mem_bytes);
+    let cfg = EngineConfig::standard(spec, 1, c.mem_bytes).unwrap();
     let truth = EngineSim::new(spec, 1, &hw, cfg.clone(), reqs.clone(), 0.0, 0).run(None).clock;
     let cm = CostModel::calibrated(&c, 1);
 

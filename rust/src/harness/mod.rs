@@ -119,7 +119,7 @@ pub fn fig3() -> String {
         (0..1000).map(|_| cm.sampler.sample("vicuna-13b-v1.5", 150, 1024, 4096, &mut rng_est)).collect();
 
     let run = |lens: Vec<u32>, lat: &dyn IterLatency, label: &str, out: &mut String| -> f64 {
-        let mut cfg = EngineConfig::standard(spec, 1, c.mem_bytes);
+        let mut cfg = EngineConfig::standard(spec, 1, c.mem_bytes).unwrap();
         cfg.fast_forward = false;
         let mut sim = EngineSim::new(spec, 1, lat, cfg, mk(lens), 0.0, 5);
         sim.enable_trace();

@@ -24,9 +24,16 @@
 //!   output-length eCDF sampling, FLOPs accounting (Eqs. 1–2), the linear
 //!   per-iteration latency model (Eq. 5) fit against a profiled hardware
 //!   ground truth, and model-loading cost tables.
-//! * [`engine`] — a vLLM-style FCFS continuous-batching engine simulator
-//!   with a paged-KV block manager; both the planner (with *sampled*
-//!   lengths) and the runner (with *true* lengths) step it.
+//! * [`engine`] — the shared vLLM-style FCFS continuous-batching
+//!   scheduling core ([`engine::sched::SchedCore`]) with a paged-KV block
+//!   manager, plus its virtual-time instantiation
+//!   ([`engine::EngineSim`]); both the planner (with *sampled* lengths)
+//!   and the runner (with *true* lengths) step it.
+//! * [`exec`] — the one execution API: the [`exec::ExecBackend`] trait
+//!   with a unified timestamped event stream, implemented by the
+//!   simulated substrate ([`exec::SimBackend`]) and the real PJRT
+//!   serving path ([`exec::pjrt::PjrtBackend`]); select with
+//!   `SamuLlm::builder().backend("sim"|"pjrt")` or `--backend`.
 //! * [`graph`], [`plan`], [`planner`] — the application computation graph,
 //!   execution plans/stages, and the greedy stage search (Algorithm 1).
 //! * [`runner`] — the running phase: a virtual-clock orchestrator with the
@@ -37,7 +44,8 @@
 //!   routing, chain summary, mixed) and synthetic dataset generators
 //!   matching the published workload statistics.
 //! * [`runtime`], [`serve`] — the real path: load AOT-compiled TinyGPT
-//!   HLO artifacts via PJRT and serve batched requests end-to-end.
+//!   HLO artifacts via PJRT and serve requests end-to-end with the shared
+//!   continuous-batching scheduler (through [`exec::pjrt::PjrtBackend`]).
 //! * [`harness`] — regenerates every figure/table of the paper's
 //!   evaluation (see DESIGN.md for the experiment index).
 //!
@@ -64,6 +72,7 @@ pub mod cluster;
 pub mod config;
 pub mod costmodel;
 pub mod engine;
+pub mod exec;
 pub mod graph;
 pub mod harness;
 pub mod metrics;
@@ -84,6 +93,7 @@ pub mod prelude {
     pub use crate::apps;
     pub use crate::cluster::ClusterSpec;
     pub use crate::costmodel::{CostModel, HardwareModel};
+    pub use crate::exec::{ExecBackend, SimBackend};
     pub use crate::graph::AppGraph;
     pub use crate::metrics::RunReport;
     pub use crate::models::{ModelSpec, Registry};

@@ -128,6 +128,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "app",
         "policy",
+        "backend",
+        "artifacts",
         "n-requests",
         "max-out",
         "n-docs",
@@ -149,15 +151,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         known_lengths: args.has("known-lengths"),
     };
     let app_spec = spec::from_cli(&app, &params)?;
-    let session = SamuLlm::builder()
+    let mut builder = SamuLlm::builder()
         .gpus(args.get("gpus", 8)?)
         .policy(&args.get_str("policy", "ours"))
+        .backend(&args.get_str("backend", "sim"))
         .seed(args.get("seed", 42)?)
         .no_preemption(args.has("no-preemption"))
         .known_lengths(args.has("known-lengths"))
         .threads(args.get("threads", 0)?)
-        .sim_cache(!args.has("no-sim-cache"))
-        .build()?;
+        .sim_cache(!args.has("no-sim-cache"));
+    if let Some(dir) = args.flags.get("artifacts") {
+        builder = builder.artifacts_dir(dir.clone());
+    }
+    let session = builder.build()?;
     let report = session.run(&app_spec)?;
     println!("{}", report.to_json());
     if args.has("gantt") {
@@ -168,15 +174,19 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_config(path: &str) -> Result<()> {
     let cfg = ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?;
-    let session = SamuLlm::builder()
+    let mut builder = SamuLlm::builder()
         .gpus(cfg.n_gpus)
         .policy(&cfg.policy)
+        .backend(&cfg.backend)
         .seed(cfg.seed)
         .no_preemption(cfg.no_preemption)
         .known_lengths(cfg.known_output_lengths)
         .threads(cfg.threads)
-        .sim_cache(cfg.sim_cache)
-        .build()?;
+        .sim_cache(cfg.sim_cache);
+    if let Some(dir) = &cfg.artifacts {
+        builder = builder.artifacts_dir(dir.clone());
+    }
+    let session = builder.build()?;
     let report = session.run(&cfg.app)?;
     println!("{}", report.to_json());
     Ok(())
@@ -185,20 +195,21 @@ fn cmd_config(path: &str) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_flags(&["n-requests", "prompt-len", "max-new", "artifacts"])?;
     let artifacts = args.get_str("artifacts", "artifacts");
-    let engine = samullm::serve::ServeEngine::load(std::path::Path::new(&artifacts))?;
+    let mut backend =
+        samullm::exec::pjrt::PjrtBackend::load(std::path::Path::new(&artifacts))?;
     println!(
         "loaded TinyGPT on {} (batch={}, max_seq={})",
-        engine.model().platform(),
-        engine.model().batch(),
-        engine.model().max_seq()
+        backend.platform(),
+        backend.batch(),
+        backend.max_seq()
     );
-    let reqs = samullm::serve::synthetic_requests(
+    let (reqs, prompts) = samullm::serve::synthetic_requests(
         args.get("n-requests", 32)?,
         args.get("prompt-len", 16)?,
         args.get("max-new", 16)?,
         1,
     );
-    let (_, m) = engine.serve(&reqs)?;
+    let (_, m) = samullm::serve::serve_requests(&mut backend, &reqs, &prompts)?;
     println!(
         "served {} requests: {} tokens in {:.2}s -> {:.1} tok/s (prefills {}, decode steps {}, mean latency {:.2}s, p99 {:.2}s)",
         m.n_requests,
@@ -222,17 +233,23 @@ fn usage() -> String {
         .iter()
         .map(|p| format!("    {:<14} {}", p.name, p.about))
         .collect();
+    let backends: Vec<String> = samullm::exec::builtin()
+        .iter()
+        .map(|b| format!("    {:<14} {}", b.name, b.about))
+        .collect();
     format!(
         "usage: samullm <run|config|serve> [flags]\n\
-         \n  samullm run    [--app A] [--policy P] [--n-requests N] [--max-out M]\n\
-         \x20                [--n-docs D] [--eval-times E] [--gpus G] [--seed S]\n\
-         \x20                [--no-preemption] [--known-lengths] [--gantt]\n\
+         \n  samullm run    [--app A] [--policy P] [--backend B] [--n-requests N]\n\
+         \x20                [--max-out M] [--n-docs D] [--eval-times E] [--gpus G]\n\
+         \x20                [--seed S] [--no-preemption] [--known-lengths] [--gantt]\n\
          \x20                [--threads T] [--no-sim-cache]   (planner search speed knobs)\n\
+         \x20                [--artifacts DIR]                (pjrt backend artifacts)\n\
          \x20 samullm config <file.json>   (supports custom graph specs, kind=custom)\n\
          \x20 samullm serve  [--n-requests N] [--prompt-len L] [--max-new T] [--artifacts DIR]\n\
-         \napps:\n{}\npolicies:\n{}",
+         \napps:\n{}\npolicies:\n{}\nbackends:\n{}",
         apps.join("\n"),
-        policies.join("\n")
+        policies.join("\n"),
+        backends.join("\n")
     )
 }
 

@@ -52,6 +52,7 @@ mod tests {
         let report = RunReport {
             scenario: "x".into(),
             policy: "ours".into(),
+            backend: "sim".into(),
             extra_time: 0.0,
             search_time: 0.0,
             planner: Default::default(),
@@ -67,6 +68,7 @@ mod tests {
                     loaded_nodes: vec![0, 1],
                     load_time: 10.0,
                     busy_gpu_seconds: vec![200.0, 200.0],
+                    events: Default::default(),
                 },
                 StageRecord {
                     start: 50.0,
@@ -75,8 +77,10 @@ mod tests {
                     loaded_nodes: vec![1],
                     load_time: 15.0,
                     busy_gpu_seconds: vec![400.0],
+                    events: Default::default(),
                 },
             ],
+            measured: None,
             n_gpus: 8,
         };
         let g = render(&report, 40);

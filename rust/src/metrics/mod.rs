@@ -3,6 +3,7 @@
 pub mod gantt;
 
 
+use crate::exec::EventSummary;
 use crate::plan::ExecPlan;
 use crate::planner::eval::EvalStats;
 
@@ -22,6 +23,9 @@ pub struct StageRecord {
     /// Busy GPU-seconds accumulated by each entry (same order as
     /// `entries`), loading included.
     pub busy_gpu_seconds: Vec<f64>,
+    /// Digest of the stage's unified engine event stream (same shape for
+    /// every [`crate::exec::ExecBackend`]).
+    pub events: EventSummary,
 }
 
 impl StageRecord {
@@ -36,6 +40,44 @@ impl StageRecord {
     }
 }
 
+/// Iteration-level statistics of a measured (real-backend) run: the
+/// observed latencies next to what the virtual hardware model predicts
+/// for the same batch compositions — the measured-vs-predicted hook that
+/// validates the sampling-then-simulation cost model against real
+/// iterations.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeasuredStats {
+    /// Prefill iterations executed on the device.
+    pub prefills: u64,
+    /// Decode iterations executed on the device.
+    pub decode_iters: u64,
+    /// Tokens generated on the device.
+    pub tokens: u64,
+    /// Mean measured prefill iteration latency (seconds).
+    pub prefill_mean: f64,
+    /// Mean measured decode iteration latency (seconds).
+    pub decode_mean: f64,
+    /// Median measured decode iteration latency.
+    pub decode_p50: f64,
+    /// p99 measured decode iteration latency.
+    pub decode_p99: f64,
+    /// Mean decode latency the virtual hardware model predicts for the
+    /// same (batch, context) compositions (NaN when unavailable).
+    pub predicted_decode_mean: f64,
+}
+
+impl MeasuredStats {
+    /// Measured-vs-predicted mean decode latency error ratio
+    /// `|pred - measured| / measured` (NaN when either side is missing).
+    pub fn decode_prediction_error(&self) -> f64 {
+        if self.predicted_decode_mean.is_nan() || self.decode_mean == 0.0 {
+            f64::NAN
+        } else {
+            crate::util::stats::error_ratio(self.predicted_decode_mean, self.decode_mean)
+        }
+    }
+}
+
 /// End-to-end result of running one application under one policy (§5's
 /// bar charts: inference time + extra time, idle time, estimation error).
 #[derive(Debug, Clone)]
@@ -44,6 +86,8 @@ pub struct RunReport {
     pub scenario: String,
     /// Canonical policy name that produced this run.
     pub policy: String,
+    /// Execution backend the run used (`"sim"` or `"pjrt"`).
+    pub backend: String,
     /// Scheduling/search wall-clock ("extra time", the hatched bar part).
     pub extra_time: f64,
     /// Algorithm 1's own wall-clock share of `extra_time`
@@ -64,6 +108,9 @@ pub struct RunReport {
     pub n_stages: usize,
     /// Per-stage execution records.
     pub timeline: Vec<StageRecord>,
+    /// Iteration-level measured-vs-predicted statistics (real backends
+    /// only; `None` for the simulated substrate).
+    pub measured: Option<MeasuredStats>,
     /// Cluster GPU count the run was scheduled on.
     pub n_gpus: u32,
 }
@@ -122,12 +169,24 @@ impl RunReport {
                         ),
                     ),
                     ("load_time", Json::Num(s.load_time)),
+                    (
+                        "events",
+                        Json::obj(vec![
+                            ("admitted", Json::Num(s.events.admitted as f64)),
+                            ("prefills", Json::Num(s.events.prefills as f64)),
+                            ("decode_iters", Json::Num(s.events.decode_iters as f64)),
+                            ("preemptions", Json::Num(s.events.preemptions as f64)),
+                            ("completions", Json::Num(s.events.completions as f64)),
+                            ("busy_time", Json::Num(s.events.busy_time)),
+                        ]),
+                    ),
                 ])
             })
             .collect();
         Json::obj(vec![
             ("scenario", Json::Str(self.scenario.clone())),
             ("policy", Json::Str(self.policy.clone())),
+            ("backend", Json::Str(self.backend.clone())),
             ("extra_time", Json::Num(self.extra_time)),
             ("search_time", Json::Num(self.search_time)),
             (
@@ -153,6 +212,29 @@ impl RunReport {
             ("gpu_idle_time", Json::Num(self.gpu_idle_time())),
             ("n_stages", Json::Num(self.n_stages as f64)),
             ("n_gpus", Json::Num(self.n_gpus as f64)),
+            (
+                "measured",
+                match &self.measured {
+                    None => Json::Null,
+                    Some(m) => Json::obj(vec![
+                        ("prefills", Json::Num(m.prefills as f64)),
+                        ("decode_iters", Json::Num(m.decode_iters as f64)),
+                        ("tokens", Json::Num(m.tokens as f64)),
+                        ("prefill_mean", Json::Num(m.prefill_mean)),
+                        ("decode_mean", Json::Num(m.decode_mean)),
+                        ("decode_p50", Json::Num(m.decode_p50)),
+                        ("decode_p99", Json::Num(m.decode_p99)),
+                        (
+                            "predicted_decode_mean",
+                            if m.predicted_decode_mean.is_nan() {
+                                Json::Null
+                            } else {
+                                Json::Num(m.predicted_decode_mean)
+                            },
+                        ),
+                    ]),
+                },
+            ),
             ("timeline", Json::Arr(timeline)),
         ])
         .to_string()
@@ -175,6 +257,7 @@ mod tests {
             loaded_nodes: vec![],
             load_time: 0.0,
             busy_gpu_seconds: busy,
+            events: EventSummary { completions: 7, ..Default::default() },
         }
     }
 
@@ -183,6 +266,7 @@ mod tests {
         RunReport {
             scenario: "t".into(),
             policy: "p".into(),
+            backend: "sim".into(),
             extra_time: 10.0,
             search_time: 8.0,
             planner: EvalStats { candidates: 4, cache_hits: 3, cache_misses: 1, dep_dry_runs: 0, threads: 2 },
@@ -191,6 +275,7 @@ mod tests {
             estimated_inference_time: inference * 1.2,
             n_stages: timeline.len(),
             timeline,
+            measured: None,
             n_gpus: 8,
         }
     }
@@ -225,5 +310,42 @@ mod tests {
         assert!(j.contains("\"cache_hits\":3"), "{j}");
         assert!(j.contains("\"candidates\":4"), "{j}");
         assert!(j.contains("\"threads\":2"), "{j}");
+    }
+
+    #[test]
+    fn json_reports_backend_events_and_measured_stats() {
+        let mut r = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]);
+        let j = r.to_json();
+        assert!(j.contains("\"backend\":\"sim\""), "{j}");
+        assert!(j.contains("\"events\":{"), "{j}");
+        assert!(j.contains("\"completions\":7"), "{j}");
+        assert!(j.contains("\"measured\":null"), "{j}");
+        r.backend = "pjrt".into();
+        r.measured = Some(MeasuredStats {
+            prefills: 3,
+            decode_iters: 40,
+            tokens: 43,
+            prefill_mean: 0.01,
+            decode_mean: 0.002,
+            decode_p50: 0.002,
+            decode_p99: 0.004,
+            predicted_decode_mean: 0.003,
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"backend\":\"pjrt\""), "{j}");
+        assert!(j.contains("\"measured\":{"), "{j}");
+        assert!(j.contains("\"decode_iters\":40"), "{j}");
+        assert!(j.contains("\"predicted_decode_mean\":0.003"), "{j}");
+    }
+
+    #[test]
+    fn measured_prediction_error_is_relative() {
+        let m = MeasuredStats {
+            decode_mean: 0.002,
+            predicted_decode_mean: 0.003,
+            ..Default::default()
+        };
+        assert!((m.decode_prediction_error() - 0.5).abs() < 1e-12);
+        assert!(MeasuredStats::default().decode_prediction_error().is_nan());
     }
 }

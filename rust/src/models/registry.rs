@@ -13,6 +13,7 @@ pub struct Registry {
     specs: BTreeMap<String, ModelSpec>,
 }
 
+#[allow(clippy::too_many_arguments)] // one row of the model catalog table
 fn spec(
     name: &str,
     n_layers: u32,

@@ -28,6 +28,7 @@ use std::sync::Mutex;
 
 use crate::cluster::ClusterSpec;
 use crate::costmodel::CostModel;
+use crate::exec::SimBackend;
 use crate::graph::AppGraph;
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage};
@@ -230,15 +231,16 @@ impl<'a> Evaluator<'a> {
         if has_dep {
             self.dep_dry_runs.fetch_add(1, Ordering::Relaxed);
             let mut scratch = state.clone();
+            let mut backend = SimBackend::new(&self.cost.iter_model, self.cluster.mem_bytes);
             let res = scratch.run_stage(
                 stage,
                 graph,
                 self.registry,
-                &self.cost.iter_model,
-                self.cluster.mem_bytes,
+                &mut backend,
                 &load,
                 true,
                 false,
+                None,
             );
             for n in &res.nodes {
                 let t = (n.projected_finish - res.start).max(1e-6);

@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
 use crate::costmodel::CostModel;
+use crate::exec::SimBackend;
 use crate::graph::AppGraph;
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage, StageEntry};
@@ -134,15 +135,16 @@ impl GreedyPlanner {
             let stage = self.build_stage(graph, &state, &prev_plans, &evaluator);
             assert!(!stage.entries.is_empty(), "no valid stage found");
             let load = self.load_delays(graph, &stage, &prev_plans);
+            let mut backend = SimBackend::new(&self.cost.iter_model, self.cluster.mem_bytes);
             let res = state.run_stage(
                 &stage,
                 graph,
                 &self.registry,
-                &self.cost.iter_model,
-                self.cluster.mem_bytes,
+                &mut backend,
                 &load,
                 false,
                 false,
+                None,
             );
             let first = res
                 .nodes

@@ -238,4 +238,94 @@ mod tests {
         let s = d.next_stage(&g, &st, None, &c, &reg, Some(&locked)).unwrap();
         assert_eq!(s.plan_of(0), Some(ExecPlan::new(1, 1)));
     }
+
+    #[test]
+    fn exhausted_plan_synthesizes_keep_last_plan_stages() {
+        // The cost model underestimated: the planned sequence ran out while
+        // node 1 still has work. The fallback must keep node 1 running
+        // under the *last plan it actually used*, not a fresh fair share.
+        let (g, w, c, reg) = ctx();
+        let mut st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut d = DynamicScheduler::new(Some(planned(vec![
+            vec![(0, 4, 1), (1, 2, 2)],
+            vec![(2, 8, 1)],
+        ])));
+        let s1 = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(d.consumed(), 1);
+        // Nodes 0 and 2 finish; node 1 drags on past the planned stages.
+        st.finished_nodes.insert(0);
+        let s2 = d.next_stage(&g, &st, Some(&s1), &c, &reg, None).unwrap();
+        assert!(s2.nodes().contains(&2));
+        st.finished_nodes.insert(2);
+        let s3 = d.next_stage(&g, &st, Some(&s2), &c, &reg, None).unwrap();
+        assert_eq!(d.consumed(), 2, "planned sequence is exhausted");
+        assert_eq!(s3.nodes(), vec![1].into_iter().collect());
+        assert_eq!(
+            s3.plan_of(1),
+            Some(ExecPlan::new(2, 2)),
+            "fallback must keep node 1's last-used plan"
+        );
+    }
+
+    #[test]
+    fn fallback_without_history_synthesizes_valid_plans() {
+        // No planned stages and no last-used plans at all: the fallback
+        // synthesizes plans greedily in node order (first ready node gets
+        // the biggest valid footprint) and stays inside the cluster.
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut d = DynamicScheduler::new(None);
+        let s = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert!(!s.entries.is_empty());
+        assert!(s.n_gpus() <= c.n_gpus);
+        assert!(s.nodes().contains(&0), "first ready node must be scheduled");
+        for e in &s.entries {
+            let spec = reg.get(&g.nodes[e.node].model).unwrap();
+            assert!(e.plan.is_valid_for(spec, &c), "node {} got invalid plan", e.node);
+        }
+    }
+
+    #[test]
+    fn fallback_respects_locked_plans() {
+        // No-preemption + exhausted plan: the synthesized stage must pin
+        // locked nodes to their locked plans instead of re-deriving them.
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut locked = HashMap::new();
+        locked.insert(0usize, ExecPlan::new(1, 2));
+        let mut d = DynamicScheduler::new(Some(planned(vec![])));
+        let s = d.next_stage(&g, &st, None, &c, &reg, Some(&locked)).unwrap();
+        assert_eq!(s.plan_of(0), Some(ExecPlan::new(1, 2)));
+        assert!(s.n_gpus() <= c.n_gpus);
+    }
+
+    #[test]
+    fn keep_running_leftover_dropped_when_gpus_are_full() {
+        // The next planned stage already fills the node: an unfinished
+        // leftover from the previous stage must NOT squeeze in.
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut d = DynamicScheduler::new(Some(planned(vec![
+            vec![(0, 4, 1)],
+            vec![(1, 8, 1)],
+        ])));
+        let s1 = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        // Node 0 did not finish, but stage 2 takes all 8 GPUs for node 1.
+        let s2 = d.next_stage(&g, &st, Some(&s1), &c, &reg, None).unwrap();
+        assert!(s2.nodes().contains(&1));
+        assert!(!s2.nodes().contains(&0), "leftover must be dropped: no GPUs remain");
+        assert_eq!(s2.n_gpus(), 8);
+    }
+
+    #[test]
+    fn finished_nodes_drop_even_from_fallback_stages() {
+        // Drop-finished-node applies to synthesized stages too.
+        let (g, w, c, reg) = ctx();
+        let mut st = ExecState::init(&w, |_, r| r.true_output_len);
+        st.finished_nodes.insert(0);
+        st.finished_nodes.insert(2);
+        let mut d = DynamicScheduler::new(None);
+        let s = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(s.nodes(), vec![1].into_iter().collect());
+    }
 }

@@ -20,16 +20,21 @@ pub use state::{AppRequest, ExecState};
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::cluster::{ClusterSpec, Placement};
-use crate::costmodel::{CostModel, HardwareModel};
+use crate::costmodel::{CostModel, HardwareModel, IterLatency};
+use crate::engine::sched::{EngineEvent, EventKind};
+use crate::exec::{BackendMode, EventSummary, ExecBackend, SimBackend};
 use crate::graph::AppGraph;
-use crate::metrics::{RunReport, StageRecord};
+use crate::metrics::{MeasuredStats, RunReport, StageRecord};
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage};
 use crate::planner::eval::EvalStats;
 use crate::planner::SimCache;
 use crate::policy::{self, PlanCtx, Policy, StageCtx};
 use crate::util::rng::Rng;
+use crate::util::stats;
 
 /// A runnable experiment: the application graph plus per-node workloads
 /// with ground-truth output lengths.
@@ -121,15 +126,45 @@ pub fn run_policy(
     run_with(p.as_mut(), scenario, &ctx, opts)
 }
 
-/// Run `scenario` under an instantiated policy, reusing `ctx`'s wiring.
+/// Run `scenario` under an instantiated policy, reusing `ctx`'s wiring,
+/// on the default virtual-time substrate ([`SimBackend`] over the
+/// context's hardware ground truth). Numerically identical to every
+/// pre-`ExecBackend` release.
 pub fn run_with(
     policy: &mut dyn Policy,
     scenario: &Scenario,
     ctx: &RunContext,
     opts: &RunOpts,
 ) -> RunReport {
+    let mut backend = SimBackend::new(&ctx.hw, ctx.cluster.mem_bytes);
+    run_with_backend(policy, scenario, ctx, opts, &mut backend)
+        .expect("the simulated substrate is infallible")
+}
+
+/// Run `scenario` under an instantiated policy against an arbitrary
+/// [`ExecBackend`] — the one code path shared by the simulated substrate
+/// and the real PJRT serving runtime.
+///
+/// Planning always happens in virtual time (the paper's
+/// sampling-then-simulation cost model); the backend decides how planned
+/// stages *execute*:
+/// * [`BackendMode::Virtual`] — the §4.3 first-finish discipline with
+///   projection and deadline replay (today's experiments);
+/// * [`BackendMode::Measured`] — real, irreversible execution: each stage
+///   runs its nodes to completion sequentially on the device, the report
+///   clocks are measured seconds, and
+///   [`RunReport::measured`](crate::metrics::RunReport) compares measured
+///   iteration latencies against the hardware model's predictions.
+pub fn run_with_backend(
+    policy: &mut dyn Policy,
+    scenario: &Scenario,
+    ctx: &RunContext,
+    opts: &RunOpts,
+    backend: &mut dyn ExecBackend,
+) -> Result<RunReport> {
     let RunContext { registry, cost, hw, cluster, sim_cache } = ctx;
     let graph = &scenario.graph;
+    let measured_mode = backend.mode() == BackendMode::Measured;
 
     // ---- planning phase -------------------------------------------------
     let mut extra_time = 0.0;
@@ -152,8 +187,10 @@ pub fn run_with(
 
     // ---- running phase ---------------------------------------------------
     let mut true_state = ExecState::init(&scenario.workloads, |_, r| r.true_output_len);
-    true_state.noise_sigma = Some(opts.noise_sigma);
-    true_state.noise_seed = opts.seed ^ 0x7275_6E;
+    if !measured_mode {
+        true_state.noise_sigma = Some(opts.noise_sigma);
+        true_state.noise_seed = opts.seed ^ 0x7275_6E;
+    }
 
     let mut est_rng = Rng::new(opts.seed ^ 0xE571);
     let mut placement = Placement::empty(cluster.n_gpus);
@@ -165,6 +202,7 @@ pub fn run_with(
     };
 
     let mut timeline: Vec<StageRecord> = vec![];
+    let mut all_events: Vec<EngineEvent> = vec![];
     let mut locked: HashMap<usize, ExecPlan> = HashMap::new();
     let mut prev_stage: Option<Stage> = None;
     let mut guard = 0usize;
@@ -203,40 +241,53 @@ pub fn run_with(
             }
         }
 
-        // Placement: minimum-reload transition (§4.3).
+        // Placement: minimum-reload transition (§4.3). Measured backends
+        // track placement for the record but pay no virtual loading time
+        // (the real model loads once, at backend construction).
         let needs: Vec<(u64, u32, u32)> =
             stage.entries.iter().map(|e| (e.node as u64, e.plan.dp, e.plan.tp)).collect();
         let reload = Placement::transition(&placement, &needs, cluster, &loader)
             .expect("stage must fit the cluster");
         placement = reload.placement.clone();
-        let load_delay: HashMap<usize, f64> =
-            reload.load_time_by_owner.iter().map(|(&o, &t)| (o as usize, t)).collect();
+        let load_delay: HashMap<usize, f64> = if measured_mode {
+            HashMap::new()
+        } else {
+            reload.load_time_by_owner.iter().map(|(&o, &t)| (o as usize, t)).collect()
+        };
 
-        let before_done = true_state.completed.len();
-        let res = true_state.run_stage(
-            &stage,
-            graph,
-            registry,
-            hw,
-            cluster.mem_bytes,
-            &load_delay,
-            false,
-            false,
-        );
-        // Livelock guard: a stage that completed nothing and took no time
-        // is re-run to completion of its fastest node.
-        if true_state.completed.len() == before_done && res.end - res.start < 1e-9 {
-            true_state.run_stage(
+        let mut events: Vec<EngineEvent> = vec![];
+        let res = if measured_mode {
+            true_state.run_stage_measured(&stage, graph, registry, backend, Some(&mut events))?
+        } else {
+            let before_done = true_state.completed.len();
+            let res = true_state.run_stage(
                 &stage,
                 graph,
                 registry,
-                hw,
-                cluster.mem_bytes,
+                backend,
                 &load_delay,
                 false,
-                true,
+                false,
+                Some(&mut events),
             );
-        }
+            // Livelock guard: a stage that completed nothing and took no
+            // time is re-run to completion of its fastest node. (As
+            // before the refactor, the record keeps the first pass's
+            // per-node numbers; the state carries the re-run's progress.)
+            if true_state.completed.len() == before_done && res.end - res.start < 1e-9 {
+                true_state.run_stage(
+                    &stage,
+                    graph,
+                    registry,
+                    backend,
+                    &load_delay,
+                    false,
+                    true,
+                    Some(&mut events),
+                );
+            }
+            res
+        };
 
         let busy: Vec<f64> = stage
             .entries
@@ -254,16 +305,22 @@ pub fn run_with(
             end: true_state.clock,
             entries: stage.entries.iter().map(|e| (e.node, e.plan)).collect(),
             loaded_nodes: load_delay.keys().copied().collect(),
-            load_time: reload.load_time,
+            load_time: if measured_mode { 0.0 } else { reload.load_time },
             busy_gpu_seconds: busy,
+            events: EventSummary::from_events(&events),
         });
+        all_events.append(&mut events);
         prev_stage = Some(stage);
     }
 
     let inference_time = true_state.clock;
-    RunReport {
+    let measured = measured_mode
+        .then(|| measured_stats(&all_events, &timeline, graph, registry, hw))
+        .flatten();
+    Ok(RunReport {
         scenario: scenario.name.clone(),
         policy: policy.name().to_string(),
+        backend: backend.name().to_string(),
         extra_time,
         search_time,
         planner: planner_stats,
@@ -272,8 +329,70 @@ pub fn run_with(
         estimated_inference_time: planned.map(|p| p.est_total).unwrap_or(f64::NAN),
         n_stages: timeline.len(),
         timeline,
+        measured,
         n_gpus: cluster.n_gpus,
+    })
+}
+
+/// Fold a measured run's event stream into [`MeasuredStats`], pricing
+/// each real decode iteration with the virtual hardware model at the same
+/// batch/context so the report carries measured-vs-predicted latencies
+/// (the cost-model validation hook §4.2 promises).
+fn measured_stats(
+    events: &[EngineEvent],
+    timeline: &[StageRecord],
+    graph: &AppGraph,
+    registry: &Registry,
+    hw: &dyn IterLatency,
+) -> Option<MeasuredStats> {
+    // Per-node plan of the stage each event belongs to (by timestamp).
+    let plan_at = |node: usize, t: f64| -> ExecPlan {
+        timeline
+            .iter()
+            .find(|s| t <= s.end + 1e-12 && s.entries.iter().any(|(n, _)| *n == node))
+            .and_then(|s| {
+                s.entries.iter().find(|(n, _)| *n == node).map(|(_, p)| *p)
+            })
+            .unwrap_or(ExecPlan::new(1, 1))
+    };
+    let mut decode_durs = vec![];
+    let mut predicted = vec![];
+    let mut prefill_durs = vec![];
+    let mut tokens = 0u64;
+    for ev in events {
+        match ev.kind {
+            EventKind::Prefill { batch, dur, .. } => {
+                prefill_durs.push(dur);
+                tokens += batch as u64;
+            }
+            EventKind::Decode { batch, iters, total_ctx, max_ctx, dur } => {
+                tokens += iters as u64 * batch as u64;
+                let per_iter = dur / iters.max(1) as f64;
+                decode_durs.push(per_iter);
+                if let Some(spec) = registry.get(&graph.nodes[ev.node].model) {
+                    let plan = plan_at(ev.node, ev.t);
+                    predicted.push(hw.decode(spec, plan.tp, batch, total_ctx, max_ctx));
+                }
+            }
+            _ => {}
+        }
     }
+    let dsum = stats::summarize(&decode_durs)?;
+    let psum = stats::summarize(&prefill_durs);
+    Some(MeasuredStats {
+        prefills: prefill_durs.len() as u64,
+        decode_iters: decode_durs.len() as u64,
+        tokens,
+        prefill_mean: psum.map(|s| s.mean).unwrap_or(0.0),
+        decode_mean: dsum.mean,
+        decode_p50: dsum.p50,
+        decode_p99: dsum.p99,
+        predicted_decode_mean: if predicted.is_empty() {
+            f64::NAN
+        } else {
+            predicted.iter().sum::<f64>() / predicted.len() as f64
+        },
+    })
 }
 
 /// Build the policy-visible state: true progress and completions, but

@@ -13,10 +13,14 @@
 
 use std::collections::{HashMap, HashSet};
 
+use anyhow::Result;
+
 use crate::costmodel::IterLatency;
-use crate::engine::session::{remaining_flops, run_session};
+use crate::engine::sched::EngineEvent;
+use crate::engine::session::remaining_flops;
 use crate::engine::sim::EngineConfig;
 use crate::engine::EngineRequest;
+use crate::exec::{ExecBackend, NodeOutcome, NodeRun};
 use crate::graph::AppGraph;
 use crate::models::Registry;
 use crate::plan::Stage;
@@ -192,6 +196,7 @@ impl ExecState {
     /// included, clamped to ≥ 1 µs) of the outcome returned by
     /// [`ExecState::simulate_node_fast`]. Used by the planner's candidate
     /// scoring (not by state commits, which remain exact).
+    #[allow(clippy::too_many_arguments)] // established planner fast path
     pub fn estimate_node_time_fast(
         &self,
         node: usize,
@@ -218,6 +223,7 @@ impl ExecState {
     /// delay included), independent of `self.clock`. That translation
     /// invariance is what makes the result safe to memoize in a
     /// [`crate::planner::SimCache`] and replay at any later clock.
+    #[allow(clippy::too_many_arguments)] // established planner fast path
     pub fn simulate_node_fast(
         &self,
         node: usize,
@@ -250,6 +256,7 @@ impl ExecState {
         let cfg = EngineConfig {
             noise_sigma: None,
             ..EngineConfig::standard(spec, plan.tp, mem_bytes)
+                .unwrap_or_else(|e| panic!("candidate plan reached the engine: {e}"))
         };
         let mut sim = crate::engine::sim::EngineSim::new(
             spec,
@@ -369,8 +376,12 @@ impl ExecState {
         }
     }
 
-    /// Execute (or dry-run) one stage.
+    /// Execute (or dry-run) one stage against a virtual-time backend.
     ///
+    /// * `backend` — the execution substrate (virtual backends only: the
+    ///   two-pass project-then-replay structure requires rewindable time;
+    ///   measured backends go through
+    ///   [`ExecState::run_stage_measured`]).
     /// * `load_delay[node]` — seconds of model-loading before the node's
     ///   engines start (0 when kept resident, §4.3).
     /// * `dry_run` — compute projected finishes without mutating state
@@ -378,16 +389,19 @@ impl ExecState {
     /// * `run_to_end` — if false (default semantics), the stage ends at
     ///   the first node completion; if true it runs until all nodes finish
     ///   (used for the final stage and no-preemption execution).
+    /// * `trace` — optional unified event stream collector (commit pass
+    ///   only; results are identical with or without it).
+    #[allow(clippy::too_many_arguments)] // established stage-execution signature
     pub fn run_stage(
         &mut self,
         stage: &Stage,
         graph: &AppGraph,
         registry: &Registry,
-        lat: &dyn IterLatency,
-        mem_bytes: u64,
+        backend: &mut dyn ExecBackend,
         load_delay: &HashMap<usize, f64>,
         dry_run: bool,
         run_to_end: bool,
+        trace: Option<&mut Vec<EngineEvent>>,
     ) -> StageResult {
         let start = self.clock;
         let order = graph.topo_order(&stage.entries.iter().map(|e| e.node).collect::<Vec<_>>());
@@ -399,24 +413,20 @@ impl ExecState {
         for &node in &order {
             let plan = stage.plan_of(node).unwrap();
             let spec = registry.get(&graph.nodes[node].model).expect("model");
-            let cfg = EngineConfig {
-                noise_sigma: self.noise_sigma,
-                ..EngineConfig::standard(spec, plan.tp, mem_bytes)
-            };
             let delay = load_delay.get(&node).copied().unwrap_or(0.0);
             let kept = !load_delay.contains_key(&node);
             let reqs =
                 self.build_engine_requests(node, start + delay, &stage_completions, kept);
-            let out = run_session(
+            let out = self.run_node_on(
+                backend,
+                node,
+                graph,
                 spec,
-                plan.dp,
-                plan.tp,
-                lat,
-                &cfg,
+                plan,
                 &reqs,
                 start + delay,
                 None,
-                self.noise_seed ^ (node as u64) << 8,
+                false,
             );
             for (id, t) in &out.completions {
                 stage_completions.insert((node, *id), *t);
@@ -461,65 +471,159 @@ impl ExecState {
         }
 
         // Pass 2: replay with the stage-end deadline and commit state.
+        let mut trace = trace;
         let mut replay_completions: HashMap<(usize, u64), f64> = HashMap::new();
         for &node in &order {
             let plan = stage.plan_of(node).unwrap();
             let spec = registry.get(&graph.nodes[node].model).expect("model");
-            let cfg = EngineConfig {
-                noise_sigma: self.noise_sigma,
-                ..EngineConfig::standard(spec, plan.tp, mem_bytes)
-            };
             let delay = load_delay.get(&node).copied().unwrap_or(0.0);
             let kept = !load_delay.contains_key(&node);
             let reqs =
                 self.build_engine_requests(node, start + delay, &replay_completions, kept);
-            let out = run_session(
+            let mut out = self.run_node_on(
+                backend,
+                node,
+                graph,
                 spec,
-                plan.dp,
-                plan.tp,
-                lat,
-                &cfg,
+                plan,
                 &reqs,
                 start + delay,
                 Some(stage_end),
-                self.noise_seed ^ (node as u64) << 8,
+                trace.is_some(),
             );
             for (id, t) in &out.completions {
                 replay_completions.insert((node, *id), *t);
             }
-            // Commit: mark completions, update remaining progress.
-            let mut progress: HashMap<u64, u32> = HashMap::new();
-            for r in &out.remaining {
-                progress.insert(r.id, r.generated);
+            if let Some(t) = trace.as_mut() {
+                t.append(&mut out.events);
             }
-            let completed_here: HashSet<u64> =
-                out.completions.iter().map(|(id, _)| *id).collect();
-            for r in self.nodes[node].iter_mut() {
-                if completed_here.contains(&r.id) {
-                    r.generated = r.output_len;
-                } else if let Some(&g) = progress.get(&r.id) {
-                    r.generated = g;
-                }
-            }
-            for (id, t) in &out.completions {
-                self.completed.insert((node, *id), *t);
-            }
-            let finished = self.nodes[node].iter().all(|r| r.is_done());
-            if finished {
-                self.finished_nodes.insert(node);
-            }
-            let busy: f64 = out.replicas.iter().map(|r| r.busy_time).sum();
-            let tokens: u64 = out.replicas.iter().map(|r| r.tokens_generated).sum();
-            results.push(NodeStageResult {
-                node,
-                projected_finish: projected[&node],
-                busy_time: busy,
-                tokens,
-                finished,
-            });
+            let res = self.commit_node(node, &out, projected[&node]);
+            results.push(res);
         }
         self.clock = stage_end;
         StageResult { start, end: stage_end, nodes: results }
+    }
+
+    /// Drive one node through `backend` (panicking on backend errors —
+    /// virtual backends are infallible and this path is virtual-only).
+    #[allow(clippy::too_many_arguments)] // internal forwarding helper
+    fn run_node_on(
+        &self,
+        backend: &mut dyn ExecBackend,
+        node: usize,
+        graph: &AppGraph,
+        spec: &crate::models::ModelSpec,
+        plan: crate::plan::ExecPlan,
+        reqs: &[EngineRequest],
+        start_time: f64,
+        deadline: Option<f64>,
+        collect_events: bool,
+    ) -> NodeOutcome {
+        backend
+            .run_node(&NodeRun {
+                node,
+                model: &graph.nodes[node].model,
+                spec,
+                plan,
+                requests: reqs,
+                start_time,
+                deadline,
+                noise_sigma: self.noise_sigma,
+                noise_seed: self.noise_seed ^ ((node as u64) << 8),
+                collect_events,
+            })
+            .unwrap_or_else(|e| panic!("stage execution failed: {e:#}"))
+    }
+
+    /// Commit a node outcome: completions, carried progress, finish flag.
+    fn commit_node(
+        &mut self,
+        node: usize,
+        out: &NodeOutcome,
+        projected_finish: f64,
+    ) -> NodeStageResult {
+        let mut progress: HashMap<u64, u32> = HashMap::new();
+        for r in &out.remaining {
+            progress.insert(r.id, r.generated);
+        }
+        let completed_here: HashSet<u64> = out.completions.iter().map(|(id, _)| *id).collect();
+        for r in self.nodes[node].iter_mut() {
+            if completed_here.contains(&r.id) {
+                r.generated = r.output_len;
+            } else if let Some(&g) = progress.get(&r.id) {
+                r.generated = g;
+            }
+        }
+        for (id, t) in &out.completions {
+            self.completed.insert((node, *id), *t);
+        }
+        let finished = self.nodes[node].iter().all(|r| r.is_done());
+        if finished {
+            self.finished_nodes.insert(node);
+        }
+        let busy: f64 = out.replicas.iter().map(|r| r.busy_time).sum();
+        let tokens: u64 = out.replicas.iter().map(|r| r.tokens_generated).sum();
+        NodeStageResult { node, projected_finish, busy_time: busy, tokens, finished }
+    }
+
+    /// Execute one stage on a *measured* backend (real hardware): no
+    /// projections, no deadline replays. Nodes run sequentially in
+    /// dependency order — there is one physical device — each to the
+    /// completion of its runnable requests, and their measured finish
+    /// times chain: the stage ends when the last node finishes.
+    pub fn run_stage_measured(
+        &mut self,
+        stage: &Stage,
+        graph: &AppGraph,
+        registry: &Registry,
+        backend: &mut dyn ExecBackend,
+        trace: Option<&mut Vec<EngineEvent>>,
+    ) -> Result<StageResult> {
+        let start = self.clock;
+        let order = graph.topo_order(&stage.entries.iter().map(|e| e.node).collect::<Vec<_>>());
+        let mut trace = trace;
+        let mut stage_completions: HashMap<(usize, u64), f64> = HashMap::new();
+        let mut results = vec![];
+        let mut t = start;
+        for &node in &order {
+            let plan = stage.plan_of(node).unwrap();
+            let spec = registry.get(&graph.nodes[node].model).expect("model");
+            let reqs = self.build_engine_requests(node, t, &stage_completions, false);
+            if reqs.is_empty() {
+                results.push(NodeStageResult {
+                    node,
+                    projected_finish: t,
+                    busy_time: 0.0,
+                    tokens: 0,
+                    finished: self.nodes[node].iter().all(|r| r.is_done()),
+                });
+                continue;
+            }
+            let mut out = backend.run_node(&NodeRun {
+                node,
+                model: &graph.nodes[node].model,
+                spec,
+                plan,
+                requests: &reqs,
+                start_time: t,
+                deadline: None,
+                noise_sigma: None,
+                noise_seed: 0,
+                collect_events: trace.is_some(),
+            })?;
+            for (id, ct) in &out.completions {
+                stage_completions.insert((node, *id), *ct);
+            }
+            if let Some(tr) = trace.as_mut() {
+                tr.append(&mut out.events);
+            }
+            let finish = out.finish_time.max(t);
+            let res = self.commit_node(node, &out, finish);
+            results.push(res);
+            t = finish;
+        }
+        self.clock = t.max(start);
+        Ok(StageResult { start, end: self.clock, nodes: results })
     }
 }
 
@@ -528,6 +632,7 @@ mod tests {
     use super::*;
     use crate::cluster::ClusterSpec;
     use crate::costmodel::HardwareModel;
+    use crate::exec::SimBackend;
     use crate::plan::{ExecPlan, StageEntry};
 
     fn two_model_app() -> (AppGraph, Vec<Vec<AppRequest>>) {
@@ -561,7 +666,8 @@ mod tests {
         let (g, w) = two_model_app();
         let mut st = ExecState::init(&w, |_, r| r.true_output_len);
         let s = stage(vec![(0, 4, 1), (1, 4, 1)]);
-        let res = st.run_stage(&s, &g, &reg, &hw, c.mem_bytes, &HashMap::new(), false, false);
+        let mut b = SimBackend::new(&hw, c.mem_bytes);
+        let res = st.run_stage(&s, &g, &reg, &mut b, &HashMap::new(), false, false, None);
         // Node 0 has half the workload of node 1 on equal GPUs -> finishes
         // first; stage must end at node 0's finish.
         let n0 = res.nodes.iter().find(|n| n.node == 0).unwrap();
@@ -583,7 +689,8 @@ mod tests {
         let mut st = ExecState::init(&w, |_, r| r.true_output_len);
         let before = st.clone();
         let s = stage(vec![(0, 4, 1), (1, 4, 1)]);
-        let res = st.run_stage(&s, &g, &reg, &hw, c.mem_bytes, &HashMap::new(), true, false);
+        let mut b = SimBackend::new(&hw, c.mem_bytes);
+        let res = st.run_stage(&s, &g, &reg, &mut b, &HashMap::new(), true, false, None);
         assert!(res.end > res.start);
         assert_eq!(st.clock, before.clock);
         assert_eq!(st.completed.len(), before.completed.len());
@@ -596,11 +703,12 @@ mod tests {
         let (g, w) = two_model_app();
         let mut st = ExecState::init(&w, |_, r| r.true_output_len);
         let s = stage(vec![(0, 8, 1)]);
+        let mut b = SimBackend::new(&hw, c.mem_bytes);
         let no_delay =
-            st.clone().run_stage(&s, &g, &reg, &hw, c.mem_bytes, &HashMap::new(), true, false);
+            st.clone().run_stage(&s, &g, &reg, &mut b, &HashMap::new(), true, false, None);
         let mut delays = HashMap::new();
         delays.insert(0usize, 20.0);
-        let delayed = st.run_stage(&s, &g, &reg, &hw, c.mem_bytes, &delays, true, false);
+        let delayed = st.run_stage(&s, &g, &reg, &mut b, &delays, true, false, None);
         assert!((delayed.end - no_delay.end - 20.0).abs() < 1.0);
     }
 
@@ -619,7 +727,8 @@ mod tests {
             .collect();
         let mut st = ExecState::init(&[wa, wb], |_, r| r.true_output_len);
         let s = stage(vec![(a, 4, 1), (b, 4, 1)]);
-        let res = st.run_stage(&s, &g, &reg, &hw, c.mem_bytes, &HashMap::new(), false, true);
+        let mut b = SimBackend::new(&hw, c.mem_bytes);
+        let res = st.run_stage(&s, &g, &reg, &mut b, &HashMap::new(), false, true, None);
         assert!(st.all_done());
         // Consumer must finish after producer started producing.
         let fa = res.nodes.iter().find(|n| n.node == a).unwrap().projected_finish;
@@ -640,11 +749,45 @@ mod tests {
         ]];
         let mut st = ExecState::init(&w, |_, r| r.true_output_len);
         let s = stage(vec![(a, 1, 1)]);
-        st.run_stage(&s, &g, &reg, &hw, c.mem_bytes, &HashMap::new(), false, true);
+        let mut b = SimBackend::new(&hw, c.mem_bytes);
+        st.run_stage(&s, &g, &reg, &mut b, &HashMap::new(), false, true, None);
         assert!(st.all_done());
         let t0 = st.completed[&(a, 0)];
         let t1 = st.completed[&(a, 1)];
         assert!(t1 > t0);
+    }
+
+    #[test]
+    fn measured_stage_runs_nodes_sequentially_to_completion() {
+        use crate::exec::pjrt::{MockModel, PjrtBackend};
+        let (_, reg, _) = ctx();
+        let mut g = AppGraph::default();
+        let a = g.add_node("chatglm3-6b", "prod", 64);
+        let b = g.add_node("mistral-7b-instruct", "cons", 64);
+        g.add_edge(a, b);
+        let wa: Vec<AppRequest> = (0..6).map(|i| AppRequest::simple(i, 8, 5)).collect();
+        let wb: Vec<AppRequest> = (0..6)
+            .map(|i| AppRequest { dep: Some((a, i)), ..AppRequest::simple(i, 8, 4) })
+            .collect();
+        let mut st = ExecState::init(&[wa, wb], |_, r| r.true_output_len);
+        let mut backend = PjrtBackend::with_model(Box::new(MockModel::new(4, 64)));
+        let s = stage(vec![(a, 1, 1), (b, 1, 1)]);
+        let mut events = vec![];
+        let res = st
+            .run_stage_measured(&s, &g, &reg, &mut backend, Some(&mut events))
+            .unwrap();
+        // Both nodes ran to completion (producer first, consumer after).
+        assert!(st.all_done());
+        assert_eq!(st.completed.len(), 12);
+        assert!(res.end >= res.start);
+        // The consumer's requests completed at or after its producer's.
+        for i in 0..6u64 {
+            assert!(st.completed[&(b, i)] >= st.completed[&(a, i)] - 1e-12);
+        }
+        // The unified event stream covers both nodes.
+        let nodes: std::collections::HashSet<usize> =
+            events.iter().map(|e| e.node).collect();
+        assert_eq!(nodes, [a, b].into_iter().collect());
     }
 
     #[test]
@@ -653,12 +796,13 @@ mod tests {
         let (g, w) = two_model_app();
         let mut st = ExecState::init(&w, |_, r| r.true_output_len);
         let s1 = stage(vec![(0, 4, 1), (1, 4, 1)]);
-        st.run_stage(&s1, &g, &reg, &hw, c.mem_bytes, &HashMap::new(), false, false);
+        let mut b = SimBackend::new(&hw, c.mem_bytes);
+        st.run_stage(&s1, &g, &reg, &mut b, &HashMap::new(), false, false, None);
         // Second stage: all GPUs to the survivor.
         let s2 = stage(vec![(1, 8, 1)]);
         let mut delays = HashMap::new();
         delays.insert(1usize, 10.0);
-        st.run_stage(&s2, &g, &reg, &hw, c.mem_bytes, &delays, false, true);
+        st.run_stage(&s2, &g, &reg, &mut b, &delays, false, true, None);
         assert!(st.all_done());
         assert_eq!(st.completed.len(), 600);
     }

@@ -1,35 +1,37 @@
-//! Real batched serving over the PJRT runtime — the end-to-end driver's
-//! engine. Static-bucket continuous batching: fill a batch of up to
-//! `TinyGpt::batch()` prompts, prefill once, decode until every request
-//! hits its token budget, refill, repeat. Reports per-request latency and
-//! aggregate throughput.
+//! Real serving front-end over the unified execution API.
+//!
+//! The old static-bucket `ServeEngine` (with its private
+//! `ServeRequest`/`ServeResult` types) is gone: serving now speaks the
+//! same language as everything else — [`EngineRequest`]s go in, a
+//! [`crate::exec::NodeOutcome`] with completions, token generations and
+//! the unified event stream comes out, executed by the continuous-batching
+//! [`PjrtBackend`] (the same vLLM-v0 scheduling core the simulator runs).
+//! Compared to static buckets, a completed request's seat is refilled
+//! immediately instead of idling until the whole bucket drains.
+//!
+//! [`ServeMetrics`] aggregates a run; per-request results are
+//! [`Generation`]s.
 
-use std::path::Path;
-use std::time::Instant;
+use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::runtime::TinyGpt;
+use crate::engine::EngineRequest;
+use crate::exec::pjrt::PjrtBackend;
+use crate::exec::{EventSummary, ExecBackend, NodeRun};
+use crate::models::ModelSpec;
+use crate::plan::ExecPlan;
+use crate::util::stats;
 
-/// One serving request: prompt tokens and a generation budget.
-#[derive(Debug, Clone)]
-pub struct ServeRequest {
-    /// Request id.
-    pub id: u64,
-    /// Prompt token ids.
-    pub prompt: Vec<i32>,
-    /// Generation budget in tokens.
-    pub max_new_tokens: usize,
-}
-
-/// Per-request result.
-#[derive(Debug, Clone)]
-pub struct ServeResult {
+/// One served request's result: the generated tokens and the seconds from
+/// serve start to its completion.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Generation {
     /// Request id.
     pub id: u64,
     /// Generated token ids.
-    pub generated: Vec<i32>,
-    /// Seconds from serve() start to this request's completion.
+    pub tokens: Vec<i32>,
+    /// Seconds from serve start to this request's completion.
     pub latency: f64,
 }
 
@@ -44,133 +46,203 @@ pub struct ServeMetrics {
     pub prefills: u64,
     pub decode_steps: u64,
     pub mean_latency: f64,
+    pub p50_latency: f64,
     pub p99_latency: f64,
 }
 
-/// The serving engine (single model instance).
-pub struct ServeEngine {
-    model: TinyGpt,
-}
-
-impl ServeEngine {
-    /// Load the TinyGPT artifacts and wrap them in an engine.
-    pub fn load(artifacts_dir: &Path) -> Result<Self> {
-        Ok(ServeEngine { model: TinyGpt::load(artifacts_dir)? })
-    }
-
-    /// The underlying loaded model.
-    pub fn model(&self) -> &TinyGpt {
-        &self.model
-    }
-
-    /// Serve all requests with static-bucket batching; returns per-request
-    /// results plus aggregate metrics.
-    pub fn serve(&self, requests: &[ServeRequest]) -> Result<(Vec<ServeResult>, ServeMetrics)> {
-        let b = self.model.batch();
-        let s = self.model.max_seq();
-        let t0 = Instant::now();
-        let mut results = vec![];
-        let mut prefills = 0u64;
-        let mut decode_steps = 0u64;
-        let mut total_tokens = 0u64;
-
-        for batch in requests.chunks(b) {
-            // Build padded token matrix.
-            let mut tokens = vec![0i32; b * s];
-            let mut lengths = vec![1i32; b];
-            let mut budgets = vec![0usize; b];
-            for (row, req) in batch.iter().enumerate() {
-                let plen = req.prompt.len().min(s - req.max_new_tokens.min(s - 1) - 1).max(1);
-                tokens[row * s..row * s + plen].copy_from_slice(&req.prompt[..plen]);
-                lengths[row] = plen as i32;
-                budgets[row] = req.max_new_tokens.min(s - plen - 1);
-            }
-            let out = self.model.prefill(&tokens, &lengths)?;
-            prefills += 1;
-            let mut state = out.state;
-            let mut next = self.model.argmax(&out.logits);
-            let mut pos: Vec<i32> = lengths.clone();
-            let mut generated: Vec<Vec<i32>> = vec![vec![]; b];
-            let mut done_at: Vec<Option<f64>> = vec![None; b];
-
-            // Every active row got its first token from the prefill.
-            for row in 0..batch.len() {
-                if budgets[row] == 0 {
-                    done_at[row] = Some(t0.elapsed().as_secs_f64());
-                    continue;
-                }
-                generated[row].push(next[row]);
-                total_tokens += 1;
-                if generated[row].len() >= budgets[row] {
-                    done_at[row] = Some(t0.elapsed().as_secs_f64());
-                }
-            }
-
-            let max_budget = budgets.iter().copied().max().unwrap_or(0);
-            for _step in 1..max_budget {
-                if (0..batch.len()).all(|r| done_at[r].is_some()) {
-                    break;
-                }
-                let out = self.model.decode(&next, state, &pos)?;
-                decode_steps += 1;
-                state = out.state;
-                let sampled = self.model.argmax(&out.logits);
-                for row in 0..batch.len() {
-                    if done_at[row].is_some() {
-                        continue;
-                    }
-                    pos[row] += 1;
-                    next[row] = sampled[row];
-                    generated[row].push(sampled[row]);
-                    total_tokens += 1;
-                    if generated[row].len() >= budgets[row] {
-                        done_at[row] = Some(t0.elapsed().as_secs_f64());
-                    }
-                }
-            }
-            let now = t0.elapsed().as_secs_f64();
-            for (row, req) in batch.iter().enumerate() {
-                results.push(ServeResult {
-                    id: req.id,
-                    generated: std::mem::take(&mut generated[row]),
-                    latency: done_at[row].unwrap_or(now),
-                });
-            }
-        }
-
-        let wall = t0.elapsed().as_secs_f64();
-        let mut lats: Vec<f64> = results.iter().map(|r| r.latency).collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let metrics = ServeMetrics {
-            n_requests: results.len(),
+impl ServeMetrics {
+    /// Assemble metrics from per-request latencies and iteration counts.
+    /// Percentiles are real quantiles ([`stats::percentile_sorted`]) —
+    /// p99 interpolates at rank 0.99, it is *not* the maximum.
+    pub fn from_latencies(
+        latencies: &[f64],
+        total_tokens: u64,
+        wall_time: f64,
+        prefills: u64,
+        decode_steps: u64,
+    ) -> Self {
+        let mut sorted: Vec<f64> = latencies.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (mean, p50, p99) = if sorted.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                sorted.iter().sum::<f64>() / sorted.len() as f64,
+                stats::percentile_sorted(&sorted, 0.50),
+                stats::percentile_sorted(&sorted, 0.99),
+            )
+        };
+        ServeMetrics {
+            n_requests: latencies.len(),
             total_tokens,
-            wall_time: wall,
-            tokens_per_second: total_tokens as f64 / wall.max(1e-9),
+            wall_time,
+            tokens_per_second: total_tokens as f64 / wall_time.max(1e-9),
             prefills,
             decode_steps,
-            mean_latency: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
-            p99_latency: lats.last().copied().unwrap_or(0.0),
-        };
-        Ok((results, metrics))
+            mean_latency: mean,
+            p50_latency: p50,
+            p99_latency: p99,
+        }
     }
 }
 
-/// Deterministic synthetic prompts for the E2E driver.
-pub fn synthetic_requests(n: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec<ServeRequest> {
-    let mut rng = crate::util::rng::Rng::new(seed);
-    (0..n as u64)
-        .map(|id| ServeRequest {
+/// A nominal [`ModelSpec`] describing the compiled TinyGPT (real backends
+/// never price iterations with it; it exists so serving speaks the same
+/// [`NodeRun`] contract as the scheduler stack).
+pub fn tinygpt_spec(max_seq: u32) -> ModelSpec {
+    ModelSpec {
+        name: "tinygpt".to_string(),
+        n_layers: 2,
+        hidden: 64,
+        n_heads: 4,
+        kv_heads: 4,
+        n_params: 500_000,
+        active_params: 500_000,
+        dtype_bytes: 4,
+        max_seq,
+        base_load_time: 0.1,
+    }
+}
+
+/// Serve `requests` through `backend` with continuous batching. `prompts`
+/// maps request ids to real prompt token ids (requests without an entry
+/// get deterministic synthetic prompts). Returns per-request
+/// [`Generation`]s (sorted by id) and aggregate [`ServeMetrics`].
+pub fn serve_requests(
+    backend: &mut PjrtBackend,
+    requests: &[EngineRequest],
+    prompts: &HashMap<u64, Vec<i32>>,
+) -> Result<(Vec<Generation>, ServeMetrics)> {
+    for (&id, toks) in prompts {
+        backend.set_prompt(0, id, toks.clone());
+    }
+    let spec = tinygpt_spec(backend.max_seq() as u32);
+    let out = backend.run_node(&NodeRun {
+        node: 0,
+        model: "tinygpt",
+        spec: &spec,
+        plan: ExecPlan::new(1, 1),
+        requests,
+        start_time: 0.0,
+        deadline: None,
+        noise_sigma: None,
+        noise_seed: 0,
+        collect_events: true,
+    })?;
+
+    let latency_of: HashMap<u64, f64> = out.completions.iter().copied().collect();
+    let mut results: Vec<Generation> = out
+        .generations
+        .into_iter()
+        .map(|(id, tokens)| Generation {
             id,
-            prompt: (0..prompt_len).map(|_| rng.range_u64(1, 511) as i32).collect(),
-            max_new_tokens: max_new,
+            tokens,
+            latency: latency_of.get(&id).copied().unwrap_or(out.finish_time),
         })
-        .collect()
+        .collect();
+    results.sort_by_key(|g| g.id);
+
+    let summary = EventSummary::from_events(&out.events);
+    let latencies: Vec<f64> = results.iter().map(|g| g.latency).collect();
+    let total_tokens: u64 = out.replicas.iter().map(|r| r.tokens_generated).sum();
+    let metrics = ServeMetrics::from_latencies(
+        &latencies,
+        total_tokens,
+        out.finish_time,
+        summary.prefills,
+        summary.decode_iters,
+    );
+    Ok((results, metrics))
+}
+
+/// Deterministic synthetic workload for the E2E driver: `n` requests of
+/// `prompt_len` random tokens with a `max_new` generation budget. Returns
+/// the unified requests plus their prompt token map.
+pub fn synthetic_requests(
+    n: usize,
+    prompt_len: usize,
+    max_new: usize,
+    seed: u64,
+) -> (Vec<EngineRequest>, HashMap<u64, Vec<i32>>) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut requests = vec![];
+    let mut prompts = HashMap::new();
+    for id in 0..n as u64 {
+        let prompt: Vec<i32> =
+            (0..prompt_len).map(|_| rng.range_u64(1, 511) as i32).collect();
+        requests.push(EngineRequest::fresh(id, prompt_len as u32, max_new as u32));
+        prompts.insert(id, prompt);
+    }
+    (requests, prompts)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::pjrt::MockModel;
     use crate::runtime::default_artifacts_dir;
+
+    #[test]
+    fn p99_is_a_real_quantile_not_the_max() {
+        // Latencies 1..=100: the 0.99 quantile interpolates to 99.01; the
+        // old implementation returned `last()` (the max, 100).
+        let lats: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let m = ServeMetrics::from_latencies(&lats, 1000, 10.0, 5, 50);
+        assert!((m.p99_latency - 99.01).abs() < 1e-9, "p99 {}", m.p99_latency);
+        assert!(m.p99_latency < 100.0, "p99 must not be the max");
+        assert!((m.p50_latency - 50.5).abs() < 1e-9, "p50 {}", m.p50_latency);
+        assert!((m.mean_latency - 50.5).abs() < 1e-9);
+        assert!((m.tokens_per_second - 100.0).abs() < 1e-9);
+        // Degenerate inputs stay finite.
+        let empty = ServeMetrics::from_latencies(&[], 0, 0.0, 0, 0);
+        assert_eq!(empty.p99_latency, 0.0);
+        assert_eq!(empty.n_requests, 0);
+    }
+
+    #[test]
+    fn serves_through_the_unified_backend_with_a_mock() {
+        // The whole serving pipeline runs without artifacts: continuous
+        // batching, budgets, metrics — on the mock token model.
+        let mut backend = PjrtBackend::with_model(Box::new(MockModel::new(4, 64)));
+        let (reqs, prompts) = synthetic_requests(10, 12, 6, 3);
+        let (results, metrics) = serve_requests(&mut backend, &reqs, &prompts).unwrap();
+        assert_eq!(results.len(), 10);
+        for r in &results {
+            assert_eq!(r.tokens.len(), 6, "request {} budget", r.id);
+        }
+        assert_eq!(metrics.n_requests, 10);
+        assert_eq!(metrics.total_tokens, 60);
+        assert!(metrics.prefills >= 3, "10 requests / 4 seats: {}", metrics.prefills);
+        assert!(metrics.mean_latency <= metrics.p99_latency + 1e-9);
+        assert!(metrics.decode_steps > 0);
+    }
+
+    #[test]
+    fn backend_can_be_reused_for_repeated_serves() {
+        // Re-serving the same request ids must reset their histories
+        // (generated == 0 means "start from the prompt"), so repeated
+        // serves return identical generations and budgets.
+        let mut backend = PjrtBackend::with_model(Box::new(MockModel::new(4, 64)));
+        let (reqs, prompts) = synthetic_requests(6, 10, 5, 2);
+        let (a, _) = serve_requests(&mut backend, &reqs, &prompts).unwrap();
+        let (b, m) = serve_requests(&mut backend, &reqs, &prompts).unwrap();
+        assert_eq!(
+            a.iter().map(|g| (g.id, g.tokens.clone())).collect::<Vec<_>>(),
+            b.iter().map(|g| (g.id, g.tokens.clone())).collect::<Vec<_>>(),
+        );
+        assert_eq!(m.total_tokens, 30);
+    }
+
+    #[test]
+    fn synthetic_requests_are_deterministic() {
+        let (a_reqs, a_prompts) = synthetic_requests(5, 8, 4, 7);
+        let (b_reqs, b_prompts) = synthetic_requests(5, 8, 4, 7);
+        assert_eq!(a_prompts, b_prompts);
+        assert_eq!(a_reqs.len(), b_reqs.len());
+        assert!(a_reqs.iter().zip(&b_reqs).all(|(x, y)| x.id == y.id
+            && x.input_len == y.input_len
+            && x.output_len == y.output_len));
+    }
 
     #[test]
     fn serves_batched_requests_end_to_end() {
@@ -178,16 +250,16 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return;
         }
-        let engine = ServeEngine::load(&default_artifacts_dir()).unwrap();
-        let reqs = synthetic_requests(10, 12, 6, 3);
-        let (results, metrics) = engine.serve(&reqs).unwrap();
+        let mut backend = PjrtBackend::load(&default_artifacts_dir()).unwrap();
+        let (reqs, prompts) = synthetic_requests(10, 12, 6, 3);
+        let (results, metrics) = serve_requests(&mut backend, &reqs, &prompts).unwrap();
         assert_eq!(results.len(), 10);
         for r in &results {
-            assert_eq!(r.generated.len(), 6, "request {} budget", r.id);
+            assert_eq!(r.tokens.len(), 6, "request {} budget", r.id);
             assert!(r.latency > 0.0);
         }
         assert_eq!(metrics.total_tokens, 60);
         assert!(metrics.tokens_per_second > 0.0);
-        assert!(metrics.prefills >= 2); // 10 requests / batch of 8
+        assert!(metrics.prefills >= 2); // 10 requests through 8 seats
     }
 }

@@ -25,25 +25,30 @@
 //! [`crate::policy`] registry at `build()` time, so misconfiguration
 //! fails before any (expensive) planning starts.
 
+use std::path::PathBuf;
+
 use anyhow::{anyhow, Result};
 
 use crate::cluster::ClusterSpec;
+use crate::exec::{self, pjrt::PjrtBackend, SimBackend};
 use crate::metrics::RunReport;
 use crate::policy;
 use crate::runner::{self, RunContext, RunOpts, Scenario};
 use crate::spec::AppSpec;
 
-/// Configured session: a cluster, a policy, a seed, and the shared
-/// cost-model wiring. Create one with [`SamuLlm::builder`].
+/// Configured session: a cluster, a policy, a seed, an execution backend
+/// and the shared cost-model wiring. Create one with [`SamuLlm::builder`].
 pub struct SamuLlm {
     ctx: RunContext,
     policy: &'static str,
+    backend: &'static str,
+    artifacts: PathBuf,
     opts: RunOpts,
 }
 
 /// Builder for [`SamuLlm`]. Defaults: 8×A100 node, policy `"ours"`,
-/// seed 42, preemption on, sampled output lengths, 2% ground-truth
-/// iteration jitter (the paper's §5 setup).
+/// backend `"sim"`, seed 42, preemption on, sampled output lengths, 2%
+/// ground-truth iteration jitter (the paper's §5 setup).
 pub struct SamuLlmBuilder {
     cluster: ClusterSpec,
     /// A100-node GPU count requested via [`SamuLlmBuilder::gpus`];
@@ -51,6 +56,8 @@ pub struct SamuLlmBuilder {
     /// counts error instead of panicking.
     gpus: Option<u32>,
     policy: String,
+    backend: String,
+    artifacts: Option<PathBuf>,
     seed: u64,
     no_preemption: bool,
     known_lengths: bool,
@@ -66,6 +73,8 @@ impl SamuLlm {
             cluster: ClusterSpec::a100_node(8),
             gpus: None,
             policy: "ours".to_string(),
+            backend: "sim".to_string(),
+            artifacts: None,
             seed: 42,
             no_preemption: false,
             known_lengths: false,
@@ -78,6 +87,11 @@ impl SamuLlm {
     /// The session's canonical policy name.
     pub fn policy_name(&self) -> &'static str {
         self.policy
+    }
+
+    /// The session's canonical execution backend name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
     }
 
     /// The cluster this session schedules onto.
@@ -116,7 +130,16 @@ impl SamuLlm {
 
     fn execute(&self, policy: &str, scenario: &Scenario, opts: &RunOpts) -> Result<RunReport> {
         let mut policy = policy::create(policy)?;
-        Ok(runner::run_with(policy.as_mut(), scenario, &self.ctx, opts))
+        match self.backend {
+            "pjrt" => {
+                let mut backend = PjrtBackend::load(&self.artifacts)?;
+                runner::run_with_backend(policy.as_mut(), scenario, &self.ctx, opts, &mut backend)
+            }
+            _ => {
+                let mut backend = SimBackend::new(&self.ctx.hw, self.ctx.cluster.mem_bytes);
+                runner::run_with_backend(policy.as_mut(), scenario, &self.ctx, opts, &mut backend)
+            }
+        }
     }
 }
 
@@ -138,6 +161,22 @@ impl SamuLlmBuilder {
     /// Scheduling policy by registry name or alias (default `"ours"`).
     pub fn policy(mut self, name: &str) -> Self {
         self.policy = name.to_string();
+        self
+    }
+
+    /// Execution backend by registry name or alias (default `"sim"`):
+    /// `"sim"` runs on the virtual-time substrate, `"pjrt"` on the real
+    /// PJRT TinyGPT runtime (requires `make artifacts`; see
+    /// [`SamuLlmBuilder::artifacts_dir`]).
+    pub fn backend(mut self, name: &str) -> Self {
+        self.backend = name.to_string();
+        self
+    }
+
+    /// Artifacts directory for the `pjrt` backend (default:
+    /// [`crate::runtime::default_artifacts_dir`]).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
         self
     }
 
@@ -181,9 +220,21 @@ impl SamuLlmBuilder {
         self
     }
 
-    /// Validate the configuration and assemble the session wiring.
+    /// Validate the configuration and assemble the session wiring. For
+    /// the `pjrt` backend, the artifacts contract is checked here so
+    /// misconfiguration fails before any (expensive) planning starts.
     pub fn build(self) -> Result<SamuLlm> {
         let policy = policy::canonical(&self.policy)?;
+        let backend = exec::canonical(&self.backend)?;
+        let artifacts =
+            self.artifacts.unwrap_or_else(crate::runtime::default_artifacts_dir);
+        if backend == "pjrt" && !artifacts.join("model_meta.json").exists() {
+            return Err(anyhow!(
+                "backend \"pjrt\" needs TinyGPT artifacts in {} — run `make artifacts` \
+                 first (or point artifacts_dir at them)",
+                artifacts.display()
+            ));
+        }
         let cluster = match self.gpus {
             Some(n) => {
                 if n == 0 || !n.is_power_of_two() {
@@ -207,7 +258,13 @@ impl SamuLlmBuilder {
             threads: self.threads,
             sim_cache: self.sim_cache,
         };
-        Ok(SamuLlm { ctx: RunContext::new(&cluster, self.seed), policy, opts })
+        Ok(SamuLlm {
+            ctx: RunContext::new(&cluster, self.seed),
+            policy,
+            backend,
+            artifacts,
+            opts,
+        })
     }
 }
 
@@ -220,7 +277,47 @@ mod tests {
         assert!(SamuLlm::builder().policy("nope").build().is_err());
         let s = SamuLlm::builder().policy("samullm").build().unwrap();
         assert_eq!(s.policy_name(), "ours");
+        assert_eq!(s.backend_name(), "sim");
         assert_eq!(s.seed(), 42);
+    }
+
+    #[test]
+    fn builder_validates_backend_name_and_artifacts() {
+        assert!(SamuLlm::builder().backend("cuda").build().is_err());
+        let s = SamuLlm::builder().backend("virtual").build().unwrap();
+        assert_eq!(s.backend_name(), "sim");
+        // pjrt without artifacts fails up-front with a pointer to `make
+        // artifacts` (the CI container never has them).
+        let missing = std::path::Path::new("/definitely/not/here");
+        let err = SamuLlm::builder()
+            .backend("pjrt")
+            .artifacts_dir(missing)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn explicit_sim_backend_is_the_default_path() {
+        // backend("sim") and the default must be the same code path with
+        // bit-identical results.
+        let spec = AppSpec::ensembling(50, 128);
+        let a = SamuLlm::builder().gpus(8).seed(9).build().unwrap().run(&spec).unwrap();
+        let b = SamuLlm::builder()
+            .gpus(8)
+            .seed(9)
+            .backend("sim")
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(a.backend, "sim");
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        assert_eq!(a.n_stages, b.n_stages);
+        assert!(a.measured.is_none());
+        // The unified event stream reaches the report for the sim backend.
+        assert!(a.timeline.iter().map(|s| s.events.completions).sum::<u64>() > 0);
     }
 
     #[test]

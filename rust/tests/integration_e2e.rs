@@ -1,8 +1,11 @@
-//! Real-path integration: AOT artifacts -> PJRT -> batched serving.
+//! Real-path integration: AOT artifacts -> PJRT -> the unified execution
+//! API (continuous-batching serving + full scheduler runs).
 //! These tests are skipped (with a notice) until `make artifacts` has run.
 
+use samullm::exec::pjrt::PjrtBackend;
+use samullm::prelude::*;
 use samullm::runtime::{default_artifacts_dir, TinyGpt};
-use samullm::serve::{synthetic_requests, ServeEngine};
+use samullm::serve::{serve_requests, synthetic_requests};
 
 fn ready() -> bool {
     let ok = default_artifacts_dir().join("model_meta.json").exists();
@@ -35,12 +38,15 @@ fn greedy_generation_is_reproducible() {
     if !ready() {
         return;
     }
-    let engine = ServeEngine::load(&default_artifacts_dir()).unwrap();
-    let reqs = synthetic_requests(8, 10, 8, 5);
-    let (a, _) = engine.serve(&reqs).unwrap();
-    let (b, _) = engine.serve(&reqs).unwrap();
+    let (reqs, prompts) = synthetic_requests(8, 10, 8, 5);
+    let mut run = || {
+        let mut backend = PjrtBackend::load(&default_artifacts_dir()).unwrap();
+        serve_requests(&mut backend, &reqs, &prompts).unwrap().0
+    };
+    let a = run();
+    let b = run();
     for (x, y) in a.iter().zip(&b) {
-        assert_eq!(x.generated, y.generated, "nondeterministic generation");
+        assert_eq!(x.tokens, y.tokens, "nondeterministic generation");
     }
 }
 
@@ -86,15 +92,79 @@ fn serving_metrics_are_coherent() {
     if !ready() {
         return;
     }
-    let engine = ServeEngine::load(&default_artifacts_dir()).unwrap();
-    let reqs = synthetic_requests(20, 8, 5, 9);
-    let (results, m) = engine.serve(&reqs).unwrap();
+    let mut backend = PjrtBackend::load(&default_artifacts_dir()).unwrap();
+    let (reqs, prompts) = synthetic_requests(20, 8, 5, 9);
+    let (results, m) = serve_requests(&mut backend, &reqs, &prompts).unwrap();
     assert_eq!(m.n_requests, 20);
     assert_eq!(m.total_tokens, 20 * 5);
     assert!(m.wall_time > 0.0);
     assert!(m.mean_latency <= m.p99_latency + 1e-9);
-    assert!(m.prefills == 3, "20 reqs / batch 8 = 3 prefills, got {}", m.prefills);
+    // Continuous batching: 20 requests through 8 seats need at least 3
+    // admission prefills (possibly more as seats free one by one).
+    assert!(m.prefills >= 3, "20 reqs / batch 8: prefills {}", m.prefills);
     for r in &results {
         assert!(r.latency <= m.wall_time + 1e-9);
     }
+}
+
+#[test]
+fn session_runs_an_app_spec_on_the_pjrt_backend() {
+    // The acceptance path: the same AppSpec runs end-to-end through the
+    // one `SamuLlm` code path on the real runtime, producing a RunReport
+    // with measured iteration stats from the unified event stream.
+    if !ready() {
+        return;
+    }
+    let session = SamuLlm::builder()
+        .gpus(8)
+        .policy("ours")
+        .backend("pjrt")
+        .seed(11)
+        .build()
+        .unwrap();
+    let spec = AppSpec::ensembling(12, 16);
+    let report = session.run(&spec).unwrap();
+    assert_eq!(report.backend, "pjrt");
+    assert!(report.inference_time > 0.0, "measured wall time must be positive");
+    assert!(report.n_stages >= 1);
+    // Every request of every node completed on the real engine.
+    let completions: u64 = report.timeline.iter().map(|s| s.events.completions).sum();
+    assert!(completions > 0);
+    let measured = report.measured.expect("pjrt runs must report measured stats");
+    assert!(measured.decode_iters > 0);
+    assert!(measured.decode_mean > 0.0);
+    assert!(measured.tokens > 0);
+    // The measured-vs-predicted hook exists (prediction may be wildly off
+    // for the tiny CPU model — it just has to be present and finite).
+    assert!(measured.predicted_decode_mean.is_finite());
+}
+
+#[test]
+fn sim_and_pjrt_run_the_same_spec_through_one_code_path() {
+    if !ready() {
+        return;
+    }
+    let spec = AppSpec::ensembling(10, 12);
+    let run = |backend: &str| {
+        SamuLlm::builder()
+            .gpus(8)
+            .backend(backend)
+            .seed(4)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap()
+    };
+    let sim = run("sim");
+    let real = run("pjrt");
+    assert_eq!(sim.backend, "sim");
+    assert_eq!(real.backend, "pjrt");
+    // Identical applications: both backends complete the same request
+    // count (the unified event stream counts completions identically).
+    let done = |r: &samullm::metrics::RunReport| -> u64 {
+        r.timeline.iter().map(|s| s.events.completions).sum()
+    };
+    assert_eq!(done(&sim), done(&real));
+    assert!(sim.measured.is_none());
+    assert!(real.measured.is_some());
 }

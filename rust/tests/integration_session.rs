@@ -116,10 +116,14 @@ fn spec_round_trips_through_config_json_and_runs() {
     let cfg = ExperimentConfig {
         app: small_custom_spec(),
         policy: "round-robin".to_string(),
+        backend: "sim".to_string(),
+        artifacts: None,
         n_gpus: 8,
         seed: 9,
         no_preemption: false,
         known_output_lengths: false,
+        threads: 0,
+        sim_cache: true,
     };
     let text = cfg.to_json();
     let back = ExperimentConfig::from_json(&text).unwrap();

@@ -7,6 +7,7 @@ use samullm::cluster::{ClusterSpec, Placement};
 use samullm::costmodel::{CostModel, Ecdf, HardwareModel};
 use samullm::engine::sim::{EngineConfig, EngineSim};
 use samullm::engine::EngineRequest;
+use samullm::exec::SimBackend;
 use samullm::graph::AppGraph;
 use samullm::models::Registry;
 use samullm::plan::ExecPlan;
@@ -40,7 +41,7 @@ fn engine_conserves_requests_and_tokens() {
         let n = rng.range_usize(1, 400);
         let reqs = random_requests(rng, n);
         let want_tokens: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
-        let cfg = EngineConfig::standard(spec, tp, cluster.mem_bytes);
+        let cfg = EngineConfig::standard(spec, tp, cluster.mem_bytes).unwrap();
         let mut sim = EngineSim::new(spec, tp, &hw, cfg, reqs, 0.0, rng.next_u64());
         let out = sim.run(None);
         prop_assert!(out.finished == n, "finished {} != {}", out.finished, n);
@@ -75,7 +76,7 @@ fn engine_clock_monotone_and_busy_bounded() {
         for r in reqs.iter_mut() {
             r.ready_time = rng.range_f64(0.0, 30.0);
         }
-        let cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes);
+        let cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes).unwrap();
         let mut sim = EngineSim::new(spec, 1, &hw, cfg, reqs, 0.0, 1);
         let mut prev = sim.clock();
         while sim.step() || sim.idle_until_ready() {
@@ -100,7 +101,7 @@ fn fast_forward_agrees_with_exact() {
         let spec = registry.get("mistral-7b-instruct").unwrap();
         let n = rng.range_usize(10, 250);
         let reqs = random_requests(rng, n);
-        let mut cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes);
+        let mut cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes).unwrap();
         cfg.fast_forward = false;
         let exact = EngineSim::new(spec, 1, &hw, cfg.clone(), reqs.clone(), 0.0, 0).run(None);
         cfg.fast_forward = true;
@@ -258,15 +259,16 @@ fn exec_state_progress_is_monotone() {
             prop_assert!(guard < 64, "state machine diverged");
             let mut s2 = stage.clone();
             s2.entries.retain(|e| !st.finished_nodes.contains(&e.node));
+            let mut backend = SimBackend::new(&hw, cluster.mem_bytes);
             let res = st.run_stage(
                 &s2,
                 &graph,
                 &registry,
-                &hw,
-                cluster.mem_bytes,
+                &mut backend,
                 &HashMap::new(),
                 false,
                 false,
+                None,
             );
             prop_assert!(res.end + 1e-12 >= res.start, "negative stage duration");
             prop_assert!(st.clock + 1e-12 >= prev_clock, "clock regressed");
