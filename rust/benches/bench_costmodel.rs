@@ -8,6 +8,10 @@ use samullm::util::bench::BenchGroup;
 use samullm::util::rng::Rng;
 
 fn main() {
+    // --smoke: tiny CI configuration (fewer inner iterations + samples).
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 50usize } else { 1000 };
+    let draws = if smoke { 500usize } else { 10_000 };
     let cluster = ClusterSpec::a100_node(8);
     let hw = HardwareModel::new(cluster.clone());
     let lm = LinearIterModel::fit_from_profile(&hw);
@@ -15,24 +19,27 @@ fn main() {
     let spec = registry.get("vicuna-13b-v1.5").unwrap().clone();
 
     let mut g = BenchGroup::new("costmodel");
-    g.bench("hardware_decode_x1k", || {
+    if smoke {
+        g.sample_size(3);
+    }
+    g.bench(&format!("hardware_decode_x{iters}"), || {
         let mut acc = 0.0;
-        for b in 1..=1000usize {
+        for b in 1..=iters {
             acc += hw.decode(&spec, 1, b % 256 + 1, (b as u64 % 256 + 1) * 300, 320);
         }
         acc
     });
-    g.bench("linear_decode_x1k", || {
+    g.bench(&format!("linear_decode_x{iters}"), || {
         let mut acc = 0.0;
-        for b in 1..=1000usize {
+        for b in 1..=iters {
             acc += lm.decode(&spec, 1, b % 256 + 1, (b as u64 % 256 + 1) * 300, 320);
         }
         acc
     });
     let lens = vec![200u32; 64];
-    g.bench("hardware_prefill_64_x1k", || {
+    g.bench(&format!("hardware_prefill_64_x{iters}"), || {
         let mut acc = 0.0;
-        for _ in 0..1000 {
+        for _ in 0..iters {
             acc += hw.prefill(&spec, 1, &lens);
         }
         acc
@@ -40,9 +47,9 @@ fn main() {
     g.bench("fit_from_profile", || LinearIterModel::fit_from_profile(&hw));
     g.bench("sampler_build", || OutputSampler::from_norobots_trace(1));
     let sampler = OutputSampler::from_norobots_trace(1);
-    g.bench("sampler_draw_10k", || {
+    g.bench(&format!("sampler_draw_{draws}"), || {
         let mut rng = Rng::new(2);
-        (0..10_000)
+        (0..draws)
             .map(|_| sampler.sample("vicuna-13b-v1.5", 30, 512, 4096, &mut rng))
             .sum::<u32>()
     });

@@ -9,27 +9,33 @@ use samullm::spec::AppSpec;
 use samullm::util::bench::BenchGroup;
 
 fn main() {
+    // --smoke: tiny CI configuration (shrunken apps, 3 samples).
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let cluster = ClusterSpec::a100_node(8);
     let opts = RunOpts::default();
     let mut g = BenchGroup::new("e2e_apps");
-    g.sample_size(4);
+    g.sample_size(if smoke { 3 } else { 4 });
+    let n_reqs = if smoke { 100 } else { 1000 };
+    let n_docs = if smoke { 10 } else { 100 };
 
-    let s = AppSpec::ensembling(1000, 256).build(42).expect("spec");
-    g.bench("fig7_ensembling_1k_ours", || run_policy("ours", &s, &cluster, &opts));
-    g.bench("fig7_ensembling_1k_max", || {
+    let s = AppSpec::ensembling(n_reqs, 256).build(42).expect("spec");
+    g.bench("fig7_ensembling_ours", || run_policy("ours", &s, &cluster, &opts));
+    g.bench("fig7_ensembling_max", || {
         run_policy("max-heuristic", &s, &cluster, &opts)
     });
-    g.bench("fig7_ensembling_1k_min", || {
+    g.bench("fig7_ensembling_min", || {
         run_policy("min-heuristic", &s, &cluster, &opts)
     });
 
-    let s = AppSpec::routing(4096, false).build(7).expect("spec");
-    g.bench("fig8_routing_ours", || run_policy("ours", &s, &cluster, &opts));
+    if !smoke {
+        let s = AppSpec::routing(4096, false).build(7).expect("spec");
+        g.bench("fig8_routing_ours", || run_policy("ours", &s, &cluster, &opts));
+    }
 
-    let s = AppSpec::chain_summary(100, 2, 500).build(7).expect("spec");
+    let s = AppSpec::chain_summary(n_docs, 2, 500).build(7).expect("spec");
     g.bench("fig11_chain_summary_ours", || run_policy("ours", &s, &cluster, &opts));
 
-    let s = AppSpec::mixed(100, 1000, 900, 256, 4).build(7).expect("spec");
+    let s = AppSpec::mixed(n_docs, n_reqs, 900, 256, 4).build(7).expect("spec");
     g.bench("fig12_mixed_ours", || run_policy("ours", &s, &cluster, &opts));
     g.finish();
 }

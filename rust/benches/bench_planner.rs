@@ -27,20 +27,28 @@ fn planner(cost: &CostModel, cluster: &ClusterSpec) -> GreedyPlanner {
 }
 
 fn main() {
+    // --smoke: tiny CI configuration (small apps, 3 samples).
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let cluster = ClusterSpec::a100_node(8);
     let cost = CostModel::calibrated(&cluster, 1);
-    let threads =
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
 
-    let apps: Vec<(&str, Scenario)> = vec![
-        ("ensembling", AppSpec::ensembling(1000, 256).build(42).expect("spec")),
-        ("routing", AppSpec::routing(4096, false).build(7).expect("spec")),
-        ("chain_summary", AppSpec::chain_summary(100, 2, 500).build(7).expect("spec")),
-        ("mixed", AppSpec::mixed(100, 1000, 900, 256, 4).build(7).expect("spec")),
-    ];
+    let apps: Vec<(&str, Scenario)> = if smoke {
+        vec![
+            ("ensembling", AppSpec::ensembling(120, 256).build(42).expect("spec")),
+            ("mixed", AppSpec::mixed(10, 120, 500, 256, 2).build(7).expect("spec")),
+        ]
+    } else {
+        vec![
+            ("ensembling", AppSpec::ensembling(1000, 256).build(42).expect("spec")),
+            ("routing", AppSpec::routing(4096, false).build(7).expect("spec")),
+            ("chain_summary", AppSpec::chain_summary(100, 2, 500).build(7).expect("spec")),
+            ("mixed", AppSpec::mixed(100, 1000, 900, 256, 4).build(7).expect("spec")),
+        ]
+    };
 
     let mut g = BenchGroup::new("planner");
-    g.sample_size(5);
+    g.sample_size(if smoke { 3 } else { 5 });
     let mut rows: Vec<Json> = vec![];
     for (name, s) in &apps {
         // Sequential reference: one thread, private per-search memo only
@@ -68,8 +76,7 @@ fn main() {
         // Parity: both searches must commit identical plans + estimates.
         let a = seq.plan(&s.graph, &s.workloads, false, 7);
         let b = par.plan(&s.graph, &s.workloads, false, 7);
-        let identical =
-            a.stages == b.stages && a.est_total.to_bits() == b.est_total.to_bits();
+        let identical = a.stages == b.stages && a.est_total.to_bits() == b.est_total.to_bits();
         assert!(identical, "{name}: parallel+cached plan diverged from sequential");
 
         rows.push(Json::obj(vec![

@@ -1,14 +1,95 @@
-//! Real-path benchmarks: PJRT prefill/decode steps of the AOT-compiled
-//! TinyGPT (requires `make artifacts`; benches are skipped otherwise).
+//! Runtime benchmarks, two parts:
+//!
+//! 1. **Length-feedback loop** (always runs): a workload whose true
+//!    output lengths are shifted away from the offline No Robots trace —
+//!    the exact regime where frozen planning-time estimates go wrong.
+//!    Runs `ours` with frozen estimates vs with online refinement
+//!    (conditional posterior re-estimation + drift-triggered replanning)
+//!    and writes `BENCH_runtime.json` with both virtual makespans, the
+//!    replan/drift counters and the wall-clock cost of each run.
+//! 2. **PJRT microbenches** (requires `make artifacts`; skipped
+//!    otherwise): prefill/decode steps of the AOT-compiled TinyGPT.
+//!
+//! `--smoke` shrinks the workload and sample counts to CI size.
 
+use samullm::cluster::ClusterSpec;
+use samullm::harness::shifted_length_scenario;
+use samullm::runner::{run_policy, RunOpts};
 use samullm::runtime::{default_artifacts_dir, TinyGpt};
 use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
 
-fn main() {
+fn feedback_bench(smoke: bool) -> Json {
+    let cluster = ClusterSpec::a100_node(8);
+    let n_requests = if smoke { 60 } else { 250 };
+    // Shared with tests/integration_online.rs, so the CI guard and these
+    // published numbers measure the exact same miscalibrated workload.
+    let scenario = shifted_length_scenario(n_requests, 42);
+
+    let frozen_opts = RunOpts { seed: 42, ..RunOpts::default() };
+    let online_opts = RunOpts { online_refinement: true, ..frozen_opts.clone() };
+
+    let mut g = BenchGroup::new("runtime_feedback");
+    g.sample_size(if smoke { 3 } else { 5 });
+    // Runs are deterministic per seed, so the reports the timed closures
+    // produce ARE the experiment results — keep the last one instead of
+    // paying two extra end-to-end runs afterwards.
+    let mut frozen = None;
+    let frozen_wall = g
+        .bench("frozen_estimates", || {
+            frozen = Some(run_policy("ours", &scenario, &cluster, &frozen_opts));
+        })
+        .median;
+    let mut online = None;
+    let online_wall = g
+        .bench("online_refinement", || {
+            online = Some(run_policy("ours", &scenario, &cluster, &online_opts));
+        })
+        .median;
+    g.finish();
+
+    let frozen = frozen.expect("bench ran at least one sample");
+    let online = online.expect("bench ran at least one sample");
+    let stats = online.online.expect("online run must report feedback stats");
+    println!(
+        "shifted-length makespan: frozen {:.1}s vs online {:.1}s ({:+.1}%), \
+         replans={} max-drift={:.2}",
+        frozen.inference_time,
+        online.inference_time,
+        (online.inference_time / frozen.inference_time - 1.0) * 100.0,
+        stats.replans,
+        stats.drift
+    );
+
+    Json::obj(vec![
+        ("scenario", Json::Str(scenario.name.clone())),
+        ("n_requests_per_model", Json::Num(n_requests as f64)),
+        ("frozen_inference_s", Json::Num(frozen.inference_time)),
+        ("online_inference_s", Json::Num(online.inference_time)),
+        (
+            "online_speedup",
+            Json::Num(frozen.inference_time / online.inference_time.max(1e-12)),
+        ),
+        ("online_faster", Json::Bool(online.inference_time < frozen.inference_time)),
+        ("replans", Json::Num(stats.replans as f64)),
+        ("max_drift", Json::Num(stats.drift)),
+        ("pre_est_total_s", Json::Num(stats.pre_est_total)),
+        ("post_est_total_s", Json::Num(stats.post_est_total)),
+        ("frozen_wall_s", Json::Num(frozen_wall)),
+        ("online_wall_s", Json::Num(online_wall)),
+        ("frozen_estimation_error", Json::Num(frozen.estimation_error())),
+        ("online_estimation_error", Json::Num(online.estimation_error())),
+    ])
+}
+
+fn pjrt_bench(smoke: bool) -> Json {
     let dir = default_artifacts_dir();
     if !dir.join("model_meta.json").exists() {
-        eprintln!("bench_runtime skipped: run `make artifacts` first");
-        return;
+        eprintln!("bench_runtime pjrt part skipped: run `make artifacts` first");
+        return Json::obj(vec![
+            ("skipped", Json::Bool(true)),
+            ("reason", Json::Str("artifacts missing (make artifacts)".to_string())),
+        ]);
     }
     let model = TinyGpt::load(&dir).expect("load artifacts");
     let b = model.batch();
@@ -22,31 +103,58 @@ fn main() {
     let lengths = vec![16i32; b];
 
     let mut g = BenchGroup::new("runtime");
-    g.sample_size(8);
-    g.bench("prefill_b8_s128", || model.prefill(&tokens, &lengths).unwrap());
+    g.sample_size(if smoke { 3 } else { 8 });
+    let prefill = g
+        .bench("prefill_b8_s128", || model.prefill(&tokens, &lengths).unwrap())
+        .median;
 
     let out = model.prefill(&tokens, &lengths).unwrap();
     let next = model.argmax(&out.logits);
     let pos = vec![16i32; b];
-    g.bench("decode_step_b8", || {
-        let o = model.prefill(&tokens, &lengths).unwrap();
-        model.decode(&next, o.state, &pos).unwrap()
-    });
+    let decode = g
+        .bench("decode_step_b8", || {
+            let o = model.prefill(&tokens, &lengths).unwrap();
+            model.decode(&next, o.state, &pos).unwrap()
+        })
+        .median;
     // A short generation loop: prefill + 16 decode steps.
-    g.bench("generate_16_tokens_b8", || {
-        let o = model.prefill(&tokens, &lengths).unwrap();
-        let mut state = o.state;
-        let mut nxt = model.argmax(&o.logits);
-        let mut p: Vec<i32> = lengths.clone();
-        for _ in 0..16 {
-            let o = model.decode(&nxt, state, &p).unwrap();
-            state = o.state;
-            nxt = model.argmax(&o.logits);
-            for x in p.iter_mut() {
-                *x += 1;
+    let generate = g
+        .bench("generate_16_tokens_b8", || {
+            let o = model.prefill(&tokens, &lengths).unwrap();
+            let mut state = o.state;
+            let mut nxt = model.argmax(&o.logits);
+            let mut p: Vec<i32> = lengths.clone();
+            for _ in 0..16 {
+                let o = model.decode(&nxt, state, &p).unwrap();
+                state = o.state;
+                nxt = model.argmax(&o.logits);
+                for x in p.iter_mut() {
+                    *x += 1;
+                }
             }
-        }
-        nxt
-    });
+            nxt
+        })
+        .median;
     g.finish();
+    Json::obj(vec![
+        ("skipped", Json::Bool(false)),
+        ("prefill_s", Json::Num(prefill)),
+        ("decode_step_s", Json::Num(decode)),
+        ("generate_16_s", Json::Num(generate)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let feedback = feedback_bench(smoke);
+    let pjrt = pjrt_bench(smoke);
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("runtime".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("feedback", feedback),
+        ("pjrt", pjrt),
+    ])
+    .to_string();
+    std::fs::write("BENCH_runtime.json", format!("{doc}\n")).expect("write BENCH_runtime.json");
+    println!("wrote BENCH_runtime.json");
 }

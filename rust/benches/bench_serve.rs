@@ -75,6 +75,8 @@ fn serve_static_buckets(
 }
 
 fn main() {
+    // --smoke: tiny CI configuration (fewer requests + samples).
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let dir = default_artifacts_dir();
     if !dir.join("model_meta.json").exists() {
         eprintln!("bench_serve skipped: run `make artifacts` first");
@@ -89,7 +91,7 @@ fn main() {
     }
 
     // Mixed-length workload: the regime where static buckets waste seats.
-    let n = 48;
+    let n = if smoke { 16 } else { 48 };
     let (requests, prompts) = synthetic_requests(n, 12, 4, 11);
     let mut mixed = requests.clone();
     for (i, r) in mixed.iter_mut().enumerate() {
@@ -102,7 +104,7 @@ fn main() {
 
     let model = TinyGpt::load(&dir).expect("load artifacts");
     let mut g = BenchGroup::new("serve");
-    g.sample_size(5);
+    g.sample_size(if smoke { 3 } else { 5 });
 
     let static_median = g
         .bench("static_buckets", || serve_static_buckets(&model, &bucket_reqs).unwrap())

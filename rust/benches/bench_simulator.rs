@@ -28,6 +28,8 @@ fn requests(n: usize, seed: u64) -> Vec<EngineRequest> {
 }
 
 fn main() {
+    // --smoke: tiny CI configuration (one small request set, 3 samples).
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let cluster = ClusterSpec::a100_node(8);
     let registry = Registry::paper();
     let spec = registry.get("vicuna-13b-v1.5").unwrap().clone();
@@ -35,14 +37,19 @@ fn main() {
     let cm = CostModel::calibrated(&cluster, 1);
 
     let mut g = BenchGroup::new("simulator");
-    for n in [1000usize, 10000] {
+    if smoke {
+        g.sample_size(3);
+    }
+    let sizes: &[usize] = if smoke { &[200] } else { &[1000, 10000] };
+    let exact_at = sizes[0];
+    for &n in sizes {
         let reqs = requests(n, 3);
         g.bench(&format!("fast_forward_{n}"), || {
             let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
             let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
             sim.run(None)
         });
-        if n == 1000 {
+        if n == exact_at {
             g.bench(&format!("exact_{n}"), || {
                 let mut cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
                 cfg.fast_forward = false;

@@ -71,7 +71,9 @@ pub fn build(n_docs: usize, eval_times: u32, max_out: u32, seed: u64) -> Scenari
         // The document's final summary feeds `eval_times` evaluations.
         let last_id = summarizer_reqs[prev.expect("documents have >=1 chunk")].id;
         for _ in 0..eval_times {
-            let input_len = (200 + max_out.min(600)).min(e_spec.max_seq - 300);
+            // Saturating: a hypothetical evaluator with a tiny context
+            // window must clamp, not wrap the u32.
+            let input_len = (200 + max_out.min(600)).min(e_spec.max_seq.saturating_sub(300)).max(1);
             let out = lengths::true_output_len(
                 EVALUATOR,
                 shift,

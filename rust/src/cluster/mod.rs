@@ -9,7 +9,6 @@ pub mod placement;
 
 pub use placement::{Placement, ReloadPlan};
 
-
 /// Hardware description of the node.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {

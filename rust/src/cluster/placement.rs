@@ -11,7 +11,6 @@
 //! Owners are opaque ids (application *nodes*, not model names — the same
 //! LLM may appear at two different nodes and must be two instances).
 
-
 use super::ClusterSpec;
 
 /// One replica pinned to the aligned GPU block `[start, start+tp)`.
@@ -178,7 +177,12 @@ impl Placement {
             max_load = max_load.max(t);
         }
         debug_assert!(placement.is_valid(cluster));
-        Some(ReloadPlan { placement, new_groups, load_time: max_load, load_time_by_owner: by_owner })
+        Some(ReloadPlan {
+            placement,
+            new_groups,
+            load_time: max_load,
+            load_time_by_owner: by_owner,
+        })
     }
 }
 
@@ -194,7 +198,8 @@ mod tests {
     fn loader() -> impl Fn(u64, u32) -> f64 {
         let reg = Registry::paper();
         move |owner, tp| {
-            let names = ["chatglm3-6b", "vicuna-13b-v1.5", "llama-2-70b-chat", "mistral-7b-instruct"];
+            let names =
+                ["chatglm3-6b", "vicuna-13b-v1.5", "llama-2-70b-chat", "mistral-7b-instruct"];
             reg.get(names[(owner as usize) % names.len()]).unwrap().load_time(tp)
         }
     }
@@ -221,8 +226,7 @@ mod tests {
     fn unchanged_replicas_are_kept_free() {
         let c = setup();
         let lt = loader();
-        let first =
-            Placement::transition(&Placement::empty(8), &[(0, 4, 2)], &c, &lt).unwrap();
+        let first = Placement::transition(&Placement::empty(8), &[(0, 4, 2)], &c, &lt).unwrap();
         let second = Placement::transition(&first.placement, &[(0, 4, 2)], &c, &lt).unwrap();
         assert!(second.new_groups.is_empty());
         assert_eq!(second.load_time, 0.0);
@@ -233,8 +237,7 @@ mod tests {
     fn tp2_groups_sit_on_nvlink_pairs() {
         let c = setup();
         let lt = loader();
-        let plan =
-            Placement::transition(&Placement::empty(8), &[(1, 4, 2)], &c, &lt).unwrap();
+        let plan = Placement::transition(&Placement::empty(8), &[(1, 4, 2)], &c, &lt).unwrap();
         for g in &plan.placement.groups {
             assert_eq!(g.start % 2, 0, "tp=2 must start on an even GPU");
             let gpus: Vec<u32> = g.gpus().collect();
@@ -264,8 +267,7 @@ mod tests {
         let c = setup();
         let lt = loader();
         let a = Placement::transition(&Placement::empty(8), &[(0, 2, 1)], &c, &lt).unwrap();
-        let b =
-            Placement::transition(&a.placement, &[(0, 2, 1), (3, 1, 2)], &c, &lt).unwrap();
+        let b = Placement::transition(&a.placement, &[(0, 2, 1), (3, 1, 2)], &c, &lt).unwrap();
         assert_eq!(b.new_groups.len(), 1);
         assert_eq!(b.new_groups[0].owner, 3);
         assert_eq!(b.load_time_by_owner.get(&0), None);

@@ -9,6 +9,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::costmodel::online;
 use crate::exec;
 use crate::policy;
 use crate::spec::AppSpec;
@@ -39,6 +40,15 @@ pub struct ExperimentConfig {
     pub threads: usize,
     /// Memoize planner simulations across searches (default on).
     pub sim_cache: bool,
+    /// Runtime length-feedback loop: online posterior refinement +
+    /// drift-triggered replanning (default off).
+    pub online_refinement: bool,
+    /// Drift score that triggers a re-plan of the remaining app (only
+    /// with `online_refinement`).
+    pub replan_threshold: f64,
+    /// Weight of one observed completion in offline-trace-sample
+    /// equivalents (only with `online_refinement`).
+    pub online_weight: f64,
 }
 
 impl ExperimentConfig {
@@ -61,6 +71,9 @@ impl ExperimentConfig {
             ("known_output_lengths", Json::Bool(self.known_output_lengths)),
             ("threads", Json::Num(self.threads as f64)),
             ("sim_cache", Json::Bool(self.sim_cache)),
+            ("online_refinement", Json::Bool(self.online_refinement)),
+            ("replan_threshold", Json::Num(self.replan_threshold)),
+            ("online_weight", Json::Num(self.online_weight)),
         ])
         .to_string()
     }
@@ -91,6 +104,18 @@ impl ExperimentConfig {
                 .unwrap_or(false),
             threads: v.get("threads").and_then(|x| x.as_usize()).unwrap_or(0),
             sim_cache: v.get("sim_cache").and_then(|x| x.as_bool()).unwrap_or(true),
+            online_refinement: v
+                .get("online_refinement")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            replan_threshold: v
+                .get("replan_threshold")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(online::DEFAULT_REPLAN_THRESHOLD),
+            online_weight: v
+                .get("online_weight")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(online::DEFAULT_OBS_WEIGHT),
         })
     }
 }
@@ -112,6 +137,9 @@ mod tests {
             known_output_lengths: false,
             threads: 4,
             sim_cache: false,
+            online_refinement: true,
+            replan_threshold: 0.2,
+            online_weight: 16.0,
         };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.app, c.app);
@@ -121,6 +149,9 @@ mod tests {
         assert_eq!(back.seed, 42);
         assert_eq!(back.threads, 4);
         assert!(!back.sim_cache);
+        assert!(back.online_refinement);
+        assert_eq!(back.replan_threshold, 0.2);
+        assert_eq!(back.online_weight, 16.0);
     }
 
     #[test]
@@ -134,6 +165,10 @@ mod tests {
         // Planner knobs default to auto threads + caching on.
         assert_eq!(c.threads, 0);
         assert!(c.sim_cache);
+        // The length-feedback loop defaults off with the stock knobs.
+        assert!(!c.online_refinement);
+        assert_eq!(c.replan_threshold, online::DEFAULT_REPLAN_THRESHOLD);
+        assert_eq!(c.online_weight, online::DEFAULT_OBS_WEIGHT);
         // Backend defaults to the simulated substrate.
         assert_eq!(c.backend, "sim");
         assert!(c.artifacts.is_none());
@@ -178,6 +213,9 @@ mod tests {
                 known_output_lengths: true,
                 threads: 0,
                 sim_cache: true,
+                online_refinement: false,
+                replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
+                online_weight: online::DEFAULT_OBS_WEIGHT,
             };
             let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
             assert_eq!(back.app, app);

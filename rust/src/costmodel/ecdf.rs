@@ -21,6 +21,12 @@ impl Ecdf {
         self.sorted.len()
     }
 
+    /// The underlying observations, ascending (posterior blending reads
+    /// these back instead of round-tripping through quantiles).
+    pub fn samples(&self) -> &[u32] {
+        &self.sorted
+    }
+
     /// Whether the eCDF holds no observations (never true by construction).
     pub fn is_empty(&self) -> bool {
         self.sorted.is_empty()
@@ -43,6 +49,62 @@ impl Ecdf {
     /// Draw one value by inverse-transform sampling.
     pub fn sample(&self, rng: &mut Rng) -> u32 {
         self.quantile(rng.uniform())
+    }
+
+    /// Number of observations strictly greater than `d` — the support of
+    /// the conditional distribution `X | X > d`.
+    pub fn tail_count(&self, d: u32) -> usize {
+        self.sorted.len() - self.sorted.partition_point(|&v| v <= d)
+    }
+
+    /// Conditional CDF `P(X <= x | X > d)`. Returns 1.0 when no
+    /// observation exceeds `d` (the conditional distribution is empty and
+    /// every probe is vacuously past it).
+    pub fn cdf_given_gt(&self, x: u32, d: u32) -> f64 {
+        let below_d = self.sorted.partition_point(|&v| v <= d);
+        let tail = self.sorted.len() - below_d;
+        if tail == 0 {
+            return 1.0;
+        }
+        let below_x = self.sorted.partition_point(|&v| v <= x);
+        below_x.saturating_sub(below_d) as f64 / tail as f64
+    }
+
+    /// Conditional inverse CDF: smallest observed value `> d` with
+    /// `cdf_given_gt >= q`, or `None` when no observation exceeds `d`.
+    ///
+    /// Dominance invariant: for every `q` and `d`,
+    /// `quantile_given_gt(q, d) >= quantile(q)` — conditioning on having
+    /// already generated `d` tokens can only push the estimate up.
+    pub fn quantile_given_gt(&self, q: f64, d: u32) -> Option<u32> {
+        let start = self.sorted.partition_point(|&v| v <= d);
+        let tail = self.sorted.len() - start;
+        if tail == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((q * tail as f64).ceil() as usize).max(1) - 1;
+        Some(self.sorted[start + idx.min(tail - 1)])
+    }
+
+    /// Draw one value from `X | X > d` by inverse-transform sampling
+    /// (`None` when no observation exceeds `d`). Consumes exactly one
+    /// uniform draw either way, so deciding to condition never desyncs a
+    /// deterministic stream.
+    pub fn sample_given_gt(&self, rng: &mut Rng, d: u32) -> Option<u32> {
+        let q = rng.uniform();
+        self.quantile_given_gt(q, d)
+    }
+
+    /// Mean of the conditional distribution `X | X > d` (`None` when no
+    /// observation exceeds `d`).
+    pub fn mean_given_gt(&self, d: u32) -> Option<f64> {
+        let start = self.sorted.partition_point(|&v| v <= d);
+        let tail = &self.sorted[start..];
+        if tail.is_empty() {
+            return None;
+        }
+        Some(tail.iter().map(|&v| v as f64).sum::<f64>() / tail.len() as f64)
     }
 
     /// Mean of the observations.
@@ -113,5 +175,48 @@ mod tests {
     #[should_panic]
     fn empty_rejected() {
         Ecdf::from_samples(vec![]);
+    }
+
+    #[test]
+    fn conditional_quantiles_condition_on_the_tail() {
+        let e = Ecdf::from_samples(vec![10, 20, 30, 40]);
+        assert_eq!(e.tail_count(0), 4);
+        assert_eq!(e.tail_count(10), 3);
+        assert_eq!(e.tail_count(40), 0);
+        // X | X > 20 is uniform over {30, 40}.
+        assert_eq!(e.quantile_given_gt(0.0, 20), Some(30));
+        assert_eq!(e.quantile_given_gt(0.5, 20), Some(30));
+        assert_eq!(e.quantile_given_gt(0.75, 20), Some(40));
+        assert_eq!(e.quantile_given_gt(1.0, 20), Some(40));
+        // No mass above the max: the conditional distribution is empty.
+        assert_eq!(e.quantile_given_gt(0.5, 40), None);
+        let mut rng = Rng::new(1);
+        assert_eq!(e.sample_given_gt(&mut rng, 40), None);
+    }
+
+    #[test]
+    fn conditional_cdf_matches_tail_fractions() {
+        let e = Ecdf::from_samples(vec![10, 20, 30, 40]);
+        assert_eq!(e.cdf_given_gt(30, 10), 2.0 / 3.0);
+        assert_eq!(e.cdf_given_gt(9, 10), 0.0);
+        assert_eq!(e.cdf_given_gt(40, 10), 1.0);
+        // Empty tail: vacuously 1.
+        assert_eq!(e.cdf_given_gt(0, 100), 1.0);
+        // Conditioning on nothing reproduces the plain CDF.
+        for x in [0, 10, 25, 40, 50] {
+            assert_eq!(e.cdf_given_gt(x, 0), e.cdf(x));
+        }
+    }
+
+    #[test]
+    fn conditional_mean_dominates_unconditional() {
+        let e = Ecdf::from_samples((1..=100).collect());
+        let m0 = e.mean();
+        for d in [0u32, 10, 50, 99] {
+            let md = e.mean_given_gt(d).unwrap();
+            assert!(md >= m0, "mean|X>{d} = {md} < {m0}");
+            assert!(md > d as f64);
+        }
+        assert_eq!(e.mean_given_gt(100), None);
     }
 }

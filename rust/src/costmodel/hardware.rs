@@ -12,7 +12,6 @@
 //! * chatglm3-6b, 10 000 requests: ≈356 s on 1 GPU, ≈6.6× better on 8.
 //! * vicuna-13b, 1 000 SharedGPT requests ≈ 92 s inference on one plan.
 
-
 use super::{flops, IterLatency};
 use crate::cluster::ClusterSpec;
 use crate::models::ModelSpec;
@@ -106,7 +105,12 @@ impl HardwareModel {
     }
 
     /// Component breakdown of a prefill iteration.
-    pub fn prefill_components(&self, spec: &ModelSpec, tp: u32, prompt_lens: &[u32]) -> IterComponents {
+    pub fn prefill_components(
+        &self,
+        spec: &ModelSpec,
+        tp: u32,
+        prompt_lens: &[u32],
+    ) -> IterComponents {
         let tokens: u64 = prompt_lens.iter().map(|&l| l as u64).sum();
         let batch = prompt_lens.len() as f64;
         let max_len = prompt_lens.iter().copied().max().unwrap_or(0) as f64;
@@ -150,7 +154,14 @@ impl IterLatency for HardwareModel {
         self.prefill_components(spec, tp, prompt_lens).total()
     }
 
-    fn decode(&self, spec: &ModelSpec, tp: u32, batch: usize, total_context: u64, max_context: u32) -> f64 {
+    fn decode(
+        &self,
+        spec: &ModelSpec,
+        tp: u32,
+        batch: usize,
+        total_context: u64,
+        max_context: u32,
+    ) -> f64 {
         self.decode_components(spec, tp, batch, total_context, max_context).total()
     }
 }

@@ -131,7 +131,14 @@ impl IterLatency for LinearIterModel {
             .max(1e-5)
     }
 
-    fn decode(&self, spec: &ModelSpec, tp: u32, batch: usize, total_context: u64, max_context: u32) -> f64 {
+    fn decode(
+        &self,
+        spec: &ModelSpec,
+        tp: u32,
+        batch: usize,
+        total_context: u64,
+        max_context: u32,
+    ) -> f64 {
         let p = self.piece(batch);
         let fl = flops::decode_flops(spec, batch, total_context) / tp as f64;
         (p.comp.predict(fl) + p.prep.predict(batch as f64 * max_context as f64)

@@ -13,7 +13,12 @@
 //!    (`comp` vs FLOPs, `prep` vs B·s, `samp` vs S) with per-batch-size
 //!    coefficients, fit against profiled iterations (§2, Fig. 4). FLOPs
 //!    come from Eqs. 1–2 ([`flops`]).
-//! 4. **Model loading** — a profiled cost table ([`crate::models::ModelSpec::load_time`]).
+//! 4. **Model loading** — a profiled cost table
+//!    ([`crate::models::ModelSpec::load_time`]).
+//! 5. **Online refinement** ([`online`]) — during the running phase the
+//!    per-model eCDFs are refined with observed completions and in-flight
+//!    requests are re-estimated conditionally (`X | X > d`), feeding the
+//!    drift-triggered replanning loop.
 //!
 //! The *ground truth* the paper measures on real A100s is substituted by
 //! [`hardware::HardwareModel`] — an analytic roofline + overhead model of
@@ -25,11 +30,13 @@ pub mod ecdf;
 pub mod flops;
 pub mod hardware;
 pub mod linear;
+pub mod online;
 pub mod sampler;
 
 pub use ecdf::Ecdf;
 pub use hardware::HardwareModel;
 pub use linear::LinearIterModel;
+pub use online::{OnlineSampler, OnlineStats};
 pub use sampler::OutputSampler;
 
 use crate::cluster::ClusterSpec;
@@ -47,7 +54,14 @@ pub trait IterLatency {
     /// Latency of a decode iteration over `batch` running requests with
     /// `total_context` tokens of KV across them and `max_context` the
     /// longest (padded) context.
-    fn decode(&self, spec: &ModelSpec, tp: u32, batch: usize, total_context: u64, max_context: u32) -> f64;
+    fn decode(
+        &self,
+        spec: &ModelSpec,
+        tp: u32,
+        batch: usize,
+        total_context: u64,
+        max_context: u32,
+    ) -> f64;
 }
 
 /// The full planner-side cost model: sampler + linear pricing, bundled with

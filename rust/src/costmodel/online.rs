@@ -1,0 +1,367 @@
+//! Runtime length-feedback: online refinement of the offline eCDFs.
+//!
+//! The offline cost model freezes its output-length estimates at planning
+//! time: one eCDF per model, built from the No Robots trace, sampled once
+//! per request ([`super::sampler::OutputSampler`]). When the application's
+//! true answers come from a different distribution (a dataset shift, a
+//! different prompt style), every simulation the plan rests on is
+//! miscalibrated — and stays miscalibrated for the whole run.
+//!
+//! [`OnlineSampler`] closes the loop during the running phase:
+//!
+//! * **Conditional sampling** — an in-flight request that already decoded
+//!   `d` tokens without finishing is, by definition, in the tail of the
+//!   distribution: re-estimating its total length must sample from
+//!   `X | X > d`, not from the unconditional eCDF
+//!   ([`super::Ecdf::sample_given_gt`]). The frozen path instead clamps an
+//!   unconditional draw up to `d + 1`, which systematically underestimates
+//!   every long request still running.
+//! * **Posterior mixing** — each completed request contributes its
+//!   *observed* ground-truth length. The per-model posterior is the eCDF
+//!   over the offline trace plus every observation replicated
+//!   `obs_weight` times, so evidence gradually outweighs the prior as
+//!   completions accumulate. With zero observations the posterior *is*
+//!   the offline eCDF, bit for bit.
+//!
+//! Everything here is deterministic under the session seed: observations
+//! arrive in stage-commit order, the posterior is a pure function of
+//! (offline trace, observations, weight), and sampling consumes exactly
+//! one uniform draw per request.
+//!
+//! [`OnlineStats`] carries the drift/replan accounting the policy layer
+//! (see [`crate::policy::SamuLlmPolicy`]) reports through
+//! [`crate::metrics::RunReport`].
+
+use std::collections::BTreeMap;
+
+use super::ecdf::Ecdf;
+use super::sampler::OutputSampler;
+use crate::util::rng::Rng;
+
+/// Default weight of one observed completion, in offline-trace-sample
+/// equivalents (the builder's `.online_weight(..)` knob).
+pub const DEFAULT_OBS_WEIGHT: f64 = 64.0;
+
+/// Upper bound on the observation weight. The posterior materializes
+/// each observation `weight` times, so an unbounded knob would turn a
+/// typo (`--online-weight 1e6`) into a gigabyte-scale allocation
+/// mid-run; past this cap a few dozen completions already dominate the
+/// 10 000-sample offline trace anyway.
+pub const MAX_OBS_WEIGHT: f64 = 1024.0;
+
+/// Default drift score above which the remaining application is
+/// replanned (the builder's `.replan_threshold(..)` knob). Set above the
+/// typical makespan error of a well-calibrated run, so healthy runs keep
+/// repairing stages instead of paying search time at every boundary.
+pub const DEFAULT_REPLAN_THRESHOLD: f64 = 0.35;
+
+/// Minimum completed observations before a model's mean-length drift
+/// counts toward the replan trigger (below this the sample mean is too
+/// noisy to act on).
+pub const MIN_DRIFT_OBS: usize = 8;
+
+/// Per-model observation set plus its lazily rebuilt posterior.
+#[derive(Debug, Clone, Default)]
+struct ModelObs {
+    /// Observed ground-truth output lengths, in completion order.
+    lens: Vec<u32>,
+    /// Running sum of `lens` (mean bookkeeping).
+    sum: f64,
+    /// Posterior eCDF over offline trace + weighted observations;
+    /// `None` marks it dirty (rebuilt on next use).
+    posterior: Option<Ecdf>,
+}
+
+/// Per-model posterior over output lengths: the offline eCDF refined with
+/// observed completions, plus conditional sampling for in-flight
+/// requests. One instance lives per run (owned by the running-phase loop
+/// in [`crate::runner::run_with_backend`]).
+#[derive(Debug, Clone)]
+pub struct OnlineSampler {
+    offline: OutputSampler,
+    obs_weight: f64,
+    observed: BTreeMap<String, ModelObs>,
+}
+
+impl OnlineSampler {
+    /// Wrap the run's offline sampler. `obs_weight` is how many
+    /// offline-trace samples one observed completion is worth. It is
+    /// normalized up front to the *effective* replication count — rounded
+    /// to the nearest integer and clamped to `[0, MAX_OBS_WEIGHT]` — so
+    /// the sampled posterior and [`OnlineSampler::posterior_mean`] always
+    /// agree, and an oversized knob can't balloon the posterior rebuild.
+    /// `0` (anything below 0.5) makes the posterior permanently equal to
+    /// the prior.
+    pub fn new(offline: OutputSampler, obs_weight: f64) -> Self {
+        let obs_weight = obs_weight.clamp(0.0, MAX_OBS_WEIGHT).round();
+        OnlineSampler { offline, obs_weight, observed: BTreeMap::new() }
+    }
+
+    /// The offline sampler this instance refines.
+    pub fn offline(&self) -> &OutputSampler {
+        &self.offline
+    }
+
+    /// The effective observation replication weight (integer-valued
+    /// after construction-time normalization).
+    pub fn obs_weight(&self) -> f64 {
+        self.obs_weight
+    }
+
+    /// Fold one completed request's ground-truth output length into the
+    /// model's posterior.
+    pub fn record(&mut self, model: &str, observed_len: u32) {
+        let obs = self.observed.entry(model.to_string()).or_default();
+        obs.lens.push(observed_len);
+        obs.sum += observed_len as f64;
+        obs.posterior = None;
+    }
+
+    /// Completed observations recorded for `model`.
+    pub fn observations(&self, model: &str) -> usize {
+        self.observed.get(model).map(|o| o.lens.len()).unwrap_or(0)
+    }
+
+    /// Mean of the observed completions for `model` (`None` before the
+    /// first completion).
+    pub fn observed_mean(&self, model: &str) -> Option<f64> {
+        let obs = self.observed.get(model)?;
+        if obs.lens.is_empty() {
+            return None;
+        }
+        Some(obs.sum / obs.lens.len() as f64)
+    }
+
+    /// Mean of the offline (prior) eCDF for `model`.
+    pub fn offline_mean(&self, model: &str) -> Option<f64> {
+        self.offline.ecdf(model).map(|e| e.mean())
+    }
+
+    /// Mean of the posterior: the weighted blend of the offline trace and
+    /// the observations (pure arithmetic — no eCDF rebuild).
+    pub fn posterior_mean(&self, model: &str) -> Option<f64> {
+        let e = self.offline.ecdf(model)?;
+        let n_off = e.len() as f64;
+        match self.observed.get(model) {
+            None => Some(e.mean()),
+            Some(obs) => {
+                let w = self.obs_weight * obs.lens.len() as f64;
+                Some((n_off * e.mean() + self.obs_weight * obs.sum) / (n_off + w).max(1.0))
+            }
+        }
+    }
+
+    /// Relative mean-length drift of `model`: how far the observed mean
+    /// has moved from `reference`, discounted by observation count so a
+    /// handful of completions cannot trigger on noise
+    /// (`|obs - ref| / ref · n/(n + MIN_DRIFT_OBS)`). `None` below
+    /// [`MIN_DRIFT_OBS`] observations or for an unknown model.
+    pub fn mean_drift(&self, model: &str, reference: f64) -> Option<f64> {
+        let n = self.observations(model);
+        if n < MIN_DRIFT_OBS || reference <= 0.0 {
+            return None;
+        }
+        let obs = self.observed_mean(model)?;
+        let confidence = n as f64 / (n + MIN_DRIFT_OBS) as f64;
+        Some((obs - reference).abs() / reference * confidence)
+    }
+
+    /// The posterior eCDF for `model`, rebuilding it if observations
+    /// arrived since the last call. Panics on a model the offline sampler
+    /// doesn't know (same contract as [`OutputSampler::sample`]).
+    pub fn posterior(&mut self, model: &str) -> &Ecdf {
+        let offline = self
+            .offline
+            .ecdf(model)
+            .unwrap_or_else(|| panic!("no offline eCDF for model {model}"));
+        match self.observed.get_mut(model) {
+            // No observations yet: the posterior IS the prior.
+            None => offline,
+            Some(obs) => {
+                if obs.posterior.is_none() {
+                    obs.posterior = Some(blend(offline, &obs.lens, self.obs_weight));
+                }
+                obs.posterior.as_ref().unwrap()
+            }
+        }
+    }
+
+    /// Sample one *total* output length for a request that has already
+    /// generated `generated` tokens: conditional posterior draw from
+    /// `X | X > generated` (plain posterior draw when `generated == 0`),
+    /// clamped exactly like the offline path —
+    /// `min(X, max_out, max_seq - input_len)` with saturating subtraction
+    /// and a floor of 1. Callers wanting a strictly consistent estimate
+    /// additionally floor at `generated + 1`, as the frozen path does.
+    pub fn sample_total(
+        &mut self,
+        model: &str,
+        input_len: u32,
+        max_out: u32,
+        max_seq: u32,
+        generated: u32,
+        rng: &mut Rng,
+    ) -> u32 {
+        let e = self.posterior(model);
+        let x = if generated == 0 {
+            e.sample(rng)
+        } else {
+            // An exhausted tail (progress past every posterior sample)
+            // still consumes its draw, keeping the stream aligned.
+            e.sample_given_gt(rng, generated).unwrap_or(generated.saturating_add(1))
+        };
+        super::sampler::clamp_output_len(x, input_len, max_out, max_seq)
+    }
+}
+
+/// Build the posterior eCDF: offline samples plus each observation
+/// replicated `weight` times (already integer-valued and capped by
+/// construction), concatenated and re-sorted by [`Ecdf::from_samples`].
+/// Rebuilds are O(n log n) but only happen once per (stage, dirtied
+/// model), on at most `offline + capped-weight × completions` entries —
+/// milliseconds at the workloads this repo runs.
+fn blend(offline: &Ecdf, observed: &[u32], weight: f64) -> Ecdf {
+    let rep = weight as usize;
+    if rep == 0 || observed.is_empty() {
+        return offline.clone();
+    }
+    let mut all: Vec<u32> = Vec::with_capacity(offline.len() + observed.len() * rep);
+    all.extend_from_slice(offline.samples());
+    for &o in observed {
+        all.extend(std::iter::repeat_n(o, rep));
+    }
+    Ecdf::from_samples(all)
+}
+
+/// Drift/replan accounting of one run's length-feedback loop, reported
+/// through [`crate::metrics::RunReport`] (`"online"` in the JSON).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OnlineStats {
+    /// Full re-plans of the remaining application triggered by drift.
+    pub replans: u64,
+    /// Largest drift score observed across the run (`max` of the
+    /// per-model mean-length drift and the stage-makespan drift).
+    pub drift: f64,
+    /// Wall-clock seconds spent inside drift-triggered re-plan searches
+    /// (billed into the report's `extra_time` by the runner).
+    pub replan_time: f64,
+    /// The offline plan's estimated total inference time.
+    pub pre_est_total: f64,
+    /// The estimate after the last re-plan (equals `pre_est_total` when
+    /// no re-plan fired). Absolute virtual seconds, same clock as
+    /// `inference_time`.
+    pub post_est_total: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn offline(samples: Vec<u32>) -> OutputSampler {
+        let mut map = BTreeMap::new();
+        map.insert("m".to_string(), samples);
+        OutputSampler::from_samples_map(map)
+    }
+
+    #[test]
+    fn zero_observations_posterior_is_the_offline_ecdf() {
+        let mut os = OnlineSampler::new(offline(vec![10, 20, 30, 40]), 16.0);
+        let xs: Vec<u32> = (0..=50).collect();
+        let prior = os.offline().ecdf("m").unwrap().curve(&xs);
+        assert_eq!(os.posterior("m").curve(&xs), prior);
+        assert_eq!(os.posterior("m").len(), 4);
+        assert_eq!(os.posterior_mean("m"), Some(25.0));
+        assert_eq!(os.observations("m"), 0);
+        assert_eq!(os.observed_mean("m"), None);
+    }
+
+    #[test]
+    fn observations_pull_the_posterior_toward_the_evidence() {
+        let mut os = OnlineSampler::new(offline(vec![10, 20, 30, 40]), 2.0);
+        os.record("m", 100);
+        os.record("m", 100);
+        // 4 offline samples (mean 25) + 2 obs × weight 2 (mean 100):
+        // posterior mean = (4·25 + 4·100) / 8 = 62.5.
+        assert_eq!(os.posterior_mean("m"), Some(62.5));
+        assert_eq!(os.posterior("m").len(), 8);
+        assert_eq!(os.posterior("m").max(), 100);
+        assert_eq!(os.observed_mean("m"), Some(100.0));
+        // More evidence keeps shifting it.
+        os.record("m", 100);
+        assert!(os.posterior_mean("m").unwrap() > 62.5);
+    }
+
+    #[test]
+    fn zero_weight_ignores_observations() {
+        let mut os = OnlineSampler::new(offline(vec![10, 20]), 0.0);
+        os.record("m", 500);
+        assert_eq!(os.posterior("m").max(), 20);
+        assert_eq!(os.posterior_mean("m"), Some(15.0));
+    }
+
+    #[test]
+    fn weight_is_normalized_so_mean_and_samples_agree() {
+        // Fractional weights round to the effective replication count up
+        // front: the reported posterior mean and the sampled posterior
+        // describe the same distribution.
+        let mut os = OnlineSampler::new(offline(vec![10, 20]), 0.4);
+        assert_eq!(os.obs_weight(), 0.0);
+        os.record("m", 5000);
+        assert_eq!(os.posterior("m").max(), 20, "rep 0: prior unchanged");
+        assert_eq!(os.posterior_mean("m"), Some(15.0), "mean must match the sampler");
+        // Oversized knobs are capped instead of ballooning the rebuild.
+        let os = OnlineSampler::new(offline(vec![10, 20]), 1.0e9);
+        assert_eq!(os.obs_weight(), MAX_OBS_WEIGHT);
+        // Negative weights clamp to 0.
+        assert_eq!(OnlineSampler::new(offline(vec![1]), -3.0).obs_weight(), 0.0);
+    }
+
+    #[test]
+    fn conditional_sampling_respects_progress_and_clamps() {
+        let mut os = OnlineSampler::new(offline(vec![10, 20, 30, 40]), 8.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            // Conditioned on 20 generated tokens: draws land in {30, 40}.
+            let x = os.sample_total("m", 5, 512, 4096, 20, &mut rng);
+            assert!(x == 30 || x == 40, "x={x}");
+            // Progress past the whole posterior: floor at generated + 1.
+            assert_eq!(os.sample_total("m", 5, 512, 4096, 40, &mut rng), 41);
+            // The offline clamp formula applies unchanged (over-long
+            // prompt saturates the window to 1 — the regression case).
+            assert_eq!(os.sample_total("m", 4096, 512, 4096, 20, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_under_a_seed() {
+        let mk = || {
+            let mut os = OnlineSampler::new(offline((1..=200).collect()), 16.0);
+            os.record("m", 900);
+            os.record("m", 950);
+            let mut rng = Rng::new(42);
+            (0u32..64)
+                .map(|i| os.sample_total("m", 10, 4096, 8192, i % 7, &mut rng))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn mean_drift_needs_evidence_and_discounts_small_samples() {
+        let mut os = OnlineSampler::new(offline(vec![100; 10]), 16.0);
+        for _ in 0..MIN_DRIFT_OBS - 1 {
+            os.record("m", 200);
+        }
+        assert_eq!(os.mean_drift("m", 100.0), None, "below the floor");
+        os.record("m", 200);
+        let d = os.mean_drift("m", 100.0).unwrap();
+        // Raw drift 1.0 discounted by n/(n+MIN): 8/16 = 0.5.
+        assert!((d - 0.5).abs() < 1e-12, "d={d}");
+        for _ in 0..56 {
+            os.record("m", 200);
+        }
+        let d = os.mean_drift("m", 100.0).unwrap();
+        assert!(d > 0.85, "confidence should approach 1: {d}");
+        assert_eq!(os.mean_drift("nope", 100.0), None);
+    }
+}

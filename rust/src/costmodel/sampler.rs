@@ -12,6 +12,16 @@ use crate::models::Registry;
 use crate::util::rng::Rng;
 use crate::workload::norobots;
 
+/// The paper's §4.1 output-length clamp, shared by the offline sampler
+/// and the online posterior so the two estimate paths can never
+/// desynchronize: `l_out = min(x, max_out, max_seq - input_len)` with a
+/// *saturating* subtraction (a prompt at/over the context window clamps
+/// to 1 instead of wrapping the u32) and a floor of 1.
+pub fn clamp_output_len(x: u32, input_len: u32, max_out: u32, max_seq: u32) -> u32 {
+    let window = max_seq.saturating_sub(input_len).max(1);
+    x.min(max_out).min(window).max(1)
+}
+
 /// Per-model output-length eCDFs, built offline (§2).
 #[derive(Debug, Clone)]
 pub struct OutputSampler {
@@ -35,9 +45,22 @@ impl OutputSampler {
         OutputSampler { ecdfs }
     }
 
+    /// Build a sampler from explicit per-model observation sets (tests,
+    /// custom calibrations, and the online posterior construction).
+    pub fn from_samples_map(samples: BTreeMap<String, Vec<u32>>) -> Self {
+        OutputSampler {
+            ecdfs: samples.into_iter().map(|(m, s)| (m, Ecdf::from_samples(s))).collect(),
+        }
+    }
+
     /// The eCDF built for `model`, if registered.
     pub fn ecdf(&self, model: &str) -> Option<&Ecdf> {
         self.ecdfs.get(model)
+    }
+
+    /// Registered model names, ascending.
+    pub fn models(&self) -> impl Iterator<Item = &str> {
+        self.ecdfs.keys().map(|s| s.as_str())
     }
 
     /// Sample one output length for a request (the paper's §4.1 formula).
@@ -54,8 +77,7 @@ impl OutputSampler {
             .get(model)
             .unwrap_or_else(|| panic!("no eCDF for model {model}"))
             .sample(rng);
-        let window = max_seq.saturating_sub(input_len).max(1);
-        x.min(max_out).min(window).max(1)
+        clamp_output_len(x, input_len, max_out, max_seq)
     }
 
     /// Sample output lengths for a whole request batch.
@@ -113,5 +135,32 @@ mod tests {
             let l2 = s.sample("alpaca-13b", 2040, 512, 2048, &mut rng);
             assert!(l2 <= 8);
         }
+    }
+
+    #[test]
+    fn prompt_at_or_over_context_never_underflows() {
+        // Regression: `l_out = min(X, y, l_max - l_in)` must use a
+        // saturating subtraction — a prompt at or past the model context
+        // (`l_in >= l_max`) clamps the window to 1 instead of wrapping a
+        // u32 (which in release builds produced a ~4-billion-token
+        // "window" and in debug builds panicked).
+        let s = OutputSampler::from_norobots_trace(6);
+        let mut rng = Rng::new(7);
+        for input_len in [2048u32, 2049, 10_000, u32::MAX] {
+            let l = s.sample("alpaca-13b", input_len, 512, 2048, &mut rng);
+            assert_eq!(l, 1, "input_len={input_len}");
+        }
+        let batch = s.sample_many("alpaca-13b", &[2048, 4096, u32::MAX], 512, 2048, &mut rng);
+        assert!(batch.iter().all(|&l| l == 1), "{batch:?}");
+    }
+
+    #[test]
+    fn explicit_samples_map_round_trips() {
+        let mut map = BTreeMap::new();
+        map.insert("m".to_string(), vec![5u32, 10, 15]);
+        let s = OutputSampler::from_samples_map(map);
+        assert_eq!(s.models().collect::<Vec<_>>(), vec!["m"]);
+        let e = s.ecdf("m").unwrap();
+        assert_eq!((e.min(), e.max(), e.len()), (5, 15, 3));
     }
 }

@@ -20,7 +20,6 @@ pub mod sim;
 pub use sched::{EngineConfig, EngineEvent, EventKind, SimOutcome, StepExec, StepReq};
 pub use sim::EngineSim;
 
-
 /// A request as fed to the engine: lengths are already resolved (the
 /// planner resolves by sampling, the runner by ground truth).
 #[derive(Debug, Clone, Copy)]

@@ -83,8 +83,7 @@ impl EngineConfig {
             noise_sigma: None,
             kv_bytes_budget: kv_budget,
         };
-        let block_bytes =
-            cfg.block_tokens as u64 * spec.kv_bytes_per_token(tp) * tp as u64;
+        let block_bytes = cfg.block_tokens as u64 * spec.kv_bytes_per_token(tp) * tp as u64;
         if kv_budget < block_bytes.saturating_mul(cfg.watermark_blocks + 1) {
             return Err(anyhow!(
                 "{}: KV budget {:.2} GiB under tp={tp} cannot hold one block above the \
@@ -456,7 +455,9 @@ impl<X: StepExec> SchedCore<X> {
             } else {
                 prompt
             };
-            if batch_tokens + prefill_tokens as u64 > self.cfg.max_batch_tokens && !batch.is_empty() {
+            if batch_tokens + prefill_tokens as u64 > self.cfg.max_batch_tokens
+                && !batch.is_empty()
+            {
                 break;
             }
             let need = self.blocks_for(prompt + 1);
@@ -858,8 +859,7 @@ mod tests {
         let cluster = ClusterSpec::a100_node(8);
         let hw = crate::costmodel::HardwareModel::new(cluster.clone());
         let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
-        let reqs: Vec<EngineRequest> =
-            (0..20).map(|i| EngineRequest::fresh(i, 25, 40)).collect();
+        let reqs: Vec<EngineRequest> = (0..20).map(|i| EngineRequest::fresh(i, 25, 40)).collect();
         let mut sim = crate::engine::EngineSim::new(&spec, 1, &hw, cfg, reqs, 0.0, 0);
         sim.enable_events(3, 1);
         let out = sim.run(None);

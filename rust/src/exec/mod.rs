@@ -325,8 +325,7 @@ mod tests {
         let hw = HardwareModel::new(cluster.clone());
         let reg = Registry::paper();
         let spec = reg.get("chatglm3-6b").unwrap();
-        let reqs: Vec<EngineRequest> =
-            (0..60).map(|i| EngineRequest::fresh(i, 15, 25)).collect();
+        let reqs: Vec<EngineRequest> = (0..60).map(|i| EngineRequest::fresh(i, 15, 25)).collect();
         let run = |collect: bool| {
             SimBackend::new(&hw, cluster.mem_bytes)
                 .run_node(&NodeRun {

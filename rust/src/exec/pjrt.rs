@@ -372,8 +372,7 @@ impl PjrtBackend {
     fn clamp(&self, r: &EngineRequest) -> EngineRequest {
         let s = self.model.max_seq() as u32;
         let input = r.input_len.max(1).min(s.saturating_sub(2).max(1));
-        let output =
-            r.output_len.max(1).min(s.saturating_sub(1).saturating_sub(input).max(1));
+        let output = r.output_len.max(1).min(s.saturating_sub(1).saturating_sub(input).max(1));
         EngineRequest { input_len: input, output_len: output, ..*r }
     }
 
@@ -612,8 +611,7 @@ mod tests {
 
     #[test]
     fn device_errors_surface_as_backend_errors() {
-        let mut backend =
-            PjrtBackend::with_model(Box::new(MockModel::new(4, 64).fail_after(3)));
+        let mut backend = PjrtBackend::with_model(Box::new(MockModel::new(4, 64).fail_after(3)));
         let err = backend.run_node(&run_of(&fresh(10, 8, 20))).unwrap_err();
         assert!(format!("{err:#}").contains("injected device failure"), "{err:#}");
     }

@@ -7,7 +7,6 @@
 
 use std::collections::HashSet;
 
-
 /// One LLM node in the application graph.
 #[derive(Debug, Clone)]
 pub struct AppNode {
@@ -35,7 +34,12 @@ impl AppGraph {
     /// Append an LLM node; returns its id.
     pub fn add_node(&mut self, model: &str, label: &str, max_out: u32) -> usize {
         let id = self.nodes.len();
-        self.nodes.push(AppNode { id, model: model.to_string(), label: label.to_string(), max_out });
+        self.nodes.push(AppNode {
+            id,
+            model: model.to_string(),
+            label: label.to_string(),
+            max_out,
+        });
         id
     }
 
@@ -60,7 +64,12 @@ impl AppGraph {
     /// The §3 readiness rule: a node may run in a stage iff each input
     /// node is finished, or is itself selected in the same stage
     /// (model-level pipeline parallelism).
-    pub fn is_ready(&self, node: usize, finished: &HashSet<usize>, in_stage: &HashSet<usize>) -> bool {
+    pub fn is_ready(
+        &self,
+        node: usize,
+        finished: &HashSet<usize>,
+        in_stage: &HashSet<usize>,
+    ) -> bool {
         self.inputs_of(node)
             .iter()
             .all(|i| finished.contains(i) || in_stage.contains(i))
@@ -86,8 +95,7 @@ impl AppGraph {
                 *indeg.get_mut(&t).unwrap() += 1;
             }
         }
-        let mut queue: Vec<usize> =
-            subset.iter().copied().filter(|n| indeg[n] == 0).collect();
+        let mut queue: Vec<usize> = subset.iter().copied().filter(|n| indeg[n] == 0).collect();
         queue.sort_unstable();
         let mut out = vec![];
         while let Some(n) = queue.pop() {

@@ -29,12 +29,15 @@ pub fn ablate_fastforward() -> String {
     let registry = Registry::paper();
     let hw = HardwareModel::new(c.clone());
     let mut rng = Rng::new(71);
-    for (model, n) in [("chatglm3-6b", 500usize), ("vicuna-13b-v1.5", 2000), ("llama-2-70b-chat", 300)]
+    for (model, n) in
+        [("chatglm3-6b", 500usize), ("vicuna-13b-v1.5", 2000), ("llama-2-70b-chat", 300)]
     {
         let spec = registry.get(model).unwrap();
         let reqs: Vec<EngineRequest> = (0..n as u64)
             .map(|i| {
-                let o = crate::workload::lengths::true_output_len(model, 0.0, 40, 512, 4096, &mut rng);
+                let o = crate::workload::lengths::true_output_len(
+                    model, 0.0, 40, 512, 4096, &mut rng,
+                );
                 EngineRequest::fresh(i, 40, o)
             })
             .collect();

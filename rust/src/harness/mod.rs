@@ -57,6 +57,43 @@ fn run_all(scenario: &Scenario, opts: &RunOpts) -> Vec<RunReport> {
     policy::PAPER.iter().map(|&p| run_policy(p, scenario, &cluster(), opts)).collect()
 }
 
+/// The miscalibration regime the runtime length-feedback loop exists
+/// for: a four-model ensembling-style app whose true output lengths are
+/// log-shifted against the offline No Robots trace in *opposing*
+/// directions (half the models answer ~e× longer than the trace
+/// suggests, half ~e× shorter), so the offline plan inverts the real
+/// per-model workload ratios. Shared by `benches/bench_runtime.rs` and
+/// `tests/integration_online.rs` so the CI guard and the published
+/// `BENCH_runtime.json` numbers measure the exact same workload.
+pub fn shifted_length_scenario(n_requests: usize, seed: u64) -> Scenario {
+    let registry = Registry::paper();
+    let models = [
+        ("vicuna-13b-v1.5", 1.0),
+        ("chatglm3-6b", -1.0),
+        ("mistral-7b-instruct", 1.0),
+        ("alpaca-13b", -1.0),
+    ];
+    let mut graph = crate::graph::AppGraph::default();
+    let mut workloads = vec![];
+    let mut rng = Rng::new(seed ^ 0x5817F7);
+    for (i, (model, shift)) in models.iter().enumerate() {
+        graph.add_node(model, &format!("m{i}"), 512);
+        let spec = registry.get(model).expect("model");
+        workloads.push(
+            (0..n_requests as u64)
+                .map(|id| {
+                    let input_len = rng.range_u64(10, 120) as u32;
+                    let out = crate::workload::lengths::true_output_len(
+                        model, *shift, input_len, 512, spec.max_seq, &mut rng,
+                    );
+                    crate::runner::AppRequest::simple(id, input_len, out)
+                })
+                .collect(),
+        );
+    }
+    Scenario { name: format!("shifted-lengths-{n_requests}"), graph, workloads }
+}
+
 /// Scenario construction goes through the declarative spec layer only.
 fn scenario(spec: AppSpec, seed: u64) -> Scenario {
     spec.build(seed).expect("harness specs are valid")
@@ -113,10 +150,20 @@ pub fn fig3() -> String {
             .collect()
     };
     let true_lens: Vec<u32> = (0..1000)
-        .map(|_| crate::workload::lengths::true_output_len("vicuna-13b-v1.5", 0.0, 150, 1024, 4096, &mut rng_true))
+        .map(|_| {
+            crate::workload::lengths::true_output_len(
+                "vicuna-13b-v1.5",
+                0.0,
+                150,
+                1024,
+                4096,
+                &mut rng_true,
+            )
+        })
         .collect();
-    let est_lens: Vec<u32> =
-        (0..1000).map(|_| cm.sampler.sample("vicuna-13b-v1.5", 150, 1024, 4096, &mut rng_est)).collect();
+    let est_lens: Vec<u32> = (0..1000)
+        .map(|_| cm.sampler.sample("vicuna-13b-v1.5", 150, 1024, 4096, &mut rng_est))
+        .collect();
 
     let run = |lens: Vec<u32>, lat: &dyn IterLatency, label: &str, out: &mut String| -> f64 {
         let mut cfg = EngineConfig::standard(spec, 1, c.mem_bytes).unwrap();
@@ -132,7 +179,14 @@ pub fn fig3() -> String {
             .enumerate()
             .map(|(i, (_, n))| format!("{}:{n}", i * step))
             .collect();
-        writeln!(out, "  {label:<10} iters={} total={:.1}s\n    {}", trace.len(), res.clock, series.join(" ")).unwrap();
+        writeln!(
+            out,
+            "  {label:<10} iters={} total={:.1}s\n    {}",
+            trace.len(),
+            res.clock,
+            series.join(" ")
+        )
+        .unwrap();
         res.clock
     };
     let t_real = run(true_lens, &hw, "real", &mut out);
@@ -279,7 +333,8 @@ pub fn fig11(quick: bool) -> String {
     let rs = run_all(&s, &opts);
     let idle: Vec<String> =
         rs.iter().map(|r| format!("{}={:.0} gpu·s", r.policy, r.gpu_idle_time())).collect();
-    writeln!(out, "GPU idle time: {} (paper: max 1.2x, min 1.5x of ours)", idle.join(", ")).unwrap();
+    writeln!(out, "GPU idle time: {} (paper: max 1.2x, min 1.5x of ours)", idle.join(", "))
+        .unwrap();
     out
 }
 
@@ -331,10 +386,8 @@ pub fn fig14(quick: bool) -> String {
     let c = cluster();
     let base = RunOpts::default();
     let ours = run_policy("ours", &s, &c, &base);
-    let ours_np =
-        run_policy("ours", &s, &c, &RunOpts { no_preemption: true, ..base.clone() });
-    let ours_known =
-        run_policy("ours", &s, &c, &RunOpts { known_lengths: true, ..base.clone() });
+    let ours_np = run_policy("ours", &s, &c, &RunOpts { no_preemption: true, ..base.clone() });
+    let ours_known = run_policy("ours", &s, &c, &RunOpts { known_lengths: true, ..base.clone() });
     let min = run_policy("min-heuristic", &s, &c, &base);
     let min_np =
         run_policy("min-heuristic", &s, &c, &RunOpts { no_preemption: true, ..base.clone() });

@@ -23,7 +23,9 @@
 //! * [`costmodel`] — the paper's sampling-then-simulation cost model:
 //!   output-length eCDF sampling, FLOPs accounting (Eqs. 1–2), the linear
 //!   per-iteration latency model (Eq. 5) fit against a profiled hardware
-//!   ground truth, and model-loading cost tables.
+//!   ground truth, model-loading cost tables, and the runtime
+//!   length-feedback loop ([`costmodel::online`]: conditional eCDFs +
+//!   posterior refinement from observed completions).
 //! * [`engine`] — the shared vLLM-style FCFS continuous-batching
 //!   scheduling core ([`engine::sched::SchedCore`]) with a paged-KV block
 //!   manager, plus its virtual-time instantiation
@@ -37,8 +39,10 @@
 //! * [`graph`], [`plan`], [`planner`] — the application computation graph,
 //!   execution plans/stages, and the greedy stage search (Algorithm 1).
 //! * [`runner`] — the running phase: a virtual-clock orchestrator with the
-//!   dynamic scheduler, communicator, preemption and NVLink-constrained
-//!   minimum-reload placement of §4.3.
+//!   dynamic scheduler, communicator, preemption, NVLink-constrained
+//!   minimum-reload placement of §4.3, and the opt-in length-feedback
+//!   loop (`.online_refinement(true)`) that escalates stage repair to
+//!   drift-triggered replanning.
 //! * [`baselines`] — stage-construction math behind the §5 competitors.
 //! * [`apps`], [`workload`] — the paper's applications (ensembling,
 //!   routing, chain summary, mixed) and synthetic dataset generators

@@ -6,6 +6,8 @@
 //!                  [--n-docs D] [--eval-times E] [--gpus G] [--seed S]
 //!                  [--no-preemption] [--known-lengths] [--gantt]
 //!                  [--threads T] [--no-sim-cache]
+//!                  [--online-refinement] [--replan-threshold X]
+//!                  [--online-weight W]
 //!   samullm config <file.json>
 //!   samullm serve  [--n-requests N] [--prompt-len L] [--max-new T]
 //!                  [--artifacts DIR]
@@ -140,6 +142,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         "known-lengths",
         "threads",
         "no-sim-cache",
+        "online-refinement",
+        "replan-threshold",
+        "online-weight",
         "gantt",
     ])?;
     let app = args.get_str("app", "ensembling");
@@ -159,7 +164,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         .no_preemption(args.has("no-preemption"))
         .known_lengths(args.has("known-lengths"))
         .threads(args.get("threads", 0)?)
-        .sim_cache(!args.has("no-sim-cache"));
+        .sim_cache(!args.has("no-sim-cache"))
+        .online_refinement(args.has("online-refinement"));
+    if let Some(t) = args.get_opt("replan-threshold")? {
+        builder = builder.replan_threshold(t);
+    }
+    if let Some(w) = args.get_opt("online-weight")? {
+        builder = builder.online_weight(w);
+    }
     if let Some(dir) = args.flags.get("artifacts") {
         builder = builder.artifacts_dir(dir.clone());
     }
@@ -182,7 +194,10 @@ fn cmd_config(path: &str) -> Result<()> {
         .no_preemption(cfg.no_preemption)
         .known_lengths(cfg.known_output_lengths)
         .threads(cfg.threads)
-        .sim_cache(cfg.sim_cache);
+        .sim_cache(cfg.sim_cache)
+        .online_refinement(cfg.online_refinement)
+        .replan_threshold(cfg.replan_threshold)
+        .online_weight(cfg.online_weight);
     if let Some(dir) = &cfg.artifacts {
         builder = builder.artifacts_dir(dir.clone());
     }
@@ -195,8 +210,7 @@ fn cmd_config(path: &str) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_flags(&["n-requests", "prompt-len", "max-new", "artifacts"])?;
     let artifacts = args.get_str("artifacts", "artifacts");
-    let mut backend =
-        samullm::exec::pjrt::PjrtBackend::load(std::path::Path::new(&artifacts))?;
+    let mut backend = samullm::exec::pjrt::PjrtBackend::load(std::path::Path::new(&artifacts))?;
     println!(
         "loaded TinyGPT on {} (batch={}, max_seq={})",
         backend.platform(),
@@ -243,6 +257,8 @@ fn usage() -> String {
          \x20                [--max-out M] [--n-docs D] [--eval-times E] [--gpus G]\n\
          \x20                [--seed S] [--no-preemption] [--known-lengths] [--gantt]\n\
          \x20                [--threads T] [--no-sim-cache]   (planner search speed knobs)\n\
+         \x20                [--online-refinement] [--replan-threshold X] [--online-weight W]\n\
+         \x20                                  (runtime length-feedback loop, default off)\n\
          \x20                [--artifacts DIR]                (pjrt backend artifacts)\n\
          \x20 samullm config <file.json>   (supports custom graph specs, kind=custom)\n\
          \x20 samullm serve  [--n-requests N] [--prompt-len L] [--max-new T] [--artifacts DIR]\n\

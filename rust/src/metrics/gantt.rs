@@ -19,6 +19,12 @@ pub fn render(report: &RunReport, width: usize) -> String {
         "policy={} inference={:.1}s stages={}\n",
         report.policy, report.inference_time, report.n_stages
     ));
+    if let Some(o) = &report.online {
+        out.push_str(&format!(
+            "online feedback: replans={} max-drift={:.2} est {:.1}s -> {:.1}s\n",
+            o.replans, o.drift, o.pre_est_total, o.post_est_total
+        ));
+    }
     for &node in &nodes {
         let mut row = vec![b'.'; width];
         for s in &report.timeline {
@@ -81,6 +87,7 @@ mod tests {
                 },
             ],
             measured: None,
+            online: None,
             n_gpus: 8,
         };
         let g = render(&report, 40);
@@ -90,5 +97,21 @@ mod tests {
         assert!(g.lines().find(|l| l.contains("node   0")).unwrap().contains('4'));
         // Node 1 upgrades to 8 GPUs (4x2) in the second half.
         assert!(g.lines().find(|l| l.contains("node   1")).unwrap().contains('8'));
+        // No feedback loop, no annotation.
+        assert!(!g.contains("online feedback"));
+
+        let mut with_online = report;
+        with_online.online = Some(crate::costmodel::OnlineStats {
+            replans: 1,
+            drift: 0.62,
+            replan_time: 0.1,
+            pre_est_total: 110.0,
+            post_est_total: 98.5,
+        });
+        let g = render(&with_online, 40);
+        assert!(
+            g.contains("online feedback: replans=1 max-drift=0.62 est 110.0s -> 98.5s"),
+            "{g}"
+        );
     }
 }

@@ -2,7 +2,7 @@
 
 pub mod gantt;
 
-
+use crate::costmodel::OnlineStats;
 use crate::exec::EventSummary;
 use crate::plan::ExecPlan;
 use crate::planner::eval::EvalStats;
@@ -111,6 +111,10 @@ pub struct RunReport {
     /// Iteration-level measured-vs-predicted statistics (real backends
     /// only; `None` for the simulated substrate).
     pub measured: Option<MeasuredStats>,
+    /// Drift/replan accounting of the runtime length-feedback loop
+    /// (`None` unless online refinement ran under a policy that
+    /// participates in it).
+    pub online: Option<OnlineStats>,
     /// Cluster GPU count the run was scheduled on.
     pub n_gpus: u32,
 }
@@ -213,6 +217,19 @@ impl RunReport {
             ("n_stages", Json::Num(self.n_stages as f64)),
             ("n_gpus", Json::Num(self.n_gpus as f64)),
             (
+                "online",
+                match &self.online {
+                    None => Json::Null,
+                    Some(o) => Json::obj(vec![
+                        ("replans", Json::Num(o.replans as f64)),
+                        ("drift", Json::Num(o.drift)),
+                        ("replan_time", Json::Num(o.replan_time)),
+                        ("pre_est_total", Json::Num(o.pre_est_total)),
+                        ("post_est_total", Json::Num(o.post_est_total)),
+                    ]),
+                },
+            ),
+            (
                 "measured",
                 match &self.measured {
                     None => Json::Null,
@@ -269,13 +286,20 @@ mod tests {
             backend: "sim".into(),
             extra_time: 10.0,
             search_time: 8.0,
-            planner: EvalStats { candidates: 4, cache_hits: 3, cache_misses: 1, dep_dry_runs: 0, threads: 2 },
+            planner: EvalStats {
+                candidates: 4,
+                cache_hits: 3,
+                cache_misses: 1,
+                dep_dry_runs: 0,
+                threads: 2,
+            },
             inference_time: inference,
             end_to_end_time: 10.0 + inference,
             estimated_inference_time: inference * 1.2,
             n_stages: timeline.len(),
             timeline,
             measured: None,
+            online: None,
             n_gpus: 8,
         }
     }
@@ -336,6 +360,26 @@ mod tests {
         assert!(j.contains("\"measured\":{"), "{j}");
         assert!(j.contains("\"decode_iters\":40"), "{j}");
         assert!(j.contains("\"predicted_decode_mean\":0.003"), "{j}");
+    }
+
+    #[test]
+    fn json_reports_online_feedback_stats() {
+        let mut r = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]);
+        let j = r.to_json();
+        assert!(j.contains("\"online\":null"), "{j}");
+        r.online = Some(OnlineStats {
+            replans: 2,
+            drift: 0.8,
+            replan_time: 0.25,
+            pre_est_total: 120.0,
+            post_est_total: 95.0,
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"online\":{"), "{j}");
+        assert!(j.contains("\"replans\":2"), "{j}");
+        assert!(j.contains("\"drift\":0.8"), "{j}");
+        assert!(j.contains("\"pre_est_total\":120"), "{j}");
+        assert!(j.contains("\"post_est_total\":95"), "{j}");
     }
 
     #[test]

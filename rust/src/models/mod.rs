@@ -11,7 +11,6 @@ pub mod registry;
 
 pub use registry::Registry;
 
-
 /// Architectural description of one LLM, sufficient for the cost model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {

@@ -6,7 +6,6 @@
 
 use std::collections::HashSet;
 
-
 use crate::cluster::ClusterSpec;
 use crate::graph::AppGraph;
 use crate::models::ModelSpec;

@@ -399,8 +399,7 @@ mod tests {
         let st = ExecState::init(&w, |_, r| r.true_output_len);
         let cache = SimCache::new();
         let ev = Evaluator::new(&cost, &reg, &cluster, 2, &cache);
-        let evals =
-            ev.eval_all(&g, &st, &[stage(&[(0, 2, 1), (1, 2, 1)])], &HashMap::new());
+        let evals = ev.eval_all(&g, &st, &[stage(&[(0, 2, 1), (1, 2, 1)])], &HashMap::new());
         assert!(evals[0].throughput > 0.0);
         let stats = ev.stats();
         assert_eq!(stats.dep_dry_runs, 1);

@@ -94,10 +94,9 @@ impl GreedyPlanner {
         known_lengths: bool,
         seed: u64,
     ) -> PlannedApp {
-        let t0 = std::time::Instant::now();
         let mut rng = Rng::new(seed ^ 0x504C_414E);
         let sampler = &self.cost.sampler;
-        let mut state = ExecState::init(workloads, |node, r| {
+        let state = ExecState::init(workloads, |node, r| {
             if known_lengths {
                 r.true_output_len
             } else {
@@ -106,11 +105,33 @@ impl GreedyPlanner {
                 sampler.sample(&n.model, r.input_len, n.max_out, spec.max_seq, &mut rng)
             }
         });
+        self.plan_from_state(graph, state, &HashMap::new())
+    }
 
+    /// Run the Algorithm 1 search from an arbitrary starting state — the
+    /// entry point of drift-triggered mid-run replanning (§4.3 feedback):
+    /// the running phase hands in its *refreshed estimate* of the
+    /// remaining workload (progress committed, unfinished lengths
+    /// re-sampled from the online posterior) and gets a fresh stage
+    /// sequence for everything still to run. `initial_plans` carries the
+    /// plans currently executing, so the search prices keeping a model
+    /// resident as free (exactly like consecutive stages of one search).
+    ///
+    /// [`GreedyPlanner::plan`] is this function applied to a freshly
+    /// sampled initial state; estimates and windows are expressed on the
+    /// state's own clock, so `est_total` of a replan is the absolute
+    /// predicted finish time.
+    pub fn plan_from_state(
+        &self,
+        graph: &AppGraph,
+        mut state: ExecState,
+        initial_plans: &HashMap<usize, ExecPlan>,
+    ) -> PlannedApp {
+        let t0 = std::time::Instant::now();
         let mut stages = vec![];
         let mut est_windows = vec![];
         let mut est_first = vec![];
-        let mut prev_plans: HashMap<usize, ExecPlan> = HashMap::new();
+        let mut prev_plans: HashMap<usize, ExecPlan> = initial_plans.clone();
         let mut guard = 0usize;
 
         let local_cache;
@@ -154,8 +175,7 @@ impl GreedyPlanner {
                 .unwrap_or(usize::MAX);
             est_windows.push((res.start, res.end));
             est_first.push(first);
-            prev_plans =
-                stage.entries.iter().map(|e| (e.node, e.plan)).collect();
+            prev_plans = stage.entries.iter().map(|e| (e.node, e.plan)).collect();
             stages.push(stage);
         }
 

@@ -19,16 +19,17 @@
 //! constructor in [`builtin`] — no enum to extend, no runner changes.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::baselines::{fair_share_stage, max_heuristic_stage, min_heuristic_stage};
 use crate::cluster::ClusterSpec;
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, OnlineSampler, OnlineStats};
 use crate::graph::AppGraph;
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage};
-use crate::planner::{GreedyPlanner, PlannedApp};
+use crate::planner::{GreedyPlanner, PlannedApp, SimCache};
 use crate::runner::dynamic::DynamicScheduler;
 use crate::runner::state::{AppRequest, ExecState};
 use crate::runner::RunOpts;
@@ -74,6 +75,11 @@ pub struct StageCtx<'a> {
     /// Plans pinned by the no-preemption ablation (`None` when preemption
     /// is allowed).
     pub locked: Option<&'a HashMap<usize, ExecPlan>>,
+    /// The run's length-feedback loop (`None` unless
+    /// `RunOpts::online_refinement` is on). When present, `est_state` was
+    /// already refreshed from its posterior, and policies may read drift
+    /// evidence to escalate from stage repair to a full re-plan.
+    pub online: Option<&'a OnlineSampler>,
 }
 
 /// A scheduling policy: optionally plans offline, then produces execution
@@ -91,21 +97,109 @@ pub trait Policy {
     /// Produce the next execution stage, or `None` if the policy cannot
     /// schedule any unfinished work (the runner treats that as a bug).
     fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage>;
+
+    /// Drift/replan accounting of the run's length-feedback loop, if this
+    /// policy participates in it (only `ours` replans; the runner reports
+    /// this through [`crate::metrics::RunReport`] when online refinement
+    /// is on).
+    fn online_stats(&self) -> Option<OnlineStats> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Builtin implementations.
 // ---------------------------------------------------------------------------
 
-/// Ours (§4): Algorithm 1 greedy planning + dynamic stage adjustment.
+/// Search knobs [`SamuLlmPolicy`] stashes at `prepare` time so a
+/// drift-triggered re-plan searches exactly like the offline plan did.
+struct ReplanCfg {
+    threads: usize,
+    no_preemption: bool,
+    sim_cache: Option<Arc<SimCache>>,
+    replan_threshold: f64,
+}
+
+/// Ours (§4): Algorithm 1 greedy planning + dynamic stage adjustment,
+/// escalating to a full re-plan of the remaining application when the
+/// runtime length-feedback loop reports drift past the threshold.
 pub struct SamuLlmPolicy {
     sched: DynamicScheduler,
+    cfg: Option<ReplanCfg>,
+    /// Per-model mean-length reference the drift score compares observed
+    /// completions against: the offline eCDF mean initially, reset to the
+    /// evidence each time a re-plan adopts it.
+    length_ref: HashMap<String, f64>,
+    /// Virtual clock at which the current plan was adopted (0 for the
+    /// offline plan).
+    plan_t0: f64,
+    stats: OnlineStats,
 }
 
 impl SamuLlmPolicy {
     /// A fresh policy (plans on `prepare`).
     pub fn new() -> Self {
-        SamuLlmPolicy { sched: DynamicScheduler::new(None) }
+        SamuLlmPolicy {
+            sched: DynamicScheduler::new(None),
+            cfg: None,
+            length_ref: HashMap::new(),
+            plan_t0: 0.0,
+            stats: OnlineStats::default(),
+        }
+    }
+
+    /// The §4.3 drift score: the worst of
+    ///
+    /// * **mean-length drift** — per model, how far the observed
+    ///   completion mean moved from the reference the current plan was
+    ///   built on (confidence-discounted; see
+    ///   [`OnlineSampler::mean_drift`]), and
+    /// * **makespan drift** — |actual − predicted| / predicted elapsed
+    ///   time over the planned stages consumed since the current plan was
+    ///   adopted.
+    fn current_drift(&mut self, ctx: &StageCtx, online: &OnlineSampler) -> f64 {
+        let mut drift: f64 = 0.0;
+        for node in &ctx.graph.nodes {
+            let reference = *self
+                .length_ref
+                .entry(node.model.clone())
+                .or_insert_with(|| online.offline_mean(&node.model).unwrap_or(0.0));
+            if let Some(d) = online.mean_drift(&node.model, reference) {
+                drift = drift.max(d);
+            }
+        }
+        if let Some(predicted) = self.sched.predicted_elapsed() {
+            let actual = ctx.true_state.clock - self.plan_t0;
+            if predicted > 1e-9 && actual > 0.0 {
+                drift = drift.max((actual - predicted).abs() / predicted);
+            }
+        }
+        drift
+    }
+
+    /// Re-plan the remaining application from the refreshed estimate and
+    /// hand the new stage sequence to the dynamic scheduler.
+    fn replan(&mut self, ctx: &StageCtx, online: &OnlineSampler, cfg: &ReplanCfg) {
+        let mut planner =
+            GreedyPlanner::new(ctx.cost.clone(), ctx.registry.clone(), ctx.cluster.clone());
+        planner.no_preemption = cfg.no_preemption;
+        planner.threads = cfg.threads;
+        planner.cache = cfg.sim_cache.clone();
+        let mut est = ctx.est_state.clone();
+        est.noise_sigma = None;
+        let plan = planner.plan_from_state(ctx.graph, est, self.sched.last_plans());
+        self.stats.replans += 1;
+        self.stats.replan_time += plan.search_time;
+        self.stats.post_est_total = plan.est_total;
+        // The new plan is built on today's evidence: reset the drift
+        // references so only *new* divergence can trigger again.
+        for node in &ctx.graph.nodes {
+            if let Some(m) = online.observed_mean(&node.model) {
+                self.length_ref.insert(node.model.clone(), m);
+            }
+        }
+        self.plan_t0 = ctx.true_state.clock;
+        self.sched.adopt(plan);
     }
 }
 
@@ -121,17 +215,43 @@ impl Policy for SamuLlmPolicy {
     }
 
     fn prepare(&mut self, ctx: &PlanCtx) -> Option<PlannedApp> {
-        let mut p =
-            GreedyPlanner::new(ctx.cost.clone(), ctx.registry.clone(), ctx.cluster.clone());
+        let mut p = GreedyPlanner::new(ctx.cost.clone(), ctx.registry.clone(), ctx.cluster.clone());
         p.no_preemption = ctx.opts.no_preemption;
         p.threads = ctx.opts.threads;
         p.cache = ctx.sim_cache.cloned();
         let plan = p.plan(ctx.graph, ctx.workloads, ctx.opts.known_lengths, ctx.opts.seed);
         self.sched = DynamicScheduler::new(Some(plan.clone()));
+        self.cfg = Some(ReplanCfg {
+            threads: ctx.opts.threads,
+            no_preemption: ctx.opts.no_preemption,
+            sim_cache: ctx.sim_cache.cloned(),
+            replan_threshold: ctx.opts.replan_threshold,
+        });
+        self.length_ref.clear();
+        self.plan_t0 = 0.0;
+        self.stats = OnlineStats {
+            pre_est_total: plan.est_total,
+            post_est_total: plan.est_total,
+            ..OnlineStats::default()
+        };
         Some(plan)
     }
 
     fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage> {
+        if let Some(online) = ctx.online {
+            // (take/restore: the drift helpers need `&mut self`.)
+            if let Some(cfg) = self.cfg.take() {
+                let drift = self.current_drift(ctx, online);
+                self.stats.drift = self.stats.drift.max(drift);
+                // Escalate from stage repair to a full re-plan — but only
+                // after the current plan produced at least one stage, so
+                // a fresh plan gets a chance before being second-guessed.
+                if drift > cfg.replan_threshold && self.sched.consumed() > 0 {
+                    self.replan(ctx, online, &cfg);
+                }
+                self.cfg = Some(cfg);
+            }
+        }
         self.sched.next_stage(
             ctx.graph,
             ctx.true_state,
@@ -140,6 +260,10 @@ impl Policy for SamuLlmPolicy {
             ctx.registry,
             ctx.locked,
         )
+    }
+
+    fn online_stats(&self) -> Option<OnlineStats> {
+        Some(self.stats)
     }
 }
 
@@ -153,7 +277,13 @@ impl Policy for MaxHeuristic {
     }
 
     fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage> {
-        max_heuristic_stage(ctx.graph, ctx.est_state, ctx.registry, ctx.cluster, &ctx.cost.iter_model)
+        max_heuristic_stage(
+            ctx.graph,
+            ctx.est_state,
+            ctx.registry,
+            ctx.cluster,
+            &ctx.cost.iter_model,
+        )
     }
 }
 
@@ -345,6 +475,7 @@ mod tests {
                 registry: &registry,
                 cost: &cost,
                 locked: None,
+                online: None,
             };
             let stage = p.plan_stage(&ctx).unwrap();
             assert!(stage.n_gpus() <= 8);

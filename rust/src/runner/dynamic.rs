@@ -32,9 +32,39 @@ impl DynamicScheduler {
         DynamicScheduler { planned, next_idx: 0, last_plans: HashMap::new() }
     }
 
-    /// Stages consumed so far (diagnostics).
+    /// Stages consumed so far (diagnostics). Resets when a replan is
+    /// adopted via [`DynamicScheduler::adopt`].
     pub fn consumed(&self) -> usize {
         self.next_idx
+    }
+
+    /// Replace the planned stage sequence mid-run (drift-triggered
+    /// replanning): the new plan's stages are consumed from the start,
+    /// while the last-used-plan history survives so the keep-running rule
+    /// and the fallback still know what every node last ran with.
+    pub fn adopt(&mut self, planned: PlannedApp) {
+        self.planned = Some(planned);
+        self.next_idx = 0;
+    }
+
+    /// Most recent plan each node ran with (feeds a replan's
+    /// `initial_plans`, so keeping a resident model is priced as free).
+    pub fn last_plans(&self) -> &HashMap<usize, ExecPlan> {
+        &self.last_plans
+    }
+
+    /// Predicted elapsed virtual time across the planned stages consumed
+    /// so far, relative to the current plan's own start (`None` before
+    /// any stage is consumed or without a plan). Compared against the
+    /// actually elapsed clock, this is the makespan half of the §4.3
+    /// drift score.
+    pub fn predicted_elapsed(&self) -> Option<f64> {
+        let planned = self.planned.as_ref()?;
+        if self.next_idx == 0 || planned.est_windows.is_empty() {
+            return None;
+        }
+        let k = self.next_idx.min(planned.est_windows.len());
+        Some(planned.est_windows[k - 1].1 - planned.est_windows[0].0)
     }
 
     /// Produce the next stage to run.
@@ -315,6 +345,46 @@ mod tests {
         assert!(s2.nodes().contains(&1));
         assert!(!s2.nodes().contains(&0), "leftover must be dropped: no GPUs remain");
         assert_eq!(s2.n_gpus(), 8);
+    }
+
+    #[test]
+    fn adopt_resets_consumption_and_keeps_plan_history() {
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut d = DynamicScheduler::new(Some(planned(vec![vec![(0, 2, 2), (1, 4, 1)]])));
+        let s1 = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(d.consumed(), 1);
+        assert_eq!(d.last_plans().get(&0), Some(&ExecPlan::new(2, 2)));
+
+        // A replan arrives: consumption restarts on the new sequence...
+        d.adopt(planned(vec![vec![(2, 8, 1)], vec![(1, 1, 1)]]));
+        assert_eq!(d.consumed(), 0);
+        let s2 = d.next_stage(&g, &st, Some(&s1), &c, &reg, None).unwrap();
+        assert!(s2.nodes().contains(&2));
+        assert_eq!(d.consumed(), 1);
+        // ...and the pre-replan history survives for the fallback: after
+        // the new plan runs out, node 0 keeps its old (2,2) plan.
+        let mut st2 = st.clone();
+        st2.finished_nodes.insert(1);
+        st2.finished_nodes.insert(2);
+        let s3 = d.next_stage(&g, &st2, None, &c, &reg, None).unwrap();
+        let s4 = d.next_stage(&g, &st2, Some(&s3), &c, &reg, None).unwrap();
+        assert_eq!(s4.plan_of(0), Some(ExecPlan::new(2, 2)));
+    }
+
+    #[test]
+    fn predicted_elapsed_tracks_consumed_windows() {
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let mut p = planned(vec![vec![(0, 4, 1)], vec![(1, 4, 1)]]);
+        p.est_windows = vec![(50.0, 80.0), (80.0, 130.0)];
+        let mut d = DynamicScheduler::new(Some(p));
+        assert_eq!(d.predicted_elapsed(), None, "nothing consumed yet");
+        d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(d.predicted_elapsed(), Some(30.0));
+        d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(d.predicted_elapsed(), Some(80.0));
+        assert_eq!(DynamicScheduler::new(None).predicted_elapsed(), None);
     }
 
     #[test]

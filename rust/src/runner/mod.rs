@@ -17,13 +17,13 @@ pub mod state;
 
 pub use state::{AppRequest, ExecState};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cluster::{ClusterSpec, Placement};
-use crate::costmodel::{CostModel, HardwareModel, IterLatency};
+use crate::costmodel::{online, CostModel, HardwareModel, IterLatency, OnlineSampler};
 use crate::engine::sched::{EngineEvent, EventKind};
 use crate::exec::{BackendMode, EventSummary, ExecBackend, SimBackend};
 use crate::graph::AppGraph;
@@ -65,6 +65,24 @@ pub struct RunOpts {
     /// Let the planner memoize simulations in the context's shared
     /// [`SimCache`] (on by default; results are identical either way).
     pub sim_cache: bool,
+    /// Runtime length-feedback loop (§4.3 refinement, off by default —
+    /// the offline-estimate path is bit-identical to every pre-feedback
+    /// release): fold observed completion lengths into a per-model
+    /// posterior, re-estimate in-flight requests conditionally
+    /// (`X | X > generated`), and let the `ours` policy escalate from
+    /// stage repair to a full re-plan when drift exceeds
+    /// [`RunOpts::replan_threshold`].
+    pub online_refinement: bool,
+    /// Drift score above which the dynamic scheduler replans the
+    /// remaining application (only with `online_refinement`). The score
+    /// mixes per-model mean-length drift and stage-makespan drift; the
+    /// default leaves headroom over the paper's ≲50% baseline cost-model
+    /// error band.
+    pub replan_threshold: f64,
+    /// Weight of one observed completion in offline-trace-sample
+    /// equivalents when blending the online posterior (only with
+    /// `online_refinement`).
+    pub online_weight: f64,
 }
 
 impl Default for RunOpts {
@@ -76,6 +94,9 @@ impl Default for RunOpts {
             noise_sigma: 0.02,
             threads: 0,
             sim_cache: true,
+            online_refinement: false,
+            replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
+            online_weight: online::DEFAULT_OBS_WEIGHT,
         }
     }
 }
@@ -193,6 +214,14 @@ pub fn run_with_backend(
     }
 
     let mut est_rng = Rng::new(opts.seed ^ 0xE571);
+    // The runtime length-feedback loop (§4.3): observed completions feed
+    // a per-model posterior; the policy-visible estimate is refreshed
+    // from it after every committed stage. Off by default — the frozen
+    // path below is bit-identical to the pre-feedback releases.
+    let mut online_sampler = opts
+        .online_refinement
+        .then(|| OnlineSampler::new(cost.sampler.clone(), opts.online_weight));
+    let mut observed: HashSet<(usize, u64)> = HashSet::new();
     let mut placement = Placement::empty(cluster.n_gpus);
     let loader = |owner: u64, tp: u32| -> f64 {
         registry
@@ -218,7 +247,15 @@ pub fn run_with_backend(
         // Policies see an estimate of reality: true progress, sampled (or
         // known) remaining lengths, no jitter.
         let decision_t0 = std::time::Instant::now();
-        let est_state = estimate_view(&true_state, graph, cost, registry, opts, &mut est_rng);
+        let est_state = estimate_view(
+            &true_state,
+            graph,
+            cost,
+            registry,
+            opts,
+            &mut est_rng,
+            online_sampler.as_mut(),
+        );
         let stage = policy.plan_stage(&StageCtx {
             graph,
             true_state: &true_state,
@@ -228,6 +265,7 @@ pub fn run_with_backend(
             registry,
             cost,
             locked: if opts.no_preemption { Some(&locked) } else { None },
+            online: online_sampler.as_ref(),
         });
         extra_time += decision_t0.elapsed().as_secs_f64();
         let Some(stage) = stage else {
@@ -310,6 +348,18 @@ pub fn run_with_backend(
             events: EventSummary::from_events(&events),
         });
         all_events.append(&mut events);
+        // Feedback: every request the committed stage finished contributes
+        // its ground-truth length to the model's posterior.
+        if let Some(os) = online_sampler.as_mut() {
+            for e in &stage.entries {
+                let model = &graph.nodes[e.node].model;
+                for r in &true_state.nodes[e.node] {
+                    if r.is_done() && observed.insert((e.node, r.id)) {
+                        os.record(model, r.output_len);
+                    }
+                }
+            }
+        }
         prev_stage = Some(stage);
     }
 
@@ -317,6 +367,9 @@ pub fn run_with_backend(
     let measured = measured_mode
         .then(|| measured_stats(&all_events, &timeline, graph, registry, hw))
         .flatten();
+    // Drift/replan accounting only exists when the feedback loop ran and
+    // the policy participates in it (`None` for baselines).
+    let online_stats = online_sampler.is_some().then(|| policy.online_stats()).flatten();
     Ok(RunReport {
         scenario: scenario.name.clone(),
         policy: policy.name().to_string(),
@@ -330,6 +383,7 @@ pub fn run_with_backend(
         n_stages: timeline.len(),
         timeline,
         measured,
+        online: online_stats,
         n_gpus: cluster.n_gpus,
     })
 }
@@ -397,7 +451,9 @@ fn measured_stats(
 
 /// Build the policy-visible state: true progress and completions, but
 /// remaining output lengths re-sampled from the eCDF (unless the §5.5
-/// "known lengths" ablation is on).
+/// "known lengths" ablation is on). With the feedback loop on, samples
+/// come from the online posterior instead, conditioned on each in-flight
+/// request's progress (`X | X > generated`).
 fn estimate_view(
     true_state: &ExecState,
     graph: &AppGraph,
@@ -405,6 +461,7 @@ fn estimate_view(
     registry: &Registry,
     opts: &RunOpts,
     rng: &mut Rng,
+    mut online: Option<&mut OnlineSampler>,
 ) -> ExecState {
     let mut est = true_state.clone();
     est.noise_sigma = None;
@@ -416,7 +473,23 @@ fn estimate_view(
         let spec = registry.get(&node.model).expect("model");
         for r in reqs.iter_mut() {
             if !r.is_done() {
-                let s = cost.sampler.sample(&node.model, r.input_len, node.max_out, spec.max_seq, rng);
+                let s = match online.as_deref_mut() {
+                    Some(os) => os.sample_total(
+                        &node.model,
+                        r.input_len,
+                        node.max_out,
+                        spec.max_seq,
+                        r.generated,
+                        rng,
+                    ),
+                    None => cost.sampler.sample(
+                        &node.model,
+                        r.input_len,
+                        node.max_out,
+                        spec.max_seq,
+                        rng,
+                    ),
+                };
                 r.output_len = s.max(r.generated + 1);
             }
         }
@@ -451,7 +524,9 @@ mod tests {
                         AppRequest::simple(
                             id,
                             20,
-                            crate::workload::lengths::true_output_len(m, 0.05, 20, 256, 2048, &mut rng),
+                            crate::workload::lengths::true_output_len(
+                                m, 0.05, 20, 256, 2048, &mut rng,
+                            ),
                         )
                     })
                     .collect(),

@@ -239,8 +239,7 @@ impl ExecState {
         // workloads produce bit-equal outcomes regardless of the absolute
         // clock — floating-point accumulation is origin-sensitive.
         let start = load_delay;
-        let reqs =
-            self.build_engine_requests(node, start, &HashMap::new(), load_delay == 0.0);
+        let reqs = self.build_engine_requests(node, start, &HashMap::new(), load_delay == 0.0);
         if reqs.is_empty() {
             return crate::engine::sim::SimOutcome { clock: load_delay, ..Default::default() };
         }
@@ -415,8 +414,7 @@ impl ExecState {
             let spec = registry.get(&graph.nodes[node].model).expect("model");
             let delay = load_delay.get(&node).copied().unwrap_or(0.0);
             let kept = !load_delay.contains_key(&node);
-            let reqs =
-                self.build_engine_requests(node, start + delay, &stage_completions, kept);
+            let reqs = self.build_engine_requests(node, start + delay, &stage_completions, kept);
             let out = self.run_node_on(
                 backend,
                 node,
@@ -478,8 +476,7 @@ impl ExecState {
             let spec = registry.get(&graph.nodes[node].model).expect("model");
             let delay = load_delay.get(&node).copied().unwrap_or(0.0);
             let kept = !load_delay.contains_key(&node);
-            let reqs =
-                self.build_engine_requests(node, start + delay, &replay_completions, kept);
+            let reqs = self.build_engine_requests(node, start + delay, &replay_completions, kept);
             let mut out = self.run_node_on(
                 backend,
                 node,
@@ -785,8 +782,7 @@ mod tests {
             assert!(st.completed[&(b, i)] >= st.completed[&(a, i)] - 1e-12);
         }
         // The unified event stream covers both nodes.
-        let nodes: std::collections::HashSet<usize> =
-            events.iter().map(|e| e.node).collect();
+        let nodes: std::collections::HashSet<usize> = events.iter().map(|e| e.node).collect();
         assert_eq!(nodes, [a, b].into_iter().collect());
     }
 

@@ -185,7 +185,11 @@ impl TinyGpt {
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
-    fn run(&self, exe: &xla::PjRtLoadedExecutable, extra: Vec<xla::PjRtBuffer>) -> Result<StepOutput> {
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        extra: Vec<xla::PjRtBuffer>,
+    ) -> Result<StepOutput> {
         let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
         for e in &extra {
             args.push(e);

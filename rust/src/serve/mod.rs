@@ -168,8 +168,7 @@ pub fn synthetic_requests(
     let mut requests = vec![];
     let mut prompts = HashMap::new();
     for id in 0..n as u64 {
-        let prompt: Vec<i32> =
-            (0..prompt_len).map(|_| rng.range_u64(1, 511) as i32).collect();
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.range_u64(1, 511) as i32).collect();
         requests.push(EngineRequest::fresh(id, prompt_len as u32, max_new as u32));
         prompts.insert(id, prompt);
     }

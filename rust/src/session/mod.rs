@@ -30,6 +30,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use crate::cluster::ClusterSpec;
+use crate::costmodel::online;
 use crate::exec::{self, pjrt::PjrtBackend, SimBackend};
 use crate::metrics::RunReport;
 use crate::policy;
@@ -64,6 +65,9 @@ pub struct SamuLlmBuilder {
     noise_sigma: f64,
     threads: usize,
     sim_cache: bool,
+    online_refinement: bool,
+    replan_threshold: f64,
+    online_weight: f64,
 }
 
 impl SamuLlm {
@@ -81,6 +85,9 @@ impl SamuLlm {
             noise_sigma: 0.02,
             threads: 0,
             sim_cache: true,
+            online_refinement: false,
+            replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
+            online_weight: online::DEFAULT_OBS_WEIGHT,
         }
     }
 
@@ -220,14 +227,42 @@ impl SamuLlmBuilder {
         self
     }
 
+    /// Runtime length-feedback loop (default off — results are then
+    /// bit-identical to every pre-feedback release): observed completion
+    /// lengths refine a per-model posterior, in-flight requests are
+    /// re-estimated conditionally (`X | X > generated`), and the `ours`
+    /// policy escalates from stage repair to a full re-plan of the
+    /// remaining application when drift exceeds the replan threshold.
+    pub fn online_refinement(mut self, on: bool) -> Self {
+        self.online_refinement = on;
+        self
+    }
+
+    /// Drift score above which the dynamic scheduler replans the
+    /// remaining application (default
+    /// [`online::DEFAULT_REPLAN_THRESHOLD`]; only meaningful with
+    /// [`SamuLlmBuilder::online_refinement`]).
+    pub fn replan_threshold(mut self, threshold: f64) -> Self {
+        self.replan_threshold = threshold;
+        self
+    }
+
+    /// Weight of one observed completion in offline-trace-sample
+    /// equivalents when blending the online posterior (default
+    /// [`online::DEFAULT_OBS_WEIGHT`]; only meaningful with
+    /// [`SamuLlmBuilder::online_refinement`]).
+    pub fn online_weight(mut self, weight: f64) -> Self {
+        self.online_weight = weight;
+        self
+    }
+
     /// Validate the configuration and assemble the session wiring. For
     /// the `pjrt` backend, the artifacts contract is checked here so
     /// misconfiguration fails before any (expensive) planning starts.
     pub fn build(self) -> Result<SamuLlm> {
         let policy = policy::canonical(&self.policy)?;
         let backend = exec::canonical(&self.backend)?;
-        let artifacts =
-            self.artifacts.unwrap_or_else(crate::runtime::default_artifacts_dir);
+        let artifacts = self.artifacts.unwrap_or_else(crate::runtime::default_artifacts_dir);
         if backend == "pjrt" && !artifacts.join("model_meta.json").exists() {
             return Err(anyhow!(
                 "backend \"pjrt\" needs TinyGPT artifacts in {} — run `make artifacts` \
@@ -257,6 +292,9 @@ impl SamuLlmBuilder {
             noise_sigma: self.noise_sigma,
             threads: self.threads,
             sim_cache: self.sim_cache,
+            online_refinement: self.online_refinement,
+            replan_threshold: self.replan_threshold,
+            online_weight: self.online_weight,
         };
         Ok(SamuLlm {
             ctx: RunContext::new(&cluster, self.seed),
@@ -330,8 +368,7 @@ mod tests {
 
     #[test]
     fn session_runs_a_small_spec() {
-        let session =
-            SamuLlm::builder().gpus(8).policy("min").seed(3).build().unwrap();
+        let session = SamuLlm::builder().gpus(8).policy("min").seed(3).build().unwrap();
         let spec = AppSpec::ensembling(60, 128);
         let r = session.run(&spec).unwrap();
         assert_eq!(r.policy, "min-heuristic");
@@ -379,6 +416,53 @@ mod tests {
         assert!(r1.planner.cache_misses > 0);
         assert_eq!(r2.planner.cache_misses, 0, "{:?}", r2.planner);
         assert!(r2.planner.cache_hits > 0);
+    }
+
+    #[test]
+    fn online_refinement_off_is_the_frozen_path_bit_for_bit() {
+        // The feedback loop is opt-in: an explicit `false` (the default)
+        // must leave every number untouched, and the report must carry no
+        // online section.
+        let spec = AppSpec::ensembling(60, 128);
+        let a = SamuLlm::builder().gpus(8).seed(3).build().unwrap().run(&spec).unwrap();
+        let b = SamuLlm::builder()
+            .gpus(8)
+            .seed(3)
+            .online_refinement(false)
+            .replan_threshold(0.01)
+            .online_weight(1000.0)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        assert_eq!(a.n_stages, b.n_stages);
+        assert!(a.online.is_none() && b.online.is_none());
+    }
+
+    #[test]
+    fn online_refinement_runs_are_deterministic_and_reported() {
+        let spec = AppSpec::ensembling(60, 128);
+        let run = || {
+            SamuLlm::builder()
+                .gpus(8)
+                .seed(3)
+                .online_refinement(true)
+                .build()
+                .unwrap()
+                .run(&spec)
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        assert_eq!(a.n_stages, b.n_stages);
+        let (oa, ob) = (a.online.expect("online stats"), b.online.expect("online stats"));
+        assert_eq!(oa.replans, ob.replans);
+        assert_eq!(oa.drift.to_bits(), ob.drift.to_bits());
+        assert!(oa.pre_est_total > 0.0);
+        // The JSON contract carries the section.
+        assert!(a.to_json().contains("\"online\":{"), "{}", a.to_json());
     }
 
     #[test]

@@ -270,8 +270,7 @@ fn build_custom(
                     .enumerate()
                     .map(|(id, r)| {
                         let input_len = r.input_len.max(1);
-                        let out =
-                            r.output_len.min(node.max_out).min(window(input_len)).max(1);
+                        let out = r.output_len.min(node.max_out).min(window(input_len)).max(1);
                         AppRequest::simple(id as u64, input_len, out)
                     })
                     .collect()
@@ -616,8 +615,7 @@ fn node_from_json(v: &Json) -> Result<NodeSpec> {
         .and_then(|m| m.as_str())
         .ok_or_else(|| anyhow!("node.model missing"))?
         .to_string();
-    let label =
-        v.get("label").and_then(|l| l.as_str()).unwrap_or(model.as_str()).to_string();
+    let label = v.get("label").and_then(|l| l.as_str()).unwrap_or(model.as_str()).to_string();
     let max_out = v
         .get("max_out")
         .and_then(|m| m.as_u64())

@@ -19,7 +19,14 @@ impl Rng {
     /// Seed the generator; distinct seeds give independent streams.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
     }
 
     /// Derive an independent child stream (for per-model / per-phase seeds).

@@ -18,7 +18,6 @@ pub mod mixinstruct;
 pub mod norobots;
 pub mod routerbench;
 
-
 /// The ten No Robots instruction categories (Fig. 2b).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 #[allow(missing_docs)] // the variants are the category names themselves

@@ -1,0 +1,160 @@
+//! End-to-end tests of the runtime length-feedback loop: online eCDF
+//! refinement, drift scoring and drift-triggered replanning (the §4.3
+//! "adjust scheduling based on runtime information" path).
+
+use samullm::cluster::ClusterSpec;
+use samullm::config::ExperimentConfig;
+use samullm::harness::shifted_length_scenario;
+use samullm::runner::{run_policy, RunOpts};
+use samullm::session::SamuLlm;
+use samullm::spec::AppSpec;
+
+#[test]
+fn shifted_workload_triggers_replanning() {
+    let cluster = ClusterSpec::a100_node(8);
+    let scenario = shifted_length_scenario(120, 42);
+    let frozen_opts = RunOpts { seed: 42, ..RunOpts::default() };
+    let online_opts = RunOpts { online_refinement: true, ..frozen_opts.clone() };
+
+    let frozen = run_policy("ours", &scenario, &cluster, &frozen_opts);
+    let online = run_policy("ours", &scenario, &cluster, &online_opts);
+
+    assert!(frozen.online.is_none(), "frozen run must not report feedback stats");
+    let stats = online.online.expect("online run must report feedback stats");
+    assert!(stats.replans >= 1, "drift this large must trigger a replan: {stats:?}");
+    assert!(
+        stats.drift > online_opts.replan_threshold,
+        "reported drift {} below threshold",
+        stats.drift
+    );
+    assert!(stats.pre_est_total > 0.0);
+    assert!(stats.post_est_total > 0.0);
+    // Both paths complete the same workload; refinement must not lose
+    // requests or wedge the runner.
+    assert!(online.inference_time > 0.0 && frozen.inference_time > 0.0);
+    // The point of the loop: on a miscalibrated workload the refined run
+    // must not be meaningfully slower (it is typically faster — the
+    // bench records the actual gap; this bound is deliberately lenient
+    // so a pathological seed can't flake CI).
+    assert!(
+        online.inference_time <= frozen.inference_time * 1.10,
+        "online {:.1}s much slower than frozen {:.1}s",
+        online.inference_time,
+        frozen.inference_time
+    );
+}
+
+#[test]
+fn replan_threshold_infinity_disables_replanning_but_keeps_refinement() {
+    let cluster = ClusterSpec::a100_node(8);
+    let scenario = shifted_length_scenario(80, 7);
+    let opts = RunOpts {
+        seed: 7,
+        online_refinement: true,
+        replan_threshold: f64::INFINITY,
+        ..RunOpts::default()
+    };
+    let r = run_policy("ours", &scenario, &cluster, &opts);
+    let stats = r.online.expect("stats present even without replans");
+    assert_eq!(stats.replans, 0, "infinite threshold must never replan");
+    assert_eq!(stats.replan_time, 0.0);
+    assert_eq!(
+        stats.pre_est_total.to_bits(),
+        stats.post_est_total.to_bits(),
+        "estimate must be untouched without replans"
+    );
+    assert!(stats.drift > 0.0, "drift is still measured and reported");
+    assert!(r.inference_time > 0.0);
+}
+
+#[test]
+fn baseline_policies_run_under_refinement_without_stats() {
+    // Baselines consume the refreshed estimate (their stages see the
+    // posterior lengths) but do not participate in drift/replanning, so
+    // the report carries no online section.
+    let cluster = ClusterSpec::a100_node(8);
+    let scenario = shifted_length_scenario(60, 3);
+    let opts = RunOpts { seed: 3, online_refinement: true, ..RunOpts::default() };
+    for p in ["min-heuristic", "max-heuristic", "round-robin"] {
+        let r = run_policy(p, &scenario, &cluster, &opts);
+        assert!(r.inference_time > 0.0, "{p}");
+        assert!(r.online.is_none(), "{p} must not report feedback stats");
+    }
+}
+
+#[test]
+fn online_knobs_flow_from_config_json_to_the_report() {
+    let json = r#"{
+        "app": {"kind": "ensembling", "n_requests": 50, "max_out": 128},
+        "policy": "ours",
+        "n_gpus": 8,
+        "seed": 5,
+        "online_refinement": true,
+        "replan_threshold": 0.5,
+        "online_weight": 16.0
+    }"#;
+    let cfg = ExperimentConfig::from_json(json).unwrap();
+    assert!(cfg.online_refinement);
+    assert_eq!(cfg.replan_threshold, 0.5);
+    assert_eq!(cfg.online_weight, 16.0);
+
+    let session = SamuLlm::builder()
+        .gpus(cfg.n_gpus)
+        .policy(&cfg.policy)
+        .seed(cfg.seed)
+        .online_refinement(cfg.online_refinement)
+        .replan_threshold(cfg.replan_threshold)
+        .online_weight(cfg.online_weight)
+        .build()
+        .unwrap();
+    let report = session.run(&cfg.app).unwrap();
+    let j = report.to_json();
+    assert!(j.contains("\"online\":{"), "{j}");
+    assert!(j.contains("\"replans\":"), "{j}");
+    assert!(report.online.is_some());
+}
+
+#[test]
+fn no_preemption_pins_plans_even_across_replans() {
+    // Locked plans are a hard constraint: even when drift triggers a
+    // replan, a started node must keep its original plan.
+    let cluster = ClusterSpec::a100_node(8);
+    let scenario = shifted_length_scenario(80, 11);
+    let opts = RunOpts {
+        seed: 11,
+        online_refinement: true,
+        no_preemption: true,
+        ..RunOpts::default()
+    };
+    let r = run_policy("ours", &scenario, &cluster, &opts);
+    let mut seen: std::collections::HashMap<usize, samullm::plan::ExecPlan> =
+        std::collections::HashMap::new();
+    for s in &r.timeline {
+        assert!(s.gpus_used() <= 8, "stage over budget");
+        for (n, plan) in &s.entries {
+            if let Some(prev) = seen.get(n) {
+                assert_eq!(prev, plan, "node {n} changed plan under no-preemption");
+            }
+            seen.insert(*n, *plan);
+        }
+    }
+    assert!(r.inference_time > 0.0);
+}
+
+#[test]
+fn session_knob_works_on_stock_specs() {
+    // The session facade exposes the same loop on the paper's stock
+    // applications: the knob must not disturb completion guarantees even
+    // when the workload is well-calibrated.
+    let spec = AppSpec::ensembling(60, 128);
+    let r = SamuLlm::builder()
+        .gpus(8)
+        .seed(9)
+        .online_refinement(true)
+        .build()
+        .unwrap()
+        .run(&spec)
+        .unwrap();
+    assert!(r.inference_time > 0.0);
+    assert!(r.online.is_some());
+}

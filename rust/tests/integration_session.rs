@@ -124,6 +124,9 @@ fn spec_round_trips_through_config_json_and_runs() {
         known_output_lengths: false,
         threads: 0,
         sim_cache: true,
+        online_refinement: false,
+        replan_threshold: samullm::costmodel::online::DEFAULT_REPLAN_THRESHOLD,
+        online_weight: samullm::costmodel::online::DEFAULT_OBS_WEIGHT,
     };
     let text = cfg.to_json();
     let back = ExperimentConfig::from_json(&text).unwrap();
@@ -176,8 +179,7 @@ fn routing_known_lengths_field_is_honoured() {
 #[test]
 fn paper_spec_defaults_run_under_all_paper_policies() {
     let session = SamuLlm::builder().seed(42).build().unwrap();
-    let reports =
-        session.compare(&AppSpec::ensembling(300, 128), &policy::PAPER).unwrap();
+    let reports = session.compare(&AppSpec::ensembling(300, 128), &policy::PAPER).unwrap();
     let names: Vec<&str> = reports.iter().map(|r| r.policy.as_str()).collect();
     assert_eq!(names, vec!["ours", "max-heuristic", "min-heuristic"]);
     for r in &reports {

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use samullm::cluster::{ClusterSpec, Placement};
-use samullm::costmodel::{CostModel, Ecdf, HardwareModel};
+use samullm::costmodel::{CostModel, Ecdf, HardwareModel, OutputSampler};
 use samullm::engine::sim::{EngineConfig, EngineSim};
 use samullm::engine::EngineRequest;
 use samullm::exec::SimBackend;
@@ -179,6 +179,91 @@ fn ecdf_quantile_cdf_inverse() {
 }
 
 #[test]
+fn conditional_ecdf_quantiles_dominate_unconditional() {
+    // The feedback loop's conditional view `X | X > d`: for every
+    // quantile level and every progress point, the conditional quantile
+    // must dominate the unconditional one and exceed the conditioning
+    // point — re-estimating an in-flight request can only push its total
+    // length up, never below what it already generated.
+    quickprop::run(50, 0xC0ND, |rng| {
+        let n = rng.range_usize(1, 400);
+        let samples: Vec<u32> = (0..n).map(|_| rng.range_u64(0, 1500) as u32).collect();
+        let e = Ecdf::from_samples(samples);
+        let q = rng.uniform();
+        let d = rng.range_u64(0, 1600) as u32;
+        match e.quantile_given_gt(q, d) {
+            None => prop_assert!(e.tail_count(d) == 0, "None with non-empty tail"),
+            Some(x) => {
+                prop_assert!(x > d, "conditional quantile {x} <= condition {d}");
+                prop_assert!(
+                    x >= e.quantile(q),
+                    "conditional quantile {x} below unconditional {}",
+                    e.quantile(q)
+                );
+                // Round-trip: the conditional CDF at the conditional
+                // quantile covers the requested level.
+                prop_assert!(
+                    e.cdf_given_gt(x, d) + 1e-12 >= q,
+                    "cdf|gt(quantile|gt(q)) < q"
+                );
+                // Conditional CDF is monotone in x.
+                let x2 = x + rng.range_u64(0, 50) as u32;
+                prop_assert!(
+                    e.cdf_given_gt(x, d) <= e.cdf_given_gt(x2, d) + 1e-12,
+                    "conditional cdf not monotone"
+                );
+            }
+        }
+        // Conditioning below the support is a no-op: same quantiles.
+        if e.min() > 0 {
+            prop_assert!(
+                e.quantile_given_gt(q, e.min() - 1) == Some(e.quantile(q)),
+                "vacuous conditioning changed the quantile"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn online_posterior_with_zero_observations_is_the_offline_ecdf() {
+    use samullm::costmodel::OnlineSampler;
+    quickprop::run(6, 0x0B5E, |rng| {
+        let offline = OutputSampler::from_norobots_trace(rng.next_u64());
+        let weight = rng.range_f64(0.0, 128.0);
+        let mut online = OnlineSampler::new(offline.clone(), weight);
+        let models: Vec<String> = offline.models().map(|m| m.to_string()).collect();
+        for m in &models {
+            let prior = offline.ecdf(m).unwrap();
+            let xs: Vec<u32> = (0..60).map(|i| i * 20).collect();
+            prop_assert!(
+                online.posterior(m).curve(&xs) == prior.curve(&xs)
+                    && online.posterior(m).len() == prior.len(),
+                "posterior != prior for {m} before any observation"
+            );
+            // And sampling consumes the same stream as the offline path.
+            let mut r1 = Rng::new(9);
+            let mut r2 = Rng::new(9);
+            for _ in 0..32 {
+                let a = online.sample_total(m, 20, 512, 4096, 0, &mut r1);
+                let b = offline.sample(m, 20, 512, 4096, &mut r2);
+                prop_assert!(a == b, "zero-observation sample diverged: {a} vs {b}");
+            }
+        }
+        // One observation with positive weight must change the posterior.
+        let m = &models[0];
+        online.record(m, 5000);
+        if weight >= 0.5 {
+            prop_assert!(
+                online.posterior(m).len() > offline.ecdf(m).unwrap().len(),
+                "observation ignored at weight {weight}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn planner_stages_always_valid() {
     let cluster = ClusterSpec::a100_node(8);
     let cost = CostModel::calibrated(&cluster, 5);
@@ -195,7 +280,10 @@ fn planner_stages_always_valid() {
             let n = rng.range_usize(20, 150);
             workloads.push(
                 (0..n as u64)
-                    .map(|id| AppRequest::simple(id, rng.range_u64(5, 127) as u32, rng.range_u64(5, 256) as u32))
+                    .map(|id| {
+                        let input = rng.range_u64(5, 127) as u32;
+                        AppRequest::simple(id, input, rng.range_u64(5, 256) as u32)
+                    })
                     .collect::<Vec<_>>(),
             );
         }
