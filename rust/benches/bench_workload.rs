@@ -1,0 +1,163 @@
+//! Multi-app workload benchmarks: joint planning of N concurrent apps on
+//! one cluster vs running the same apps sequentially (each with the whole
+//! cluster to itself), on a 2-app and a 4-app workload — the §5.4
+//! "mixed application" argument generalised to the workload layer — plus
+//! a staggered-arrival scenario exercising the arrival→forced-replan
+//! path. Writes `BENCH_workload.json`; `--smoke` shrinks workloads and
+//! sample counts to CI size.
+
+use samullm::cluster::ClusterSpec;
+use samullm::harness::staggered_pair_workload;
+use samullm::metrics::RunReport;
+use samullm::runner::{run_policy, run_workload, RunOpts, WorkloadScenario};
+use samullm::spec::{AppSpec, WorkloadEntry, WorkloadSpec};
+use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
+
+const SEED: u64 = 42;
+
+fn opts() -> RunOpts {
+    RunOpts { seed: SEED, ..RunOpts::default() }
+}
+
+/// Joint: the composed workload, planned and executed as one run.
+/// Sequential: each entry's scenario run on its own (whole cluster,
+/// same per-entry seeds), inference times summed — the "run the apps one
+/// after another" baseline the paper's §5.4 compares against.
+fn joint_vs_sequential(
+    label: &str,
+    wl: &WorkloadSpec,
+    cluster: &ClusterSpec,
+    g: &mut BenchGroup,
+) -> Json {
+    let ws: WorkloadScenario = wl.build(SEED).expect("bench workloads are valid");
+    let mut joint: Option<RunReport> = None;
+    let joint_wall = g
+        .bench(&format!("{label}/joint"), || {
+            joint = Some(run_workload("ours", &ws, cluster, &opts()));
+        })
+        .median;
+    let scenarios: Vec<_> = wl
+        .entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| e.app.build(wl.entry_seed(i, SEED)).expect("valid entry"))
+        .collect();
+    let mut sequential: Vec<RunReport> = vec![];
+    let seq_wall = g
+        .bench(&format!("{label}/sequential"), || {
+            sequential = scenarios
+                .iter()
+                .map(|s| run_policy("ours", s, cluster, &opts()))
+                .collect();
+        })
+        .median;
+
+    let joint = joint.expect("bench ran at least one sample");
+    let seq_inference: f64 = sequential.iter().map(|r| r.inference_time).sum();
+    let seq_e2e: f64 = sequential.iter().map(|r| r.end_to_end_time).sum();
+    println!(
+        "{label}: joint {:.1}s vs sequential {:.1}s ({:.2}x)",
+        joint.inference_time,
+        seq_inference,
+        seq_inference / joint.inference_time.max(1e-12)
+    );
+    let per_app: Vec<Json> = joint
+        .workload
+        .as_ref()
+        .expect("workload runs carry per-app stats")
+        .per_app
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("name", Json::Str(a.name.clone())),
+                ("makespan_s", Json::Num(a.makespan)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("n_apps", Json::Num(wl.entries.len() as f64)),
+        ("joint_inference_s", Json::Num(joint.inference_time)),
+        ("joint_e2e_s", Json::Num(joint.end_to_end_time)),
+        ("sequential_inference_s", Json::Num(seq_inference)),
+        ("sequential_e2e_s", Json::Num(seq_e2e)),
+        (
+            "joint_speedup",
+            Json::Num(seq_inference / joint.inference_time.max(1e-12)),
+        ),
+        (
+            "joint_faster",
+            Json::Bool(joint.inference_time < seq_inference),
+        ),
+        ("per_app", Json::Arr(per_app)),
+        ("joint_wall_s", Json::Num(joint_wall)),
+        ("sequential_wall_s", Json::Num(seq_wall)),
+    ])
+}
+
+fn staggered_bench(smoke: bool, cluster: &ClusterSpec, g: &mut BenchGroup) -> Json {
+    let (docs, ens, arrival) = if smoke { (8, 80, 50.0) } else { (30, 400, 120.0) };
+    let ws = staggered_pair_workload(docs, ens, arrival)
+        .build(SEED)
+        .expect("valid workload");
+    let mut report: Option<RunReport> = None;
+    let wall = g
+        .bench("staggered/joint_with_arrival", || {
+            report = Some(run_workload("ours", &ws, cluster, &opts()));
+        })
+        .median;
+    let report = report.expect("bench ran at least one sample");
+    let w = report.workload.as_ref().expect("per-app stats");
+    let late = &w.per_app[1];
+    println!(
+        "staggered: arrival={arrival:.0}s replans={} late-app stretch {:.1}s, total {:.1}s",
+        w.arrival_replans, late.makespan, report.inference_time
+    );
+    Json::obj(vec![
+        ("arrival_s", Json::Num(arrival)),
+        ("arrivals", Json::Num(w.arrivals as f64)),
+        ("arrival_replans", Json::Num(w.arrival_replans as f64)),
+        ("late_app_stretch_s", Json::Num(late.makespan)),
+        ("early_app_makespan_s", Json::Num(w.per_app[0].makespan)),
+        ("joint_inference_s", Json::Num(report.inference_time)),
+        ("wall_s", Json::Num(wall)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cluster = ClusterSpec::a100_node(8);
+    let mut g = BenchGroup::new("workload");
+    g.sample_size(if smoke { 3 } else { 5 });
+
+    let (docs, ens) = if smoke { (8, 100) } else { (30, 500) };
+    let two_app = staggered_pair_workload(docs, ens, 0.0);
+    let two = joint_vs_sequential("two_app", &two_app, &cluster, &mut g);
+
+    let (d4, e4) = if smoke { (5, 60) } else { (15, 250) };
+    let four_app = WorkloadSpec {
+        name: "four-app".into(),
+        entries: vec![
+            WorkloadEntry::new(AppSpec::chain_summary(d4, 2, 300)),
+            WorkloadEntry::new(AppSpec::ensembling(e4, 128)),
+            WorkloadEntry::new(AppSpec::chain_summary(d4, 1, 200)),
+            WorkloadEntry::new(AppSpec::ensembling(e4, 96)),
+        ],
+    };
+    let four = joint_vs_sequential("four_app", &four_app, &cluster, &mut g);
+
+    let staggered = staggered_bench(smoke, &cluster, &mut g);
+    g.finish();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("workload".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("two_app", two),
+        ("four_app", four),
+        ("staggered", staggered),
+    ])
+    .to_string();
+    std::fs::write("BENCH_workload.json", format!("{doc}\n"))
+        .expect("write BENCH_workload.json");
+    println!("wrote BENCH_workload.json");
+}

@@ -2,38 +2,60 @@
 //! computation graph (the paper shows whole-app scheduling beats running
 //! the two apps sequentially).
 
+use crate::runner::workload::compose_scenarios;
 use crate::runner::Scenario;
 
-use super::{chain_summary, ensembling};
+/// Seed salt the ensembling half of the mixture is built with
+/// (`seed ^ ENSEMBLE_SEED_SALT`), so a 2-entry
+/// [`crate::spec::workload::WorkloadSpec`] with explicit per-app seeds
+/// can reproduce the legacy `AppSpec::Mixed` workload bit-for-bit.
+pub const ENSEMBLE_SEED_SALT: u64 = 0x4D49_58;
 
-/// Merge two scenarios into one graph (disjoint union, node ids offset).
+/// Merge two scenarios into one graph — the 2-app special case of the
+/// generic workload composition
+/// ([`crate::runner::workload::compose_scenarios`]): disjoint union, node
+/// ids offset, dependency ids remapped, per-app provenance stamped.
 pub fn merge(a: Scenario, b: Scenario, name: &str) -> Scenario {
-    let mut graph = a.graph.clone();
-    let offset = graph.n_nodes();
-    for n in &b.graph.nodes {
-        graph.add_node(&n.model, &n.label, n.max_out);
+    compose_scenarios(&[&a, &b], name)
+}
+
+/// The `AppSpec::Mixed` compat path as a declarative 2-entry workload:
+/// chain summary seeded with the session seed, ensembling seeded with
+/// `seed ^ ENSEMBLE_SEED_SALT`, both arriving at t = 0 — exactly the
+/// workload [`build`] composes.
+pub fn workload_spec(
+    n_docs: usize,
+    n_ens: usize,
+    summary_max_out: u32,
+    ensemble_max_out: u32,
+    eval_times: u32,
+    seed: u64,
+) -> crate::spec::WorkloadSpec {
+    use crate::spec::{AppSpec, WorkloadEntry, WorkloadSpec};
+    WorkloadSpec {
+        name: format!("mixed-{n_docs}docs-{n_ens}ens"),
+        entries: vec![
+            WorkloadEntry {
+                app: AppSpec::chain_summary(n_docs, eval_times, summary_max_out),
+                arrival: 0.0,
+                weight: 1.0,
+                seed: Some(seed),
+            },
+            WorkloadEntry {
+                app: AppSpec::ensembling(n_ens, ensemble_max_out),
+                arrival: 0.0,
+                weight: 1.0,
+                seed: Some(seed ^ ENSEMBLE_SEED_SALT),
+            },
+        ],
     }
-    for &(f, t) in &b.graph.edges {
-        graph.add_edge(f + offset, t + offset);
-    }
-    let mut workloads = a.workloads;
-    for w in b.workloads {
-        workloads.push(
-            w.into_iter()
-                .map(|mut r| {
-                    if let Some((n, id)) = r.dep {
-                        r.dep = Some((n + offset, id));
-                    }
-                    r
-                })
-                .collect(),
-        );
-    }
-    Scenario { name: name.to_string(), graph, workloads }
 }
 
 /// Build the §5.4 mixture: `n_docs` chain-summary documents (4 evals,
 /// max_out 900 in the paper) + `n_ens` ensembling requests (max_out 256).
+/// A compat alias over the generic workload layer: builds the 2-entry
+/// [`workload_spec`] and returns its composed scenario — bit-identical to
+/// the seed's hand-merged graph for every seed.
 pub fn build(
     n_docs: usize,
     n_ens: usize,
@@ -42,9 +64,10 @@ pub fn build(
     eval_times: u32,
     seed: u64,
 ) -> Scenario {
-    let cs = chain_summary::build(n_docs, eval_times, summary_max_out, seed);
-    let en = ensembling::build(n_ens, ensemble_max_out, seed ^ 0x4D49_58);
-    merge(cs, en, &format!("mixed-{n_docs}docs-{n_ens}ens"))
+    workload_spec(n_docs, n_ens, summary_max_out, ensemble_max_out, eval_times, seed)
+        .build(seed)
+        .expect("the mixed compat workload is always valid")
+        .scenario
 }
 
 #[cfg(test)]
@@ -58,6 +81,10 @@ mod tests {
         assert_eq!(s.graph.n_nodes(), 11);
         assert_eq!(s.graph.edges.len(), 1);
         assert_eq!(s.workloads.len(), 11);
+        // Generic composition stamps per-app provenance on the merge.
+        assert!(s.graph.nodes[..2].iter().all(|n| n.app == 0));
+        assert!(s.graph.nodes[2..].iter().all(|n| n.app == 1));
+        assert_eq!(s.graph.nodes[2].local_id, 0);
     }
 
     #[test]

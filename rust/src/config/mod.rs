@@ -12,14 +12,19 @@ use anyhow::{anyhow, Result};
 use crate::costmodel::online;
 use crate::exec;
 use crate::policy;
-use crate::spec::AppSpec;
+use crate::spec::{AppSpec, WorkloadSpec};
 use crate::util::json::Json;
 
-/// A complete, replayable experiment description.
+/// A complete, replayable experiment description. Exactly one of `app`
+/// (a single application) or `workload` (a multi-app workload with
+/// per-entry arrivals/weights/seeds) is set.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    /// What to run: one of the paper's apps or a custom graph.
-    pub app: AppSpec,
+    /// Single-app run: one of the paper's apps or a custom graph
+    /// (`None` when `workload` is set).
+    pub app: Option<AppSpec>,
+    /// Multi-app run: a declarative workload (`None` when `app` is set).
+    pub workload: Option<WorkloadSpec>,
     /// Canonical policy name (aliases accepted on parse).
     pub policy: String,
     /// Canonical execution backend name (`"sim"` or `"pjrt"`; aliases
@@ -55,7 +60,20 @@ impl ExperimentConfig {
     /// Serialize to a compact JSON document.
     pub fn to_json(&self) -> String {
         Json::obj(vec![
-            ("app", self.app.to_json()),
+            (
+                "app",
+                match &self.app {
+                    Some(app) => app.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "workload",
+                match &self.workload {
+                    Some(w) => w.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("policy", Json::Str(self.policy.clone())),
             ("backend", Json::Str(self.backend.clone())),
             (
@@ -79,10 +97,29 @@ impl ExperimentConfig {
     }
 
     /// Parse a config document; missing switches keep the seed defaults.
+    /// Exactly one of `app` / `workload` must be present (the workload
+    /// value may be a `{"name", "entries"}` object or a bare entry
+    /// array).
     pub fn from_json(s: &str) -> Result<Self> {
         let v = Json::parse(s).map_err(|e| anyhow!("bad config json: {e}"))?;
+        let app = match v.get("app") {
+            Some(Json::Null) | None => None,
+            Some(a) => Some(AppSpec::from_json(a)?),
+        };
+        let workload = match v.get("workload") {
+            Some(Json::Null) | None => None,
+            Some(w) => Some(WorkloadSpec::from_json(w)?),
+        };
+        match (&app, &workload) {
+            (None, None) => return Err(anyhow!("config needs an app or a workload")),
+            (Some(_), Some(_)) => {
+                return Err(anyhow!("config must set app or workload, not both"))
+            }
+            _ => {}
+        }
         Ok(ExperimentConfig {
-            app: AppSpec::from_json(v.get("app").ok_or_else(|| anyhow!("app missing"))?)?,
+            app,
+            workload,
             policy: policy::canonical(
                 v.get("policy").and_then(|p| p.as_str()).unwrap_or("samullm"),
             )?
@@ -127,7 +164,8 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let c = ExperimentConfig {
-            app: AppSpec::ensembling(1000, 256),
+            app: Some(AppSpec::ensembling(1000, 256)),
+            workload: None,
             policy: "ours".to_string(),
             backend: "pjrt".to_string(),
             artifacts: Some("custom/artifacts".to_string()),
@@ -203,7 +241,8 @@ mod tests {
             AppSpec::mixed(400, 5000, 900, 256, 4),
         ] {
             let c = ExperimentConfig {
-                app: app.clone(),
+                app: Some(app.clone()),
+                workload: None,
                 policy: "min-heuristic".to_string(),
                 backend: "sim".to_string(),
                 artifacts: None,
@@ -218,7 +257,7 @@ mod tests {
                 online_weight: online::DEFAULT_OBS_WEIGHT,
             };
             let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
-            assert_eq!(back.app, app);
+            assert_eq!(back.app, Some(app));
             assert!(back.no_preemption && back.known_output_lengths);
         }
     }
@@ -231,5 +270,56 @@ mod tests {
             ExperimentConfig::from_json(r#"{"app":{"kind":"ensembling"},"policy":"fifo"}"#)
                 .is_err()
         );
+        // Neither app nor workload, or both at once, is an error.
+        assert!(ExperimentConfig::from_json(r#"{"policy":"ours"}"#).is_err());
+        let both = r#"{"app":{"kind":"ensembling"},
+                       "workload":[{"app":{"kind":"ensembling"}}]}"#;
+        assert!(ExperimentConfig::from_json(both).is_err());
+    }
+
+    #[test]
+    fn workload_config_roundtrips_and_replaces_app() {
+        use crate::spec::WorkloadEntry;
+        let c = ExperimentConfig {
+            app: None,
+            workload: Some(WorkloadSpec {
+                name: "pair".into(),
+                entries: vec![
+                    WorkloadEntry::new(AppSpec::chain_summary(50, 2, 300)),
+                    WorkloadEntry {
+                        app: AppSpec::ensembling(500, 256),
+                        arrival: 30.0,
+                        weight: 2.0,
+                        seed: Some(7),
+                    },
+                ],
+            }),
+            policy: "ours".to_string(),
+            backend: "sim".to_string(),
+            artifacts: None,
+            n_gpus: 8,
+            seed: 42,
+            no_preemption: false,
+            known_output_lengths: false,
+            threads: 0,
+            sim_cache: true,
+            online_refinement: false,
+            replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
+            online_weight: online::DEFAULT_OBS_WEIGHT,
+        };
+        let text = c.to_json();
+        let back = ExperimentConfig::from_json(&text).unwrap();
+        assert!(back.app.is_none());
+        assert_eq!(back.workload, c.workload);
+        assert_eq!(back.to_json(), text, "serialisation is stable");
+        // The bare-array shorthand parses too.
+        let j = r#"{"workload":[{"app":{"kind":"ensembling"}},
+                                {"app":{"kind":"chain_summary"},"arrival":60}],
+                    "policy":"min"}"#;
+        let cfg = ExperimentConfig::from_json(j).unwrap();
+        let wl = cfg.workload.unwrap();
+        assert_eq!(wl.entries.len(), 2);
+        assert_eq!(wl.entries[1].arrival, 60.0);
+        assert_eq!(cfg.policy, "min-heuristic");
     }
 }

@@ -18,6 +18,15 @@ pub struct AppNode {
     pub label: String,
     /// Output-length limit applied to this node's requests.
     pub max_out: u32,
+    /// Workload provenance: which application instance of a composed
+    /// multi-app graph this node belongs to (`0` for single-app graphs).
+    /// Two nodes running the same LLM for two different apps keep two
+    /// distinct `(app, local_id)` identities — placement owners are node
+    /// ids, so they stay two model instances.
+    pub app: usize,
+    /// Workload provenance: the node's id inside its app's own graph
+    /// (`== id` for single-app graphs).
+    pub local_id: usize,
 }
 
 /// A multi-LLM application graph (acyclic after self-loop fusion).
@@ -31,7 +40,9 @@ pub struct AppGraph {
 }
 
 impl AppGraph {
-    /// Append an LLM node; returns its id.
+    /// Append an LLM node; returns its id. Provenance defaults to app 0 /
+    /// `local_id == id` (a single-app graph); [`AppGraph::compose`]
+    /// rewrites it for multi-app compositions.
     pub fn add_node(&mut self, model: &str, label: &str, max_out: u32) -> usize {
         let id = self.nodes.len();
         self.nodes.push(AppNode {
@@ -39,8 +50,48 @@ impl AppGraph {
             model: model.to_string(),
             label: label.to_string(),
             max_out,
+            app: 0,
+            local_id: id,
         });
         id
+    }
+
+    /// Disjoint union of `parts` into one multi-app graph: part `i`'s
+    /// nodes are appended in order with provenance `(app = i, local_id =
+    /// their id inside part i)` and its edges are offset accordingly. The
+    /// same LLM appearing in two parts yields two distinct nodes (hence
+    /// two model instances at placement time). Node/edge order is exactly
+    /// "all of part 0, then part 1, …", which keeps the legacy
+    /// [`crate::apps::mixed::merge`] composition bit-identical.
+    ///
+    /// Composing already-composed graphs flattens provenance: every node
+    /// of part `i` is re-stamped `app = i` regardless of its prior `app`.
+    pub fn compose(parts: &[&AppGraph]) -> AppGraph {
+        let mut g = AppGraph::default();
+        for (app_id, part) in parts.iter().enumerate() {
+            let offset = g.nodes.len();
+            for n in &part.nodes {
+                let id = g.add_node(&n.model, &n.label, n.max_out);
+                g.nodes[id].app = app_id;
+                g.nodes[id].local_id = n.id;
+            }
+            for &(f, t) in &part.edges {
+                g.add_edge(f + offset, t + offset);
+            }
+        }
+        g
+    }
+
+    /// Global node ids belonging to each app of a composed graph,
+    /// grouped by `app` (index = app id). Single-app graphs return one
+    /// group holding every node.
+    pub fn nodes_by_app(&self) -> Vec<Vec<usize>> {
+        let n_apps = self.nodes.iter().map(|n| n.app + 1).max().unwrap_or(0);
+        let mut out = vec![vec![]; n_apps];
+        for n in &self.nodes {
+            out[n.app].push(n.id);
+        }
+        out
     }
 
     /// Add a data-flow edge `from -> to`. Panics on out-of-range ids or
@@ -188,5 +239,43 @@ mod tests {
         let mut g = AppGraph::default();
         let n = g.add_node("alpaca-13b", "x", 256);
         g.add_edge(n, n);
+    }
+
+    #[test]
+    fn compose_offsets_nodes_edges_and_stamps_provenance() {
+        let a = diamond();
+        let mut b = AppGraph::default();
+        b.add_node("alpaca-13b", "solo0", 128);
+        b.add_node("alpaca-13b", "solo1", 128);
+        b.add_edge(0, 1);
+        let g = AppGraph::compose(&[&a, &b]);
+        assert_eq!(g.n_nodes(), 6);
+        assert_eq!(g.edges.len(), a.edges.len() + 1);
+        // Part order is preserved: a's edges first, then b's offset by 4.
+        assert_eq!(&g.edges[..a.edges.len()], &a.edges[..]);
+        assert_eq!(g.edges[a.edges.len()], (4, 5));
+        assert!(g.is_acyclic());
+        // Provenance round-trips: (app, local_id) recovers the part node.
+        for n in &g.nodes {
+            let part = if n.app == 0 { &a } else { &b };
+            let local = &part.nodes[n.local_id];
+            assert_eq!(n.model, local.model);
+            assert_eq!(n.label, local.label);
+            assert_eq!(n.max_out, local.max_out);
+        }
+        assert_eq!(g.nodes_by_app(), vec![vec![0, 1, 2, 3], vec![4, 5]]);
+        // The same LLM in both parts stays two instances (distinct ids).
+        assert_ne!(g.nodes[1].id, g.nodes[4].id);
+    }
+
+    #[test]
+    fn single_app_graphs_default_provenance() {
+        let g = diamond();
+        for n in &g.nodes {
+            assert_eq!(n.app, 0);
+            assert_eq!(n.local_id, n.id);
+        }
+        assert_eq!(g.nodes_by_app().len(), 1);
+        assert!(AppGraph::default().nodes_by_app().is_empty());
     }
 }

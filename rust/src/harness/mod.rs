@@ -94,6 +94,32 @@ pub fn shifted_length_scenario(n_requests: usize, seed: u64) -> Scenario {
     Scenario { name: format!("shifted-lengths-{n_requests}"), graph, workloads }
 }
 
+/// The §5.4-style heterogeneous pair as a declarative workload: a
+/// chain-summary app present at t = 0 plus an ensembling app arriving
+/// `arrival` seconds in (0 = both up front). Shared by
+/// `benches/bench_workload.rs` and `tests/integration_workload.rs`, so
+/// the CI guard and the published `BENCH_workload.json` numbers measure
+/// the exact same mixture.
+pub fn staggered_pair_workload(
+    n_docs: usize,
+    n_ens: usize,
+    arrival: f64,
+) -> crate::spec::WorkloadSpec {
+    use crate::spec::{WorkloadEntry, WorkloadSpec};
+    WorkloadSpec {
+        name: format!("pair-{n_docs}docs-{n_ens}ens-arr{arrival:.0}"),
+        entries: vec![
+            WorkloadEntry::new(AppSpec::chain_summary(n_docs, 2, 300)),
+            WorkloadEntry {
+                app: AppSpec::ensembling(n_ens, 128),
+                arrival,
+                weight: 1.0,
+                seed: None,
+            },
+        ],
+    }
+}
+
 /// Scenario construction goes through the declarative spec layer only.
 fn scenario(spec: AppSpec, seed: u64) -> Scenario {
     spec.build(seed).expect("harness specs are valid")

@@ -16,7 +16,12 @@
 //!   (cluster, policy, seed), then run declarative scenarios.
 //! * [`spec`] — declarative [`spec::AppSpec`] scenario descriptions (the
 //!   paper's four applications plus arbitrary custom graphs), JSON
-//!   round-trippable, materialised by the app-builder registry.
+//!   round-trippable, materialised by the app-builder registry; and the
+//!   multi-app workload layer ([`spec::WorkloadSpec`]): N application
+//!   instances with per-app arrivals/weights/seeds composed into one
+//!   jointly planned run ([`session::SamuLlm::run_workload`], CLI
+//!   `samullm workload`) — apps arriving mid-run enter through the
+//!   drift/replan path and the report gains per-app makespans.
 //! * [`policy`] — the pluggable [`policy::Policy`] trait and the builtin
 //!   implementations (`ours`, `max-heuristic`, `min-heuristic`,
 //!   `round-robin`) behind a string registry.
@@ -106,7 +111,7 @@ pub mod prelude {
     pub use crate::policy::{self, Policy};
     pub use crate::runner::{self, Scenario};
     pub use crate::session::SamuLlm;
-    pub use crate::spec::AppSpec;
+    pub use crate::spec::{AppSpec, WorkloadEntry, WorkloadSpec};
     pub use crate::util::rng::Rng;
     pub use crate::workload::Request;
 }

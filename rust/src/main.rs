@@ -25,14 +25,16 @@ use samullm::config::ExperimentConfig;
 use samullm::metrics::gantt;
 use samullm::policy;
 use samullm::session::SamuLlm;
-use samullm::spec::{self, AppParams};
+use samullm::spec::{self, AppParams, WorkloadEntry, WorkloadSpec};
 
 /// Tiny flag parser: `--key value` and boolean `--key`. A token after a
 /// flag counts as its value unless it is itself a flag; numeric tokens
-/// (including negative ones like `-5`) are always values.
+/// (including negative ones like `-5`) are always values. A repeated
+/// flag accumulates every value ([`Args::get_all`], for `workload`'s
+/// `--app a --app b`); single-value accessors read the last occurrence.
 struct Args {
     positional: Vec<String>,
-    flags: std::collections::HashMap<String, String>,
+    flags: std::collections::HashMap<String, Vec<String>>,
 }
 
 /// A token starts a flag iff it is `--` followed by a non-numeric name.
@@ -49,7 +51,8 @@ fn is_flag_token(tok: &str) -> bool {
 impl Args {
     fn parse(argv: &[String]) -> Args {
         let mut positional = vec![];
-        let mut flags = std::collections::HashMap::new();
+        let mut flags: std::collections::HashMap<String, Vec<String>> =
+            std::collections::HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -57,10 +60,10 @@ impl Args {
                 let key = a.trim_start_matches("--");
                 let next_is_value = argv.get(i + 1).map(|n| !is_flag_token(n)).unwrap_or(false);
                 if next_is_value {
-                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    flags.entry(key.to_string()).or_default().push(argv[i + 1].clone());
                     i += 2;
                 } else {
-                    flags.insert(key.to_string(), "true".to_string());
+                    flags.entry(key.to_string()).or_default().push("true".to_string());
                     i += 1;
                 }
             } else {
@@ -71,6 +74,11 @@ impl Args {
         Args { positional, flags }
     }
 
+    /// The last value given for `--key`, if any.
+    fn last(&self, key: &str) -> Option<&String> {
+        self.flags.get(key).and_then(|vs| vs.last())
+    }
+
     /// Parse `--key`'s value, falling back to `default` only when the
     /// flag is absent. An unparsable value is an error, never a silent
     /// default (`--n-requests 10k` used to quietly run 1000).
@@ -78,7 +86,7 @@ impl Args {
     where
         T::Err: std::fmt::Display,
     {
-        match self.flags.get(key) {
+        match self.last(key) {
             None => Ok(default),
             Some(v) => {
                 v.parse().map_err(|e| anyhow!("invalid value {v:?} for --{key}: {e}"))
@@ -91,7 +99,7 @@ impl Args {
     where
         T::Err: std::fmt::Display,
     {
-        match self.flags.get(key) {
+        match self.last(key) {
             None => Ok(None),
             Some(v) => v
                 .parse()
@@ -101,7 +109,12 @@ impl Args {
     }
 
     fn get_str(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+        self.last(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Every value given for a repeated `--key`, in order.
+    fn get_all(&self, key: &str) -> Vec<&String> {
+        self.flags.get(key).map(|vs| vs.iter().collect()).unwrap_or_default()
     }
 
     fn has(&self, key: &str) -> bool {
@@ -172,11 +185,70 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(w) = args.get_opt("online-weight")? {
         builder = builder.online_weight(w);
     }
-    if let Some(dir) = args.flags.get("artifacts") {
+    if let Some(dir) = args.last("artifacts") {
         builder = builder.artifacts_dir(dir.clone());
     }
     let session = builder.build()?;
     let report = session.run(&app_spec)?;
+    println!("{}", report.to_json());
+    if args.has("gantt") {
+        println!("{}", gantt::render(&report, 80));
+    }
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    args.expect_flags(&[
+        "app",
+        "name",
+        "policy",
+        "backend",
+        "artifacts",
+        "gpus",
+        "seed",
+        "no-preemption",
+        "threads",
+        "no-sim-cache",
+        "online-refinement",
+        "replan-threshold",
+        "online-weight",
+        "gantt",
+    ])?;
+    let descriptors = args.get_all("app");
+    if descriptors.is_empty() {
+        return Err(anyhow!(
+            "workload needs at least one --app descriptor, e.g. \
+             --app ensembling:n-requests=2000 --app chain-summary:n-docs=100:arrival=30"
+        ));
+    }
+    let entries = descriptors
+        .iter()
+        .map(|d| WorkloadEntry::parse_cli(d.as_str()))
+        .collect::<Result<Vec<_>>>()?;
+    let workload = WorkloadSpec {
+        name: args.get_str("name", ""),
+        entries,
+    };
+    let mut builder = SamuLlm::builder()
+        .gpus(args.get("gpus", 8)?)
+        .policy(&args.get_str("policy", "ours"))
+        .backend(&args.get_str("backend", "sim"))
+        .seed(args.get("seed", 42)?)
+        .no_preemption(args.has("no-preemption"))
+        .threads(args.get("threads", 0)?)
+        .sim_cache(!args.has("no-sim-cache"))
+        .online_refinement(args.has("online-refinement"));
+    if let Some(t) = args.get_opt("replan-threshold")? {
+        builder = builder.replan_threshold(t);
+    }
+    if let Some(w) = args.get_opt("online-weight")? {
+        builder = builder.online_weight(w);
+    }
+    if let Some(dir) = args.last("artifacts") {
+        builder = builder.artifacts_dir(dir.clone());
+    }
+    let session = builder.build()?;
+    let report = session.run_workload(&workload)?;
     println!("{}", report.to_json());
     if args.has("gantt") {
         println!("{}", gantt::render(&report, 80));
@@ -202,7 +274,12 @@ fn cmd_config(path: &str) -> Result<()> {
         builder = builder.artifacts_dir(dir.clone());
     }
     let session = builder.build()?;
-    let report = session.run(&cfg.app)?;
+    let report = match (&cfg.app, &cfg.workload) {
+        (Some(app), None) => session.run(app)?,
+        (None, Some(workload)) => session.run_workload(workload)?,
+        // from_json enforces exactly-one; unreachable for parsed configs.
+        _ => return Err(anyhow!("config needs exactly one of app/workload")),
+    };
     println!("{}", report.to_json());
     Ok(())
 }
@@ -252,7 +329,7 @@ fn usage() -> String {
         .map(|b| format!("    {:<14} {}", b.name, b.about))
         .collect();
     format!(
-        "usage: samullm <run|config|serve> [flags]\n\
+        "usage: samullm <run|workload|config|serve> [flags]\n\
          \n  samullm run    [--app A] [--policy P] [--backend B] [--n-requests N]\n\
          \x20                [--max-out M] [--n-docs D] [--eval-times E] [--gpus G]\n\
          \x20                [--seed S] [--no-preemption] [--known-lengths] [--gantt]\n\
@@ -260,7 +337,15 @@ fn usage() -> String {
          \x20                [--online-refinement] [--replan-threshold X] [--online-weight W]\n\
          \x20                                  (runtime length-feedback loop, default off)\n\
          \x20                [--artifacts DIR]                (pjrt backend artifacts)\n\
-         \x20 samullm config <file.json>   (supports custom graph specs, kind=custom)\n\
+         \x20 samullm workload --app NAME[:key=value]... [--app ...] [--name N]\n\
+         \x20                [--policy P] [--gpus G] [--seed S] [--gantt] [...run flags]\n\
+         \x20                  N concurrent apps jointly planned on one cluster; per-app\n\
+         \x20                  keys: the app's own knobs + arrival=T, seed=S, and weight=W\n\
+         \x20                  (recorded in the per-app report; not yet a scheduling\n\
+         \x20                  priority), e.g. --app ensembling:n-requests=2000 \\\n\
+         \x20                       --app chain-summary:n-docs=100:arrival=30\n\
+         \x20 samullm config <file.json>   (custom graphs via kind=custom; multi-app\n\
+         \x20                               workloads via a top-level workload: [...])\n\
          \x20 samullm serve  [--n-requests N] [--prompt-len L] [--max-new T] [--artifacts DIR]\n\
          \napps:\n{}\npolicies:\n{}\nbackends:\n{}",
         apps.join("\n"),
@@ -275,6 +360,7 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv[1.min(argv.len())..]);
     match cmd {
         "run" => cmd_run(&args),
+        "workload" => cmd_workload(&args),
         "config" => {
             let path = args
                 .positional
@@ -316,8 +402,19 @@ mod tests {
         // Numeric-looking double-dash tokens are consumed as values (and
         // later fail strict parsing) rather than becoming bogus flags.
         let b = parse(&["--delta", "--3.5"]);
-        assert_eq!(b.flags.get("delta").map(|s| s.as_str()), Some("--3.5"));
+        assert_eq!(b.last("delta").map(|s| s.as_str()), Some("--3.5"));
         assert!(b.get::<f64>("delta", 0.0).is_err());
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_and_last_wins_for_scalars() {
+        let a = parse(&["--app", "ensembling:arrival=0", "--app", "chain-summary:arrival=30"]);
+        let all: Vec<&str> = a.get_all("app").into_iter().map(|s| s.as_str()).collect();
+        assert_eq!(all, vec!["ensembling:arrival=0", "chain-summary:arrival=30"]);
+        // Scalar accessors read the last occurrence (unchanged behavior).
+        let b = parse(&["--seed", "1", "--seed", "2"]);
+        assert_eq!(b.get::<u64>("seed", 0).unwrap(), 2);
+        assert!(parse(&[]).get_all("app").is_empty());
     }
 
     #[test]

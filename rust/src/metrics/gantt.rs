@@ -4,6 +4,8 @@ use super::RunReport;
 
 /// Render a run's schedule as an ASCII Gantt chart: one row per node,
 /// columns are time buckets, cell digits are the GPU count the node held.
+/// Multi-app workload runs label each lane with the owning app
+/// (`a<app> n<node>`) and append a per-app arrival/makespan footer.
 pub fn render(report: &RunReport, width: usize) -> String {
     let total = report.inference_time.max(1e-9);
     let mut nodes: Vec<usize> = report
@@ -13,6 +15,15 @@ pub fn render(report: &RunReport, width: usize) -> String {
         .collect();
     nodes.sort_unstable();
     nodes.dedup();
+    let app_of = |node: usize| -> Option<usize> {
+        report
+            .workload
+            .as_ref()?
+            .per_app
+            .iter()
+            .find(|a| a.nodes.contains(&node))
+            .map(|a| a.app_id)
+    };
 
     let mut out = String::new();
     out.push_str(&format!(
@@ -40,10 +51,27 @@ pub fn render(report: &RunReport, width: usize) -> String {
                 }
             }
         }
-        out.push_str(&format!("node {node:>3} |{}|\n", String::from_utf8_lossy(&row)));
+        let label = match app_of(node) {
+            Some(app) => format!("a{app} n{node:>3}"),
+            None => format!("node {node:>3}"),
+        };
+        out.push_str(&format!("{label:>8} |{}|\n", String::from_utf8_lossy(&row)));
     }
     let marks = (0..=4).map(|i| format!("{:.0}s", total * i as f64 / 4.0)).collect::<Vec<_>>();
     out.push_str(&format!("          {}\n", marks.join(" … ")));
+    if let Some(w) = &report.workload {
+        out.push_str(&format!(
+            "workload: arrivals={} arrival-replans={}\n",
+            w.arrivals, w.arrival_replans
+        ));
+        for a in &w.per_app {
+            out.push_str(&format!(
+                "  app {} {:<28} arrival={:>7.1}s finish={:>8.1}s makespan={:>8.1}s \
+                 weight={:.1} reqs={}\n",
+                a.app_id, a.name, a.arrival, a.finish, a.makespan, a.weight, a.n_requests
+            ));
+        }
+    }
     out
 }
 
@@ -88,6 +116,7 @@ mod tests {
             ],
             measured: None,
             online: None,
+            workload: None,
             n_gpus: 8,
         };
         let g = render(&report, 40);
@@ -113,5 +142,42 @@ mod tests {
             g.contains("online feedback: replans=1 max-drift=0.62 est 110.0s -> 98.5s"),
             "{g}"
         );
+
+        // Workload runs label lanes by app and append the per-app footer.
+        let mut with_workload = with_online;
+        with_workload.workload = Some(crate::metrics::WorkloadReport {
+            arrivals: 1,
+            arrival_replans: 1,
+            per_app: vec![
+                crate::metrics::AppReport {
+                    app_id: 0,
+                    name: "chain".into(),
+                    arrival: 0.0,
+                    weight: 1.0,
+                    nodes: vec![0],
+                    n_requests: 10,
+                    completed: 10,
+                    finish: 50.0,
+                    makespan: 50.0,
+                },
+                crate::metrics::AppReport {
+                    app_id: 1,
+                    name: "ens".into(),
+                    arrival: 25.0,
+                    weight: 1.0,
+                    nodes: vec![1],
+                    n_requests: 20,
+                    completed: 20,
+                    finish: 100.0,
+                    makespan: 75.0,
+                },
+            ],
+        });
+        let g = render(&with_workload, 40);
+        assert!(g.contains("a0 n  0"), "{g}");
+        assert!(g.contains("a1 n  1"), "{g}");
+        assert!(g.contains("workload: arrivals=1 arrival-replans=1"), "{g}");
+        assert!(g.contains("app 1"), "{g}");
+        assert!(g.contains("makespan="), "{g}");
     }
 }

@@ -78,6 +78,48 @@ impl MeasuredStats {
     }
 }
 
+/// Per-app accounting of one application instance inside a multi-app
+/// workload run: when it arrived, when it finished, and its "stretch"
+/// (completion time relative to arrival).
+#[derive(Debug, Clone)]
+pub struct AppReport {
+    /// App id inside the workload (composition order).
+    pub app_id: usize,
+    /// The app's own scenario name.
+    pub name: String,
+    /// Virtual arrival time (0 = present at run start).
+    pub arrival: f64,
+    /// Relative priority weight the workload assigned the app.
+    pub weight: f64,
+    /// Global node ids of this app in the composed graph (keys the
+    /// timeline's `entries` back to apps, e.g. for per-app Gantt lanes).
+    pub nodes: Vec<usize>,
+    /// Total requests across the app's nodes.
+    pub n_requests: u64,
+    /// Requests that completed (== `n_requests` for a finished run).
+    pub completed: u64,
+    /// Absolute virtual time the app's last request completed (equals
+    /// `arrival` for an app with no requests).
+    pub finish: f64,
+    /// The app's stretch: `finish - arrival`, the makespan it observed
+    /// from its own arrival.
+    pub makespan: f64,
+}
+
+/// Workload-level accounting of a multi-app run (`None` on plain
+/// single-app runs): how many apps arrived mid-run, how many forced
+/// replans those arrivals triggered, and the per-app reports.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadReport {
+    /// Apps that arrived at t > 0 and were activated mid-run.
+    pub arrivals: u64,
+    /// Forced replans of the remaining work those arrivals triggered
+    /// (only planning policies replan; 0 for the baselines).
+    pub arrival_replans: u64,
+    /// Per-app accounting, indexed by app id.
+    pub per_app: Vec<AppReport>,
+}
+
 /// End-to-end result of running one application under one policy (§5's
 /// bar charts: inference time + extra time, idle time, estimation error).
 #[derive(Debug, Clone)]
@@ -115,6 +157,9 @@ pub struct RunReport {
     /// (`None` unless online refinement ran under a policy that
     /// participates in it).
     pub online: Option<OnlineStats>,
+    /// Multi-app workload accounting: arrivals, arrival-forced replans
+    /// and per-app makespans (`None` on single-app runs).
+    pub workload: Option<WorkloadReport>,
     /// Cluster GPU count the run was scheduled on.
     pub n_gpus: u32,
 }
@@ -230,6 +275,45 @@ impl RunReport {
                 },
             ),
             (
+                "workload",
+                match &self.workload {
+                    None => Json::Null,
+                    Some(w) => Json::obj(vec![
+                        ("arrivals", Json::Num(w.arrivals as f64)),
+                        ("arrival_replans", Json::Num(w.arrival_replans as f64)),
+                        (
+                            "per_app",
+                            Json::Arr(
+                                w.per_app
+                                    .iter()
+                                    .map(|a| {
+                                        Json::obj(vec![
+                                            ("app_id", Json::Num(a.app_id as f64)),
+                                            ("name", Json::Str(a.name.clone())),
+                                            ("arrival", Json::Num(a.arrival)),
+                                            ("weight", Json::Num(a.weight)),
+                                            (
+                                                "nodes",
+                                                Json::Arr(
+                                                    a.nodes
+                                                        .iter()
+                                                        .map(|&n| Json::Num(n as f64))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                            ("n_requests", Json::Num(a.n_requests as f64)),
+                                            ("completed", Json::Num(a.completed as f64)),
+                                            ("finish", Json::Num(a.finish)),
+                                            ("makespan", Json::Num(a.makespan)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                },
+            ),
+            (
                 "measured",
                 match &self.measured {
                     None => Json::Null,
@@ -300,6 +384,7 @@ mod tests {
             timeline,
             measured: None,
             online: None,
+            workload: None,
             n_gpus: 8,
         }
     }
@@ -380,6 +465,49 @@ mod tests {
         assert!(j.contains("\"drift\":0.8"), "{j}");
         assert!(j.contains("\"pre_est_total\":120"), "{j}");
         assert!(j.contains("\"post_est_total\":95"), "{j}");
+    }
+
+    #[test]
+    fn json_reports_workload_per_app_section() {
+        let mut r = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]);
+        let j = r.to_json();
+        assert!(j.contains("\"workload\":null"), "{j}");
+        r.workload = Some(WorkloadReport {
+            arrivals: 1,
+            arrival_replans: 1,
+            per_app: vec![
+                AppReport {
+                    app_id: 0,
+                    name: "chain-summary-20".into(),
+                    arrival: 0.0,
+                    weight: 1.0,
+                    nodes: vec![0, 1],
+                    n_requests: 120,
+                    completed: 120,
+                    finish: 90.0,
+                    makespan: 90.0,
+                },
+                AppReport {
+                    app_id: 1,
+                    name: "ensembling-200".into(),
+                    arrival: 30.0,
+                    weight: 2.0,
+                    nodes: vec![2, 3],
+                    n_requests: 400,
+                    completed: 400,
+                    finish: 100.0,
+                    makespan: 70.0,
+                },
+            ],
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"workload\":{"), "{j}");
+        assert!(j.contains("\"arrivals\":1"), "{j}");
+        assert!(j.contains("\"arrival_replans\":1"), "{j}");
+        assert!(j.contains("\"per_app\":["), "{j}");
+        assert!(j.contains("\"makespan\":70"), "{j}");
+        assert!(j.contains("\"name\":\"ensembling-200\""), "{j}");
+        assert!(j.contains("\"nodes\":[2,3]"), "{j}");
     }
 
     #[test]

@@ -19,6 +19,17 @@ pub struct ExecPlan {
     pub tp: u32,
 }
 
+/// Tokens of KV cache one sequence must fit beside the weights for a plan
+/// to be admissible ([`ExecPlan::is_valid_for`]): `min(max_seq,` this
+/// constant`)`. Long-context models (≥ 8k) are not required to hold a full
+/// max-length sequence — a 2048-token working set suffices to admit, the
+/// same conservative watermark spirit as
+/// [`crate::engine::sim::EngineConfig::standard`]'s block-level check
+/// (which guards the engine's own budget at run time; this constant
+/// guards plan enumeration). Changing it changes which `(dp, tp)` plans
+/// the planner may even consider — see the admission-boundary unit test.
+pub const KV_ADMISSION_TOKENS: u64 = 2048;
+
 impl ExecPlan {
     /// The plan `(dp, tp)`.
     pub fn new(dp: u32, tp: u32) -> Self {
@@ -46,9 +57,10 @@ impl ExecPlan {
         if weights >= cluster.mem_bytes {
             return false;
         }
-        // One max-length sequence's KV share per GPU must fit beside the
-        // weights (conservative: a quarter of max_seq suffices to admit).
-        let kv_one_seq = spec.kv_bytes_per_token(self.tp) as u64 * (spec.max_seq as u64).min(2048);
+        // One working-set sequence's KV share per GPU must fit beside the
+        // weights (capped at KV_ADMISSION_TOKENS for long-context models).
+        let kv_one_seq =
+            spec.kv_bytes_per_token(self.tp) * (spec.max_seq as u64).min(KV_ADMISSION_TOKENS);
         weights + kv_one_seq < cluster.mem_bytes
     }
 
@@ -219,6 +231,40 @@ mod tests {
         // b alone after a finished -> valid.
         let fin: HashSet<usize> = [a].into();
         assert!(solo.is_valid(&g, &fin, &c, &r));
+    }
+
+    #[test]
+    fn kv_admission_boundary_is_pinned() {
+        // Pins the exact admission watermark of `is_valid_for`: a (1, 1)
+        // plan is admitted iff `weights + kv_per_token ·
+        // min(max_seq, KV_ADMISSION_TOKENS) < mem_bytes`. Constructed so
+        // the KV working set lands exactly on the boundary, this fails if
+        // the constant (or the strict `<`) ever drifts.
+        let (mut c, r) = setup();
+        let spec = r.get("llama-2-70b-chat").unwrap();
+        assert!(
+            spec.max_seq as u64 > KV_ADMISSION_TOKENS,
+            "boundary test needs a long-context model to exercise the cap"
+        );
+        let weights = spec.weight_bytes_per_gpu(1);
+        let kv_working_set = spec.kv_bytes_per_token(1) * KV_ADMISSION_TOKENS;
+        let p = ExecPlan::new(1, 1);
+        // Exactly at the boundary: weights + kv == mem_bytes -> rejected
+        // (strict `<`).
+        c.mem_bytes = weights + kv_working_set;
+        assert!(!p.is_valid_for(spec, &c));
+        // One byte above the boundary -> admitted.
+        c.mem_bytes = weights + kv_working_set + 1;
+        assert!(p.is_valid_for(spec, &c));
+        // Short-context models are capped by max_seq, not the constant.
+        let small = ModelSpec { max_seq: 512, ..r.get("chatglm3-6b").unwrap().clone() };
+        assert!((small.max_seq as u64) < KV_ADMISSION_TOKENS);
+        let need = small.weight_bytes_per_gpu(1)
+            + small.kv_bytes_per_token(1) * small.max_seq as u64;
+        c.mem_bytes = need;
+        assert!(!p.is_valid_for(&small, &c));
+        c.mem_bytes = need + 1;
+        assert!(p.is_valid_for(&small, &c));
     }
 
     #[test]

@@ -80,6 +80,13 @@ pub struct StageCtx<'a> {
     /// already refreshed from its posterior, and policies may read drift
     /// evidence to escalate from stage repair to a full re-plan.
     pub online: Option<&'a OnlineSampler>,
+    /// Nodes of multi-app workload apps that arrived (were activated)
+    /// since the previous stage — empty on single-app runs and on every
+    /// stage without an arrival. Planning policies treat a non-empty list
+    /// as a forced re-plan of remaining-work-plus-new-app; stage-local
+    /// baselines need nothing special (the nodes are simply unfinished
+    /// now).
+    pub arrived: &'a [usize],
 }
 
 /// A scheduling policy: optionally plans offline, then produces execution
@@ -104,6 +111,14 @@ pub trait Policy {
     /// is on).
     fn online_stats(&self) -> Option<OnlineStats> {
         None
+    }
+
+    /// Forced re-plans this policy performed because a workload app
+    /// arrived mid-run (reported through the
+    /// [`crate::metrics::WorkloadReport`] of multi-app runs; stage-local
+    /// policies never replan, hence the 0 default).
+    fn arrival_replans(&self) -> u64 {
+        0
     }
 }
 
@@ -134,6 +149,8 @@ pub struct SamuLlmPolicy {
     /// offline plan).
     plan_t0: f64,
     stats: OnlineStats,
+    /// Forced re-plans triggered by workload-app arrivals.
+    arrival_replans: u64,
 }
 
 impl SamuLlmPolicy {
@@ -145,6 +162,7 @@ impl SamuLlmPolicy {
             length_ref: HashMap::new(),
             plan_t0: 0.0,
             stats: OnlineStats::default(),
+            arrival_replans: 0,
         }
     }
 
@@ -178,8 +196,10 @@ impl SamuLlmPolicy {
     }
 
     /// Re-plan the remaining application from the refreshed estimate and
-    /// hand the new stage sequence to the dynamic scheduler.
-    fn replan(&mut self, ctx: &StageCtx, online: &OnlineSampler, cfg: &ReplanCfg) {
+    /// hand the new stage sequence to the dynamic scheduler. Fired both
+    /// by the drift score of the length-feedback loop and by workload-app
+    /// arrivals (with or without the feedback loop running).
+    fn replan(&mut self, ctx: &StageCtx, cfg: &ReplanCfg) {
         let mut planner =
             GreedyPlanner::new(ctx.cost.clone(), ctx.registry.clone(), ctx.cluster.clone());
         planner.no_preemption = cfg.no_preemption;
@@ -193,9 +213,11 @@ impl SamuLlmPolicy {
         self.stats.post_est_total = plan.est_total;
         // The new plan is built on today's evidence: reset the drift
         // references so only *new* divergence can trigger again.
-        for node in &ctx.graph.nodes {
-            if let Some(m) = online.observed_mean(&node.model) {
-                self.length_ref.insert(node.model.clone(), m);
+        if let Some(online) = ctx.online {
+            for node in &ctx.graph.nodes {
+                if let Some(m) = online.observed_mean(&node.model) {
+                    self.length_ref.insert(node.model.clone(), m);
+                }
             }
         }
         self.plan_t0 = ctx.true_state.clock;
@@ -234,10 +256,23 @@ impl Policy for SamuLlmPolicy {
             post_est_total: plan.est_total,
             ..OnlineStats::default()
         };
+        self.arrival_replans = 0;
         Some(plan)
     }
 
     fn plan_stage(&mut self, ctx: &StageCtx) -> Option<Stage> {
+        // A workload-app arrival forces a re-plan of remaining-work-plus-
+        // new-app: the arrived nodes are in `est_state` now, and the old
+        // stage sequence knows nothing about them. Independent of the
+        // length-feedback loop (arrivals replan even with refinement
+        // off).
+        if !ctx.arrived.is_empty() {
+            if let Some(cfg) = self.cfg.take() {
+                self.replan(ctx, &cfg);
+                self.arrival_replans += 1;
+                self.cfg = Some(cfg);
+            }
+        }
         if let Some(online) = ctx.online {
             // (take/restore: the drift helpers need `&mut self`.)
             if let Some(cfg) = self.cfg.take() {
@@ -247,7 +282,7 @@ impl Policy for SamuLlmPolicy {
                 // after the current plan produced at least one stage, so
                 // a fresh plan gets a chance before being second-guessed.
                 if drift > cfg.replan_threshold && self.sched.consumed() > 0 {
-                    self.replan(ctx, online, &cfg);
+                    self.replan(ctx, &cfg);
                 }
                 self.cfg = Some(cfg);
             }
@@ -264,6 +299,10 @@ impl Policy for SamuLlmPolicy {
 
     fn online_stats(&self) -> Option<OnlineStats> {
         Some(self.stats)
+    }
+
+    fn arrival_replans(&self) -> u64 {
+        self.arrival_replans
     }
 }
 
@@ -476,6 +515,7 @@ mod tests {
                 cost: &cost,
                 locked: None,
                 online: None,
+                arrived: &[],
             };
             let stage = p.plan_stage(&ctx).unwrap();
             assert!(stage.n_gpus() <= 8);

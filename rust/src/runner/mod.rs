@@ -14,8 +14,10 @@
 
 pub mod dynamic;
 pub mod state;
+pub mod workload;
 
 pub use state::{AppRequest, ExecState};
+pub use workload::{WorkloadApp, WorkloadScenario};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -27,7 +29,7 @@ use crate::costmodel::{online, CostModel, HardwareModel, IterLatency, OnlineSamp
 use crate::engine::sched::{EngineEvent, EventKind};
 use crate::exec::{BackendMode, EventSummary, ExecBackend, SimBackend};
 use crate::graph::AppGraph;
-use crate::metrics::{MeasuredStats, RunReport, StageRecord};
+use crate::metrics::{AppReport, MeasuredStats, RunReport, StageRecord, WorkloadReport};
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage};
 use crate::planner::eval::EvalStats;
@@ -147,6 +149,21 @@ pub fn run_policy(
     run_with(p.as_mut(), scenario, &ctx, opts)
 }
 
+/// Run a composed multi-app [`WorkloadScenario`] under the registry
+/// policy named `policy` on the virtual-time substrate. Panics on an
+/// unknown policy name — use [`crate::session::SamuLlm::run_workload`]
+/// for validated-up-front configuration.
+pub fn run_workload(
+    policy: &str,
+    workload: &WorkloadScenario,
+    cluster: &ClusterSpec,
+    opts: &RunOpts,
+) -> RunReport {
+    let mut p = policy::create(policy).expect("unknown policy name");
+    let ctx = RunContext::new(cluster, opts.seed);
+    run_workload_with(p.as_mut(), workload, &ctx, opts)
+}
+
 /// Run `scenario` under an instantiated policy, reusing `ctx`'s wiring,
 /// on the default virtual-time substrate ([`SimBackend`] over the
 /// context's hardware ground truth). Numerically identical to every
@@ -160,6 +177,43 @@ pub fn run_with(
     let mut backend = SimBackend::new(&ctx.hw, ctx.cluster.mem_bytes);
     run_with_backend(policy, scenario, ctx, opts, &mut backend)
         .expect("the simulated substrate is infallible")
+}
+
+/// Run a multi-app workload under an instantiated policy on the default
+/// virtual-time substrate. A zero-arrival workload runs through exactly
+/// the single-app code path (plus the per-app report), so its numbers are
+/// bit-identical to running the equivalent hand-merged scenario.
+pub fn run_workload_with(
+    policy: &mut dyn Policy,
+    workload: &WorkloadScenario,
+    ctx: &RunContext,
+    opts: &RunOpts,
+) -> RunReport {
+    let mut backend = SimBackend::new(&ctx.hw, ctx.cluster.mem_bytes);
+    run_workload_with_backend(policy, workload, ctx, opts, &mut backend)
+        .expect("the simulated substrate is infallible")
+}
+
+/// Run a multi-app workload against an arbitrary [`ExecBackend`].
+///
+/// Apps with `arrival == 0` are planned jointly up front; apps with
+/// `arrival > 0` are masked out of the initial state and activated at the
+/// first stage boundary at or after their arrival time (stage boundaries
+/// are the §4.3 decision points) — planning policies absorb an arrival as
+/// a forced re-plan of remaining-work-plus-new-app through the same
+/// [`crate::planner::GreedyPlanner::plan_from_state`] path the
+/// length-feedback loop uses. If the active apps drain before the next
+/// arrival, the clock idle-jumps to it. The report gains a
+/// [`WorkloadReport`](crate::metrics::WorkloadReport) with per-app
+/// makespans/stretch.
+pub fn run_workload_with_backend(
+    policy: &mut dyn Policy,
+    workload: &WorkloadScenario,
+    ctx: &RunContext,
+    opts: &RunOpts,
+    backend: &mut dyn ExecBackend,
+) -> Result<RunReport> {
+    run_core(policy, &workload.scenario, Some(workload), ctx, opts, backend)
 }
 
 /// Run `scenario` under an instantiated policy against an arbitrary
@@ -183,15 +237,41 @@ pub fn run_with_backend(
     opts: &RunOpts,
     backend: &mut dyn ExecBackend,
 ) -> Result<RunReport> {
+    run_core(policy, scenario, None, ctx, opts, backend)
+}
+
+/// The one execution loop behind [`run_with_backend`] (single app,
+/// `workload = None`) and [`run_workload_with_backend`] (multi-app, with
+/// arrival activation and per-app reporting). With `workload = None` or a
+/// zero-arrival workload every step is byte-identical to the pre-workload
+/// release.
+fn run_core(
+    policy: &mut dyn Policy,
+    scenario: &Scenario,
+    workload: Option<&WorkloadScenario>,
+    ctx: &RunContext,
+    opts: &RunOpts,
+    backend: &mut dyn ExecBackend,
+) -> Result<RunReport> {
     let RunContext { registry, cost, hw, cluster, sim_cache } = ctx;
     let graph = &scenario.graph;
     let measured_mode = backend.mode() == BackendMode::Measured;
+
+    // Multi-app arrivals: apps arriving at t > 0 are masked out of the
+    // initial (planning + execution) state and activated at the first
+    // stage boundary at or after their arrival time.
+    let masked = workload.and_then(|w| w.masked_workloads());
+    let init_workloads: &[Vec<AppRequest>] = masked.as_deref().unwrap_or(&scenario.workloads);
+    let mut pending: Vec<(f64, usize)> =
+        workload.map(|w| w.pending_arrivals()).unwrap_or_default();
+    let mut arrived_nodes: Vec<usize> = vec![];
+    let mut arrivals = 0u64;
 
     // ---- planning phase -------------------------------------------------
     let mut extra_time = 0.0;
     let planned = policy.prepare(&PlanCtx {
         graph,
-        workloads: &scenario.workloads,
+        workloads: init_workloads,
         cluster,
         registry,
         cost,
@@ -207,7 +287,7 @@ pub fn run_with_backend(
     }
 
     // ---- running phase ---------------------------------------------------
-    let mut true_state = ExecState::init(&scenario.workloads, |_, r| r.true_output_len);
+    let mut true_state = ExecState::init(init_workloads, |_, r| r.true_output_len);
     if !measured_mode {
         true_state.noise_sigma = Some(opts.noise_sigma);
         true_state.noise_seed = opts.seed ^ 0x7275_6E;
@@ -236,7 +316,32 @@ pub fn run_with_backend(
     let mut prev_stage: Option<Stage> = None;
     let mut guard = 0usize;
 
-    while !true_state.all_done() {
+    loop {
+        // Activate every pending app whose arrival time has passed; if
+        // the active apps drained before the next arrival, idle-jump the
+        // clock to it. Stage boundaries are the §4.3 decision points, so
+        // an arrival mid-stage is absorbed at the boundary that follows.
+        if let Some(w) = workload {
+            while let Some(&(t, app_id)) = pending.first() {
+                if t <= true_state.clock + 1e-9 {
+                    let app = &w.apps[app_id];
+                    for &ni in &app.nodes {
+                        let reqs = &scenario.workloads[ni];
+                        true_state.activate_node(ni, reqs, |r| r.true_output_len);
+                    }
+                    arrived_nodes.extend(app.nodes.iter().copied());
+                    arrivals += 1;
+                    pending.remove(0);
+                } else if true_state.all_done() {
+                    true_state.clock = t; // idle gap until the arrival
+                } else {
+                    break;
+                }
+            }
+        }
+        if true_state.all_done() {
+            break;
+        }
         guard += 1;
         assert!(
             guard <= 16 * graph.n_nodes() + 256,
@@ -266,7 +371,9 @@ pub fn run_with_backend(
             cost,
             locked: if opts.no_preemption { Some(&locked) } else { None },
             online: online_sampler.as_ref(),
+            arrived: &arrived_nodes,
         });
+        arrived_nodes.clear();
         extra_time += decision_t0.elapsed().as_secs_f64();
         let Some(stage) = stage else {
             panic!("policy {} produced no stage with unfinished work", policy.name());
@@ -370,6 +477,38 @@ pub fn run_with_backend(
     // Drift/replan accounting only exists when the feedback loop ran and
     // the policy participates in it (`None` for baselines).
     let online_stats = online_sampler.is_some().then(|| policy.online_stats()).flatten();
+    // Per-app accounting for multi-app workload runs: completion times
+    // relative to each app's arrival ("stretch").
+    let workload_report = workload.map(|w| WorkloadReport {
+        arrivals,
+        arrival_replans: policy.arrival_replans(),
+        per_app: w
+            .apps
+            .iter()
+            .map(|a| {
+                let node_set: HashSet<usize> = a.nodes.iter().copied().collect();
+                let mut finish = a.arrival;
+                let mut completed = 0u64;
+                for (&(ni, _), &t) in &true_state.completed {
+                    if node_set.contains(&ni) {
+                        completed += 1;
+                        finish = finish.max(t);
+                    }
+                }
+                AppReport {
+                    app_id: a.app_id,
+                    name: a.name.clone(),
+                    arrival: a.arrival,
+                    weight: a.weight,
+                    nodes: a.nodes.clone(),
+                    n_requests: a.n_requests,
+                    completed,
+                    finish,
+                    makespan: finish - a.arrival,
+                }
+            })
+            .collect(),
+    });
     Ok(RunReport {
         scenario: scenario.name.clone(),
         policy: policy.name().to_string(),
@@ -384,6 +523,7 @@ pub fn run_with_backend(
         timeline,
         measured,
         online: online_stats,
+        workload: workload_report,
         n_gpus: cluster.n_gpus,
     })
 }

@@ -135,7 +135,7 @@ impl ExecState {
         workloads: &[Vec<AppRequest>],
         mut resolve: impl FnMut(usize, &AppRequest) -> u32,
     ) -> Self {
-        let nodes = workloads
+        let nodes: Vec<Vec<StatefulReq>> = workloads
             .iter()
             .enumerate()
             .map(|(ni, reqs)| {
@@ -152,13 +152,52 @@ impl ExecState {
                     .collect()
             })
             .collect();
+        // A node with nothing to run (an empty workload — e.g. a
+        // not-yet-arrived app of a multi-app workload, masked out until
+        // [`ExecState::activate_node`]) counts as finished so no policy
+        // ever tries to schedule it. Fresh requests resolve to ≥ 1 output
+        // tokens, so populated nodes are never flagged here.
+        let finished_nodes = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, reqs)| reqs.iter().all(|r| r.is_done()))
+            .map(|(ni, _)| ni)
+            .collect();
         ExecState {
             nodes,
             completed: HashMap::new(),
-            finished_nodes: HashSet::new(),
+            finished_nodes,
             clock: 0.0,
             noise_sigma: None,
             noise_seed: 0,
+        }
+    }
+
+    /// Activate a node that was initialised with an empty (masked)
+    /// workload — the arrival path of multi-app workloads: install its
+    /// requests, resolving each output length via `resolve`, and clear its
+    /// finished flag so policies start scheduling it. No-op semantics for
+    /// an empty `reqs` (the node simply stays finished).
+    pub fn activate_node(
+        &mut self,
+        node: usize,
+        reqs: &[AppRequest],
+        mut resolve: impl FnMut(&AppRequest) -> u32,
+    ) {
+        self.nodes[node] = reqs
+            .iter()
+            .map(|r| StatefulReq {
+                id: r.id,
+                input_len: r.input_len,
+                output_len: resolve(r).max(1),
+                generated: 0,
+                chain_next: r.chain_next,
+                chain_blocked: r.chain_blocked,
+                dep: r.dep,
+            })
+            .collect();
+        if !self.nodes[node].is_empty() {
+            self.finished_nodes.remove(&node);
         }
     }
 
@@ -784,6 +823,29 @@ mod tests {
         // The unified event stream covers both nodes.
         let nodes: std::collections::HashSet<usize> = events.iter().map(|e| e.node).collect();
         assert_eq!(nodes, [a, b].into_iter().collect());
+    }
+
+    #[test]
+    fn empty_nodes_start_finished_and_activation_revives_them() {
+        let (c, reg, hw) = ctx();
+        let (g, mut w) = two_model_app();
+        let deferred = std::mem::take(&mut w[1]); // app "arrives later"
+        let mut st = ExecState::init(&w, |_, r| r.true_output_len);
+        assert!(st.finished_nodes.contains(&1), "masked node starts finished");
+        assert!(!st.finished_nodes.contains(&0));
+        // Run node 0 to completion: the run looks all-done...
+        let s = stage(vec![(0, 8, 1)]);
+        let mut b = SimBackend::new(&hw, c.mem_bytes);
+        st.run_stage(&s, &g, &reg, &mut b, &HashMap::new(), false, true, None);
+        assert!(st.all_done());
+        // ...until the arrival installs the deferred workload.
+        st.activate_node(1, &deferred, |r| r.true_output_len);
+        assert!(!st.all_done());
+        assert_eq!(st.nodes[1].len(), deferred.len());
+        let s2 = stage(vec![(1, 8, 1)]);
+        st.run_stage(&s2, &g, &reg, &mut b, &HashMap::new(), false, true, None);
+        assert!(st.all_done());
+        assert_eq!(st.completed.len(), 600);
     }
 
     #[test]

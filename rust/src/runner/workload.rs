@@ -1,0 +1,229 @@
+//! Multi-application workloads: compose `N` app instances into one
+//! jointly planned, jointly executed [`Scenario`] with per-app arrival
+//! times, weights and provenance.
+//!
+//! The composition itself is a disjoint union ([`AppGraph::compose`]):
+//! node ids are offset per app, cross-node dependencies are remapped, and
+//! every node carries `(app, local_id)` provenance so the same LLM used
+//! by two apps stays two model instances (placement owners are node ids).
+//! Apps with `arrival > 0` are masked out of the initial state and enter
+//! the run through the drift/replan path — see
+//! [`crate::runner::run_workload_with_backend`].
+
+use crate::graph::AppGraph;
+use crate::runner::{AppRequest, Scenario};
+
+/// One application instance of a multi-app workload, after composition.
+#[derive(Debug, Clone)]
+pub struct WorkloadApp {
+    /// Index of this app in the workload (== provenance `app` stamp).
+    pub app_id: usize,
+    /// The app's own scenario name ("ensembling-1000", …).
+    pub name: String,
+    /// Virtual time at which the app becomes available. Apps with
+    /// `arrival > 0` are invisible to planning and execution until the
+    /// first stage boundary at or after this time.
+    pub arrival: f64,
+    /// Relative priority weight (recorded in the per-app report; the
+    /// joint planner optimises global throughput, so today weights are
+    /// reporting-level metadata for downstream consumers).
+    pub weight: f64,
+    /// Global node ids of this app in the composed graph.
+    pub nodes: Vec<usize>,
+    /// Total requests across this app's nodes.
+    pub n_requests: u64,
+}
+
+/// A composed multi-app workload: the joint scenario plus per-app
+/// metadata. Build one from a declarative
+/// [`crate::spec::workload::WorkloadSpec`], or directly via
+/// [`WorkloadScenario::compose`].
+#[derive(Debug, Clone)]
+pub struct WorkloadScenario {
+    /// Workload name (becomes `RunReport::scenario`).
+    pub name: String,
+    /// The composed joint scenario (full workloads for every app,
+    /// including ones that arrive later — the runner masks those until
+    /// their arrival).
+    pub scenario: Scenario,
+    /// Per-app metadata, indexed by `app_id`.
+    pub apps: Vec<WorkloadApp>,
+}
+
+impl WorkloadScenario {
+    /// Compose `(scenario, arrival, weight)` parts into one workload.
+    /// Part order is preserved (it defines app ids and node-id offsets);
+    /// arrivals need not be sorted.
+    pub fn compose(parts: Vec<(Scenario, f64, f64)>, name: &str) -> Self {
+        let scenarios: Vec<&Scenario> = parts.iter().map(|(s, _, _)| s).collect();
+        let scenario = compose_scenarios(&scenarios, name);
+        let by_app = scenario.graph.nodes_by_app();
+        let apps = parts
+            .iter()
+            .enumerate()
+            .map(|(app_id, (s, arrival, weight))| WorkloadApp {
+                app_id,
+                name: s.name.clone(),
+                arrival: *arrival,
+                weight: *weight,
+                nodes: by_app[app_id].clone(),
+                n_requests: s.workloads.iter().map(|w| w.len() as u64).sum(),
+            })
+            .collect();
+        WorkloadScenario { name: name.to_string(), scenario, apps }
+    }
+
+    /// Apps that arrive strictly after t = 0, as `(arrival, app_id)`
+    /// sorted by arrival time (ties by app id) — the runner's pending
+    /// queue.
+    pub fn pending_arrivals(&self) -> Vec<(f64, usize)> {
+        let mut v: Vec<(f64, usize)> = self
+            .apps
+            .iter()
+            .filter(|a| a.arrival > 0.0)
+            .map(|a| (a.arrival, a.app_id))
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("arrival times are finite"));
+        v
+    }
+
+    /// Per-node workloads with every app arriving after t = 0 masked to
+    /// an empty request list — the planner- and state-visible view at run
+    /// start. Returns `None` when no app arrives late (the scenario's own
+    /// workloads are already the full picture — the zero-arrival path
+    /// stays byte-identical to a plain single-app run).
+    pub fn masked_workloads(&self) -> Option<Vec<Vec<AppRequest>>> {
+        if self.apps.iter().all(|a| a.arrival <= 0.0) {
+            return None;
+        }
+        let mut masked = self.scenario.workloads.clone();
+        for app in self.apps.iter().filter(|a| a.arrival > 0.0) {
+            for &ni in &app.nodes {
+                masked[ni].clear();
+            }
+        }
+        Some(masked)
+    }
+}
+
+/// Disjoint union of scenarios: graphs composed via [`AppGraph::compose`]
+/// (per-app provenance stamped), workloads concatenated in part order
+/// with cross-node dependency ids offset. The exact composition
+/// [`crate::apps::mixed::merge`] has always performed — kept
+/// bit-identical so the legacy `AppSpec::Mixed` path reproduces the seed
+/// outputs.
+pub fn compose_scenarios(parts: &[&Scenario], name: &str) -> Scenario {
+    let graphs: Vec<&AppGraph> = parts.iter().map(|p| &p.graph).collect();
+    let graph = AppGraph::compose(&graphs);
+    let mut workloads: Vec<Vec<AppRequest>> = vec![];
+    let mut offset = 0usize;
+    for part in parts {
+        for w in &part.workloads {
+            workloads.push(
+                w.iter()
+                    .map(|r| {
+                        let mut r = *r;
+                        if let Some((n, id)) = r.dep {
+                            r.dep = Some((n + offset, id));
+                        }
+                        r
+                    })
+                    .collect(),
+            );
+        }
+        offset += part.graph.n_nodes();
+    }
+    Scenario { name: name.to_string(), graph, workloads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{chain_summary, ensembling};
+
+    /// The seed `mixed::merge` implementation, inlined verbatim: the
+    /// reference `compose_scenarios` must stay bit-compatible with.
+    fn legacy_merge(a: Scenario, b: Scenario, name: &str) -> Scenario {
+        let mut graph = a.graph.clone();
+        let offset = graph.n_nodes();
+        for n in &b.graph.nodes {
+            graph.add_node(&n.model, &n.label, n.max_out);
+        }
+        for &(f, t) in &b.graph.edges {
+            graph.add_edge(f + offset, t + offset);
+        }
+        let mut workloads = a.workloads;
+        for w in b.workloads {
+            workloads.push(
+                w.into_iter()
+                    .map(|mut r| {
+                        if let Some((n, id)) = r.dep {
+                            r.dep = Some((n + offset, id));
+                        }
+                        r
+                    })
+                    .collect(),
+            );
+        }
+        Scenario { name: name.to_string(), graph, workloads }
+    }
+
+    #[test]
+    fn compose_matches_legacy_merge_shape() {
+        let cs = chain_summary::build(10, 2, 300, 7);
+        let en = ensembling::build(50, 128, 7 ^ 0x4D49_58);
+        let merged = legacy_merge(cs.clone(), en.clone(), "m");
+        let composed = compose_scenarios(&[&cs, &en], "m");
+        assert_eq!(composed.graph.n_nodes(), merged.graph.n_nodes());
+        assert_eq!(composed.graph.edges, merged.graph.edges);
+        for (x, y) in composed.graph.nodes.iter().zip(&merged.graph.nodes) {
+            assert_eq!(
+                (x.id, &x.model, &x.label, x.max_out),
+                (y.id, &y.model, &y.label, y.max_out)
+            );
+        }
+        assert_eq!(composed.workloads.len(), merged.workloads.len());
+        for (a, b) in composed.workloads.iter().zip(&merged.workloads) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.input_len, y.input_len);
+                assert_eq!(x.true_output_len, y.true_output_len);
+                assert_eq!(x.dep, y.dep);
+                assert_eq!(x.chain_next, y.chain_next);
+                assert_eq!(x.chain_blocked, y.chain_blocked);
+            }
+        }
+    }
+
+    #[test]
+    fn workload_scenario_metadata_and_masking() {
+        let cs = chain_summary::build(5, 1, 200, 1);
+        let en = ensembling::build(40, 128, 2);
+        let n_cs_nodes = cs.graph.n_nodes();
+        let n_en_reqs: u64 = en.workloads.iter().map(|w| w.len() as u64).sum();
+        let wl = WorkloadScenario::compose(
+            vec![(cs, 0.0, 1.0), (en, 45.0, 2.0)],
+            "pair",
+        );
+        assert_eq!(wl.apps.len(), 2);
+        assert_eq!(wl.apps[1].n_requests, n_en_reqs);
+        assert_eq!(wl.apps[1].weight, 2.0);
+        assert_eq!(wl.pending_arrivals(), vec![(45.0, 1)]);
+        let masked = wl.masked_workloads().expect("app 1 arrives late");
+        for &ni in &wl.apps[0].nodes {
+            assert!(!masked[ni].is_empty(), "arrived app keeps its work");
+        }
+        for &ni in &wl.apps[1].nodes {
+            assert!(masked[ni].is_empty(), "pending app is masked");
+            assert!(ni >= n_cs_nodes, "app 1 nodes come after app 0's");
+        }
+        // Zero-arrival workloads report no mask at all.
+        let cs2 = chain_summary::build(5, 1, 200, 1);
+        let en2 = ensembling::build(40, 128, 2);
+        let all_now =
+            WorkloadScenario::compose(vec![(cs2, 0.0, 1.0), (en2, 0.0, 1.0)], "now");
+        assert!(all_now.masked_workloads().is_none());
+        assert!(all_now.pending_arrivals().is_empty());
+    }
+}

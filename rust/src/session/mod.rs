@@ -31,11 +31,11 @@ use anyhow::{anyhow, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::costmodel::online;
-use crate::exec::{self, pjrt::PjrtBackend, SimBackend};
+use crate::exec::{self, pjrt::PjrtBackend, ExecBackend, SimBackend};
 use crate::metrics::RunReport;
 use crate::policy;
 use crate::runner::{self, RunContext, RunOpts, Scenario};
-use crate::spec::AppSpec;
+use crate::spec::{AppSpec, WorkloadSpec};
 
 /// Configured session: a cluster, a policy, a seed, an execution backend
 /// and the shared cost-model wiring. Create one with [`SamuLlm::builder`].
@@ -126,6 +126,21 @@ impl SamuLlm {
         self.execute(self.policy, scenario, &self.opts)
     }
 
+    /// Materialise a multi-app [`WorkloadSpec`] with the session seed
+    /// (per-entry overrides honoured) and run it jointly under the
+    /// session policy: apps arriving at t = 0 are planned together, later
+    /// arrivals enter through the replan path, and the report carries a
+    /// per-app section ([`crate::metrics::WorkloadReport`]).
+    pub fn run_workload(&self, workload: &WorkloadSpec) -> Result<RunReport> {
+        let ws = workload.build(self.opts.seed)?;
+        let mut opts = self.opts.clone();
+        opts.known_lengths |= workload.wants_known_lengths();
+        let mut policy = policy::create(self.policy)?;
+        self.with_backend(|backend| {
+            runner::run_workload_with_backend(policy.as_mut(), &ws, &self.ctx, &opts, backend)
+        })
+    }
+
     /// Run the same spec under several policies (paper-style comparisons),
     /// reusing the session's scenario materialisation and wiring.
     pub fn compare(&self, spec: &AppSpec, policies: &[&str]) -> Result<Vec<RunReport>> {
@@ -137,14 +152,25 @@ impl SamuLlm {
 
     fn execute(&self, policy: &str, scenario: &Scenario, opts: &RunOpts) -> Result<RunReport> {
         let mut policy = policy::create(policy)?;
+        self.with_backend(|backend| {
+            runner::run_with_backend(policy.as_mut(), scenario, &self.ctx, opts, backend)
+        })
+    }
+
+    /// Construct the session's execution backend and hand it to `f` — the
+    /// one backend-dispatch point shared by [`SamuLlm::run`] /
+    /// [`SamuLlm::run_scenario`] / [`SamuLlm::run_workload`], so a new
+    /// backend (or a change to the pjrt loading contract) is wired in one
+    /// place.
+    fn with_backend<T>(&self, f: impl FnOnce(&mut dyn ExecBackend) -> Result<T>) -> Result<T> {
         match self.backend {
             "pjrt" => {
                 let mut backend = PjrtBackend::load(&self.artifacts)?;
-                runner::run_with_backend(policy.as_mut(), scenario, &self.ctx, opts, &mut backend)
+                f(&mut backend)
             }
             _ => {
                 let mut backend = SimBackend::new(&self.ctx.hw, self.ctx.cluster.mem_bytes);
-                runner::run_with_backend(policy.as_mut(), scenario, &self.ctx, opts, &mut backend)
+                f(&mut backend)
             }
         }
     }
@@ -463,6 +489,31 @@ mod tests {
         assert!(oa.pre_est_total > 0.0);
         // The JSON contract carries the section.
         assert!(a.to_json().contains("\"online\":{"), "{}", a.to_json());
+    }
+
+    #[test]
+    fn session_runs_a_two_app_workload() {
+        use crate::spec::WorkloadEntry;
+        let session = SamuLlm::builder().gpus(8).seed(4).build().unwrap();
+        let wl = WorkloadSpec::new(vec![
+            WorkloadEntry::new(AppSpec::chain_summary(6, 1, 200)),
+            WorkloadEntry::new(AppSpec::ensembling(30, 96)),
+        ]);
+        let r = session.run_workload(&wl).unwrap();
+        assert_eq!(r.scenario, "workload-2apps");
+        assert!(r.inference_time > 0.0);
+        let w = r.workload.expect("workload runs carry the per-app section");
+        assert_eq!(w.per_app.len(), 2);
+        assert_eq!(w.arrivals, 0, "both apps present at start");
+        for a in &w.per_app {
+            assert_eq!(a.completed, a.n_requests, "run completed everything");
+            assert!(a.makespan > 0.0);
+            assert!(a.finish <= r.inference_time + 1e-9);
+        }
+        // Node id ranges are disjoint between the app instances.
+        assert!(w.per_app[0].nodes.iter().all(|n| !w.per_app[1].nodes.contains(n)));
+        // The JSON contract carries the section.
+        assert!(r.to_json().contains("\"workload\":{"), "{}", r.to_json());
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! [`builders`] registry; each [`AppBuilder`] applies its own defaults and
 //! *rejects* knobs that don't apply to it (no silently-dropped flags).
 
+pub mod workload;
+
+pub use workload::{WorkloadEntry, WorkloadSpec};
+
 use anyhow::{anyhow, Result};
 
 use crate::apps::{chain_summary, ensembling, mixed, routing};
@@ -58,7 +62,10 @@ pub enum AppSpec {
         /// Summarizer output-length limit.
         max_out: u32,
     },
-    /// §5.4: chain summary + ensembling run as one application.
+    /// §5.4: chain summary + ensembling run as one application. A compat
+    /// alias over the workload layer: materialises as the 2-entry
+    /// [`crate::apps::mixed::workload_spec`] composition (bit-identical
+    /// to the seed's hand-merged graph).
     Mixed {
         /// Number of chain-summary documents.
         n_docs: usize,

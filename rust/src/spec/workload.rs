@@ -1,0 +1,309 @@
+//! Declarative multi-application workloads: a [`WorkloadSpec`] is a list
+//! of `{app, arrival, weight, seed}` entries that materialises into one
+//! jointly planned, jointly executed
+//! [`WorkloadScenario`](crate::runner::workload::WorkloadScenario).
+//!
+//! Each entry wraps a plain [`AppSpec`] — anything a single-app run
+//! accepts, the paper's four applications or a custom graph — plus
+//! workload-level metadata: the virtual arrival time (apps with
+//! `arrival > 0` enter the run through the replan path), a priority
+//! weight, and an optional per-app seed override (the default derivation
+//! gives entry 0 the session seed and decorrelates later entries).
+//!
+//! Serialises via [`crate::util::json`] (the `workload` key of
+//! [`crate::config::ExperimentConfig`]) and parses the CLI's
+//! `--app name:key=value:...` descriptors (`samullm workload`).
+
+use anyhow::{anyhow, Result};
+
+use crate::runner::workload::WorkloadScenario;
+use crate::spec::{from_cli, AppParams, AppSpec};
+use crate::util::json::Json;
+
+/// One application instance of a declarative workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadEntry {
+    /// What to run — any single-app spec.
+    pub app: AppSpec,
+    /// Virtual arrival time in seconds (default 0 = present at start;
+    /// later arrivals are absorbed at the first stage boundary at or
+    /// after this time via a forced replan).
+    pub arrival: f64,
+    /// Relative priority weight (default 1; recorded in the per-app
+    /// report).
+    pub weight: f64,
+    /// Per-app workload seed override. `None` derives a seed from the
+    /// session seed and the entry index (entry 0 gets the session seed
+    /// itself).
+    pub seed: Option<u64>,
+}
+
+impl WorkloadEntry {
+    /// An entry with default metadata: arrival 0, weight 1, derived seed.
+    pub fn new(app: AppSpec) -> Self {
+        WorkloadEntry { app, arrival: 0.0, weight: 1.0, seed: None }
+    }
+
+    /// Parse a CLI descriptor: `name[:key=value]...` where `name` is an
+    /// app-builder registry name and keys are the app's own CLI knobs
+    /// (`n-requests`, `max-out`, `n-docs`, `eval-times`, `known-lengths`)
+    /// plus the workload-level `arrival`, `weight` and `seed`. Underscore
+    /// spellings are accepted. Examples:
+    ///
+    /// ```text
+    /// ensembling:n-requests=2000:max-out=256
+    /// chain-summary:n-docs=100:arrival=30
+    /// ```
+    pub fn parse_cli(desc: &str) -> Result<Self> {
+        let mut parts = desc.split(':');
+        let name = parts.next().filter(|n| !n.is_empty()).ok_or_else(|| {
+            anyhow!("empty --app descriptor (expected name[:key=value]...)")
+        })?;
+        let mut params = AppParams::default();
+        let mut arrival = 0.0f64;
+        let mut weight = 1.0f64;
+        let mut seed = None;
+        for kv in parts {
+            let (key, value) = match kv.split_once('=') {
+                Some((k, v)) => (k, v),
+                // A bare key is a boolean switch (known-lengths).
+                None => (kv, "true"),
+            };
+            let key = key.replace('_', "-");
+            let bad = |e: &dyn std::fmt::Display| {
+                anyhow!("--app {name}: invalid value {value:?} for {key}: {e}")
+            };
+            match key.as_str() {
+                "n-requests" => params.n_requests = Some(value.parse().map_err(|e| bad(&e))?),
+                "max-out" => params.max_out = Some(value.parse().map_err(|e| bad(&e))?),
+                "n-docs" => params.n_docs = Some(value.parse().map_err(|e| bad(&e))?),
+                "eval-times" => params.eval_times = Some(value.parse().map_err(|e| bad(&e))?),
+                "known-lengths" => {
+                    params.known_lengths = value.parse().map_err(|e| bad(&e))?
+                }
+                "arrival" => arrival = value.parse().map_err(|e| bad(&e))?,
+                "weight" => weight = value.parse().map_err(|e| bad(&e))?,
+                "seed" => seed = Some(value.parse().map_err(|e| bad(&e))?),
+                other => {
+                    return Err(anyhow!(
+                        "--app {name}: unknown key {other:?} (known: n-requests, max-out, \
+                         n-docs, eval-times, known-lengths, arrival, weight, seed)"
+                    ))
+                }
+            }
+        }
+        Ok(WorkloadEntry { app: from_cli(name, &params)?, arrival, weight, seed })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("app", self.app.to_json()),
+            ("arrival", Json::Num(self.arrival)),
+            ("weight", Json::Num(self.weight)),
+        ];
+        if let Some(s) = self.seed {
+            fields.push(("seed", Json::Num(s as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let app = v.get("app").ok_or_else(|| anyhow!("workload entry: app missing"))?;
+        let app = AppSpec::from_json(app)?;
+        Ok(WorkloadEntry {
+            app,
+            arrival: v.get("arrival").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            weight: v.get("weight").and_then(|x| x.as_f64()).unwrap_or(1.0),
+            seed: v.get("seed").and_then(|x| x.as_u64()),
+        })
+    }
+}
+
+/// A declarative multi-app workload: entries in app-id order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Workload name (empty = derived: `workload-<n>apps`).
+    pub name: String,
+    /// The application entries; index = app id (composition order).
+    pub entries: Vec<WorkloadEntry>,
+}
+
+impl WorkloadSpec {
+    /// A workload from entries with a derived name.
+    pub fn new(entries: Vec<WorkloadEntry>) -> Self {
+        WorkloadSpec { name: String::new(), entries }
+    }
+
+    /// The workload's display name (derived from the entry count when
+    /// unset).
+    pub fn display_name(&self) -> String {
+        if self.name.is_empty() {
+            format!("workload-{}apps", self.entries.len())
+        } else {
+            self.name.clone()
+        }
+    }
+
+    /// Whether any entry asks for the known-output-lengths mode (applied
+    /// to the whole run, like the single-app path does).
+    pub fn wants_known_lengths(&self) -> bool {
+        self.entries.iter().any(|e| e.app.wants_known_lengths())
+    }
+
+    /// The seed entry `i` materialises with: its override, or a
+    /// session-seed derivation (entry 0 = the session seed itself, later
+    /// entries decorrelated by a golden-ratio mix).
+    pub fn entry_seed(&self, i: usize, session_seed: u64) -> u64 {
+        self.entries[i]
+            .seed
+            .unwrap_or_else(|| session_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Materialise the workload: build every entry's scenario with its
+    /// resolved seed and compose them (validated; rejects empty
+    /// workloads, non-finite/negative arrivals and non-positive weights).
+    pub fn build(&self, session_seed: u64) -> Result<WorkloadScenario> {
+        if self.entries.is_empty() {
+            return Err(anyhow!("workload needs at least one app entry"));
+        }
+        let mut parts = vec![];
+        for (i, e) in self.entries.iter().enumerate() {
+            if !e.arrival.is_finite() || e.arrival < 0.0 {
+                return Err(anyhow!("entry {i}: arrival must be finite and >= 0"));
+            }
+            if !e.weight.is_finite() || e.weight <= 0.0 {
+                return Err(anyhow!("entry {i}: weight must be finite and > 0"));
+            }
+            let scenario = e.app.build(self.entry_seed(i, session_seed))?;
+            parts.push((scenario, e.arrival, e.weight));
+        }
+        Ok(WorkloadScenario::compose(parts, &self.display_name()))
+    }
+
+    /// Serialize to a [`Json`] value (round-trips via
+    /// [`WorkloadSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    /// Parse from JSON: either `{"name": ..., "entries": [...]}` or a
+    /// bare entry array (the config file's `workload: [...]` shorthand).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let (name, arr) = match v.as_arr() {
+            Some(arr) => (String::new(), arr),
+            None => (
+                v.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+                v.get("entries")
+                    .and_then(|e| e.as_arr())
+                    .ok_or_else(|| anyhow!("workload needs an entries array"))?,
+            ),
+        };
+        let entries =
+            arr.iter().map(WorkloadEntry::from_json).collect::<Result<Vec<_>>>()?;
+        Ok(WorkloadSpec { name, entries })
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a workload from a JSON document string.
+    pub fn parse(s: &str) -> Result<Self> {
+        let v = Json::parse(s).map_err(|e| anyhow!("bad workload json: {e}"))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "pair".into(),
+            entries: vec![
+                WorkloadEntry::new(AppSpec::chain_summary(20, 2, 300)),
+                WorkloadEntry {
+                    app: AppSpec::ensembling(200, 128),
+                    arrival: 45.0,
+                    weight: 2.0,
+                    seed: Some(9),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_object_and_array_forms() {
+        let wl = sample();
+        let back = WorkloadSpec::parse(&wl.to_json_string()).unwrap();
+        assert_eq!(back, wl);
+        assert_eq!(back.to_json_string(), wl.to_json_string());
+        // Bare-array shorthand: entries only, derived name.
+        let arr = r#"[{"app":{"kind":"ensembling","n_requests":50,"max_out":64}},
+                      {"app":{"kind":"chain_summary"},"arrival":30,"weight":0.5}]"#;
+        let wl = WorkloadSpec::parse(arr).unwrap();
+        assert_eq!(wl.entries.len(), 2);
+        assert_eq!(wl.display_name(), "workload-2apps");
+        assert_eq!(wl.entries[0].arrival, 0.0);
+        assert_eq!(wl.entries[1].arrival, 30.0);
+        assert_eq!(wl.entries[1].weight, 0.5);
+        assert_eq!(wl.entries[0].weight, 1.0);
+    }
+
+    #[test]
+    fn entry_seed_defaults_and_overrides() {
+        let wl = sample();
+        assert_eq!(wl.entry_seed(0, 42), 42, "entry 0 inherits the session seed");
+        assert_eq!(wl.entry_seed(1, 42), 9, "explicit override wins");
+        let no_override = WorkloadSpec::new(vec![
+            WorkloadEntry::new(AppSpec::ensembling(10, 64)),
+            WorkloadEntry::new(AppSpec::ensembling(10, 64)),
+        ]);
+        assert_ne!(no_override.entry_seed(1, 42), 42, "later entries decorrelate");
+    }
+
+    #[test]
+    fn build_composes_and_validates() {
+        let wl = sample();
+        let ws = wl.build(7).unwrap();
+        assert_eq!(ws.name, "pair");
+        assert_eq!(ws.apps.len(), 2);
+        assert_eq!(ws.apps[1].arrival, 45.0);
+        assert_eq!(
+            ws.scenario.graph.n_nodes(),
+            ws.apps.iter().map(|a| a.nodes.len()).sum::<usize>()
+        );
+        assert!(WorkloadSpec::new(vec![]).build(1).is_err());
+        let mut bad = sample();
+        bad.entries[1].arrival = -1.0;
+        assert!(bad.build(1).is_err());
+        let mut bad = sample();
+        bad.entries[0].weight = 0.0;
+        assert!(bad.build(1).is_err());
+    }
+
+    #[test]
+    fn cli_descriptor_parses_knobs_and_rejects_unknown_keys() {
+        let e = WorkloadEntry::parse_cli("ensembling:n-requests=200:max-out=64:arrival=30")
+            .unwrap();
+        assert_eq!(e.app, AppSpec::ensembling(200, 64));
+        assert_eq!(e.arrival, 30.0);
+        assert_eq!(e.weight, 1.0);
+        let e = WorkloadEntry::parse_cli("chain-summary:n_docs=5:weight=2.5:seed=11").unwrap();
+        assert_eq!(e.app, AppSpec::chain_summary(5, 2, 256));
+        assert_eq!(e.weight, 2.5);
+        assert_eq!(e.seed, Some(11));
+        // Inapplicable app knobs are rejected by the app builder itself.
+        assert!(WorkloadEntry::parse_cli("ensembling:n-docs=5").is_err());
+        // Unknown keys and bad values error, never silently default.
+        assert!(WorkloadEntry::parse_cli("ensembling:bogus=1").is_err());
+        assert!(WorkloadEntry::parse_cli("ensembling:arrival=soon").is_err());
+        assert!(WorkloadEntry::parse_cli("").is_err());
+        assert!(WorkloadEntry::parse_cli("nonsense-app").is_err());
+    }
+}

@@ -107,7 +107,7 @@ fn online_knobs_flow_from_config_json_to_the_report() {
         .online_weight(cfg.online_weight)
         .build()
         .unwrap();
-    let report = session.run(&cfg.app).unwrap();
+    let report = session.run(cfg.app.as_ref().unwrap()).unwrap();
     let j = report.to_json();
     assert!(j.contains("\"online\":{"), "{j}");
     assert!(j.contains("\"replans\":"), "{j}");

@@ -114,7 +114,8 @@ fn spec_round_trips_through_config_json_and_runs() {
     // A full experiment config carrying a custom graph: parse -> to_json
     // -> parse equality, then run it end to end.
     let cfg = ExperimentConfig {
-        app: small_custom_spec(),
+        app: Some(small_custom_spec()),
+        workload: None,
         policy: "round-robin".to_string(),
         backend: "sim".to_string(),
         artifacts: None,
@@ -140,7 +141,7 @@ fn spec_round_trips_through_config_json_and_runs() {
         .seed(back.seed)
         .build()
         .unwrap();
-    let report = session.run(&back.app).unwrap();
+    let report = session.run(back.app.as_ref().unwrap()).unwrap();
     assert_eq!(report.policy, "round-robin");
     assert_eq!(report.scenario, "triad");
     assert!(report.inference_time > 0.0);

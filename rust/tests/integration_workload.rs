@@ -1,0 +1,158 @@
+//! End-to-end tests of the multi-app workload layer: legacy-Mixed
+//! bit-compatibility, mid-run arrivals through the forced-replan path,
+//! per-app reporting, and every policy running workloads unchanged.
+
+use samullm::apps;
+use samullm::cluster::ClusterSpec;
+use samullm::harness::staggered_pair_workload;
+use samullm::policy;
+use samullm::runner::{run_policy, run_workload, RunOpts};
+use samullm::session::SamuLlm;
+use samullm::spec::{AppSpec, WorkloadEntry, WorkloadSpec};
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::a100_node(8)
+}
+
+#[test]
+fn two_entry_workload_reproduces_legacy_mixed_bit_for_bit() {
+    // The compat contract: a 2-entry workload of (chain-summary,
+    // ensembling) at arrival 0, seeded exactly like the legacy builder
+    // (entry 1 = seed ^ ENSEMBLE_SEED_SALT), must produce the same
+    // numbers as `AppSpec::Mixed` on seed 42 — same composed graph, same
+    // workloads, same stage sequence, bit-equal clocks.
+    let seed = 42u64;
+    let wl = WorkloadSpec::new(vec![
+        WorkloadEntry {
+            app: AppSpec::chain_summary(12, 4, 300),
+            arrival: 0.0,
+            weight: 1.0,
+            seed: Some(seed),
+        },
+        WorkloadEntry {
+            app: AppSpec::ensembling(100, 128),
+            arrival: 0.0,
+            weight: 1.0,
+            seed: Some(seed ^ apps::mixed::ENSEMBLE_SEED_SALT),
+        },
+    ]);
+    let ws = wl.build(seed).unwrap();
+    let legacy = AppSpec::mixed(12, 100, 300, 128, 4).build(seed).unwrap();
+
+    // Structural identity of the composition.
+    assert_eq!(ws.scenario.graph.n_nodes(), legacy.graph.n_nodes());
+    assert_eq!(ws.scenario.graph.edges, legacy.graph.edges);
+    for (a, b) in ws.scenario.workloads.iter().zip(&legacy.workloads) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(
+                (x.id, x.input_len, x.true_output_len),
+                (y.id, y.input_len, y.true_output_len)
+            );
+            assert_eq!(x.dep, y.dep);
+        }
+    }
+
+    // Numerical identity of the run.
+    let opts = RunOpts { seed, ..RunOpts::default() };
+    let joint = run_workload("ours", &ws, &cluster(), &opts);
+    let mixed = run_policy("ours", &legacy, &cluster(), &opts);
+    assert_eq!(joint.inference_time.to_bits(), mixed.inference_time.to_bits());
+    assert_eq!(
+        joint.estimated_inference_time.to_bits(),
+        mixed.estimated_inference_time.to_bits()
+    );
+    assert_eq!(joint.n_stages, mixed.n_stages);
+    for (a, b) in joint.timeline.iter().zip(&mixed.timeline) {
+        assert_eq!(a.start.to_bits(), b.start.to_bits());
+        assert_eq!(a.end.to_bits(), b.end.to_bits());
+        assert_eq!(a.entries, b.entries);
+    }
+    // Only the workload run carries the per-app section.
+    assert!(mixed.workload.is_none());
+    let w = joint.workload.expect("workload section");
+    assert_eq!(w.arrivals, 0);
+    assert_eq!(w.arrival_replans, 0);
+    assert_eq!(w.per_app.len(), 2);
+}
+
+#[test]
+fn arrival_triggers_forced_replan_and_per_app_report() {
+    let wl = staggered_pair_workload(10, 120, 60.0);
+    let ws = wl.build(42).unwrap();
+    let opts = RunOpts { seed: 42, ..RunOpts::default() };
+    let r = run_workload("ours", &ws, &cluster(), &opts);
+    let w = r.workload.expect("workload section");
+    assert_eq!(w.arrivals, 1, "the ensembling app arrived mid-run");
+    assert!(w.arrival_replans >= 1, "arrival must force a re-plan");
+    assert_eq!(w.per_app.len(), 2);
+    let late = &w.per_app[1];
+    assert_eq!(late.arrival, 60.0);
+    assert_eq!(late.completed, late.n_requests, "late app ran to completion");
+    assert!(late.finish > late.arrival, "work happens only after arrival");
+    assert!((late.makespan - (late.finish - late.arrival)).abs() < 1e-12);
+    let early = &w.per_app[0];
+    assert_eq!(early.completed, early.n_requests);
+    assert!(early.makespan > 0.0);
+    // No completion of the late app predates its arrival: its stretch is
+    // bounded by the global makespan measured from its arrival.
+    assert!(late.finish <= r.inference_time + 1e-9);
+    // The run is deterministic.
+    let again = run_workload("ours", &ws, &cluster(), &opts);
+    assert_eq!(r.inference_time.to_bits(), again.inference_time.to_bits());
+    assert_eq!(
+        again.workload.unwrap().arrival_replans,
+        w.arrival_replans
+    );
+}
+
+#[test]
+fn arrival_replans_surface_in_online_stats_when_refinement_is_on() {
+    let wl = staggered_pair_workload(8, 80, 50.0);
+    let ws = wl.build(7).unwrap();
+    let opts = RunOpts { seed: 7, online_refinement: true, ..RunOpts::default() };
+    let r = run_workload("ours", &ws, &cluster(), &opts);
+    let w = r.workload.as_ref().expect("workload section");
+    assert_eq!(w.arrivals, 1);
+    assert!(w.arrival_replans >= 1);
+    let online = r.online.expect("online stats with refinement on");
+    assert!(
+        online.replans >= w.arrival_replans,
+        "forced arrival replans count into the replan total: {online:?}"
+    );
+}
+
+#[test]
+fn all_policies_run_staggered_workloads_unchanged() {
+    let wl = staggered_pair_workload(6, 60, 40.0);
+    let ws = wl.build(3).unwrap();
+    let opts = RunOpts { seed: 3, ..RunOpts::default() };
+    for p in policy::names() {
+        let r = run_workload(p, &ws, &cluster(), &opts);
+        assert!(r.inference_time > 0.0, "{p}");
+        let w = r.workload.expect("workload section");
+        assert_eq!(w.arrivals, 1, "{p}");
+        assert_eq!(w.per_app.len(), 2, "{p}");
+        for a in &w.per_app {
+            assert_eq!(a.completed, a.n_requests, "{p}: app {} incomplete", a.app_id);
+        }
+        if p != "ours" {
+            assert_eq!(w.arrival_replans, 0, "{p}: baselines never replan");
+        }
+        for s in &r.timeline {
+            assert!(s.gpus_used() <= 8, "{p} stage over budget");
+        }
+    }
+}
+
+#[test]
+fn session_workload_gantt_labels_lanes_by_app() {
+    let session = SamuLlm::builder().gpus(8).seed(5).build().unwrap();
+    let wl = staggered_pair_workload(5, 40, 0.0);
+    let r = session.run_workload(&wl).unwrap();
+    let g = samullm::metrics::gantt::render(&r, 60);
+    assert!(g.contains("a0 n"), "{g}");
+    assert!(g.contains("a1 n"), "{g}");
+    assert!(g.contains("workload: arrivals=0"), "{g}");
+    assert!(g.contains("makespan="), "{g}");
+}

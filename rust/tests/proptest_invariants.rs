@@ -369,3 +369,78 @@ fn exec_state_progress_is_monotone() {
         Ok(())
     });
 }
+
+#[test]
+fn compose_preserves_counts_edges_acyclicity_and_provenance() {
+    // AppGraph::compose is a disjoint union: node/edge counts add up,
+    // acyclicity survives, part order is preserved, and the
+    // (app, local_id) provenance stamped on every node round-trips back
+    // to the exact part node it came from.
+    let registry = Registry::paper();
+    let models: Vec<&str> = registry.names();
+    quickprop::run(40, 0xC0A7, |rng| {
+        let n_apps = rng.range_usize(1, 5);
+        let mut parts: Vec<AppGraph> = vec![];
+        for _ in 0..n_apps {
+            let n = rng.range_usize(1, 7);
+            let mut g = AppGraph::default();
+            for i in 0..n {
+                let m = *rng.choice(&models);
+                g.add_node(m, &format!("n{i}"), 32 + rng.range_u64(0, 200) as u32);
+            }
+            // Forward-only random edges: acyclic by construction.
+            for t in 1..n {
+                if rng.range_u64(0, 2) == 1 {
+                    let f = rng.range_usize(0, t);
+                    g.add_edge(f, t);
+                }
+            }
+            parts.push(g);
+        }
+        let refs: Vec<&AppGraph> = parts.iter().collect();
+        let g = AppGraph::compose(&refs);
+        let want_nodes: usize = parts.iter().map(|p| p.n_nodes()).sum();
+        let want_edges: usize = parts.iter().map(|p| p.edges.len()).sum();
+        prop_assert!(g.n_nodes() == want_nodes, "nodes {} != {want_nodes}", g.n_nodes());
+        prop_assert!(g.edges.len() == want_edges, "edges {} != {want_edges}", g.edges.len());
+        prop_assert!(g.is_acyclic(), "composition introduced a cycle");
+        // Provenance round-trip, walking parts in order.
+        let mut offset = 0usize;
+        for (app, part) in parts.iter().enumerate() {
+            for (i, local) in part.nodes.iter().enumerate() {
+                let n = &g.nodes[offset + i];
+                prop_assert!(n.app == app, "node {}: app {} != {app}", n.id, n.app);
+                prop_assert!(
+                    n.local_id == i,
+                    "node {}: local_id {} != {i}",
+                    n.id,
+                    n.local_id
+                );
+                prop_assert!(
+                    n.model == local.model && n.label == local.label
+                        && n.max_out == local.max_out,
+                    "node {}: payload mismatch",
+                    n.id
+                );
+            }
+            offset += part.n_nodes();
+        }
+        // Every edge stays inside its own app (disjoint union).
+        for &(f, t) in &g.edges {
+            prop_assert!(
+                g.nodes[f].app == g.nodes[t].app,
+                "edge ({f},{t}) crosses apps"
+            );
+        }
+        // nodes_by_app partitions the node set in id order.
+        let groups = g.nodes_by_app();
+        prop_assert!(groups.len() == n_apps, "groups {} != {n_apps}", groups.len());
+        let mut seen: Vec<usize> = groups.concat();
+        seen.sort_unstable();
+        prop_assert!(
+            seen == (0..want_nodes).collect::<Vec<_>>(),
+            "nodes_by_app is not a partition"
+        );
+        Ok(())
+    });
+}
