@@ -1,0 +1,182 @@
+//! Open-loop traffic benchmarks: (1) open-loop serving vs submitting the
+//! same request population as one closed-loop batch — the queueing-delay
+//! price of arrival pacing and the admission queue; (2) weighted fair
+//! share at 2:1 vs unweighted on two identical overloaded streams — the
+//! weight must measurably shift p99 latency between the apps. Writes
+//! `BENCH_traffic.json`; `--smoke` shrinks windows and sample counts to
+//! CI size.
+
+use samullm::cluster::ClusterSpec;
+use samullm::harness::poisson_pair_traffic;
+use samullm::metrics::RunReport;
+use samullm::runner::{run_traffic, run_workload, RunOpts};
+use samullm::spec::{AppSpec, ArrivalSpec, TrafficEntry, TrafficSpec, WorkloadEntry, WorkloadSpec};
+use samullm::traffic::QueuePolicy;
+use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
+
+const SEED: u64 = 42;
+
+fn opts() -> RunOpts {
+    RunOpts { seed: SEED, ..RunOpts::default() }
+}
+
+/// Open-loop: the paced streams through the admission queue. Closed-loop:
+/// the same two apps as a batch workload, everything present at t = 0.
+/// The contrast prices the serving dynamics (queueing + pacing) against
+/// pure batch throughput on identical hardware.
+fn open_vs_closed(smoke: bool, cluster: &ClusterSpec, g: &mut BenchGroup) -> Json {
+    let duration = if smoke { 12.0 } else { 60.0 };
+    let spec = poisson_pair_traffic(1.5, 1.0, 2.0, duration);
+    let ts = spec.build(SEED).expect("valid traffic mix");
+    let mut open: Option<RunReport> = None;
+    let open_wall = g
+        .bench("open_vs_closed/open_loop", || {
+            open = Some(run_traffic("ours", &ts, cluster, &opts()));
+        })
+        .median;
+    let wl = WorkloadSpec {
+        name: "closed-pair".into(),
+        entries: spec
+            .entries
+            .iter()
+            .map(|e| WorkloadEntry::new(e.app.clone()))
+            .collect(),
+    };
+    let ws = wl.build(SEED).expect("valid workload");
+    let mut closed: Option<RunReport> = None;
+    let closed_wall = g
+        .bench("open_vs_closed/closed_loop", || {
+            closed = Some(run_workload("ours", &ws, cluster, &opts()));
+        })
+        .median;
+    let open = open.expect("bench ran at least one sample");
+    let closed = closed.expect("bench ran at least one sample");
+    let t = open.traffic.as_ref().expect("traffic section");
+    println!(
+        "open vs closed: open-loop served {} jobs in {:.1}s, closed-loop batch {:.1}s",
+        t.admitted, open.inference_time, closed.inference_time
+    );
+    let per_app: Vec<Json> = t
+        .per_app
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("name", Json::Str(a.name.clone())),
+                ("admitted", Json::Num(a.admitted as f64)),
+                ("ttft_mean_s", opt_num(a.ttft_mean)),
+                ("latency_p50_s", opt_num(a.latency_p50)),
+                ("latency_p99_s", opt_num(a.latency_p99)),
+                ("slo_attainment", opt_num(a.slo_attainment)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("window_s", Json::Num(duration)),
+        ("open_inference_s", Json::Num(open.inference_time)),
+        ("closed_inference_s", Json::Num(closed.inference_time)),
+        ("offered", Json::Num(t.offered as f64)),
+        ("admitted", Json::Num(t.admitted as f64)),
+        ("queue_depth_mean", Json::Num(t.queue_depth_mean)),
+        ("per_app", Json::Arr(per_app)),
+        ("open_wall_s", Json::Num(open_wall)),
+        ("closed_wall_s", Json::Num(closed_wall)),
+    ])
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+/// Two identical overloaded streams; one run gives app 0 weight 2, the
+/// control run keeps both at weight 1. The weighted run must shift p99
+/// latency toward the favoured app.
+fn weighted_vs_unweighted(smoke: bool, cluster: &ClusterSpec, g: &mut BenchGroup) -> Json {
+    let duration = if smoke { 10.0 } else { 45.0 };
+    let mix = |weight_a: f64| {
+        let entry = |weight: f64| TrafficEntry {
+            app: AppSpec::ensembling(24, 96),
+            process: ArrivalSpec::Poisson { rate: 2.5 },
+            weight,
+            slo: Some(30.0),
+            seed: Some(7),
+        };
+        TrafficSpec {
+            name: format!("fairness-w{weight_a:.0}"),
+            entries: vec![entry(weight_a), entry(1.0)],
+            duration,
+            warmup: 0.0,
+            queue_capacity: 2,
+            queue_policy: QueuePolicy::Defer,
+            admit_quantum: 1,
+        }
+    };
+    let run = |label: &str, weight_a: f64, g: &mut BenchGroup| {
+        let ts = mix(weight_a).build(SEED).expect("valid traffic mix");
+        let mut report: Option<RunReport> = None;
+        let wall = g
+            .bench(&format!("fairness/{label}"), || {
+                report = Some(run_traffic("round-robin", &ts, cluster, &opts()));
+            })
+            .median;
+        (report.expect("bench ran at least one sample"), wall)
+    };
+    let (weighted, weighted_wall) = run("weighted_2to1", 2.0, g);
+    let (flat, flat_wall) = run("unweighted", 1.0, g);
+    let wt = weighted.traffic.as_ref().expect("traffic section");
+    let ft = flat.traffic.as_ref().expect("traffic section");
+    let p99 = |t: &samullm::metrics::latency::TrafficReport, app: usize| {
+        t.per_app[app].latency_p99.unwrap_or(f64::NAN)
+    };
+    let weighted_gap = p99(wt, 1) - p99(wt, 0);
+    let flat_gap = p99(ft, 1) - p99(ft, 0);
+    println!(
+        "fairness: weighted p99 app0 {:.2}s / app1 {:.2}s (gap {:.2}s), \
+         unweighted gap {:.2}s",
+        p99(wt, 0),
+        p99(wt, 1),
+        weighted_gap,
+        flat_gap
+    );
+    Json::obj(vec![
+        ("window_s", Json::Num(duration)),
+        ("weighted_p99_app0_s", Json::Num(p99(wt, 0))),
+        ("weighted_p99_app1_s", Json::Num(p99(wt, 1))),
+        ("unweighted_p99_app0_s", Json::Num(p99(ft, 0))),
+        ("unweighted_p99_app1_s", Json::Num(p99(ft, 1))),
+        ("weighted_p99_gap_s", Json::Num(weighted_gap)),
+        ("unweighted_p99_gap_s", Json::Num(flat_gap)),
+        (
+            "weight_shifts_p99",
+            Json::Bool(weighted_gap > flat_gap && p99(wt, 0) < p99(wt, 1)),
+        ),
+        ("weighted_deferred", Json::Num(wt.deferred as f64)),
+        ("weighted_wall_s", Json::Num(weighted_wall)),
+        ("unweighted_wall_s", Json::Num(flat_wall)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cluster = ClusterSpec::a100_node(8);
+    let mut g = BenchGroup::new("traffic");
+    g.sample_size(if smoke { 3 } else { 5 });
+
+    let open_closed = open_vs_closed(smoke, &cluster, &mut g);
+    let fairness = weighted_vs_unweighted(smoke, &cluster, &mut g);
+    g.finish();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("traffic".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("open_vs_closed", open_closed),
+        ("fairness", fairness),
+    ])
+    .to_string();
+    std::fs::write("BENCH_traffic.json", format!("{doc}\n"))
+        .expect("write BENCH_traffic.json");
+    println!("wrote BENCH_traffic.json");
+}

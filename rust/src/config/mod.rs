@@ -12,19 +12,24 @@ use anyhow::{anyhow, Result};
 use crate::costmodel::online;
 use crate::exec;
 use crate::policy;
-use crate::spec::{AppSpec, WorkloadSpec};
+use crate::spec::{AppSpec, TrafficSpec, WorkloadSpec};
 use crate::util::json::Json;
 
 /// A complete, replayable experiment description. Exactly one of `app`
-/// (a single application) or `workload` (a multi-app workload with
-/// per-entry arrivals/weights/seeds) is set.
+/// (a single application), `workload` (a multi-app batch workload with
+/// per-entry arrivals/weights/seeds) or `traffic` (an open-loop serving
+/// mix with per-app arrival processes) is set.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     /// Single-app run: one of the paper's apps or a custom graph
-    /// (`None` when `workload` is set).
+    /// (`None` when `workload` or `traffic` is set).
     pub app: Option<AppSpec>,
-    /// Multi-app run: a declarative workload (`None` when `app` is set).
+    /// Multi-app batch run: a declarative workload (`None` when `app` or
+    /// `traffic` is set).
     pub workload: Option<WorkloadSpec>,
+    /// Open-loop serving run: per-app arrival streams through the bounded
+    /// admission queue (`None` when `app` or `workload` is set).
+    pub traffic: Option<TrafficSpec>,
     /// Canonical policy name (aliases accepted on parse).
     pub policy: String,
     /// Canonical execution backend name (`"sim"` or `"pjrt"`; aliases
@@ -74,6 +79,13 @@ impl ExperimentConfig {
                     None => Json::Null,
                 },
             ),
+            (
+                "traffic",
+                match &self.traffic {
+                    Some(t) => t.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("policy", Json::Str(self.policy.clone())),
             ("backend", Json::Str(self.backend.clone())),
             (
@@ -97,9 +109,9 @@ impl ExperimentConfig {
     }
 
     /// Parse a config document; missing switches keep the seed defaults.
-    /// Exactly one of `app` / `workload` must be present (the workload
-    /// value may be a `{"name", "entries"}` object or a bare entry
-    /// array).
+    /// Exactly one of `app` / `workload` / `traffic` must be present (the
+    /// workload/traffic values may be `{"name", "entries", ...}` objects
+    /// or bare entry arrays).
     pub fn from_json(s: &str) -> Result<Self> {
         let v = Json::parse(s).map_err(|e| anyhow!("bad config json: {e}"))?;
         let app = match v.get("app") {
@@ -110,16 +122,23 @@ impl ExperimentConfig {
             Some(Json::Null) | None => None,
             Some(w) => Some(WorkloadSpec::from_json(w)?),
         };
-        match (&app, &workload) {
-            (None, None) => return Err(anyhow!("config needs an app or a workload")),
-            (Some(_), Some(_)) => {
-                return Err(anyhow!("config must set app or workload, not both"))
+        let traffic = match v.get("traffic") {
+            Some(Json::Null) | None => None,
+            Some(t) => Some(TrafficSpec::from_json(t)?),
+        };
+        match app.is_some() as u8 + workload.is_some() as u8 + traffic.is_some() as u8 {
+            0 => return Err(anyhow!("config needs an app, a workload or a traffic mix")),
+            1 => {}
+            _ => {
+                return Err(anyhow!(
+                    "config must set exactly one of app / workload / traffic"
+                ))
             }
-            _ => {}
         }
         Ok(ExperimentConfig {
             app,
             workload,
+            traffic,
             policy: policy::canonical(
                 v.get("policy").and_then(|p| p.as_str()).unwrap_or("samullm"),
             )?
@@ -166,6 +185,7 @@ mod tests {
         let c = ExperimentConfig {
             app: Some(AppSpec::ensembling(1000, 256)),
             workload: None,
+            traffic: None,
             policy: "ours".to_string(),
             backend: "pjrt".to_string(),
             artifacts: Some("custom/artifacts".to_string()),
@@ -243,6 +263,7 @@ mod tests {
             let c = ExperimentConfig {
                 app: Some(app.clone()),
                 workload: None,
+                traffic: None,
                 policy: "min-heuristic".to_string(),
                 backend: "sim".to_string(),
                 artifacts: None,
@@ -270,11 +291,73 @@ mod tests {
             ExperimentConfig::from_json(r#"{"app":{"kind":"ensembling"},"policy":"fifo"}"#)
                 .is_err()
         );
-        // Neither app nor workload, or both at once, is an error.
+        // None of app/workload/traffic, or more than one at once, errors.
         assert!(ExperimentConfig::from_json(r#"{"policy":"ours"}"#).is_err());
         let both = r#"{"app":{"kind":"ensembling"},
                        "workload":[{"app":{"kind":"ensembling"}}]}"#;
         assert!(ExperimentConfig::from_json(both).is_err());
+        let both = r#"{"app":{"kind":"ensembling"},
+                       "traffic":[{"app":{"kind":"ensembling"},
+                                   "process":{"kind":"poisson","rate":2}}]}"#;
+        assert!(ExperimentConfig::from_json(both).is_err());
+    }
+
+    #[test]
+    fn traffic_config_roundtrips_and_replaces_app() {
+        use crate::spec::{ArrivalSpec, TrafficEntry, TrafficSpec};
+        let c = ExperimentConfig {
+            app: None,
+            workload: None,
+            traffic: Some(TrafficSpec {
+                name: "mix".into(),
+                entries: vec![
+                    TrafficEntry::poisson(AppSpec::ensembling(40, 96), 4.0),
+                    TrafficEntry {
+                        app: AppSpec::chain_summary(8, 1, 200),
+                        process: ArrivalSpec::OnOff {
+                            rate_on: 6.0,
+                            rate_off: 0.5,
+                            mean_on: 10.0,
+                            mean_off: 20.0,
+                        },
+                        weight: 2.0,
+                        slo: Some(45.0),
+                        seed: Some(11),
+                    },
+                ],
+                duration: 90.0,
+                warmup: 10.0,
+                queue_capacity: 16,
+                queue_policy: crate::traffic::QueuePolicy::Defer,
+                admit_quantum: 4,
+            }),
+            policy: "ours".to_string(),
+            backend: "sim".to_string(),
+            artifacts: None,
+            n_gpus: 8,
+            seed: 42,
+            no_preemption: false,
+            known_output_lengths: false,
+            threads: 0,
+            sim_cache: true,
+            online_refinement: false,
+            replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
+            online_weight: online::DEFAULT_OBS_WEIGHT,
+        };
+        let text = c.to_json();
+        let back = ExperimentConfig::from_json(&text).unwrap();
+        assert!(back.app.is_none() && back.workload.is_none());
+        assert_eq!(back.traffic, c.traffic);
+        assert_eq!(back.to_json(), text, "serialisation is stable");
+        // The bare-array shorthand parses with default window/queue knobs.
+        let j = r#"{"traffic":[{"app":{"kind":"ensembling"},
+                                "process":{"kind":"poisson","rate":5}}],
+                    "policy":"min"}"#;
+        let cfg = ExperimentConfig::from_json(j).unwrap();
+        let t = cfg.traffic.unwrap();
+        assert_eq!(t.entries.len(), 1);
+        assert_eq!(t.duration, 120.0);
+        assert_eq!(cfg.policy, "min-heuristic");
     }
 
     #[test]
@@ -294,6 +377,7 @@ mod tests {
                     },
                 ],
             }),
+            traffic: None,
             policy: "ours".to_string(),
             backend: "sim".to_string(),
             artifacts: None,

@@ -120,6 +120,75 @@ pub fn staggered_pair_workload(
     }
 }
 
+/// An open-loop Poisson pair for traffic experiments: two small two-node
+/// custom apps (distinct 6-13B models, synthetic template pools) with
+/// Poisson arrivals at `rate_a`/`rate_b` requests per second, weights
+/// `weight_a`:1, a deliberately tight admission queue (capacity 8, defer
+/// on overflow, quantum 2 per stage boundary) so backlog forms and the
+/// weighted fair share is visible in the latency percentiles, and a 60 s
+/// SLO on both streams. Shared by `benches/bench_traffic.rs` and
+/// `tests/integration_traffic.rs`, so the CI guard and the published
+/// `BENCH_traffic.json` numbers measure the exact same mixture.
+pub fn poisson_pair_traffic(
+    rate_a: f64,
+    rate_b: f64,
+    weight_a: f64,
+    duration: f64,
+) -> crate::spec::TrafficSpec {
+    use crate::spec::{ArrivalSpec, NodeSpec, TrafficEntry, TrafficSpec, WorkloadGen};
+    use crate::traffic::QueuePolicy;
+    let app = |name: &str, gen: &str, judge: &str| AppSpec::Custom {
+        name: name.into(),
+        nodes: vec![
+            NodeSpec {
+                model: gen.into(),
+                label: "gen".into(),
+                max_out: 96,
+                workload: WorkloadGen::Synthetic {
+                    n_requests: 32,
+                    input_min: 10,
+                    input_max: 80,
+                },
+            },
+            NodeSpec {
+                model: judge.into(),
+                label: "judge".into(),
+                max_out: 64,
+                workload: WorkloadGen::Synthetic {
+                    n_requests: 32,
+                    input_min: 10,
+                    input_max: 60,
+                },
+            },
+        ],
+        edges: vec![],
+    };
+    TrafficSpec {
+        name: format!("poisson-pair-{rate_a:.0}x{rate_b:.0}-w{weight_a:.0}"),
+        entries: vec![
+            TrafficEntry {
+                app: app("stream-a", "mistral-7b-instruct", "chatglm3-6b"),
+                process: ArrivalSpec::Poisson { rate: rate_a },
+                weight: weight_a,
+                slo: Some(60.0),
+                seed: None,
+            },
+            TrafficEntry {
+                app: app("stream-b", "vicuna-13b-v1.5", "alpaca-13b"),
+                process: ArrivalSpec::Poisson { rate: rate_b },
+                weight: 1.0,
+                slo: Some(60.0),
+                seed: None,
+            },
+        ],
+        duration,
+        warmup: 0.0,
+        queue_capacity: 8,
+        queue_policy: QueuePolicy::Defer,
+        admit_quantum: 2,
+    }
+}
+
 /// Scenario construction goes through the declarative spec layer only.
 fn scenario(spec: AppSpec, seed: u64) -> Scenario {
     spec.build(seed).expect("harness specs are valid")

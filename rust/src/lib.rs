@@ -22,6 +22,14 @@
 //!   jointly planned run ([`session::SamuLlm::run_workload`], CLI
 //!   `samullm workload`) — apps arriving mid-run enter through the
 //!   drift/replan path and the report gains per-app makespans.
+//! * [`traffic`] — the open-loop serving layer behind
+//!   [`spec::TrafficSpec`]: seeded arrival processes (Poisson, bursty
+//!   on-off, trace replay), a bounded admission queue with reject/defer
+//!   policies, and virtual-time weighted fair-share admission that makes
+//!   per-app `weight` a real scheduling priority
+//!   ([`session::SamuLlm::run_traffic`], CLI `samullm traffic`); runs
+//!   report per-app TTFT/TPOT, latency percentiles and SLO attainment
+//!   ([`metrics::latency`]).
 //! * [`policy`] — the pluggable [`policy::Policy`] trait and the builtin
 //!   implementations (`ours`, `max-heuristic`, `min-heuristic`,
 //!   `round-robin`) behind a string registry.
@@ -94,6 +102,7 @@ pub mod runtime;
 pub mod serve;
 pub mod session;
 pub mod spec;
+pub mod traffic;
 pub mod util;
 pub mod workload;
 
@@ -111,7 +120,9 @@ pub mod prelude {
     pub use crate::policy::{self, Policy};
     pub use crate::runner::{self, Scenario};
     pub use crate::session::SamuLlm;
-    pub use crate::spec::{AppSpec, WorkloadEntry, WorkloadSpec};
+    pub use crate::spec::{
+        AppSpec, ArrivalSpec, TrafficEntry, TrafficSpec, WorkloadEntry, WorkloadSpec,
+    };
     pub use crate::util::rng::Rng;
     pub use crate::workload::Request;
 }

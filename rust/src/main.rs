@@ -8,6 +8,9 @@
 //!                  [--threads T] [--no-sim-cache]
 //!                  [--online-refinement] [--replan-threshold X]
 //!                  [--online-weight W]
+//!   samullm traffic --app NAME[:key=value]... [--duration S] [--warmup S]
+//!                  [--queue-capacity C] [--queue-policy reject|defer]
+//!                  [--admit-quantum Q] [...run flags]
 //!   samullm config <file.json>
 //!   samullm serve  [--n-requests N] [--prompt-len L] [--max-new T]
 //!                  [--artifacts DIR]
@@ -25,7 +28,8 @@ use samullm::config::ExperimentConfig;
 use samullm::metrics::gantt;
 use samullm::policy;
 use samullm::session::SamuLlm;
-use samullm::spec::{self, AppParams, WorkloadEntry, WorkloadSpec};
+use samullm::spec::{self, AppParams, TrafficEntry, TrafficSpec, WorkloadEntry, WorkloadSpec};
+use samullm::traffic::QueuePolicy;
 
 /// Tiny flag parser: `--key value` and boolean `--key`. A token after a
 /// flag counts as its value unless it is itself a flag; numeric tokens
@@ -256,6 +260,75 @@ fn cmd_workload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_traffic(args: &Args) -> Result<()> {
+    args.expect_flags(&[
+        "app",
+        "name",
+        "duration",
+        "warmup",
+        "queue-capacity",
+        "queue-policy",
+        "admit-quantum",
+        "policy",
+        "backend",
+        "artifacts",
+        "gpus",
+        "seed",
+        "no-preemption",
+        "threads",
+        "no-sim-cache",
+        "online-refinement",
+        "replan-threshold",
+        "online-weight",
+        "gantt",
+    ])?;
+    let descriptors = args.get_all("app");
+    if descriptors.is_empty() {
+        return Err(anyhow!(
+            "traffic needs at least one --app descriptor, e.g. \
+             --app ensembling:rate=5:weight=2 --app chain-summary:rate=1:slo=60"
+        ));
+    }
+    let entries = descriptors
+        .iter()
+        .map(|d| TrafficEntry::parse_cli(d.as_str()))
+        .collect::<Result<Vec<_>>>()?;
+    let mut traffic = TrafficSpec::new(entries);
+    traffic.name = args.get_str("name", "");
+    traffic.duration = args.get("duration", traffic.duration)?;
+    traffic.warmup = args.get("warmup", traffic.warmup)?;
+    traffic.queue_capacity = args.get("queue-capacity", traffic.queue_capacity)?;
+    if let Some(p) = args.last("queue-policy") {
+        traffic.queue_policy = QueuePolicy::parse(p)?;
+    }
+    traffic.admit_quantum = args.get("admit-quantum", traffic.admit_quantum)?;
+    let mut builder = SamuLlm::builder()
+        .gpus(args.get("gpus", 8)?)
+        .policy(&args.get_str("policy", "ours"))
+        .backend(&args.get_str("backend", "sim"))
+        .seed(args.get("seed", 42)?)
+        .no_preemption(args.has("no-preemption"))
+        .threads(args.get("threads", 0)?)
+        .sim_cache(!args.has("no-sim-cache"))
+        .online_refinement(args.has("online-refinement"));
+    if let Some(t) = args.get_opt("replan-threshold")? {
+        builder = builder.replan_threshold(t);
+    }
+    if let Some(w) = args.get_opt("online-weight")? {
+        builder = builder.online_weight(w);
+    }
+    if let Some(dir) = args.last("artifacts") {
+        builder = builder.artifacts_dir(dir.clone());
+    }
+    let session = builder.build()?;
+    let report = session.run_traffic(&traffic)?;
+    println!("{}", report.to_json());
+    if args.has("gantt") {
+        println!("{}", gantt::render(&report, 80));
+    }
+    Ok(())
+}
+
 fn cmd_config(path: &str) -> Result<()> {
     let cfg = ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?;
     let mut builder = SamuLlm::builder()
@@ -274,11 +347,12 @@ fn cmd_config(path: &str) -> Result<()> {
         builder = builder.artifacts_dir(dir.clone());
     }
     let session = builder.build()?;
-    let report = match (&cfg.app, &cfg.workload) {
-        (Some(app), None) => session.run(app)?,
-        (None, Some(workload)) => session.run_workload(workload)?,
+    let report = match (&cfg.app, &cfg.workload, &cfg.traffic) {
+        (Some(app), None, None) => session.run(app)?,
+        (None, Some(workload), None) => session.run_workload(workload)?,
+        (None, None, Some(traffic)) => session.run_traffic(traffic)?,
         // from_json enforces exactly-one; unreachable for parsed configs.
-        _ => return Err(anyhow!("config needs exactly one of app/workload")),
+        _ => return Err(anyhow!("config needs exactly one of app/workload/traffic")),
     };
     println!("{}", report.to_json());
     Ok(())
@@ -329,7 +403,7 @@ fn usage() -> String {
         .map(|b| format!("    {:<14} {}", b.name, b.about))
         .collect();
     format!(
-        "usage: samullm <run|workload|config|serve> [flags]\n\
+        "usage: samullm <run|workload|traffic|config|serve> [flags]\n\
          \n  samullm run    [--app A] [--policy P] [--backend B] [--n-requests N]\n\
          \x20                [--max-out M] [--n-docs D] [--eval-times E] [--gpus G]\n\
          \x20                [--seed S] [--no-preemption] [--known-lengths] [--gantt]\n\
@@ -341,11 +415,24 @@ fn usage() -> String {
          \x20                [--policy P] [--gpus G] [--seed S] [--gantt] [...run flags]\n\
          \x20                  N concurrent apps jointly planned on one cluster; per-app\n\
          \x20                  keys: the app's own knobs + arrival=T, seed=S, and weight=W\n\
-         \x20                  (recorded in the per-app report; not yet a scheduling\n\
-         \x20                  priority), e.g. --app ensembling:n-requests=2000 \\\n\
+         \x20                  (batch runs record weight in the per-app report; `samullm\n\
+         \x20                  traffic` turns it into a real admission priority),\n\
+         \x20                  e.g. --app ensembling:n-requests=2000 \\\n\
          \x20                       --app chain-summary:n-docs=100:arrival=30\n\
+         \x20 samullm traffic --app NAME[:key=value]... [--app ...] [--name N]\n\
+         \x20                [--duration S] [--warmup S] [--queue-capacity C]\n\
+         \x20                [--queue-policy reject|defer] [--admit-quantum Q]\n\
+         \x20                [--policy P] [--gpus G] [--seed S] [--gantt] [...run flags]\n\
+         \x20                  open-loop serving: per-app arrival processes (keys: rate=R\n\
+         \x20                  poisson | rate-on/mean-on/mean-off[/rate-off] bursty on-off\n\
+         \x20                  | trace=FILE replay) feed a bounded admission queue;\n\
+         \x20                  weight=W sets the app's weighted fair share, slo=S its\n\
+         \x20                  latency target; reports per-app TTFT/TPOT, p50/p99 latency\n\
+         \x20                  and SLO attainment, e.g. --app ensembling:rate=5:weight=2 \\\n\
+         \x20                       --app chain-summary:rate=1:slo=60 --duration 300\n\
          \x20 samullm config <file.json>   (custom graphs via kind=custom; multi-app\n\
-         \x20                               workloads via a top-level workload: [...])\n\
+         \x20                               workloads via a top-level workload: [...];\n\
+         \x20                               open-loop mixes via traffic: [...])\n\
          \x20 samullm serve  [--n-requests N] [--prompt-len L] [--max-new T] [--artifacts DIR]\n\
          \napps:\n{}\npolicies:\n{}\nbackends:\n{}",
         apps.join("\n"),
@@ -361,6 +448,7 @@ fn main() -> Result<()> {
     match cmd {
         "run" => cmd_run(&args),
         "workload" => cmd_workload(&args),
+        "traffic" => cmd_traffic(&args),
         "config" => {
             let path = args
                 .positional

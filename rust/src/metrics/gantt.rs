@@ -72,6 +72,41 @@ pub fn render(report: &RunReport, width: usize) -> String {
             ));
         }
     }
+    if let Some(t) = &report.traffic {
+        out.push_str(&format!(
+            "traffic: window={:.0}s warmup={:.0}s offered={} admitted={} rejected={} \
+             deferred={} depth mean={:.1} max={}\n",
+            t.duration,
+            t.warmup,
+            t.offered,
+            t.admitted,
+            t.rejected,
+            t.deferred,
+            t.queue_depth_mean,
+            t.queue_depth_max
+        ));
+        let fmt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.2}"),
+            None => "-".into(),
+        };
+        for a in &t.per_app {
+            let slo = match a.slo_attainment {
+                Some(x) => format!("{:.0}%", x * 100.0),
+                None => "-".into(),
+            };
+            out.push_str(&format!(
+                "  app {} {:<28} weight={:.1} ttft={}s tpot={}s p50={}s p99={}s slo={}\n",
+                a.app_id,
+                a.name,
+                a.weight,
+                fmt(a.ttft_mean),
+                fmt(a.tpot_mean),
+                fmt(a.latency_p50),
+                fmt(a.latency_p99),
+                slo
+            ));
+        }
+    }
     out
 }
 
@@ -117,6 +152,7 @@ mod tests {
             measured: None,
             online: None,
             workload: None,
+            traffic: None,
             n_gpus: 8,
         };
         let g = render(&report, 40);
@@ -179,5 +215,44 @@ mod tests {
         assert!(g.contains("workload: arrivals=1 arrival-replans=1"), "{g}");
         assert!(g.contains("app 1"), "{g}");
         assert!(g.contains("makespan="), "{g}");
+
+        // Traffic runs append the serving-metrics footer.
+        let mut with_traffic = with_workload;
+        with_traffic.traffic = Some(crate::metrics::latency::TrafficReport {
+            duration: 60.0,
+            warmup: 5.0,
+            offered: 40,
+            admitted: 36,
+            rejected: 4,
+            deferred: 0,
+            queue_depth_mean: 1.5,
+            queue_depth_max: 7,
+            per_app: vec![crate::metrics::latency::AppLatency {
+                app_id: 0,
+                name: "stream-a".into(),
+                weight: 2.0,
+                slo: Some(30.0),
+                offered: 40,
+                admitted: 36,
+                rejected: 4,
+                deferred: 0,
+                completed: 72,
+                ttft_mean: Some(1.25),
+                ttft_p99: Some(3.5),
+                tpot_mean: Some(0.04),
+                latency_p50: Some(8.0),
+                latency_p99: Some(21.5),
+                slo_attainment: Some(0.95),
+            }],
+        });
+        let g = render(&with_traffic, 40);
+        assert!(
+            g.contains(
+                "traffic: window=60s warmup=5s offered=40 admitted=36 rejected=4 \
+                 deferred=0 depth mean=1.5 max=7"
+            ),
+            "{g}"
+        );
+        assert!(g.contains("weight=2.0 ttft=1.25s tpot=0.04s p50=8.00s p99=21.50s slo=95%"), "{g}");
     }
 }

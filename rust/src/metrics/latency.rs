@@ -1,0 +1,403 @@
+//! Serving-latency metrics for open-loop traffic runs.
+//!
+//! Once arrivals are an ongoing process, makespan is the wrong objective:
+//! a traffic run is measured over its warmup+measurement window with the
+//! serving metrics — per-app TTFT (time to first token), TPOT (time per
+//! output token), p50/p99 request latency, and SLO attainment — collected
+//! in a [`TrafficReport`] that rides in
+//! [`RunReport::traffic`](crate::metrics::RunReport) and the Gantt
+//! footer.
+//!
+//! Conventions (one [`RequestSample`] per node-level request):
+//! * **latency** = `finish − arrival` (queue wait included),
+//! * **residence** = `finish − admit` (execution time after admission),
+//! * **TPOT** = `residence / L` with `L = max(output_len, 1)` — the
+//!   simulator resolves whole requests at stage boundaries, so the
+//!   per-token time is the residence spread over the generated tokens,
+//! * **TTFT** = `(admit − arrival) + residence / L` — queue wait plus one
+//!   token's worth of generation,
+//! * a sample is **in-window** iff its *arrival* lies in
+//!   `[warmup, warmup + duration)`; only in-window samples (and rejects)
+//!   are measured,
+//! * **SLO attainment** = in-window samples with `latency ≤ slo`, divided
+//!   by in-window samples *plus* in-window rejected requests (a dropped
+//!   request is a missed SLO, not a free pass).
+//!
+//! All percentiles go through
+//! [`util::stats::percentile_sorted`](crate::util::stats::percentile_sorted).
+
+use crate::traffic::QueueCounters;
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+/// One completed node-level request of a traffic run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestSample {
+    /// Owning app (index into the traffic mix).
+    pub app_id: usize,
+    /// Wall-clock arrival time of the job (seconds).
+    pub arrival: f64,
+    /// Time the job was admitted out of the queue.
+    pub admit: f64,
+    /// Time the request finished generating.
+    pub finish: f64,
+    /// Generated output tokens.
+    pub output_len: u32,
+}
+
+impl RequestSample {
+    /// End-to-end request latency: `finish − arrival`.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Time per output token: post-admission residence spread over the
+    /// generated tokens.
+    pub fn tpot(&self) -> f64 {
+        (self.finish - self.admit) / self.output_len.max(1) as f64
+    }
+
+    /// Time to first token: queue wait plus one token's generation time.
+    pub fn ttft(&self) -> f64 {
+        (self.admit - self.arrival) + self.tpot()
+    }
+}
+
+/// Per-app traffic metadata and counters fed into the report builder.
+#[derive(Debug, Clone)]
+pub struct AppTrafficStats {
+    /// The app's scenario name.
+    pub name: String,
+    /// Fair-share weight the run used.
+    pub weight: f64,
+    /// The app's latency SLO, if one was set.
+    pub slo: Option<f64>,
+    /// Job-level admission counters from the queue.
+    pub counters: QueueCounters,
+    /// Rejected *requests* (jobs × the app's node count) whose arrival
+    /// fell inside the measurement window — they count against SLO
+    /// attainment.
+    pub rejected_in_window: u64,
+}
+
+/// Per-app windowed serving metrics. Latency fields are `None` when no
+/// in-window sample completed (serialised as JSON `null`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppLatency {
+    /// Owning app.
+    pub app_id: usize,
+    /// The app's scenario name.
+    pub name: String,
+    /// Fair-share weight the run used.
+    pub weight: f64,
+    /// The app's latency SLO, if one was set.
+    pub slo: Option<f64>,
+    /// Jobs the arrival stream offered (whole horizon).
+    pub offered: u64,
+    /// Jobs admitted into execution (whole horizon).
+    pub admitted: u64,
+    /// Jobs dropped on overflow (whole horizon).
+    pub rejected: u64,
+    /// Jobs parked on overflow and run later (whole horizon).
+    pub deferred: u64,
+    /// In-window completed request samples.
+    pub completed: u64,
+    /// Mean time to first token.
+    pub ttft_mean: Option<f64>,
+    /// p99 time to first token.
+    pub ttft_p99: Option<f64>,
+    /// Mean time per output token.
+    pub tpot_mean: Option<f64>,
+    /// Median request latency.
+    pub latency_p50: Option<f64>,
+    /// p99 request latency.
+    pub latency_p99: Option<f64>,
+    /// Fraction of in-window requests (completed + rejected) within the
+    /// SLO; `None` when the app has no SLO or nothing was measured.
+    pub slo_attainment: Option<f64>,
+}
+
+/// The serving-metrics section of a traffic run's [`RunReport`]
+/// (`report.traffic` / the `"traffic"` JSON key).
+///
+/// [`RunReport`]: crate::metrics::RunReport
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficReport {
+    /// Measurement-window length in seconds.
+    pub duration: f64,
+    /// Warmup seconds before the window opened.
+    pub warmup: f64,
+    /// Jobs offered across all apps (whole horizon).
+    pub offered: u64,
+    /// Jobs admitted across all apps.
+    pub admitted: u64,
+    /// Jobs rejected across all apps.
+    pub rejected: u64,
+    /// Jobs deferred across all apps.
+    pub deferred: u64,
+    /// Mean admission-queue depth over the run's stage boundaries.
+    pub queue_depth_mean: f64,
+    /// Maximum admission-queue depth observed.
+    pub queue_depth_max: usize,
+    /// Per-app windowed metrics, indexed by app id.
+    pub per_app: Vec<AppLatency>,
+}
+
+impl TrafficReport {
+    /// Build the report: filter `samples` to the measurement window,
+    /// compute per-app TTFT/TPOT/latency percentiles (via
+    /// [`percentile_sorted`]) and SLO attainment, and total the queue
+    /// counters.
+    pub fn build(
+        duration: f64,
+        warmup: f64,
+        apps: Vec<AppTrafficStats>,
+        samples: &[RequestSample],
+        queue_depth_mean: f64,
+        queue_depth_max: usize,
+    ) -> Self {
+        let in_window =
+            |s: &&RequestSample| s.arrival >= warmup && s.arrival < warmup + duration;
+        let per_app = apps
+            .iter()
+            .enumerate()
+            .map(|(app_id, a)| {
+                let mine: Vec<&RequestSample> = samples
+                    .iter()
+                    .filter(|s| s.app_id == app_id)
+                    .filter(in_window)
+                    .collect();
+                let mut latencies: Vec<f64> = mine.iter().map(|s| s.latency()).collect();
+                let mut ttfts: Vec<f64> = mine.iter().map(|s| s.ttft()).collect();
+                latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+                ttfts.sort_by(|a, b| a.partial_cmp(b).expect("ttfts are finite"));
+                let mean = |xs: &[f64]| {
+                    (!xs.is_empty()).then(|| xs.iter().sum::<f64>() / xs.len() as f64)
+                };
+                let pct = |xs: &[f64], q: f64| {
+                    (!xs.is_empty()).then(|| percentile_sorted(xs, q))
+                };
+                let slo_attainment = a.slo.and_then(|slo| {
+                    let denom = latencies.len() as u64 + a.rejected_in_window;
+                    (denom > 0).then(|| {
+                        latencies.iter().filter(|&&l| l <= slo).count() as f64
+                            / denom as f64
+                    })
+                });
+                AppLatency {
+                    app_id,
+                    name: a.name.clone(),
+                    weight: a.weight,
+                    slo: a.slo,
+                    offered: a.counters.offered,
+                    admitted: a.counters.admitted,
+                    rejected: a.counters.rejected,
+                    deferred: a.counters.deferred,
+                    completed: mine.len() as u64,
+                    ttft_mean: mean(&ttfts),
+                    ttft_p99: pct(&ttfts, 0.99),
+                    tpot_mean: mean(&mine.iter().map(|s| s.tpot()).collect::<Vec<_>>()),
+                    latency_p50: pct(&latencies, 0.50),
+                    latency_p99: pct(&latencies, 0.99),
+                    slo_attainment,
+                }
+            })
+            .collect::<Vec<_>>();
+        TrafficReport {
+            duration,
+            warmup,
+            offered: per_app.iter().map(|a| a.offered).sum(),
+            admitted: per_app.iter().map(|a| a.admitted).sum(),
+            rejected: per_app.iter().map(|a| a.rejected).sum(),
+            deferred: per_app.iter().map(|a| a.deferred).sum(),
+            queue_depth_mean,
+            queue_depth_max,
+            per_app,
+        }
+    }
+
+    /// Serialize as the `"traffic"` section of the run-report JSON.
+    pub fn to_json(&self) -> Json {
+        let opt = |x: Option<f64>| x.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("duration", Json::Num(self.duration)),
+            ("warmup", Json::Num(self.warmup)),
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("deferred", Json::Num(self.deferred as f64)),
+            ("queue_depth_mean", Json::Num(self.queue_depth_mean)),
+            ("queue_depth_max", Json::Num(self.queue_depth_max as f64)),
+            (
+                "apps",
+                Json::Arr(
+                    self.per_app
+                        .iter()
+                        .map(|a| {
+                            Json::obj(vec![
+                                ("app", Json::Str(a.name.clone())),
+                                ("weight", Json::Num(a.weight)),
+                                ("slo", opt(a.slo)),
+                                ("offered", Json::Num(a.offered as f64)),
+                                ("admitted", Json::Num(a.admitted as f64)),
+                                ("rejected", Json::Num(a.rejected as f64)),
+                                ("deferred", Json::Num(a.deferred as f64)),
+                                ("completed", Json::Num(a.completed as f64)),
+                                ("ttft_mean", opt(a.ttft_mean)),
+                                ("ttft_p99", opt(a.ttft_p99)),
+                                ("tpot_mean", opt(a.tpot_mean)),
+                                ("latency_p50", opt(a.latency_p50)),
+                                ("latency_p99", opt(a.latency_p99)),
+                                ("slo_attainment", opt(a.slo_attainment)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(slo: Option<f64>, rejected_in_window: u64) -> AppTrafficStats {
+        AppTrafficStats {
+            name: "app".into(),
+            weight: 1.0,
+            slo,
+            counters: QueueCounters {
+                offered: 120,
+                admitted: 100,
+                rejected: 20,
+                deferred: 0,
+            },
+            rejected_in_window,
+        }
+    }
+
+    /// Latencies 1..=100 s: known percentile values under linear
+    /// interpolation (p50 = 50.5, p99 = 99.01 at pos 98.01).
+    fn ladder() -> Vec<RequestSample> {
+        (1..=100)
+            .map(|k| RequestSample {
+                app_id: 0,
+                arrival: 0.0,
+                admit: 0.0,
+                finish: k as f64,
+                output_len: 1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn p50_p99_on_known_distribution() {
+        let r =
+            TrafficReport::build(10.0, 0.0, vec![stats(None, 0)], &ladder(), 0.0, 0);
+        let a = &r.per_app[0];
+        assert_eq!(a.completed, 100);
+        assert!((a.latency_p50.unwrap() - 50.5).abs() < 1e-9, "{:?}", a.latency_p50);
+        assert!((a.latency_p99.unwrap() - 99.01).abs() < 1e-9, "{:?}", a.latency_p99);
+        // With zero queue wait and L = 1, TTFT == latency.
+        assert!((a.ttft_p99.unwrap() - 99.01).abs() < 1e-9);
+        assert!((a.ttft_mean.unwrap() - 50.5).abs() < 1e-9);
+        assert!((a.tpot_mean.unwrap() - 50.5).abs() < 1e-9);
+        assert_eq!(a.slo_attainment, None, "no SLO set");
+    }
+
+    #[test]
+    fn ttft_tpot_decomposition() {
+        // Arrive 0, admitted 2 (queue wait 2), finish 12 (residence 10),
+        // 5 tokens → TPOT 2, TTFT 2 + 2 = 4, latency 12.
+        let s = RequestSample {
+            app_id: 0,
+            arrival: 0.0,
+            admit: 2.0,
+            finish: 12.0,
+            output_len: 5,
+        };
+        assert!((s.tpot() - 2.0).abs() < 1e-12);
+        assert!((s.ttft() - 4.0).abs() < 1e-12);
+        assert!((s.latency() - 12.0).abs() < 1e-12);
+        // Zero-length outputs clamp L to 1 instead of dividing by zero.
+        let z = RequestSample { output_len: 0, ..s };
+        assert!((z.tpot() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_window_filters_by_arrival() {
+        let mk = |arrival: f64| RequestSample {
+            app_id: 0,
+            arrival,
+            admit: arrival,
+            finish: arrival + 1.0,
+            output_len: 1,
+        };
+        // Window [10, 20): 9.99 and 20.0 are out, 10.0 and 19.99 are in.
+        let samples = vec![mk(9.99), mk(10.0), mk(19.99), mk(20.0)];
+        let r = TrafficReport::build(10.0, 10.0, vec![stats(None, 0)], &samples, 0.0, 0);
+        assert_eq!(r.per_app[0].completed, 2);
+    }
+
+    #[test]
+    fn slo_attainment_counts_rejects_as_misses() {
+        // SLO 50 s over the 1..=100 ladder: 50 of 100 within. 100
+        // rejected in-window requests drag it to 50/200.
+        let r = TrafficReport::build(
+            10.0,
+            0.0,
+            vec![stats(Some(50.0), 100)],
+            &ladder(),
+            0.0,
+            0,
+        );
+        assert!((r.per_app[0].slo_attainment.unwrap() - 0.25).abs() < 1e-12);
+        // Without rejects: exactly half.
+        let r =
+            TrafficReport::build(10.0, 0.0, vec![stats(Some(50.0), 0)], &ladder(), 0.0, 0);
+        assert!((r.per_app[0].slo_attainment.unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_window_yields_nulls_not_panics() {
+        let r = TrafficReport::build(10.0, 0.0, vec![stats(Some(1.0), 0)], &[], 0.0, 0);
+        let a = &r.per_app[0];
+        assert_eq!(a.completed, 0);
+        assert_eq!(a.latency_p50, None);
+        assert_eq!(a.ttft_mean, None);
+        assert_eq!(a.slo_attainment, None);
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"latency_p50\":null"), "{json}");
+    }
+
+    #[test]
+    fn json_shape_and_totals() {
+        let mut apps = vec![stats(Some(50.0), 0), stats(None, 0)];
+        apps[1].name = "other".into();
+        apps[1].counters =
+            QueueCounters { offered: 10, admitted: 8, rejected: 0, deferred: 2 };
+        let samples: Vec<RequestSample> = ladder()
+            .into_iter()
+            .chain((1..=10).map(|k| RequestSample {
+                app_id: 1,
+                arrival: 0.0,
+                admit: 0.5,
+                finish: k as f64 + 0.5,
+                output_len: 4,
+            }))
+            .collect();
+        let r = TrafficReport::build(30.0, 0.0, apps, &samples, 1.5, 7);
+        assert_eq!(r.offered, 130);
+        assert_eq!(r.admitted, 108);
+        assert_eq!(r.rejected, 20);
+        assert_eq!(r.deferred, 2);
+        let json = r.to_json();
+        assert_eq!(json.get("queue_depth_max").and_then(|x| x.as_u64()), Some(7));
+        let apps = json.get("apps").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(apps.len(), 2);
+        assert_eq!(apps[1].get("app").and_then(|x| x.as_str()), Some("other"));
+        assert_eq!(apps[0].get("slo").and_then(|x| x.as_f64()), Some(50.0));
+        assert!(apps[0].get("ttft_p99").and_then(|x| x.as_f64()).is_some());
+    }
+}

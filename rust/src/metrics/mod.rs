@@ -1,6 +1,7 @@
 //! Run reports, GPU-idle accounting and Gantt rendering (§5's metrics).
 
 pub mod gantt;
+pub mod latency;
 
 use crate::costmodel::OnlineStats;
 use crate::exec::EventSummary;
@@ -160,6 +161,10 @@ pub struct RunReport {
     /// Multi-app workload accounting: arrivals, arrival-forced replans
     /// and per-app makespans (`None` on single-app runs).
     pub workload: Option<WorkloadReport>,
+    /// Open-loop serving metrics — per-app TTFT/TPOT, latency
+    /// percentiles, SLO attainment and admission-queue statistics
+    /// (`None` except on `samullm traffic` runs).
+    pub traffic: Option<latency::TrafficReport>,
     /// Cluster GPU count the run was scheduled on.
     pub n_gpus: u32,
 }
@@ -314,6 +319,13 @@ impl RunReport {
                 },
             ),
             (
+                "traffic",
+                match &self.traffic {
+                    None => Json::Null,
+                    Some(t) => t.to_json(),
+                },
+            ),
+            (
                 "measured",
                 match &self.measured {
                     None => Json::Null,
@@ -385,6 +397,7 @@ mod tests {
             measured: None,
             online: None,
             workload: None,
+            traffic: None,
             n_gpus: 8,
         }
     }
@@ -508,6 +521,47 @@ mod tests {
         assert!(j.contains("\"makespan\":70"), "{j}");
         assert!(j.contains("\"name\":\"ensembling-200\""), "{j}");
         assert!(j.contains("\"nodes\":[2,3]"), "{j}");
+    }
+
+    #[test]
+    fn json_reports_traffic_section() {
+        let mut r = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]);
+        let j = r.to_json();
+        assert!(j.contains("\"traffic\":null"), "{j}");
+        r.traffic = Some(latency::TrafficReport {
+            duration: 60.0,
+            warmup: 10.0,
+            offered: 50,
+            admitted: 45,
+            rejected: 5,
+            deferred: 0,
+            queue_depth_mean: 1.25,
+            queue_depth_max: 6,
+            per_app: vec![latency::AppLatency {
+                app_id: 0,
+                name: "stream-a".into(),
+                weight: 2.0,
+                slo: Some(60.0),
+                offered: 50,
+                admitted: 45,
+                rejected: 5,
+                deferred: 0,
+                completed: 90,
+                ttft_mean: Some(1.5),
+                ttft_p99: Some(4.0),
+                tpot_mean: Some(0.05),
+                latency_p50: Some(12.0),
+                latency_p99: Some(44.0),
+                slo_attainment: Some(0.9),
+            }],
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"traffic\":{"), "{j}");
+        assert!(j.contains("\"queue_depth_max\":6"), "{j}");
+        assert!(j.contains("\"ttft_p99\":4"), "{j}");
+        assert!(j.contains("\"latency_p99\":44"), "{j}");
+        assert!(j.contains("\"slo_attainment\":0.9"), "{j}");
+        assert!(j.contains("\"app\":\"stream-a\""), "{j}");
     }
 
     #[test]

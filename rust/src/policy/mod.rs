@@ -80,12 +80,14 @@ pub struct StageCtx<'a> {
     /// already refreshed from its posterior, and policies may read drift
     /// evidence to escalate from stage repair to a full re-plan.
     pub online: Option<&'a OnlineSampler>,
-    /// Nodes of multi-app workload apps that arrived (were activated)
-    /// since the previous stage — empty on single-app runs and on every
-    /// stage without an arrival. Planning policies treat a non-empty list
-    /// as a forced re-plan of remaining-work-plus-new-app; stage-local
-    /// baselines need nothing special (the nodes are simply unfinished
-    /// now).
+    /// Nodes with new work since the previous stage — apps of a
+    /// multi-app workload that arrived (were activated), or nodes that
+    /// received open-loop traffic injections
+    /// ([`crate::runner::traffic`]). Empty on single-app runs and on
+    /// every stage without new work. Planning policies treat a non-empty
+    /// list as a forced re-plan of remaining-work-plus-new-arrivals;
+    /// stage-local baselines need nothing special (the nodes are simply
+    /// unfinished now).
     pub arrived: &'a [usize],
 }
 

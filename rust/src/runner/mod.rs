@@ -14,9 +14,11 @@
 
 pub mod dynamic;
 pub mod state;
+pub mod traffic;
 pub mod workload;
 
 pub use state::{AppRequest, ExecState};
+pub use traffic::{run_traffic, run_traffic_with_backend};
 pub use workload::{WorkloadApp, WorkloadScenario};
 
 use std::collections::{HashMap, HashSet};
@@ -524,6 +526,7 @@ fn run_core(
         measured,
         online: online_stats,
         workload: workload_report,
+        traffic: None,
         n_gpus: cluster.n_gpus,
     })
 }
@@ -594,7 +597,7 @@ fn measured_stats(
 /// "known lengths" ablation is on). With the feedback loop on, samples
 /// come from the online posterior instead, conditioned on each in-flight
 /// request's progress (`X | X > generated`).
-fn estimate_view(
+pub(crate) fn estimate_view(
     true_state: &ExecState,
     graph: &AppGraph,
     cost: &CostModel,

@@ -201,6 +201,34 @@ impl ExecState {
         }
     }
 
+    /// Append requests to a node without touching the ones already there
+    /// — the open-loop traffic admission path: unlike
+    /// [`ExecState::activate_node`] (which *replaces* a masked workload),
+    /// injection accumulates, so completed requests keep their entries in
+    /// the completion log and in-flight requests keep their progress.
+    /// Output lengths resolve via `resolve`; the node's finished flag is
+    /// cleared so policies start scheduling it again.
+    pub fn inject_requests(
+        &mut self,
+        node: usize,
+        reqs: &[AppRequest],
+        mut resolve: impl FnMut(&AppRequest) -> u32,
+    ) {
+        if reqs.is_empty() {
+            return;
+        }
+        self.nodes[node].extend(reqs.iter().map(|r| StatefulReq {
+            id: r.id,
+            input_len: r.input_len,
+            output_len: resolve(r).max(1),
+            generated: 0,
+            chain_next: r.chain_next,
+            chain_blocked: r.chain_blocked,
+            dep: r.dep,
+        }));
+        self.finished_nodes.remove(&node);
+    }
+
     /// Whether every node finished its workload.
     pub fn all_done(&self) -> bool {
         self.finished_nodes.len() == self.nodes.len()

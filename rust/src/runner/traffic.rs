@@ -1,0 +1,442 @@
+//! The open-loop running phase: execute a
+//! [`TrafficScenario`](crate::traffic::TrafficScenario) — arrival streams
+//! through a bounded, weighted-fair-share admission queue — and report
+//! serving metrics instead of makespan.
+//!
+//! Structure mirrors the batch loop (`runner::run_core`) deliberately:
+//! stage boundaries are the §4.3 decision points, the policy sees the
+//! same estimated-state view, placement transitions pay the same
+//! minimum-reload cost, and arrivals reach planning policies through the
+//! same `StageCtx::arrived` forced-replan channel the workload layer
+//! introduced. What changes is the *boundary protocol*: before each
+//! stage, due arrivals are offered to the [`AdmissionQueue`], then up to
+//! `admit_quantum` jobs are admitted by weighted fair share and their
+//! per-node requests injected via [`ExecState::inject_requests`]. The
+//! admission queue therefore sits *in front of* the scheduling core — no
+//! engine or scheduler change, and batch runs (`run`/`workload`) never
+//! touch this code path, so they stay bit-identical.
+//!
+//! Planning against a rate: the policy's offline plan is prepared over
+//! [`planning_workloads`](crate::traffic::TrafficScenario::planning_workloads)
+//! — a sampled window of the actual arrival streams — so the steady-state
+//! placement is priced by simulating the request mix the run will see.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::{ClusterSpec, Placement};
+use crate::costmodel::OnlineSampler;
+use crate::engine::sched::EngineEvent;
+use crate::exec::{BackendMode, EventSummary, ExecBackend, SimBackend};
+use crate::metrics::latency::{AppTrafficStats, RequestSample, TrafficReport};
+use crate::metrics::{RunReport, StageRecord};
+use crate::plan::{ExecPlan, Stage};
+use crate::planner::eval::EvalStats;
+use crate::policy::{self, PlanCtx, Policy, StageCtx};
+use crate::traffic::{AdmissionQueue, QueuedJob, TrafficScenario};
+use crate::util::rng::Rng;
+
+use super::{estimate_view, ExecState, RunContext, RunOpts};
+
+/// Run a traffic mix under the registry policy named `policy` on the
+/// virtual-time substrate and report serving metrics. Panics on an
+/// unknown policy name — use [`crate::session::SamuLlm::run_traffic`]
+/// for validated-up-front configuration.
+pub fn run_traffic(
+    policy: &str,
+    traffic: &TrafficScenario,
+    cluster: &ClusterSpec,
+    opts: &RunOpts,
+) -> RunReport {
+    let mut p = policy::create(policy).expect("unknown policy name");
+    let ctx = RunContext::new(cluster, opts.seed);
+    let mut backend = SimBackend::new(&ctx.hw, ctx.cluster.mem_bytes);
+    run_traffic_with_backend(p.as_mut(), traffic, &ctx, opts, &mut backend)
+        .expect("the simulated substrate is infallible")
+}
+
+/// Run an open-loop traffic mix under an instantiated policy against an
+/// [`ExecBackend`]. Only virtual-time backends are supported: arrival
+/// timestamps live on the virtual clock, which a measured backend does
+/// not share.
+pub fn run_traffic_with_backend(
+    policy: &mut dyn Policy,
+    traffic: &TrafficScenario,
+    ctx: &RunContext,
+    opts: &RunOpts,
+    backend: &mut dyn ExecBackend,
+) -> Result<RunReport> {
+    let RunContext { registry, cost, hw: _, cluster, sim_cache } = ctx;
+    let scenario = &traffic.scenario;
+    let graph = &scenario.graph;
+    let cfg = &traffic.cfg;
+    if backend.mode() == BackendMode::Measured {
+        return Err(anyhow!(
+            "open-loop traffic runs on the virtual-time substrate only \
+             (arrival timestamps live on the virtual clock)"
+        ));
+    }
+    debug_assert!(cfg.admit_quantum >= 1, "TrafficSpec::build resolves the quantum");
+
+    // ---- planning phase: price the placement over a sampled arrival
+    // window (planning against a rate) --------------------------------
+    let planning = traffic.planning_workloads();
+    let mut extra_time = 0.0;
+    let planned = policy.prepare(&PlanCtx {
+        graph,
+        workloads: &planning,
+        cluster,
+        registry,
+        cost,
+        opts,
+        sim_cache: opts.sim_cache.then_some(sim_cache),
+    });
+    let mut search_time = 0.0;
+    let mut planner_stats = EvalStats::default();
+    if let Some(plan) = &planned {
+        extra_time += plan.search_time;
+        search_time = plan.search_time;
+        planner_stats = plan.eval;
+    }
+
+    // ---- running phase: the run starts idle and fills via admission --
+    let mut true_state = ExecState::init(&scenario.workloads, |_, r| r.true_output_len);
+    true_state.noise_sigma = Some(opts.noise_sigma);
+    true_state.noise_seed = opts.seed ^ 0x7275_6E;
+
+    let mut est_rng = Rng::new(opts.seed ^ 0xE571);
+    let mut online_sampler = opts
+        .online_refinement
+        .then(|| OnlineSampler::new(cost.sampler.clone(), opts.online_weight));
+    let mut observed: HashSet<(usize, u64)> = HashSet::new();
+    let mut placement = Placement::empty(cluster.n_gpus);
+    let loader = |owner: u64, tp: u32| -> f64 {
+        registry
+            .get(&graph.nodes[owner as usize].model)
+            .map(|s| s.load_time(tp))
+            .unwrap_or(0.0)
+    };
+
+    let weights: Vec<f64> = traffic.apps.iter().map(|a| a.weight).collect();
+    let mut queue = AdmissionQueue::new(&weights, cfg.queue_capacity, cfg.queue_policy);
+    // Arrival cursors, one per app, into the pre-generated streams.
+    let mut next_arrival = vec![0usize; traffic.apps.len()];
+    // Admission provenance per injected request:
+    // (node, id) -> (app, arrival, admit, output_len).
+    let mut admitted_meta: HashMap<(usize, u64), (usize, f64, f64, u32)> = HashMap::new();
+    // Request-level rejected counts whose arrival fell in the window.
+    let mut rejected_in_window = vec![0u64; traffic.apps.len()];
+    let in_window =
+        |t: f64| t >= cfg.warmup && t < cfg.warmup + cfg.duration;
+    let total_jobs = traffic.total_jobs();
+
+    let mut arrived_nodes: Vec<usize> = vec![];
+    let mut timeline: Vec<StageRecord> = vec![];
+    let mut locked: HashMap<usize, ExecPlan> = HashMap::new();
+    let mut prev_stage: Option<Stage> = None;
+    let mut guard = 0usize;
+
+    loop {
+        // Boundary protocol, step 1: offer every arrival whose timestamp
+        // has passed to the admission queue (rejects are final).
+        for (app_id, app) in traffic.apps.iter().enumerate() {
+            while next_arrival[app_id] < app.arrivals.len()
+                && app.arrivals[next_arrival[app_id]] <= true_state.clock + 1e-9
+            {
+                let t = app.arrivals[next_arrival[app_id]];
+                let seq = next_arrival[app_id] as u64;
+                if !queue.offer(QueuedJob { app_id, seq, arrival: t }) && in_window(t) {
+                    rejected_in_window[app_id] += app.nodes.len() as u64;
+                }
+                next_arrival[app_id] += 1;
+            }
+        }
+        // Step 2: admit up to the fair-share quantum; each admitted job
+        // injects one request per app node (fresh progress, appended —
+        // completed work keeps its completion-log entries).
+        for _ in 0..cfg.admit_quantum {
+            let Some(job) = queue.pop_fair() else { break };
+            let app = &traffic.apps[job.app_id];
+            for (&node, pool) in app.nodes.iter().zip(&app.pools) {
+                let tmpl = pool[(job.seq % pool.len() as u64) as usize];
+                let req = super::AppRequest::simple(job.seq, tmpl.input_len, tmpl.true_output_len);
+                true_state.inject_requests(node, &[req], |r| r.true_output_len);
+                admitted_meta.insert(
+                    (node, job.seq),
+                    (job.app_id, job.arrival, true_state.clock, tmpl.true_output_len.max(1)),
+                );
+                if !arrived_nodes.contains(&node) {
+                    arrived_nodes.push(node);
+                }
+            }
+        }
+        // Step 3: queue-depth accounting at the decision point.
+        queue.record_depth();
+
+        // Step 4: termination / pacing. All work drained: admit the
+        // remaining backlog at this same clock (the quantum paces it), or
+        // idle-jump to the next arrival, or finish.
+        if true_state.all_done() {
+            if !queue.is_empty() {
+                continue;
+            }
+            let upcoming = traffic
+                .apps
+                .iter()
+                .enumerate()
+                .filter_map(|(i, a)| a.arrivals.get(next_arrival[i]).copied())
+                .fold(f64::INFINITY, f64::min);
+            if upcoming.is_finite() {
+                true_state.clock = true_state.clock.max(upcoming);
+                continue;
+            }
+            break;
+        }
+        guard += 1;
+        assert!(
+            guard <= 16 * graph.n_nodes() + 256 + 4 * total_jobs as usize,
+            "traffic runner failed to converge for {}",
+            traffic.name
+        );
+
+        // Steps 5+: identical to the batch loop — estimate view, policy
+        // stage, minimum-reload placement, first-finish execution.
+        let decision_t0 = std::time::Instant::now();
+        let est_state = estimate_view(
+            &true_state,
+            graph,
+            cost,
+            registry,
+            opts,
+            &mut est_rng,
+            online_sampler.as_mut(),
+        );
+        let stage = policy.plan_stage(&StageCtx {
+            graph,
+            true_state: &true_state,
+            est_state: &est_state,
+            prev_stage: prev_stage.as_ref(),
+            cluster,
+            registry,
+            cost,
+            locked: if opts.no_preemption { Some(&locked) } else { None },
+            online: online_sampler.as_ref(),
+            arrived: &arrived_nodes,
+        });
+        arrived_nodes.clear();
+        extra_time += decision_t0.elapsed().as_secs_f64();
+        let Some(stage) = stage else {
+            panic!("policy {} produced no stage with unfinished work", policy.name());
+        };
+        debug_assert!(stage.n_gpus() <= cluster.n_gpus);
+
+        if opts.no_preemption {
+            for e in &stage.entries {
+                locked.entry(e.node).or_insert(e.plan);
+            }
+        }
+
+        let needs: Vec<(u64, u32, u32)> =
+            stage.entries.iter().map(|e| (e.node as u64, e.plan.dp, e.plan.tp)).collect();
+        let reload = Placement::transition(&placement, &needs, cluster, &loader)
+            .expect("stage must fit the cluster");
+        placement = reload.placement.clone();
+        let load_delay: HashMap<usize, f64> =
+            reload.load_time_by_owner.iter().map(|(&o, &t)| (o as usize, t)).collect();
+
+        let mut events: Vec<EngineEvent> = vec![];
+        let before_done = true_state.completed.len();
+        let res = true_state.run_stage(
+            &stage,
+            graph,
+            registry,
+            backend,
+            &load_delay,
+            false,
+            false,
+            Some(&mut events),
+        );
+        // Livelock guard, as in the batch loop: a stage that completed
+        // nothing and took no time is re-run to its fastest node's finish.
+        if true_state.completed.len() == before_done && res.end - res.start < 1e-9 {
+            true_state.run_stage(
+                &stage,
+                graph,
+                registry,
+                backend,
+                &load_delay,
+                false,
+                true,
+                Some(&mut events),
+            );
+        }
+
+        let busy: Vec<f64> = stage
+            .entries
+            .iter()
+            .map(|e| {
+                let node_res = res.nodes.iter().find(|n| n.node == e.node);
+                let busy = node_res.map(|n| n.busy_time).unwrap_or(0.0) * e.plan.tp as f64;
+                let load = load_delay.get(&e.node).copied().unwrap_or(0.0)
+                    * e.plan.n_gpus() as f64;
+                busy + load
+            })
+            .collect();
+        timeline.push(StageRecord {
+            start: res.start,
+            end: true_state.clock,
+            entries: stage.entries.iter().map(|e| (e.node, e.plan)).collect(),
+            loaded_nodes: load_delay.keys().copied().collect(),
+            load_time: reload.load_time,
+            busy_gpu_seconds: busy,
+            events: EventSummary::from_events(&events),
+        });
+        if let Some(os) = online_sampler.as_mut() {
+            for e in &stage.entries {
+                let model = &graph.nodes[e.node].model;
+                for r in &true_state.nodes[e.node] {
+                    if r.is_done() && observed.insert((e.node, r.id)) {
+                        os.record(model, r.output_len);
+                    }
+                }
+            }
+        }
+        prev_stage = Some(stage);
+    }
+
+    // ---- reporting: join completion times onto admission provenance --
+    let samples: Vec<RequestSample> = admitted_meta
+        .iter()
+        .map(|(&(node, id), &(app_id, arrival, admit, output_len))| {
+            let finish = *true_state
+                .completed
+                .get(&(node, id))
+                .expect("every admitted request runs to completion before the drain ends");
+            RequestSample { app_id, arrival, admit, finish, output_len }
+        })
+        .collect();
+    let app_stats: Vec<AppTrafficStats> = traffic
+        .apps
+        .iter()
+        .enumerate()
+        .map(|(i, a)| AppTrafficStats {
+            name: a.name.clone(),
+            weight: a.weight,
+            slo: a.slo,
+            counters: queue.counters()[i],
+            rejected_in_window: rejected_in_window[i],
+        })
+        .collect();
+    let traffic_report = TrafficReport::build(
+        cfg.duration,
+        cfg.warmup,
+        app_stats,
+        &samples,
+        queue.depth_mean(),
+        queue.depth_max(),
+    );
+
+    let inference_time = true_state.clock;
+    let online_stats = online_sampler.is_some().then(|| policy.online_stats()).flatten();
+    Ok(RunReport {
+        scenario: traffic.name.clone(),
+        policy: policy.name().to_string(),
+        backend: backend.name().to_string(),
+        extra_time,
+        search_time,
+        planner: planner_stats,
+        inference_time,
+        end_to_end_time: extra_time + inference_time,
+        estimated_inference_time: planned.map(|p| p.est_total).unwrap_or(f64::NAN),
+        n_stages: timeline.len(),
+        timeline,
+        measured: None,
+        online: online_stats,
+        workload: None,
+        traffic: Some(traffic_report),
+        n_gpus: cluster.n_gpus,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::poisson_pair_traffic;
+
+    fn small_traffic() -> TrafficScenario {
+        poisson_pair_traffic(1.5, 1.5, 2.0, 12.0).build(42).expect("valid spec")
+    }
+
+    #[test]
+    fn open_loop_run_reports_serving_metrics() {
+        let cluster = ClusterSpec::a100_node(8);
+        let ts = small_traffic();
+        assert!(ts.total_jobs() > 4, "stream too quiet for the test");
+        let r = run_traffic("ours", &ts, &cluster, &RunOpts::default());
+        assert!(r.inference_time > 0.0);
+        assert!(r.n_stages >= 1);
+        assert!(r.workload.is_none(), "traffic runs use the traffic report");
+        let t = r.traffic.as_ref().expect("traffic section present");
+        assert_eq!(t.per_app.len(), 2);
+        assert_eq!(t.offered, ts.total_jobs());
+        assert_eq!(t.offered, t.admitted + t.rejected, "defer admits everything");
+        for a in &t.per_app {
+            assert!(a.completed > 0, "{}: nothing measured", a.name);
+            assert!(a.ttft_mean.unwrap() >= 0.0);
+            assert!(a.tpot_mean.unwrap() > 0.0);
+            assert!(a.latency_p50.unwrap() <= a.latency_p99.unwrap() + 1e-9);
+            assert!((0.0..=1.0).contains(&a.slo_attainment.unwrap()));
+        }
+        // The sampled-window plan exists and was priced.
+        assert!(!r.estimated_inference_time.is_nan());
+        // JSON carries the traffic section.
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"traffic\":{"), "{json}");
+        assert!(json.contains("\"ttft_mean\""), "{json}");
+    }
+
+    #[test]
+    fn traffic_runs_are_seed_deterministic() {
+        let cluster = ClusterSpec::a100_node(8);
+        let ts = small_traffic();
+        let opts = RunOpts::default();
+        let a = run_traffic("round-robin", &ts, &cluster, &opts);
+        let b = run_traffic("round-robin", &ts, &cluster, &opts);
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        let (ta, tb) = (a.traffic.unwrap(), b.traffic.unwrap());
+        assert_eq!(ta, tb, "whole serving report is bit-identical");
+    }
+
+    #[test]
+    fn measured_backend_is_rejected() {
+        struct FakeMeasured;
+        impl ExecBackend for FakeMeasured {
+            fn name(&self) -> &'static str {
+                "fake"
+            }
+            fn mode(&self) -> BackendMode {
+                BackendMode::Measured
+            }
+            fn run_node(
+                &mut self,
+                _req: &crate::exec::NodeRun,
+            ) -> Result<crate::exec::NodeOutcome> {
+                unreachable!("rejected before execution")
+            }
+        }
+        let cluster = ClusterSpec::a100_node(8);
+        let ts = small_traffic();
+        let mut p = policy::create("round-robin").unwrap();
+        let ctx = RunContext::new(&cluster, 7);
+        let err = run_traffic_with_backend(
+            p.as_mut(),
+            &ts,
+            &ctx,
+            &RunOpts::default(),
+            &mut FakeMeasured,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("virtual-time"), "{err}");
+    }
+}

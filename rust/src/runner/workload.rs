@@ -24,9 +24,11 @@ pub struct WorkloadApp {
     /// `arrival > 0` are invisible to planning and execution until the
     /// first stage boundary at or after this time.
     pub arrival: f64,
-    /// Relative priority weight (recorded in the per-app report; the
-    /// joint planner optimises global throughput, so today weights are
-    /// reporting-level metadata for downstream consumers).
+    /// Relative priority weight. On batch workload runs the joint
+    /// planner optimises global throughput, so the weight is recorded in
+    /// the per-app report as metadata; on open-loop traffic runs
+    /// ([`crate::runner::traffic`]) the same per-entry weight drives
+    /// weighted fair-share admission and is a real scheduling priority.
     pub weight: f64,
     /// Global node ids of this app in the composed graph.
     pub nodes: Vec<usize>,

@@ -35,7 +35,7 @@ use crate::exec::{self, pjrt::PjrtBackend, ExecBackend, SimBackend};
 use crate::metrics::RunReport;
 use crate::policy;
 use crate::runner::{self, RunContext, RunOpts, Scenario};
-use crate::spec::{AppSpec, WorkloadSpec};
+use crate::spec::{AppSpec, TrafficSpec, WorkloadSpec};
 
 /// Configured session: a cluster, a policy, a seed, an execution backend
 /// and the shared cost-model wiring. Create one with [`SamuLlm::builder`].
@@ -141,6 +141,24 @@ impl SamuLlm {
         })
     }
 
+    /// Materialise an open-loop [`TrafficSpec`] with the session seed and
+    /// serve it under the session policy: per-app arrival processes feed a
+    /// bounded admission queue, weighted fair-share admission turns
+    /// per-entry `weight` into a real scheduling priority, and the report
+    /// carries per-app serving metrics — TTFT, TPOT, latency percentiles
+    /// and SLO attainment ([`crate::metrics::latency::TrafficReport`]).
+    /// Traffic runs on the virtual-time substrate only; the `pjrt`
+    /// backend is rejected.
+    pub fn run_traffic(&self, traffic: &TrafficSpec) -> Result<RunReport> {
+        let ts = traffic.build(self.opts.seed)?;
+        let mut opts = self.opts.clone();
+        opts.known_lengths |= traffic.wants_known_lengths();
+        let mut policy = policy::create(self.policy)?;
+        self.with_backend(|backend| {
+            runner::run_traffic_with_backend(policy.as_mut(), &ts, &self.ctx, &opts, backend)
+        })
+    }
+
     /// Run the same spec under several policies (paper-style comparisons),
     /// reusing the session's scenario materialisation and wiring.
     pub fn compare(&self, spec: &AppSpec, policies: &[&str]) -> Result<Vec<RunReport>> {
@@ -159,7 +177,8 @@ impl SamuLlm {
 
     /// Construct the session's execution backend and hand it to `f` — the
     /// one backend-dispatch point shared by [`SamuLlm::run`] /
-    /// [`SamuLlm::run_scenario`] / [`SamuLlm::run_workload`], so a new
+    /// [`SamuLlm::run_scenario`] / [`SamuLlm::run_workload`] /
+    /// [`SamuLlm::run_traffic`], so a new
     /// backend (or a change to the pjrt loading contract) is wired in one
     /// place.
     fn with_backend<T>(&self, f: impl FnOnce(&mut dyn ExecBackend) -> Result<T>) -> Result<T> {
@@ -514,6 +533,22 @@ mod tests {
         assert!(w.per_app[0].nodes.iter().all(|n| !w.per_app[1].nodes.contains(n)));
         // The JSON contract carries the section.
         assert!(r.to_json().contains("\"workload\":{"), "{}", r.to_json());
+    }
+
+    #[test]
+    fn session_runs_open_loop_traffic() {
+        let session = SamuLlm::builder().gpus(8).seed(7).build().unwrap();
+        let spec = crate::harness::poisson_pair_traffic(1.0, 1.0, 2.0, 10.0);
+        let r = session.run_traffic(&spec).unwrap();
+        assert!(r.scenario.starts_with("poisson-pair"));
+        let t = r.traffic.expect("traffic runs carry the serving section");
+        assert_eq!(t.per_app.len(), 2);
+        assert_eq!(t.offered, t.admitted + t.rejected);
+        assert!(r.to_json().contains("\"traffic\":{"), "{}", r.to_json());
+        // Batch runs stay traffic-free.
+        let plain = session.run(&AppSpec::ensembling(30, 96)).unwrap();
+        assert!(plain.traffic.is_none());
+        assert!(plain.to_json().contains("\"traffic\":null"));
     }
 
     #[test]

@@ -13,9 +13,16 @@
 //! The CLI goes through [`from_cli`], which looks the app name up in the
 //! [`builders`] registry; each [`AppBuilder`] applies its own defaults and
 //! *rejects* knobs that don't apply to it (no silently-dropped flags).
+//!
+//! Two composite specs sit on top of `AppSpec`: [`WorkloadSpec`] (a fixed
+//! batch of N application instances, jointly planned) and [`TrafficSpec`]
+//! (open-loop serving: per-app arrival processes feeding a bounded
+//! admission queue — see [`crate::traffic`]).
 
+pub mod traffic;
 pub mod workload;
 
+pub use traffic::{ArrivalSpec, TrafficEntry, TrafficSpec};
 pub use workload::{WorkloadEntry, WorkloadSpec};
 
 use anyhow::{anyhow, Result};

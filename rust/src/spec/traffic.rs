@@ -1,0 +1,692 @@
+//! Declarative open-loop traffic: a [`TrafficSpec`] generalises the batch
+//! [`WorkloadSpec`](crate::spec::WorkloadSpec) from a fixed request set to
+//! *streams* — each entry wraps an [`AppSpec`] plus an arrival process
+//! ([`ArrivalSpec`]: deterministic-seeded Poisson, bursty Markov-modulated
+//! on-off, or trace replay from a timestamp file), a fair-share weight
+//! that is a real admission priority, and an optional per-request latency
+//! SLO.
+//!
+//! `build()` materialises the spec into a
+//! [`TrafficScenario`](crate::traffic::TrafficScenario): the composed
+//! graph, per-app request-template pools, and pre-generated arrival
+//! timestamps over the `warmup + duration` horizon, all derived from the
+//! session seed (same seed → bit-identical streams).
+//!
+//! Serialises via [`crate::util::json`] (the `traffic` key of
+//! [`crate::config::ExperimentConfig`]) and parses the CLI's
+//! `--app name:rate=5:weight=2` descriptors (`samullm traffic`).
+
+use anyhow::{anyhow, Result};
+
+use crate::runner::workload::compose_scenarios;
+use crate::spec::{from_cli, AppParams, AppSpec};
+use crate::traffic::queue::QueuePolicy;
+use crate::traffic::{arrivals, TrafficApp, TrafficCfg, TrafficScenario};
+use crate::util::json::Json;
+
+/// XOR salt decorrelating an entry's arrival stream from its workload
+/// materialisation (both derive from the same entry seed).
+pub const ARRIVAL_SEED_SALT: u64 = 0x5452_4146; // "TRAF"
+
+/// An open-loop arrival process (all processes are deterministic given a
+/// seed — same seed, same stream).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Homogeneous Poisson arrivals: i.i.d. exponential inter-arrival
+    /// gaps with mean `1/rate`.
+    Poisson {
+        /// Mean arrival rate in requests per second (> 0).
+        rate: f64,
+    },
+    /// Bursty Markov-modulated on-off arrivals: a two-state background
+    /// chain with exponential dwell times; arrivals are Poisson at
+    /// `rate_on` while "on" and `rate_off` while "off" (`rate_off = 0`
+    /// gives pure bursts separated by silence).
+    OnOff {
+        /// Arrival rate during on-phases (> 0).
+        rate_on: f64,
+        /// Arrival rate during off-phases (≥ 0).
+        rate_off: f64,
+        /// Mean on-phase dwell time in seconds (> 0).
+        mean_on: f64,
+        /// Mean off-phase dwell time in seconds (> 0).
+        mean_off: f64,
+    },
+    /// Replay arrival timestamps from a text file: one ascending
+    /// timestamp (seconds) per line; blank lines and `#` comments are
+    /// skipped; timestamps at or past the horizon are clipped.
+    Trace {
+        /// Path to the timestamp file.
+        path: String,
+    },
+}
+
+impl ArrivalSpec {
+    /// The process's JSON/CLI kind name.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalSpec::Poisson { .. } => "poisson",
+            ArrivalSpec::OnOff { .. } => "on_off",
+            ArrivalSpec::Trace { .. } => "trace",
+        }
+    }
+
+    /// Validate the process parameters (finite, correctly signed).
+    pub fn validate(&self) -> Result<()> {
+        let pos = |x: f64, what: &str| -> Result<()> {
+            if !x.is_finite() || x <= 0.0 {
+                return Err(anyhow!("{what} must be finite and > 0, got {x}"));
+            }
+            Ok(())
+        };
+        match self {
+            ArrivalSpec::Poisson { rate } => pos(*rate, "poisson rate"),
+            ArrivalSpec::OnOff { rate_on, rate_off, mean_on, mean_off } => {
+                pos(*rate_on, "on-off rate_on")?;
+                if !rate_off.is_finite() || *rate_off < 0.0 {
+                    return Err(anyhow!(
+                        "on-off rate_off must be finite and >= 0, got {rate_off}"
+                    ));
+                }
+                pos(*mean_on, "on-off mean_on")?;
+                pos(*mean_off, "on-off mean_off")
+            }
+            ArrivalSpec::Trace { path } => {
+                if path.is_empty() {
+                    return Err(anyhow!("trace process needs a file path"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ArrivalSpec::Poisson { rate } => Json::obj(vec![
+                ("kind", Json::Str("poisson".into())),
+                ("rate", Json::Num(*rate)),
+            ]),
+            ArrivalSpec::OnOff { rate_on, rate_off, mean_on, mean_off } => Json::obj(vec![
+                ("kind", Json::Str("on_off".into())),
+                ("rate_on", Json::Num(*rate_on)),
+                ("rate_off", Json::Num(*rate_off)),
+                ("mean_on", Json::Num(*mean_on)),
+                ("mean_off", Json::Num(*mean_off)),
+            ]),
+            ArrivalSpec::Trace { path } => Json::obj(vec![
+                ("kind", Json::Str("trace".into())),
+                ("path", Json::Str(path.clone())),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow!("arrival process needs a kind"))?;
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| anyhow!("{kind} process: missing numeric {key}"))
+        };
+        match kind {
+            "poisson" => Ok(ArrivalSpec::Poisson { rate: num("rate")? }),
+            "on_off" => Ok(ArrivalSpec::OnOff {
+                rate_on: num("rate_on")?,
+                rate_off: v.get("rate_off").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                mean_on: num("mean_on")?,
+                mean_off: num("mean_off")?,
+            }),
+            "trace" => Ok(ArrivalSpec::Trace {
+                path: v
+                    .get("path")
+                    .and_then(|p| p.as_str())
+                    .ok_or_else(|| anyhow!("trace process: missing path"))?
+                    .to_string(),
+            }),
+            other => Err(anyhow!(
+                "unknown arrival process {other:?} (known: poisson, on_off, trace)"
+            )),
+        }
+    }
+}
+
+/// One application stream of an open-loop traffic mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficEntry {
+    /// What each arriving request runs — any single-app spec; the app's
+    /// materialised per-node requests become the entry's request-template
+    /// pool (arrival *k* replays template *k mod pool-size* on each
+    /// node).
+    pub app: AppSpec,
+    /// The arrival process generating this app's request stream.
+    pub process: ArrivalSpec,
+    /// Weighted-fair-share admission weight (default 1): under backlog an
+    /// app is admitted in proportion to its weight (virtual-time weighted
+    /// round-robin across app queues) — a real scheduling priority, not
+    /// just reporting metadata.
+    pub weight: f64,
+    /// Optional per-request latency SLO in seconds (arrival → completion)
+    /// for the report's SLO-attainment metric.
+    pub slo: Option<f64>,
+    /// Per-app seed override. `None` derives a seed from the session seed
+    /// and the entry index (entry 0 gets the session seed itself).
+    pub seed: Option<u64>,
+}
+
+impl TrafficEntry {
+    /// A Poisson entry with default metadata: weight 1, no SLO, derived
+    /// seed.
+    pub fn poisson(app: AppSpec, rate: f64) -> Self {
+        TrafficEntry {
+            app,
+            process: ArrivalSpec::Poisson { rate },
+            weight: 1.0,
+            slo: None,
+            seed: None,
+        }
+    }
+
+    /// Parse a CLI descriptor: `name[:key=value]...` where `name` is an
+    /// app-builder registry name and keys are the app's own CLI knobs
+    /// (`n-requests`, `max-out`, `n-docs`, `eval-times`, `known-lengths`)
+    /// plus the traffic-level `rate`, `process`, `rate-on`, `rate-off`,
+    /// `mean-on`, `mean-off`, `trace`, `weight`, `slo` and `seed`.
+    /// Underscore spellings are accepted. Examples:
+    ///
+    /// ```text
+    /// ensembling:rate=5:weight=2
+    /// chain-summary:n-docs=40:process=on-off:rate-on=8:rate-off=0:mean-on=10:mean-off=30
+    /// routing:trace=arrivals.txt:slo=30
+    /// ```
+    pub fn parse_cli(desc: &str) -> Result<Self> {
+        let mut parts = desc.split(':');
+        let name = parts.next().filter(|n| !n.is_empty()).ok_or_else(|| {
+            anyhow!("empty --app descriptor (expected name[:key=value]...)")
+        })?;
+        let mut params = AppParams::default();
+        let mut process: Option<String> = None;
+        let mut rate = None;
+        let (mut rate_on, mut rate_off) = (None, None);
+        let (mut mean_on, mut mean_off) = (None, None);
+        let mut trace: Option<String> = None;
+        let mut weight = 1.0f64;
+        let mut slo = None;
+        let mut seed = None;
+        for kv in parts {
+            let (key, value) = match kv.split_once('=') {
+                Some((k, v)) => (k, v),
+                // A bare key is a boolean switch (known-lengths).
+                None => (kv, "true"),
+            };
+            let key = key.replace('_', "-");
+            let bad = |e: &dyn std::fmt::Display| {
+                anyhow!("--app {name}: invalid value {value:?} for {key}: {e}")
+            };
+            match key.as_str() {
+                "n-requests" => params.n_requests = Some(value.parse().map_err(|e| bad(&e))?),
+                "max-out" => params.max_out = Some(value.parse().map_err(|e| bad(&e))?),
+                "n-docs" => params.n_docs = Some(value.parse().map_err(|e| bad(&e))?),
+                "eval-times" => params.eval_times = Some(value.parse().map_err(|e| bad(&e))?),
+                "known-lengths" => {
+                    params.known_lengths = value.parse().map_err(|e| bad(&e))?
+                }
+                "process" => process = Some(value.replace('-', "_")),
+                "rate" => rate = Some(value.parse().map_err(|e| bad(&e))?),
+                "rate-on" => rate_on = Some(value.parse().map_err(|e| bad(&e))?),
+                "rate-off" => rate_off = Some(value.parse().map_err(|e| bad(&e))?),
+                "mean-on" => mean_on = Some(value.parse().map_err(|e| bad(&e))?),
+                "mean-off" => mean_off = Some(value.parse().map_err(|e| bad(&e))?),
+                "trace" => trace = Some(value.to_string()),
+                "weight" => weight = value.parse().map_err(|e| bad(&e))?,
+                "slo" => slo = Some(value.parse().map_err(|e| bad(&e))?),
+                "seed" => seed = Some(value.parse().map_err(|e| bad(&e))?),
+                other => {
+                    return Err(anyhow!(
+                        "--app {name}: unknown key {other:?} (known: n-requests, max-out, \
+                         n-docs, eval-times, known-lengths, process, rate, rate-on, \
+                         rate-off, mean-on, mean-off, trace, weight, slo, seed)"
+                    ))
+                }
+            }
+        }
+        // The process kind is explicit (`process=`) or inferred from the
+        // knobs that were given; missing required knobs are errors.
+        let kind = match process.as_deref() {
+            Some(k) => k.to_string(),
+            None if trace.is_some() => "trace".into(),
+            None if rate_on.is_some() || mean_on.is_some() => "on_off".into(),
+            None => "poisson".into(),
+        };
+        let process = match kind.as_str() {
+            "poisson" => ArrivalSpec::Poisson {
+                rate: rate
+                    .ok_or_else(|| anyhow!("--app {name}: poisson process needs rate="))?,
+            },
+            "on_off" => ArrivalSpec::OnOff {
+                rate_on: rate_on.or(rate).ok_or_else(|| {
+                    anyhow!("--app {name}: on-off process needs rate-on= (or rate=)")
+                })?,
+                rate_off: rate_off.unwrap_or(0.0),
+                mean_on: mean_on
+                    .ok_or_else(|| anyhow!("--app {name}: on-off process needs mean-on="))?,
+                mean_off: mean_off
+                    .ok_or_else(|| anyhow!("--app {name}: on-off process needs mean-off="))?,
+            },
+            "trace" => ArrivalSpec::Trace {
+                path: trace
+                    .ok_or_else(|| anyhow!("--app {name}: trace process needs trace=PATH"))?,
+            },
+            other => {
+                return Err(anyhow!(
+                    "--app {name}: unknown process {other:?} (known: poisson, on-off, trace)"
+                ))
+            }
+        };
+        Ok(TrafficEntry { app: from_cli(name, &params)?, process, weight, slo, seed })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("app", self.app.to_json()),
+            ("process", self.process.to_json()),
+            ("weight", Json::Num(self.weight)),
+        ];
+        if let Some(s) = self.slo {
+            fields.push(("slo", Json::Num(s)));
+        }
+        if let Some(s) = self.seed {
+            fields.push(("seed", Json::Num(s as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let app = v.get("app").ok_or_else(|| anyhow!("traffic entry: app missing"))?;
+        let app = AppSpec::from_json(app)?;
+        let process = v
+            .get("process")
+            .ok_or_else(|| anyhow!("traffic entry: process missing"))?;
+        Ok(TrafficEntry {
+            app,
+            process: ArrivalSpec::from_json(process)?,
+            weight: v.get("weight").and_then(|x| x.as_f64()).unwrap_or(1.0),
+            slo: v.get("slo").and_then(|x| x.as_f64()),
+            seed: v.get("seed").and_then(|x| x.as_u64()),
+        })
+    }
+}
+
+/// A declarative open-loop traffic mix: app streams plus the run window
+/// and admission-queue configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    /// Traffic-mix name (empty = derived: `traffic-<n>apps`).
+    pub name: String,
+    /// The application streams; index = app id (composition order).
+    pub entries: Vec<TrafficEntry>,
+    /// Measurement-window length in seconds: requests arriving inside
+    /// `[warmup, warmup + duration)` are the measured population.
+    pub duration: f64,
+    /// Warmup seconds before the measurement window opens (arrivals are
+    /// generated and served, but excluded from the latency metrics).
+    pub warmup: f64,
+    /// Per-app bounded admission-queue capacity (≥ 1).
+    pub queue_capacity: usize,
+    /// What happens to an arrival that finds its app queue full.
+    pub queue_policy: QueuePolicy,
+    /// Maximum jobs admitted per stage boundary across all apps (the
+    /// weighted-fair-share quantum); `0` = `queue_capacity`.
+    pub admit_quantum: usize,
+}
+
+impl TrafficSpec {
+    /// A traffic mix from entries with the default window and queue
+    /// configuration (120 s window, no warmup, capacity 64, reject).
+    pub fn new(entries: Vec<TrafficEntry>) -> Self {
+        TrafficSpec {
+            name: String::new(),
+            entries,
+            duration: 120.0,
+            warmup: 0.0,
+            queue_capacity: 64,
+            queue_policy: QueuePolicy::Reject,
+            admit_quantum: 0,
+        }
+    }
+
+    /// The mix's display name (derived from the entry count when unset).
+    pub fn display_name(&self) -> String {
+        if self.name.is_empty() {
+            format!("traffic-{}apps", self.entries.len())
+        } else {
+            self.name.clone()
+        }
+    }
+
+    /// Whether any entry asks for the known-output-lengths mode (applied
+    /// to the whole run, like the workload path does).
+    pub fn wants_known_lengths(&self) -> bool {
+        self.entries.iter().any(|e| e.app.wants_known_lengths())
+    }
+
+    /// Arrival-generation horizon: `warmup + duration` (no arrivals are
+    /// generated past it; the run then drains).
+    pub fn horizon(&self) -> f64 {
+        self.warmup + self.duration
+    }
+
+    /// The seed entry `i` materialises with: its override, or a
+    /// session-seed derivation (entry 0 = the session seed itself, later
+    /// entries decorrelated by a golden-ratio mix) — the same rule
+    /// [`crate::spec::WorkloadSpec::entry_seed`] uses.
+    pub fn entry_seed(&self, i: usize, session_seed: u64) -> u64 {
+        self.entries[i]
+            .seed
+            .unwrap_or_else(|| session_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Materialise the mix into a runnable
+    /// [`TrafficScenario`](crate::traffic::TrafficScenario): validate,
+    /// build every entry's template scenario with its resolved seed,
+    /// compose the joint graph, and pre-generate each entry's arrival
+    /// stream over the horizon (deterministic from the seeds — the same
+    /// spec and seed always produce bit-identical streams).
+    pub fn build(&self, session_seed: u64) -> Result<TrafficScenario> {
+        if self.entries.is_empty() {
+            return Err(anyhow!("traffic needs at least one app entry"));
+        }
+        if !self.duration.is_finite() || self.duration <= 0.0 {
+            return Err(anyhow!("traffic duration must be finite and > 0"));
+        }
+        if !self.warmup.is_finite() || self.warmup < 0.0 {
+            return Err(anyhow!("traffic warmup must be finite and >= 0"));
+        }
+        if self.queue_capacity == 0 {
+            return Err(anyhow!("traffic queue_capacity must be >= 1"));
+        }
+        let horizon = self.horizon();
+        let mut parts = vec![];
+        let mut streams = vec![];
+        for (i, e) in self.entries.iter().enumerate() {
+            if !e.weight.is_finite() || e.weight <= 0.0 {
+                return Err(anyhow!("entry {i}: weight must be finite and > 0"));
+            }
+            if let Some(slo) = e.slo {
+                if !slo.is_finite() || slo <= 0.0 {
+                    return Err(anyhow!("entry {i}: slo must be finite and > 0"));
+                }
+            }
+            e.process.validate().map_err(|err| anyhow!("entry {i}: {err}"))?;
+            let seed = self.entry_seed(i, session_seed);
+            let scenario = e.app.build(seed)?;
+            if scenario.workloads.iter().all(|w| w.is_empty()) {
+                return Err(anyhow!("entry {i}: app has an empty template pool"));
+            }
+            streams.push(arrivals::generate(&e.process, seed ^ ARRIVAL_SEED_SALT, horizon)?);
+            parts.push(scenario);
+        }
+        let refs: Vec<&crate::runner::Scenario> = parts.iter().collect();
+        let mut scenario = compose_scenarios(&refs, &self.display_name());
+        let by_app = scenario.graph.nodes_by_app();
+        let apps = parts
+            .iter()
+            .enumerate()
+            .map(|(app_id, part)| TrafficApp {
+                app_id,
+                name: part.name.clone(),
+                weight: self.entries[app_id].weight,
+                slo: self.entries[app_id].slo,
+                nodes: by_app[app_id].clone(),
+                // Template pools: each arriving job replays one template
+                // per node (traffic requests are independent — chain and
+                // cross-node dependency structure is not replayed per
+                // arrival; use the batch workload path for
+                // dependency-faithful runs).
+                pools: part
+                    .workloads
+                    .iter()
+                    .map(|w| {
+                        w.iter()
+                            .map(|r| {
+                                crate::runner::AppRequest::simple(
+                                    r.id,
+                                    r.input_len,
+                                    r.true_output_len,
+                                )
+                            })
+                            .collect()
+                    })
+                    .collect(),
+                arrivals: streams[app_id].clone(),
+            })
+            .collect();
+        // The open-loop run starts empty: requests enter only through the
+        // admission queue.
+        for w in scenario.workloads.iter_mut() {
+            w.clear();
+        }
+        Ok(TrafficScenario {
+            name: self.display_name(),
+            scenario,
+            apps,
+            cfg: TrafficCfg {
+                duration: self.duration,
+                warmup: self.warmup,
+                queue_capacity: self.queue_capacity,
+                queue_policy: self.queue_policy,
+                admit_quantum: if self.admit_quantum == 0 {
+                    self.queue_capacity
+                } else {
+                    self.admit_quantum
+                },
+            },
+        })
+    }
+
+    /// Serialize to a [`Json`] value (round-trips via
+    /// [`TrafficSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("duration", Json::Num(self.duration)),
+            ("warmup", Json::Num(self.warmup)),
+            ("queue_capacity", Json::Num(self.queue_capacity as f64)),
+            ("queue_policy", Json::Str(self.queue_policy.name().to_string())),
+            ("admit_quantum", Json::Num(self.admit_quantum as f64)),
+            ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    /// Parse from JSON: either the full object form or a bare entry array
+    /// (the config file's `traffic: [...]` shorthand, default window and
+    /// queue configuration).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let defaults = TrafficSpec::new(vec![]);
+        let (name, arr, v) = match v.as_arr() {
+            Some(arr) => (String::new(), arr, None),
+            None => (
+                v.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+                v.get("entries")
+                    .and_then(|e| e.as_arr())
+                    .ok_or_else(|| anyhow!("traffic needs an entries array"))?,
+                Some(v),
+            ),
+        };
+        let entries =
+            arr.iter().map(TrafficEntry::from_json).collect::<Result<Vec<_>>>()?;
+        let get_f = |key: &str, default: f64| -> f64 {
+            v.and_then(|v| v.get(key)).and_then(|x| x.as_f64()).unwrap_or(default)
+        };
+        let queue_policy = match v.and_then(|v| v.get("queue_policy")).and_then(|x| x.as_str())
+        {
+            None => defaults.queue_policy,
+            Some(s) => QueuePolicy::parse(s)?,
+        };
+        Ok(TrafficSpec {
+            name,
+            entries,
+            duration: get_f("duration", defaults.duration),
+            warmup: get_f("warmup", defaults.warmup),
+            queue_capacity: v
+                .and_then(|v| v.get("queue_capacity"))
+                .and_then(|x| x.as_usize())
+                .unwrap_or(defaults.queue_capacity),
+            queue_policy,
+            admit_quantum: v
+                .and_then(|v| v.get("admit_quantum"))
+                .and_then(|x| x.as_usize())
+                .unwrap_or(defaults.admit_quantum),
+        })
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a traffic mix from a JSON document string.
+    pub fn parse(s: &str) -> Result<Self> {
+        let v = Json::parse(s).map_err(|e| anyhow!("bad traffic json: {e}"))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrafficSpec {
+        TrafficSpec {
+            name: "pair".into(),
+            entries: vec![
+                TrafficEntry::poisson(AppSpec::ensembling(50, 96), 2.0),
+                TrafficEntry {
+                    app: AppSpec::ensembling(50, 96),
+                    process: ArrivalSpec::OnOff {
+                        rate_on: 8.0,
+                        rate_off: 0.0,
+                        mean_on: 5.0,
+                        mean_off: 15.0,
+                    },
+                    weight: 2.0,
+                    slo: Some(45.0),
+                    seed: Some(9),
+                },
+            ],
+            duration: 60.0,
+            warmup: 10.0,
+            queue_capacity: 16,
+            queue_policy: QueuePolicy::Defer,
+            admit_quantum: 4,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_object_and_array_forms() {
+        let ts = sample();
+        let back = TrafficSpec::parse(&ts.to_json_string()).unwrap();
+        assert_eq!(back, ts);
+        assert_eq!(back.to_json_string(), ts.to_json_string());
+        // Bare-array shorthand: entries only, default window/queue knobs.
+        let arr = r#"[{"app":{"kind":"ensembling"},"process":{"kind":"poisson","rate":5}},
+                      {"app":{"kind":"chain_summary"},
+                       "process":{"kind":"trace","path":"arr.txt"},"weight":0.5}]"#;
+        let ts = TrafficSpec::parse(arr).unwrap();
+        assert_eq!(ts.entries.len(), 2);
+        assert_eq!(ts.display_name(), "traffic-2apps");
+        assert_eq!(ts.duration, 120.0);
+        assert_eq!(ts.queue_capacity, 64);
+        assert_eq!(ts.queue_policy, QueuePolicy::Reject);
+        assert_eq!(ts.entries[0].process, ArrivalSpec::Poisson { rate: 5.0 });
+        assert_eq!(ts.entries[1].weight, 0.5);
+        assert_eq!(ts.entries[1].process, ArrivalSpec::Trace { path: "arr.txt".into() });
+        assert_eq!(ts.entries[0].slo, None);
+    }
+
+    #[test]
+    fn entry_seed_defaults_and_overrides() {
+        let ts = sample();
+        assert_eq!(ts.entry_seed(0, 42), 42, "entry 0 inherits the session seed");
+        assert_eq!(ts.entry_seed(1, 42), 9, "explicit override wins");
+    }
+
+    #[test]
+    fn build_materialises_streams_and_validates() {
+        let ts = sample();
+        let sc = ts.build(7).unwrap();
+        assert_eq!(sc.name, "pair");
+        assert_eq!(sc.apps.len(), 2);
+        assert_eq!(sc.cfg.duration, 60.0);
+        assert_eq!(sc.cfg.warmup, 10.0);
+        assert_eq!(sc.cfg.admit_quantum, 4);
+        // The open-loop run starts empty; templates live in the pools.
+        assert!(sc.scenario.workloads.iter().all(|w| w.is_empty()));
+        for app in &sc.apps {
+            assert_eq!(app.pools.len(), app.nodes.len());
+            assert!(app.pools.iter().all(|p| !p.is_empty()));
+            // Arrivals are sorted and inside the horizon.
+            assert!(app.arrivals.windows(2).all(|w| w[0] <= w[1]));
+            assert!(app.arrivals.iter().all(|&t| (0.0..ts.horizon()).contains(&t)));
+        }
+        // Poisson at 2/s over 70 s generates a non-trivial stream.
+        assert!(sc.apps[0].arrivals.len() > 30, "{}", sc.apps[0].arrivals.len());
+        // Same seed → bit-identical streams; different seed → different.
+        let again = ts.build(7).unwrap();
+        assert_eq!(sc.apps[0].arrivals, again.apps[0].arrivals);
+        let other = ts.build(8).unwrap();
+        assert_ne!(sc.apps[0].arrivals, other.apps[0].arrivals);
+
+        assert!(TrafficSpec::new(vec![]).build(1).is_err());
+        let mut bad = sample();
+        bad.duration = 0.0;
+        assert!(bad.build(1).is_err());
+        let mut bad = sample();
+        bad.entries[0].weight = -1.0;
+        assert!(bad.build(1).is_err());
+        let mut bad = sample();
+        bad.entries[0].process = ArrivalSpec::Poisson { rate: 0.0 };
+        assert!(bad.build(1).is_err());
+        let mut bad = sample();
+        bad.queue_capacity = 0;
+        assert!(bad.build(1).is_err());
+    }
+
+    #[test]
+    fn cli_descriptor_parses_knobs_and_rejects_unknown_keys() {
+        let e = TrafficEntry::parse_cli("ensembling:rate=5:weight=2").unwrap();
+        assert_eq!(e.app, AppSpec::ensembling(1000, 256));
+        assert_eq!(e.process, ArrivalSpec::Poisson { rate: 5.0 });
+        assert_eq!(e.weight, 2.0);
+        assert_eq!(e.slo, None);
+        let e = TrafficEntry::parse_cli(
+            "chain-summary:n-docs=40:process=on-off:rate-on=8:mean-on=10:mean-off=30:slo=60",
+        )
+        .unwrap();
+        assert_eq!(e.app, AppSpec::chain_summary(40, 2, 256));
+        assert_eq!(
+            e.process,
+            ArrivalSpec::OnOff { rate_on: 8.0, rate_off: 0.0, mean_on: 10.0, mean_off: 30.0 }
+        );
+        assert_eq!(e.slo, Some(60.0));
+        // trace= implies the trace process; rate-on implies on-off.
+        let e = TrafficEntry::parse_cli("ensembling:trace=a.txt:seed=3").unwrap();
+        assert_eq!(e.process, ArrivalSpec::Trace { path: "a.txt".into() });
+        assert_eq!(e.seed, Some(3));
+        let e = TrafficEntry::parse_cli(
+            "ensembling:rate_on=4:mean_on=5:mean_off=5:rate_off=1",
+        )
+        .unwrap();
+        assert!(matches!(e.process, ArrivalSpec::OnOff { rate_off, .. } if rate_off == 1.0));
+        // Missing required knobs, unknown keys and bad values error.
+        assert!(TrafficEntry::parse_cli("ensembling").is_err(), "poisson needs rate=");
+        assert!(TrafficEntry::parse_cli("ensembling:process=on-off:rate-on=4").is_err());
+        assert!(TrafficEntry::parse_cli("ensembling:process=uniform:rate=1").is_err());
+        assert!(TrafficEntry::parse_cli("ensembling:rate=fast").is_err());
+        assert!(TrafficEntry::parse_cli("ensembling:bogus=1").is_err());
+        assert!(TrafficEntry::parse_cli("").is_err());
+        // Inapplicable app knobs are rejected by the app builder itself.
+        assert!(TrafficEntry::parse_cli("ensembling:n-docs=5:rate=1").is_err());
+    }
+}

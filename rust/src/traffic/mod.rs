@@ -1,0 +1,119 @@
+//! Open-loop traffic: arrival processes, bounded admission, and the
+//! materialised [`TrafficScenario`] the runner executes.
+//!
+//! This layer generalises the batch workload layer (`runner::workload`)
+//! from "N apps, each a fixed job arriving once" to *streams*: each app
+//! has an arrival process ([`arrivals`]) generating request-level
+//! arrivals over a warmup+measurement window, a bounded admission queue
+//! with a reject/defer overflow policy ([`queue`]), and a weighted fair
+//! share that decides which app's jobs enter the scheduling core at each
+//! stage boundary. The run is measured with serving metrics — per-app
+//! TTFT, TPOT, p50/p99 latency and SLO attainment
+//! ([`crate::metrics::latency`]) — instead of makespan.
+//!
+//! Data flow: [`crate::spec::traffic::TrafficSpec::build`] →
+//! [`TrafficScenario`] →
+//! [`crate::runner::traffic::run_traffic_with_backend`].
+
+pub mod arrivals;
+pub mod queue;
+
+pub use queue::{AdmissionQueue, QueueCounters, QueuePolicy, QueuedJob};
+
+use crate::runner::{AppRequest, Scenario};
+
+/// Cap on the per-app sampled arrival window handed to the planner: the
+/// steady-state placement is priced by simulating at most this many jobs
+/// per app (§4's sampling idea applied to a rate — enough to expose the
+/// per-model load mix without simulating the whole horizon).
+pub const PLANNING_WINDOW_JOBS: usize = 512;
+
+/// One application stream of a materialised traffic mix.
+#[derive(Debug, Clone)]
+pub struct TrafficApp {
+    /// Index of this app in the mix (== graph provenance `app` stamp).
+    pub app_id: usize,
+    /// The app's own scenario name ("ensembling-1000", …).
+    pub name: String,
+    /// Weighted-fair-share admission weight (a real scheduling priority).
+    pub weight: f64,
+    /// Optional per-request latency SLO in seconds (arrival →
+    /// completion).
+    pub slo: Option<f64>,
+    /// Global node ids of this app in the composed graph.
+    pub nodes: Vec<usize>,
+    /// Per-node request-template pools (parallel to `nodes`): arrival
+    /// `seq` replays template `seq % pool.len()` on each node. Templates
+    /// are independent requests — chain/dependency structure is not
+    /// replayed per arrival.
+    pub pools: Vec<Vec<AppRequest>>,
+    /// Pre-generated arrival timestamps, sorted ascending, within
+    /// `[0, warmup + duration)`.
+    pub arrivals: Vec<f64>,
+}
+
+/// Run-window and admission-queue configuration of a traffic run.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficCfg {
+    /// Measurement-window length in seconds.
+    pub duration: f64,
+    /// Warmup seconds before the window opens.
+    pub warmup: f64,
+    /// Per-app bounded queue capacity.
+    pub queue_capacity: usize,
+    /// Overflow policy.
+    pub queue_policy: QueuePolicy,
+    /// Maximum jobs admitted per stage boundary across all apps
+    /// (resolved: always ≥ 1).
+    pub admit_quantum: usize,
+}
+
+/// A materialised open-loop traffic mix: the composed graph (with empty
+/// initial workloads — requests enter only through admission), per-app
+/// streams, and the run-window configuration.
+#[derive(Debug, Clone)]
+pub struct TrafficScenario {
+    /// Mix name (becomes `RunReport::scenario`).
+    pub name: String,
+    /// The composed joint scenario. `workloads` are all empty: the
+    /// open-loop run starts idle and fills through the admission queue.
+    pub scenario: Scenario,
+    /// Per-app streams, indexed by `app_id`.
+    pub apps: Vec<TrafficApp>,
+    /// Window and queue configuration.
+    pub cfg: TrafficCfg,
+}
+
+impl TrafficScenario {
+    /// Arrival horizon: `warmup + duration`.
+    pub fn horizon(&self) -> f64 {
+        self.cfg.warmup + self.cfg.duration
+    }
+
+    /// Total arrivals across all apps over the horizon.
+    pub fn total_jobs(&self) -> u64 {
+        self.apps.iter().map(|a| a.arrivals.len() as u64).sum()
+    }
+
+    /// The sampled arrival window the planner prices: per app, the first
+    /// `min(arrivals, `[`PLANNING_WINDOW_JOBS`]`)` jobs (at least one, so
+    /// a plan exists even for a silent stream), each replaying its
+    /// per-node templates. This is "planning against a rate": the
+    /// steady-state placement is chosen by simulating a finite sample of
+    /// the stream the run will actually see.
+    pub fn planning_workloads(&self) -> Vec<Vec<AppRequest>> {
+        let mut out: Vec<Vec<AppRequest>> = vec![vec![]; self.scenario.graph.n_nodes()];
+        for app in &self.apps {
+            let n = app.arrivals.len().clamp(1, PLANNING_WINDOW_JOBS) as u64;
+            for (&node, pool) in app.nodes.iter().zip(&app.pools) {
+                out[node] = (0..n)
+                    .map(|seq| {
+                        let t = pool[(seq % pool.len() as u64) as usize];
+                        AppRequest::simple(seq, t.input_len, t.true_output_len)
+                    })
+                    .collect();
+            }
+        }
+        out
+    }
+}

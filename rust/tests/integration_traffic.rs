@@ -1,0 +1,201 @@
+//! End-to-end tests of the open-loop traffic layer: seeded determinism
+//! of every arrival process, Poisson statistics as properties, bounded
+//! admission-queue behaviour, weighted fair share as a real priority,
+//! and the zero-traffic parity contract (batch paths untouched).
+
+use samullm::cluster::ClusterSpec;
+use samullm::harness::{poisson_pair_traffic, staggered_pair_workload};
+use samullm::prop_assert;
+use samullm::runner::{run_policy, run_traffic, run_workload, RunOpts};
+use samullm::session::SamuLlm;
+use samullm::spec::{AppSpec, ArrivalSpec, TrafficEntry, TrafficSpec};
+use samullm::traffic::{arrivals, AdmissionQueue, QueuePolicy, QueuedJob};
+use samullm::util::quickprop;
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::a100_node(8)
+}
+
+#[test]
+fn every_arrival_process_is_seed_deterministic() {
+    let dir = std::env::temp_dir().join("samullm_it_trace.txt");
+    std::fs::write(&dir, "0.5\n1.25\n# comment\n3.0\n7.5\n").unwrap();
+    let procs = vec![
+        ArrivalSpec::Poisson { rate: 3.0 },
+        ArrivalSpec::OnOff { rate_on: 6.0, rate_off: 0.2, mean_on: 4.0, mean_off: 9.0 },
+        ArrivalSpec::Trace { path: dir.display().to_string() },
+    ];
+    for p in &procs {
+        let a = arrivals::generate(p, 99, 50.0).unwrap();
+        let b = arrivals::generate(p, 99, 50.0).unwrap();
+        assert_eq!(a, b, "{p:?}: same seed must replay the same stream");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "{p:?}: sorted");
+        assert!(a.iter().all(|&t| (0.0..50.0).contains(&t)), "{p:?}: in horizon");
+    }
+    // Different seeds decorrelate the random processes (trace replay is
+    // seed-independent by construction).
+    for p in &procs[..2] {
+        let a = arrivals::generate(p, 99, 50.0).unwrap();
+        let c = arrivals::generate(p, 100, 50.0).unwrap();
+        assert_ne!(a, c, "{p:?}: seed must matter");
+    }
+    std::fs::remove_file(&dir).ok();
+}
+
+#[test]
+fn poisson_interarrival_mean_matches_rate_as_a_property() {
+    // Property: over random rates and seeds, the empirical mean gap of a
+    // generated Poisson stream is within 15% of 1/rate (the horizon is
+    // scaled so every case sees ~600 arrivals).
+    quickprop::run(25, 0xA121, |rng| {
+        let rate = 0.5 + rng.uniform() * 7.5;
+        let horizon = 600.0 / rate;
+        let ts = arrivals::generate(&ArrivalSpec::Poisson { rate }, rng.next_u64(), horizon)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(ts.len() >= 300, "rate {rate:.2}: only {} arrivals", ts.len());
+        let gaps: Vec<f64> = std::iter::once(ts[0])
+            .chain(ts.windows(2).map(|w| w[1] - w[0]))
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let expect = 1.0 / rate;
+        prop_assert!(
+            (mean - expect).abs() / expect < 0.15,
+            "rate {rate:.2}: mean gap {mean:.4} vs expected {expect:.4}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn bounded_queue_reject_and_defer_boundaries() {
+    let job = |app_id: usize, seq: u64| QueuedJob { app_id, seq, arrival: seq as f64 };
+    // Reject: exactly `capacity` jobs fit; the next offer is dropped and
+    // counted, and draining one slot reopens the queue.
+    let mut q = AdmissionQueue::new(&[1.0], 2, QueuePolicy::Reject);
+    assert!(q.offer(job(0, 0)) && q.offer(job(0, 1)));
+    assert!(!q.offer(job(0, 2)), "offer past capacity must be rejected");
+    assert_eq!(q.counters()[0].rejected, 1);
+    assert_eq!(q.pop_fair().unwrap().seq, 0);
+    assert!(q.offer(job(0, 3)), "draining reopens the queue");
+    // Defer: the overflow parks in the backlog instead, preserving FIFO
+    // order through promotion.
+    let mut q = AdmissionQueue::new(&[1.0], 2, QueuePolicy::Defer);
+    for seq in 0..5 {
+        assert!(q.offer(job(0, seq)), "defer never drops");
+    }
+    assert_eq!(q.counters()[0].deferred, 3);
+    assert_eq!(q.len(), 5);
+    let order: Vec<u64> = std::iter::from_fn(|| q.pop_fair()).map(|j| j.seq).collect();
+    assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    assert_eq!(q.counters()[0].admitted, 5);
+}
+
+#[test]
+fn weighted_fair_share_is_a_real_admission_priority() {
+    // Two identical app streams (same spec, same per-entry seed, so the
+    // same arrival timestamps and the same request templates) differing
+    // only in weight, over an overloaded narrow queue. The weight-2 app
+    // must take 2/3 of the admission slots whenever both queues are
+    // backlogged, which shows up as strictly better queueing delay.
+    let entry = |weight: f64| TrafficEntry {
+        app: AppSpec::ensembling(24, 96),
+        process: ArrivalSpec::Poisson { rate: 2.5 },
+        weight,
+        slo: Some(30.0),
+        seed: Some(7),
+    };
+    let spec = TrafficSpec {
+        name: "fairness-pair".into(),
+        entries: vec![entry(2.0), entry(1.0)],
+        duration: 10.0,
+        warmup: 0.0,
+        queue_capacity: 2,
+        queue_policy: QueuePolicy::Defer,
+        admit_quantum: 1,
+    };
+    let ts = spec.build(11).unwrap();
+    assert_eq!(ts.apps[0].arrivals, ts.apps[1].arrivals, "paired streams");
+    let opts = RunOpts { seed: 11, ..RunOpts::default() };
+    let r = run_traffic("round-robin", &ts, &cluster(), &opts);
+    let t = r.traffic.expect("traffic section");
+    assert!(t.deferred > 0, "the mix must actually overload the queue: {t:?}");
+    let (a, b) = (&t.per_app[0], &t.per_app[1]);
+    assert_eq!(a.offered, b.offered, "identical streams offer identically");
+    let (ttft_a, ttft_b) = (a.ttft_mean.unwrap(), b.ttft_mean.unwrap());
+    assert!(
+        ttft_a < ttft_b,
+        "weight 2 must buy shorter queueing delay: ttft {ttft_a:.3} vs {ttft_b:.3}"
+    );
+    let (p99_a, p99_b) = (a.latency_p99.unwrap(), b.latency_p99.unwrap());
+    assert!(
+        p99_a <= p99_b,
+        "weight 2 must not worsen tail latency: p99 {p99_a:.3} vs {p99_b:.3}"
+    );
+}
+
+#[test]
+fn traffic_runs_are_deterministic_end_to_end() {
+    let ts = poisson_pair_traffic(2.0, 1.0, 2.0, 15.0).build(5).unwrap();
+    let opts = RunOpts { seed: 5, ..RunOpts::default() };
+    let a = run_traffic("ours", &ts, &cluster(), &opts);
+    let b = run_traffic("ours", &ts, &cluster(), &opts);
+    assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+    assert_eq!(a.traffic, b.traffic);
+    assert_eq!(a.to_json(), b.to_json());
+}
+
+#[test]
+fn zero_traffic_runs_stay_on_the_batch_path_bit_for_bit() {
+    // The parity contract: `run` and `run_workload` know nothing about
+    // traffic — their reports carry no serving section, their JSON pins
+    // `"traffic":null`, and repeated runs stay bit-identical.
+    let opts = RunOpts { seed: 42, ..RunOpts::default() };
+    let scenario = AppSpec::ensembling(60, 128).build(42).unwrap();
+    let r1 = run_policy("ours", &scenario, &cluster(), &opts);
+    let r2 = run_policy("ours", &scenario, &cluster(), &opts);
+    assert!(r1.traffic.is_none());
+    assert!(r1.to_json().contains("\"traffic\":null"), "{}", r1.to_json());
+    assert_eq!(r1.inference_time.to_bits(), r2.inference_time.to_bits());
+    assert_eq!(r1.to_json(), r2.to_json());
+
+    let ws = staggered_pair_workload(8, 80, 40.0).build(42).unwrap();
+    let w1 = run_workload("ours", &ws, &cluster(), &opts);
+    let w2 = run_workload("ours", &ws, &cluster(), &opts);
+    assert!(w1.traffic.is_none());
+    assert!(w1.to_json().contains("\"traffic\":null"));
+    assert_eq!(w1.inference_time.to_bits(), w2.inference_time.to_bits());
+    assert_eq!(w1.to_json(), w2.to_json());
+}
+
+#[test]
+fn session_traffic_round_trips_through_config_json() {
+    // A traffic mix survives the ExperimentConfig JSON round-trip and the
+    // rebuilt spec reproduces the run bit-for-bit.
+    let spec = poisson_pair_traffic(1.5, 1.0, 2.0, 10.0);
+    let cfg_json = format!(
+        r#"{{"traffic":{},"policy":"ours","n_gpus":8,"seed":9}}"#,
+        spec.to_json_string()
+    );
+    let cfg = samullm::config::ExperimentConfig::from_json(&cfg_json).unwrap();
+    let back = cfg.traffic.expect("traffic mode");
+    assert_eq!(back, spec);
+    let session = SamuLlm::builder().gpus(8).seed(9).build().unwrap();
+    let a = session.run_traffic(&spec).unwrap();
+    let b = session.run_traffic(&back).unwrap();
+    assert_eq!(a.to_json(), b.to_json());
+    let t = a.traffic.expect("traffic section");
+    assert_eq!(t.per_app.len(), 2);
+    // Every reported metric field is present in the JSON contract.
+    let json = b.to_json();
+    for key in [
+        "\"ttft_mean\"",
+        "\"ttft_p99\"",
+        "\"tpot_mean\"",
+        "\"latency_p50\"",
+        "\"latency_p99\"",
+        "\"slo_attainment\"",
+        "\"queue_depth_mean\"",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
