@@ -1,0 +1,181 @@
+//! Admission-policy benchmarks on the engine scheduler: a heavy-tailed
+//! closed batch (1% long jobs at the head of the FCFS queue) run under
+//! every admission policy, plus an adversarially mispredicted variant
+//! (long jobs predicted short and vice versa) that prices the cost of
+//! trusting bad length predictions. Reports per-policy p50/p99 request
+//! latency, throughput, and the admission counters; the headline bit is
+//! `spjf_beats_fcfs_p99` on the heavy-tailed trace. Writes
+//! `BENCH_admission.json`; `--smoke` shrinks the trace to CI size.
+
+use samullm::cluster::ClusterSpec;
+use samullm::costmodel::HardwareModel;
+use samullm::engine::sim::{EngineConfig, EngineSim};
+use samullm::engine::{AdmitPolicy, EngineRequest, EventKind, SimOutcome};
+use samullm::models::Registry;
+use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
+
+const SEED: u64 = 42;
+const MAX_NUM_SEQS: usize = 8;
+
+/// Heavy-tailed closed batch: `n_long` long jobs take the lowest ids (so
+/// FCFS admits them first — worst-case head-of-line blocking) and the
+/// short crowd queues behind them. Everything is ready at t = 0, so a
+/// request's completion time *is* its latency.
+fn heavy_tailed(n: usize, n_long: usize) -> Vec<EngineRequest> {
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        let (input, output) = if (i as usize) < n_long {
+            (32 + (i % 3) as u32 * 8, 1200 + (i % 4) as u32 * 100)
+        } else {
+            (12 + (i % 7) as u32, 4 + (i % 12) as u32)
+        };
+        let mut r = EngineRequest::fresh(i, input, output);
+        r.predicted_len = output;
+        reqs.push(r);
+    }
+    reqs
+}
+
+/// The same trace with predictions swapped across the tail: long jobs
+/// claim to be short and shorts claim to be long. Length-aware policies
+/// now actively favour the long jobs.
+fn mispredicted(n: usize, n_long: usize) -> Vec<EngineRequest> {
+    let mut reqs = heavy_tailed(n, n_long);
+    for r in reqs.iter_mut() {
+        r.predicted_len = if r.output_len >= 1000 { 6 } else { 1300 };
+    }
+    reqs
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct PolicyRun {
+    out: SimOutcome,
+    p50: f64,
+    p99: f64,
+    wall: f64,
+}
+
+/// Run one policy over `reqs`, collecting per-request completion-time
+/// latencies from the event stream.
+fn run_policy(
+    label: &str,
+    admit: AdmitPolicy,
+    reqs: &[EngineRequest],
+    g: &mut BenchGroup,
+) -> PolicyRun {
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let spec = registry.get("chatglm3-6b").expect("paper model");
+    let hw = HardwareModel::new(cluster.clone());
+    let mut result: Option<(SimOutcome, Vec<f64>)> = None;
+    let wall = g
+        .bench(label, || {
+            let mut cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes)
+                .expect("engine config");
+            cfg.max_num_seqs = MAX_NUM_SEQS;
+            cfg.admit = admit;
+            let mut sim =
+                EngineSim::new(spec, 1, &hw, cfg, reqs.to_vec(), 0.0, SEED);
+            sim.enable_events(0, 0);
+            let out = sim.run(None);
+            let mut lat: Vec<f64> = sim
+                .take_events()
+                .iter()
+                .filter_map(|e| match e.kind {
+                    EventKind::Completed { .. } => Some(e.t),
+                    _ => None,
+                })
+                .collect();
+            lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+            result = Some((out, lat));
+        })
+        .median;
+    let (out, lat) = result.expect("bench ran at least one sample");
+    assert!(out.finished == reqs.len(), "{label}: policy lost requests");
+    PolicyRun { p50: quantile(&lat, 0.50), p99: quantile(&lat, 0.99), wall, out }
+}
+
+fn policy_json(name: &str, r: &PolicyRun, n: usize) -> Json {
+    Json::obj(vec![
+        ("policy", Json::Str(name.to_string())),
+        ("latency_p50_s", Json::Num(r.p50)),
+        ("latency_p99_s", Json::Num(r.p99)),
+        ("makespan_s", Json::Num(r.out.clock)),
+        ("throughput_rps", Json::Num(n as f64 / r.out.clock)),
+        ("queue_jumps", Json::Num(r.out.admit.queue_jumps as f64)),
+        ("promotions", Json::Num(r.out.admit.promotions as f64)),
+        ("max_queue_wait_s", Json::Num(r.out.admit.max_queue_wait)),
+        ("wall_s", Json::Num(r.wall)),
+    ])
+}
+
+fn sweep(tag: &str, reqs: &[EngineRequest], g: &mut BenchGroup) -> Vec<(String, PolicyRun)> {
+    let policies = [
+        ("fcfs", AdmitPolicy::Fcfs),
+        ("spjf", AdmitPolicy::Spjf),
+        ("multi-bin:4", AdmitPolicy::MultiBin { bins: 4 }),
+        ("skip-join:4:5", AdmitPolicy::SkipJoinMlfq { queues: 4, promote_after: 5.0 }),
+    ];
+    policies
+        .into_iter()
+        .map(|(name, admit)| {
+            let r = run_policy(&format!("{tag}/{name}"), admit, reqs, g);
+            println!(
+                "{tag}/{name}: p50 {:.2}s p99 {:.2}s makespan {:.1}s \
+                 jumps {} promotions {}",
+                r.p50, r.p99, r.out.clock, r.out.admit.queue_jumps, r.out.admit.promotions
+            );
+            (name.to_string(), r)
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n, n_long) = if smoke { (120, 2) } else { (400, 4) };
+    let mut g = BenchGroup::new("admission");
+    g.sample_size(if smoke { 2 } else { 3 });
+
+    let heavy = sweep("heavy_tailed", &heavy_tailed(n, n_long), &mut g);
+    let swapped = sweep("mispredicted", &mispredicted(n, n_long), &mut g);
+    g.finish();
+
+    let p99_of = |runs: &[(String, PolicyRun)], name: &str| {
+        runs.iter().find(|(n, _)| n == name).expect("policy present").1.p99
+    };
+    let spjf_beats_fcfs = p99_of(&heavy, "spjf") < p99_of(&heavy, "fcfs");
+    println!(
+        "heavy-tailed p99: fcfs {:.2}s vs spjf {:.2}s ({})",
+        p99_of(&heavy, "fcfs"),
+        p99_of(&heavy, "spjf"),
+        if spjf_beats_fcfs { "spjf wins" } else { "fcfs wins" }
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("admission".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("n_requests", Json::Num(n as f64)),
+        ("n_long", Json::Num(n_long as f64)),
+        (
+            "heavy_tailed",
+            Json::Arr(heavy.iter().map(|(name, r)| policy_json(name, r, n)).collect()),
+        ),
+        (
+            "mispredicted",
+            Json::Arr(swapped.iter().map(|(name, r)| policy_json(name, r, n)).collect()),
+        ),
+        ("spjf_beats_fcfs_p99", Json::Bool(spjf_beats_fcfs)),
+    ])
+    .to_string();
+    std::fs::write("BENCH_admission.json", format!("{doc}\n"))
+        .expect("write BENCH_admission.json");
+    println!("wrote BENCH_admission.json");
+}

@@ -10,6 +10,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::costmodel::online;
+use crate::engine::AdmitPolicy;
 use crate::exec;
 use crate::policy;
 use crate::spec::{AppSpec, TrafficSpec, WorkloadSpec};
@@ -59,6 +60,10 @@ pub struct ExperimentConfig {
     /// Weight of one observed completion in offline-trace-sample
     /// equivalents (only with `online_refinement`).
     pub online_weight: f64,
+    /// Canonical engine admission-policy name
+    /// (`fcfs | spjf | multi-bin:K | skip-join:Q:P`; spellings accepted on
+    /// parse — see [`AdmitPolicy::parse`]).
+    pub admit: String,
 }
 
 impl ExperimentConfig {
@@ -104,6 +109,7 @@ impl ExperimentConfig {
             ("online_refinement", Json::Bool(self.online_refinement)),
             ("replan_threshold", Json::Num(self.replan_threshold)),
             ("online_weight", Json::Num(self.online_weight)),
+            ("admit", Json::Str(self.admit.clone())),
         ])
         .to_string()
     }
@@ -172,6 +178,10 @@ impl ExperimentConfig {
                 .get("online_weight")
                 .and_then(|x| x.as_f64())
                 .unwrap_or(online::DEFAULT_OBS_WEIGHT),
+            admit: AdmitPolicy::parse(
+                v.get("admit").and_then(|a| a.as_str()).unwrap_or("fcfs"),
+            )?
+            .name(),
         })
     }
 }
@@ -198,6 +208,7 @@ mod tests {
             online_refinement: true,
             replan_threshold: 0.2,
             online_weight: 16.0,
+            admit: "multi-bin:4".to_string(),
         };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.app, c.app);
@@ -210,6 +221,7 @@ mod tests {
         assert!(back.online_refinement);
         assert_eq!(back.replan_threshold, 0.2);
         assert_eq!(back.online_weight, 16.0);
+        assert_eq!(back.admit, "multi-bin:4");
     }
 
     #[test]
@@ -227,9 +239,10 @@ mod tests {
         assert!(!c.online_refinement);
         assert_eq!(c.replan_threshold, online::DEFAULT_REPLAN_THRESHOLD);
         assert_eq!(c.online_weight, online::DEFAULT_OBS_WEIGHT);
-        // Backend defaults to the simulated substrate.
+        // Backend defaults to the simulated substrate, admission to FCFS.
         assert_eq!(c.backend, "sim");
         assert!(c.artifacts.is_none());
+        assert_eq!(c.admit, "fcfs");
     }
 
     #[test]
@@ -276,6 +289,7 @@ mod tests {
                 online_refinement: false,
                 replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
                 online_weight: online::DEFAULT_OBS_WEIGHT,
+                admit: "fcfs".to_string(),
             };
             let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
             assert_eq!(back.app, Some(app));
@@ -291,6 +305,13 @@ mod tests {
             ExperimentConfig::from_json(r#"{"app":{"kind":"ensembling"},"policy":"fifo"}"#)
                 .is_err()
         );
+        assert!(
+            ExperimentConfig::from_json(r#"{"app":{"kind":"ensembling"},"admit":"nope"}"#)
+                .is_err()
+        );
+        // Admission spellings canonicalise on parse.
+        let j = r#"{"app":{"kind":"ensembling"},"admit":"mlfq"}"#;
+        assert!(ExperimentConfig::from_json(j).unwrap().admit.starts_with("skip-join:"));
         // None of app/workload/traffic, or more than one at once, errors.
         assert!(ExperimentConfig::from_json(r#"{"policy":"ours"}"#).is_err());
         let both = r#"{"app":{"kind":"ensembling"},
@@ -343,6 +364,7 @@ mod tests {
             online_refinement: false,
             replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
             online_weight: online::DEFAULT_OBS_WEIGHT,
+            admit: "fcfs".to_string(),
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();
@@ -390,6 +412,7 @@ mod tests {
             online_refinement: false,
             replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
             online_weight: online::DEFAULT_OBS_WEIGHT,
+            admit: "fcfs".to_string(),
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();

@@ -17,7 +17,9 @@ pub mod sched;
 pub mod session;
 pub mod sim;
 
-pub use sched::{EngineConfig, EngineEvent, EventKind, SimOutcome, StepExec, StepReq};
+pub use sched::{
+    AdmitPolicy, AdmitStats, EngineConfig, EngineEvent, EventKind, SimOutcome, StepExec, StepReq,
+};
 pub use sim::EngineSim;
 
 /// A request as fed to the engine: lengths are already resolved (the
@@ -46,6 +48,12 @@ pub struct EngineRequest {
     /// model kept its plan and placement): re-admission skips the
     /// re-prefill cost. Reset by in-engine preemption (recompute).
     pub kv_resident: bool,
+    /// Predicted total output length for length-aware admission policies
+    /// (sampled from the offline eCDF, refined by the online posterior).
+    /// `0` = no prediction: policies fall back to `output_len`, which in
+    /// planner estimate-states *is* the sampled prediction. Ignored by
+    /// FCFS.
+    pub predicted_len: u32,
 }
 
 impl EngineRequest {
@@ -63,6 +71,7 @@ impl EngineRequest {
             generated: 0,
             chain_next: None,
             kv_resident: false,
+            predicted_len: 0,
         }
     }
 

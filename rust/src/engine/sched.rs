@@ -32,6 +32,171 @@ use crate::util::rng::Rng;
 
 const GIB: f64 = (1u64 << 30) as f64;
 
+/// Default bin count for [`AdmitPolicy::MultiBin`].
+pub const DEFAULT_MULTI_BIN_BINS: u32 = 4;
+/// Default queue count for [`AdmitPolicy::SkipJoinMlfq`].
+pub const DEFAULT_SKIP_JOIN_QUEUES: u32 = 4;
+/// Default starvation-bounding promotion clock (virtual seconds) for
+/// [`AdmitPolicy::SkipJoinMlfq`].
+pub const DEFAULT_SKIP_JOIN_PROMOTE: f64 = 30.0;
+
+/// How the scheduling core orders the waiting queue when it builds a
+/// prefill batch.
+///
+/// `Fcfs` is the historical discipline and stays byte-identical to the
+/// pre-policy engine. The length-aware policies consume per-request
+/// *predicted* output lengths ([`EngineRequest::predicted_len`], sampled
+/// from the offline eCDF and refined mid-run by the online posterior) and
+/// may admit a later arrival ahead of an earlier one; unlike FCFS they
+/// *skip* candidates that don't fit the token/block budget instead of
+/// treating them as a barrier, so a batch is never held hostage by one
+/// long prompt.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum AdmitPolicy {
+    /// First-come-first-served by ready time (the vLLM default).
+    #[default]
+    Fcfs,
+    /// Shortest-predicted-job-first on the predicted remaining length.
+    Spjf,
+    /// Group candidates into `bins` geometric predicted-length bins and
+    /// admit short bins first (arrival order within a bin) — multi-bin
+    /// batching, arXiv 2412.04504.
+    MultiBin {
+        /// Number of length bins (≥ 1; 1 degenerates to FCFS order).
+        bins: u32,
+    },
+    /// FastServe-style skip-join MLFQ: a candidate joins the queue level
+    /// matching its predicted length and is promoted to the front after
+    /// waiting `promote_after` seconds, bounding starvation.
+    SkipJoinMlfq {
+        /// Number of queue levels (≥ 1).
+        queues: u32,
+        /// Seconds a candidate may wait before promotion to level 0.
+        promote_after: f64,
+    },
+}
+
+impl AdmitPolicy {
+    /// Parse a CLI/config spelling: `fcfs` (alias `fifo`), `spjf` (alias
+    /// `sjf`), `multi-bin[:BINS]` (alias `multibin`) and
+    /// `skip-join[:QUEUES[:PROMOTE_S]]` (aliases `skip-join-mlfq`,
+    /// `mlfq`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        let arg_u32 = |i: usize, default: u32| -> Result<u32> {
+            match args.get(i) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse::<u32>()
+                    .map_err(|e| anyhow!("bad admission policy arg {v:?} in {s:?}: {e}")),
+            }
+        };
+        let arg_f64 = |i: usize, default: f64| -> Result<f64> {
+            match args.get(i) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("bad admission policy arg {v:?} in {s:?}: {e}")),
+            }
+        };
+        let too_many = |max: usize| -> Result<()> {
+            if args.len() > max {
+                return Err(anyhow!("too many arguments in admission policy {s:?}"));
+            }
+            Ok(())
+        };
+        match head {
+            "fcfs" | "fifo" => {
+                too_many(0)?;
+                Ok(AdmitPolicy::Fcfs)
+            }
+            "spjf" | "sjf" => {
+                too_many(0)?;
+                Ok(AdmitPolicy::Spjf)
+            }
+            "multi-bin" | "multibin" => {
+                too_many(1)?;
+                let bins = arg_u32(0, DEFAULT_MULTI_BIN_BINS)?;
+                if bins == 0 {
+                    return Err(anyhow!("multi-bin needs at least 1 bin"));
+                }
+                Ok(AdmitPolicy::MultiBin { bins })
+            }
+            "skip-join" | "skip-join-mlfq" | "mlfq" => {
+                too_many(2)?;
+                let queues = arg_u32(0, DEFAULT_SKIP_JOIN_QUEUES)?;
+                let promote_after = arg_f64(1, DEFAULT_SKIP_JOIN_PROMOTE)?;
+                if queues == 0 {
+                    return Err(anyhow!("skip-join needs at least 1 queue"));
+                }
+                if !(promote_after > 0.0) {
+                    return Err(anyhow!("skip-join promotion clock must be > 0"));
+                }
+                Ok(AdmitPolicy::SkipJoinMlfq { queues, promote_after })
+            }
+            _ => Err(anyhow!(
+                "unknown admission policy {s:?}; known: {}",
+                AdmitPolicy::names()
+            )),
+        }
+    }
+
+    /// Canonical spelling that round-trips through [`AdmitPolicy::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            AdmitPolicy::Fcfs => "fcfs".to_string(),
+            AdmitPolicy::Spjf => "spjf".to_string(),
+            AdmitPolicy::MultiBin { bins } => format!("multi-bin:{bins}"),
+            AdmitPolicy::SkipJoinMlfq { queues, promote_after } => {
+                format!("skip-join:{queues}:{promote_after}")
+            }
+        }
+    }
+
+    /// The accepted spellings, for CLI help and error messages.
+    pub fn names() -> &'static str {
+        "fcfs | spjf | multi-bin[:BINS] | skip-join[:QUEUES[:PROMOTE_S]]"
+    }
+
+    /// Geometric length-bin index used by `MultiBin` and the skip-join
+    /// queue levels: bin edges at 16, 64, 256, … predicted tokens.
+    /// Monotone non-decreasing in `predicted`, clamped to `bins - 1`.
+    pub fn bin_index(predicted: u32, bins: u32) -> u32 {
+        let mut bin = 0u32;
+        let mut edge = 16u64;
+        while bin + 1 < bins && predicted as u64 > edge {
+            bin += 1;
+            edge = edge.saturating_mul(4);
+        }
+        bin
+    }
+}
+
+/// Counters of length-aware admission behaviour, all zero under FCFS
+/// (which preserves the byte-identical default path).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdmitStats {
+    /// Admissions that overtook an earlier-arrived, still-waiting request.
+    pub queue_jumps: u64,
+    /// Skip-join starvation promotions applied at admission.
+    pub promotions: u64,
+    /// Longest ready-to-admission wait observed (seconds).
+    pub max_queue_wait: f64,
+}
+
+impl AdmitStats {
+    /// Fold another replica's counters into this one.
+    pub fn absorb(&mut self, other: &AdmitStats) {
+        self.queue_jumps += other.queue_jumps;
+        self.promotions += other.promotions;
+        if other.max_queue_wait > self.max_queue_wait {
+            self.max_queue_wait = other.max_queue_wait;
+        }
+    }
+}
+
 /// Engine scheduling parameters (vLLM defaults).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -52,6 +217,9 @@ pub struct EngineConfig {
     pub noise_sigma: Option<f64>,
     /// GPU memory available for KV blocks (set from cluster + weights).
     pub kv_bytes_budget: u64,
+    /// Waiting-queue admission order (default [`AdmitPolicy::Fcfs`],
+    /// byte-identical to the pre-policy engine).
+    pub admit: AdmitPolicy,
 }
 
 impl EngineConfig {
@@ -82,6 +250,7 @@ impl EngineConfig {
             fast_forward: true,
             noise_sigma: None,
             kv_bytes_budget: kv_budget,
+            admit: AdmitPolicy::Fcfs,
         };
         let block_bytes = cfg.block_tokens as u64 * spec.kv_bytes_per_token(tp) * tp as u64;
         if kv_budget < block_bytes.saturating_mul(cfg.watermark_blocks + 1) {
@@ -144,6 +313,8 @@ pub struct SimOutcome {
     pub preemptions: u64,
     /// Output tokens produced.
     pub tokens_generated: u64,
+    /// Length-aware admission counters (all zero under FCFS).
+    pub admit: AdmitStats,
 }
 
 /// A scheduler-side view of one request inside an iteration, handed to the
@@ -434,8 +605,132 @@ impl<X: StepExec> SchedCore<X> {
         self.waiting.peek().map(|Reverse((bits, _, _))| f64::from_bits(*bits))
     }
 
-    /// Try to build a prefill batch (FCFS by ready time, token/block bounded).
+    /// Try to build a prefill batch. Dispatches on the configured
+    /// [`AdmitPolicy`]; the FCFS arm is the historical admission loop,
+    /// untouched, so the default path stays byte-identical.
     fn admit(&mut self) -> Vec<usize> {
+        match self.cfg.admit {
+            AdmitPolicy::Fcfs => self.admit_fcfs(),
+            _ => self.admit_prioritized(),
+        }
+    }
+
+    /// Predicted total output length of a slot's request: the runner's
+    /// sampled/posterior estimate when present, the resolved output length
+    /// otherwise (planner estimate-states resolve lengths *by* sampling,
+    /// so the fallback is already the prediction there).
+    fn predicted_remaining(&self, idx: usize) -> u32 {
+        let r = &self.slots[idx].req;
+        let total = if r.predicted_len > 0 { r.predicted_len } else { r.output_len };
+        total.saturating_sub(r.generated).max(1)
+    }
+
+    /// Policy rank of a waiting candidate (lower admits first; FCFS seq
+    /// breaks ties). Returns `(key, promoted)` where `promoted` marks a
+    /// skip-join starvation promotion.
+    fn rank(&self, idx: usize, ready_bits: u64) -> (u64, bool) {
+        match self.cfg.admit {
+            AdmitPolicy::Fcfs => (0, false),
+            AdmitPolicy::Spjf => (self.predicted_remaining(idx) as u64, false),
+            AdmitPolicy::MultiBin { bins } => {
+                (AdmitPolicy::bin_index(self.predicted_remaining(idx), bins) as u64, false)
+            }
+            AdmitPolicy::SkipJoinMlfq { queues, promote_after } => {
+                let level = AdmitPolicy::bin_index(self.predicted_remaining(idx), queues);
+                let wait = self.clock - f64::from_bits(ready_bits);
+                if level > 0 && wait >= promote_after {
+                    (0, true) // starved: promote to the front queue
+                } else {
+                    (level as u64, false)
+                }
+            }
+        }
+    }
+
+    /// Length-aware admission: drain every currently-ready candidate, rank
+    /// by the policy key (FCFS seq as tie-break), and admit greedily under
+    /// the same token/block/seat bounds as FCFS — but *skip* candidates
+    /// that don't fit instead of stopping, so one long prompt can't hold
+    /// the batch hostage. Skipped candidates re-enter the waiting heap
+    /// under their original keys.
+    fn admit_prioritized(&mut self) -> Vec<usize> {
+        let mut cands: Vec<(u64, u64, usize)> = vec![];
+        while let Some(&Reverse((bits, seq, idx))) = self.waiting.peek() {
+            if f64::from_bits(bits) > self.clock {
+                break;
+            }
+            self.waiting.pop();
+            cands.push((bits, seq, idx));
+        }
+        if cands.is_empty() {
+            return vec![];
+        }
+        let mut ranked: Vec<(u64, bool, u64, u64, usize)> = cands
+            .into_iter()
+            .map(|(bits, seq, idx)| {
+                let (key, promoted) = self.rank(idx, bits);
+                (key, promoted, seq, bits, idx)
+            })
+            .collect();
+        ranked.sort_unstable_by_key(|&(key, _, seq, _, _)| (key, seq));
+        let mut batch = vec![];
+        let mut admitted_seqs: Vec<u64> = vec![];
+        let mut batch_tokens = 0u64;
+        let mut leftover: Vec<(u64, u64, usize)> = vec![];
+        let mut min_left_seq = u64::MAX;
+        for (_, promoted, seq, bits, idx) in ranked {
+            if self.running.len() + batch.len() >= self.cfg.max_num_seqs {
+                min_left_seq = min_left_seq.min(seq);
+                leftover.push((bits, seq, idx));
+                continue;
+            }
+            let slot = &self.slots[idx];
+            debug_assert_eq!(slot.state, ReqState::Waiting);
+            let prompt = slot.req.input_len + slot.req.generated;
+            let prefill_tokens = if slot.req.kv_resident && slot.req.generated > 0 {
+                1
+            } else {
+                prompt
+            };
+            let need = self.blocks_for(prompt + 1);
+            let over_tokens = batch_tokens + prefill_tokens as u64 > self.cfg.max_batch_tokens
+                && !batch.is_empty();
+            if over_tokens || self.free_blocks < need + self.cfg.watermark_blocks {
+                min_left_seq = min_left_seq.min(seq);
+                leftover.push((bits, seq, idx));
+                continue;
+            }
+            self.free_blocks -= need;
+            let wait = (self.clock - f64::from_bits(bits)).max(0.0);
+            if wait > self.outcome.admit.max_queue_wait {
+                self.outcome.admit.max_queue_wait = wait;
+            }
+            if promoted {
+                self.outcome.admit.promotions += 1;
+            }
+            let slot = &mut self.slots[idx];
+            slot.blocks = need;
+            slot.ctx = prompt + 1; // prefill emits the first output token
+            slot.state = ReqState::Running;
+            slot.admit_seq = self.admit_counter;
+            self.admit_counter += 1;
+            batch_tokens += prefill_tokens as u64;
+            admitted_seqs.push(seq);
+            batch.push(idx);
+        }
+        if min_left_seq != u64::MAX {
+            self.outcome.admit.queue_jumps +=
+                admitted_seqs.iter().filter(|&&s| s > min_left_seq).count() as u64;
+        }
+        for (bits, seq, idx) in leftover {
+            self.waiting.push(Reverse((bits, seq, idx)));
+        }
+        batch
+    }
+
+    /// The historical prefill-batch builder (FCFS by ready time,
+    /// token/block bounded) — the byte-identical default path.
+    fn admit_fcfs(&mut self) -> Vec<usize> {
         let mut batch = vec![];
         let mut batch_tokens = 0u64;
         while let Some(&Reverse((bits, _, idx))) = self.waiting.peek() {
@@ -890,6 +1185,167 @@ mod tests {
         assert!((dur - out.busy_time).abs() < 1e-9, "dur {dur} vs busy {}", out.busy_time);
         // Timestamps are monotone.
         assert!(events.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn admit_policy_parse_and_name_roundtrip() {
+        for (spelling, want) in [
+            ("fcfs", AdmitPolicy::Fcfs),
+            ("fifo", AdmitPolicy::Fcfs),
+            ("spjf", AdmitPolicy::Spjf),
+            ("sjf", AdmitPolicy::Spjf),
+            ("multi-bin", AdmitPolicy::MultiBin { bins: DEFAULT_MULTI_BIN_BINS }),
+            ("multibin:6", AdmitPolicy::MultiBin { bins: 6 }),
+            (
+                "skip-join",
+                AdmitPolicy::SkipJoinMlfq {
+                    queues: DEFAULT_SKIP_JOIN_QUEUES,
+                    promote_after: DEFAULT_SKIP_JOIN_PROMOTE,
+                },
+            ),
+            (
+                "mlfq:3:2.5",
+                AdmitPolicy::SkipJoinMlfq { queues: 3, promote_after: 2.5 },
+            ),
+        ] {
+            let parsed = AdmitPolicy::parse(spelling).unwrap();
+            assert_eq!(parsed, want, "{spelling}");
+            // The canonical name round-trips.
+            assert_eq!(AdmitPolicy::parse(&parsed.name()).unwrap(), parsed);
+        }
+        for bad in ["nope", "multi-bin:0", "multi-bin:x", "skip-join:4:0", "fcfs:1", "spjf:2:3"] {
+            assert!(AdmitPolicy::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn bin_index_is_monotone_and_clamped() {
+        for bins in 1..=6u32 {
+            let mut prev = 0;
+            for p in 0..5000u32 {
+                let b = AdmitPolicy::bin_index(p, bins);
+                assert!(b >= prev, "bin regressed at {p}");
+                assert!(b < bins, "bin {b} out of range for {bins}");
+                prev = b;
+            }
+        }
+        assert_eq!(AdmitPolicy::bin_index(1, 4), 0);
+        assert_eq!(AdmitPolicy::bin_index(700, 4), 3);
+    }
+
+    fn sim_with(
+        cfg: EngineConfig,
+        reqs: Vec<EngineRequest>,
+        events: bool,
+    ) -> (SimOutcome, Vec<EngineEvent>) {
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap().clone();
+        let hw = crate::costmodel::HardwareModel::new(ClusterSpec::a100_node(8));
+        let mut sim = crate::engine::EngineSim::new(&spec, 1, &hw, cfg, reqs, 0.0, 0);
+        if events {
+            sim.enable_events(0, 0);
+        }
+        let out = sim.run(None);
+        let evs = sim.take_events();
+        (out, evs)
+    }
+
+    fn base_cfg() -> EngineConfig {
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap();
+        EngineConfig::standard(spec, 1, ClusterSpec::a100_node(8).mem_bytes).unwrap()
+    }
+
+    #[test]
+    fn spjf_admits_predicted_short_jobs_first() {
+        // One long request enqueued first, shorts behind it, few seats:
+        // FCFS admits the long first; SPJF overtakes it.
+        let mut reqs = vec![EngineRequest::fresh(0, 64, 600)];
+        for i in 1..9 {
+            reqs.push(EngineRequest::fresh(i, 16, 8));
+        }
+        let mut cfg = base_cfg();
+        cfg.max_num_seqs = 4;
+        let (fcfs_out, fcfs_ev) = sim_with(cfg.clone(), reqs.clone(), true);
+        cfg.admit = AdmitPolicy::Spjf;
+        let (spjf_out, spjf_ev) = sim_with(cfg, reqs.clone(), true);
+        let first_admitted = |evs: &[EngineEvent]| -> u64 {
+            evs.iter()
+                .find_map(|e| match e.kind {
+                    EventKind::Admitted { req } => Some(req),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_eq!(first_admitted(&fcfs_ev), 0, "FCFS admits arrival order");
+        assert_ne!(first_admitted(&spjf_ev), 0, "SPJF overtakes the long job");
+        assert!(spjf_out.admit.queue_jumps > 0, "{:?}", spjf_out.admit);
+        assert_eq!(fcfs_out.admit, AdmitStats::default(), "FCFS keeps zero counters");
+        // Both conserve work.
+        assert_eq!(fcfs_out.finished, reqs.len());
+        assert_eq!(spjf_out.finished, reqs.len());
+        assert_eq!(fcfs_out.tokens_generated, spjf_out.tokens_generated);
+    }
+
+    #[test]
+    fn skip_join_promotion_bounds_starvation() {
+        // One long job and a crowd of shorts, all ready at t=0, single
+        // seat: SPJF starves the long job until every short is done;
+        // skip-join promotes it once its wait crosses the promotion clock.
+        // The clock is set relative to the *measured* SPJF starvation so
+        // the test is independent of the cost model's absolute iteration
+        // latencies.
+        let mut reqs = vec![EngineRequest::fresh(0, 32, 400)];
+        for i in 1..=50u64 {
+            reqs.push(EngineRequest::fresh(i, 16, 8));
+        }
+        let mut cfg = base_cfg();
+        cfg.max_num_seqs = 1;
+        cfg.admit = AdmitPolicy::Spjf;
+        let (spjf_out, spjf_ev) = sim_with(cfg.clone(), reqs.clone(), true);
+        let admit_time = |evs: &[EngineEvent]| {
+            evs.iter()
+                .find_map(|e| match e.kind {
+                    EventKind::Admitted { req: 0 } => Some(e.t),
+                    _ => None,
+                })
+                .expect("long job admitted")
+        };
+        let starved = admit_time(&spjf_ev);
+        assert!(starved > 0.0, "SPJF must delay the long job behind the shorts");
+        // The long job's wait is the maximum wait under SPJF.
+        assert!((spjf_out.admit.max_queue_wait - starved).abs() < 1e-9);
+        cfg.admit = AdmitPolicy::SkipJoinMlfq { queues: 4, promote_after: starved / 4.0 };
+        let (skip_out, skip_ev) = sim_with(cfg, reqs.clone(), true);
+        assert_eq!(spjf_out.finished, reqs.len());
+        assert_eq!(skip_out.finished, reqs.len());
+        assert!(skip_out.admit.promotions >= 1, "{:?}", skip_out.admit);
+        let promoted = admit_time(&skip_ev);
+        assert!(
+            promoted <= starved / 2.0,
+            "promotion did not bound starvation: {promoted:.2}s vs SPJF {starved:.2}s"
+        );
+    }
+
+    #[test]
+    fn every_policy_conserves_requests_and_tokens() {
+        let reqs: Vec<EngineRequest> = (0..100)
+            .map(|i| EngineRequest::fresh(i, 10 + (i % 50) as u32, 4 + (i * 13 % 340) as u32))
+            .collect();
+        let want_tokens: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        for admit in [
+            AdmitPolicy::Fcfs,
+            AdmitPolicy::Spjf,
+            AdmitPolicy::MultiBin { bins: 4 },
+            AdmitPolicy::SkipJoinMlfq { queues: 4, promote_after: 5.0 },
+        ] {
+            let mut cfg = base_cfg();
+            cfg.max_num_seqs = 16;
+            cfg.admit = admit;
+            let (out, _) = sim_with(cfg, reqs.clone(), false);
+            assert_eq!(out.finished, reqs.len(), "{admit:?} lost requests");
+            assert_eq!(out.tokens_generated, want_tokens, "{admit:?} lost tokens");
+        }
     }
 
     #[test]

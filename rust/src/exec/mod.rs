@@ -29,7 +29,7 @@ pub mod pjrt;
 use anyhow::{anyhow, Context, Result};
 
 use crate::costmodel::IterLatency;
-use crate::engine::sched::{EngineConfig, EngineEvent, EventKind, SimOutcome};
+use crate::engine::sched::{AdmitPolicy, EngineConfig, EngineEvent, EventKind, SimOutcome};
 use crate::engine::session::run_session_traced;
 use crate::engine::EngineRequest;
 use crate::models::ModelSpec;
@@ -72,6 +72,9 @@ pub struct NodeRun<'a> {
     pub noise_seed: u64,
     /// Record the unified [`EngineEvent`] stream in the outcome.
     pub collect_events: bool,
+    /// Waiting-queue admission order for the node's engines (default
+    /// FCFS — the byte-identical historical path).
+    pub admit: AdmitPolicy,
 }
 
 /// What a backend reports back after executing one [`NodeRun`].
@@ -138,6 +141,7 @@ impl ExecBackend for SimBackend<'_> {
     fn run_node(&mut self, run: &NodeRun) -> Result<NodeOutcome> {
         let cfg = EngineConfig {
             noise_sigma: run.noise_sigma,
+            admit: run.admit,
             ..EngineConfig::standard(run.spec, run.plan.tp, self.mem_bytes)
                 .with_context(|| format!("node {} ({})", run.node, run.model))?
         };
@@ -305,6 +309,7 @@ mod tests {
                 noise_sigma: Some(0.02),
                 noise_seed: 99,
                 collect_events: false,
+                admit: AdmitPolicy::Fcfs,
             })
             .unwrap();
 
@@ -339,6 +344,7 @@ mod tests {
                     noise_sigma: None,
                     noise_seed: 0,
                     collect_events: collect,
+                    admit: AdmitPolicy::Fcfs,
                 })
                 .unwrap()
         };
@@ -377,6 +383,7 @@ mod tests {
                 noise_sigma: None,
                 noise_seed: 0,
                 collect_events: false,
+                admit: AdmitPolicy::Fcfs,
             })
             .unwrap_err();
         let msg = format!("{err:#}");

@@ -434,6 +434,7 @@ impl ExecBackend for PjrtBackend {
             fast_forward: false,
             noise_sigma: None,
             kv_bytes_budget: blocks_total,
+            admit: run.admit,
         };
 
         let hist = self.node_hist.entry(run.node).or_default();
@@ -496,6 +497,7 @@ mod tests {
             noise_sigma: None,
             noise_seed: 0,
             collect_events: true,
+            admit: crate::engine::sched::AdmitPolicy::Fcfs,
         }
     }
 

@@ -7,13 +7,17 @@
 //!                  [--no-preemption] [--known-lengths] [--gantt]
 //!                  [--threads T] [--no-sim-cache]
 //!                  [--online-refinement] [--replan-threshold X]
-//!                  [--online-weight W]
+//!                  [--online-weight W] [--admit P]
 //!   samullm traffic --app NAME[:key=value]... [--duration S] [--warmup S]
 //!                  [--queue-capacity C] [--queue-policy reject|defer]
 //!                  [--admit-quantum Q] [...run flags]
 //!   samullm config <file.json>
 //!   samullm serve  [--n-requests N] [--prompt-len L] [--max-new T]
-//!                  [--artifacts DIR]
+//!                  [--artifacts DIR] [--admit P]
+//!
+//! `--admit` picks the engine admission policy (fcfs | spjf |
+//! multi-bin[:BINS] | skip-join[:QUEUES[:PROMOTE_S]]); fcfs is the
+//! default and bit-identical to the pre-policy scheduler.
 //!
 //! Apps and policies resolve against the `spec`/`policy` registries
 //! (`samullm run --app ?` / `--policy ?` lists them). Flags that don't
@@ -162,6 +166,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "online-refinement",
         "replan-threshold",
         "online-weight",
+        "admit",
         "gantt",
     ])?;
     let app = args.get_str("app", "ensembling");
@@ -182,7 +187,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .known_lengths(args.has("known-lengths"))
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
-        .online_refinement(args.has("online-refinement"));
+        .online_refinement(args.has("online-refinement"))
+        .admit_policy(&args.get_str("admit", "fcfs"));
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
@@ -216,6 +222,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
         "online-refinement",
         "replan-threshold",
         "online-weight",
+        "admit",
         "gantt",
     ])?;
     let descriptors = args.get_all("app");
@@ -241,7 +248,8 @@ fn cmd_workload(args: &Args) -> Result<()> {
         .no_preemption(args.has("no-preemption"))
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
-        .online_refinement(args.has("online-refinement"));
+        .online_refinement(args.has("online-refinement"))
+        .admit_policy(&args.get_str("admit", "fcfs"));
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
@@ -280,6 +288,7 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         "online-refinement",
         "replan-threshold",
         "online-weight",
+        "admit",
         "gantt",
     ])?;
     let descriptors = args.get_all("app");
@@ -310,7 +319,8 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         .no_preemption(args.has("no-preemption"))
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
-        .online_refinement(args.has("online-refinement"));
+        .online_refinement(args.has("online-refinement"))
+        .admit_policy(&args.get_str("admit", "fcfs"));
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
@@ -342,7 +352,8 @@ fn cmd_config(path: &str) -> Result<()> {
         .sim_cache(cfg.sim_cache)
         .online_refinement(cfg.online_refinement)
         .replan_threshold(cfg.replan_threshold)
-        .online_weight(cfg.online_weight);
+        .online_weight(cfg.online_weight)
+        .admit_policy(&cfg.admit);
     if let Some(dir) = &cfg.artifacts {
         builder = builder.artifacts_dir(dir.clone());
     }
@@ -359,7 +370,8 @@ fn cmd_config(path: &str) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.expect_flags(&["n-requests", "prompt-len", "max-new", "artifacts"])?;
+    args.expect_flags(&["n-requests", "prompt-len", "max-new", "artifacts", "admit"])?;
+    let admit = samullm::engine::AdmitPolicy::parse(&args.get_str("admit", "fcfs"))?;
     let artifacts = args.get_str("artifacts", "artifacts");
     let mut backend = samullm::exec::pjrt::PjrtBackend::load(std::path::Path::new(&artifacts))?;
     println!(
@@ -374,7 +386,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get("max-new", 16)?,
         1,
     );
-    let (_, m) = samullm::serve::serve_requests(&mut backend, &reqs, &prompts)?;
+    let (_, m) = samullm::serve::serve_requests_with(&mut backend, &reqs, &prompts, admit)?;
     println!(
         "served {} requests: {} tokens in {:.2}s -> {:.1} tok/s (prefills {}, decode steps {}, mean latency {:.2}s, p99 {:.2}s)",
         m.n_requests,
@@ -410,6 +422,8 @@ fn usage() -> String {
          \x20                [--threads T] [--no-sim-cache]   (planner search speed knobs)\n\
          \x20                [--online-refinement] [--replan-threshold X] [--online-weight W]\n\
          \x20                                  (runtime length-feedback loop, default off)\n\
+         \x20                [--admit fcfs|spjf|multi-bin[:BINS]|skip-join[:QUEUES[:PROMOTE_S]]]\n\
+         \x20                                  (engine admission policy, default fcfs)\n\
          \x20                [--artifacts DIR]                (pjrt backend artifacts)\n\
          \x20 samullm workload --app NAME[:key=value]... [--app ...] [--name N]\n\
          \x20                [--policy P] [--gpus G] [--seed S] [--gantt] [...run flags]\n\
@@ -434,6 +448,7 @@ fn usage() -> String {
          \x20                               workloads via a top-level workload: [...];\n\
          \x20                               open-loop mixes via traffic: [...])\n\
          \x20 samullm serve  [--n-requests N] [--prompt-len L] [--max-new T] [--artifacts DIR]\n\
+         \x20                [--admit P]      (admission policy for the real PJRT engine)\n\
          \napps:\n{}\npolicies:\n{}\nbackends:\n{}",
         apps.join("\n"),
         policies.join("\n"),

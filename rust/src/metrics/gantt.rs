@@ -36,6 +36,15 @@ pub fn render(report: &RunReport, width: usize) -> String {
             o.replans, o.drift, o.pre_est_total, o.post_est_total
         ));
     }
+    if report.admit_policy != "fcfs" {
+        out.push_str(&format!(
+            "admission: policy={} queue-jumps={} promotions={} max-wait={:.1}s\n",
+            report.admit_policy,
+            report.admission.queue_jumps,
+            report.admission.promotions,
+            report.admission.max_queue_wait
+        ));
+    }
     for &node in &nodes {
         let mut row = vec![b'.'; width];
         for s in &report.timeline {
@@ -122,6 +131,8 @@ mod tests {
             scenario: "x".into(),
             policy: "ours".into(),
             backend: "sim".into(),
+            admit_policy: "fcfs".into(),
+            admission: Default::default(),
             extra_time: 0.0,
             search_time: 0.0,
             planner: Default::default(),

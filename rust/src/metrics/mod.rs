@@ -4,6 +4,7 @@ pub mod gantt;
 pub mod latency;
 
 use crate::costmodel::OnlineStats;
+use crate::engine::AdmitStats;
 use crate::exec::EventSummary;
 use crate::plan::ExecPlan;
 use crate::planner::eval::EvalStats;
@@ -131,6 +132,11 @@ pub struct RunReport {
     pub policy: String,
     /// Execution backend the run used (`"sim"` or `"pjrt"`).
     pub backend: String,
+    /// Canonical engine admission-policy name (`"fcfs"` unless opted in).
+    pub admit_policy: String,
+    /// Admission counters accumulated over every committed stage (all
+    /// zero under FCFS, which never jumps the queue).
+    pub admission: AdmitStats,
     /// Scheduling/search wall-clock ("extra time", the hatched bar part).
     pub extra_time: f64,
     /// Algorithm 1's own wall-clock share of `extra_time`
@@ -241,6 +247,15 @@ impl RunReport {
             ("scenario", Json::Str(self.scenario.clone())),
             ("policy", Json::Str(self.policy.clone())),
             ("backend", Json::Str(self.backend.clone())),
+            (
+                "admission",
+                Json::obj(vec![
+                    ("policy", Json::Str(self.admit_policy.clone())),
+                    ("queue_jumps", Json::Num(self.admission.queue_jumps as f64)),
+                    ("promotions", Json::Num(self.admission.promotions as f64)),
+                    ("max_queue_wait", Json::Num(self.admission.max_queue_wait)),
+                ]),
+            ),
             ("extra_time", Json::Num(self.extra_time)),
             ("search_time", Json::Num(self.search_time)),
             (
@@ -380,6 +395,8 @@ mod tests {
             scenario: "t".into(),
             policy: "p".into(),
             backend: "sim".into(),
+            admit_policy: "fcfs".into(),
+            admission: AdmitStats::default(),
             extra_time: 10.0,
             search_time: 8.0,
             planner: EvalStats {

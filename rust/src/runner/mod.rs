@@ -28,7 +28,7 @@ use anyhow::Result;
 
 use crate::cluster::{ClusterSpec, Placement};
 use crate::costmodel::{online, CostModel, HardwareModel, IterLatency, OnlineSampler};
-use crate::engine::sched::{EngineEvent, EventKind};
+use crate::engine::sched::{AdmitPolicy, EngineEvent, EventKind};
 use crate::exec::{BackendMode, EventSummary, ExecBackend, SimBackend};
 use crate::graph::AppGraph;
 use crate::metrics::{AppReport, MeasuredStats, RunReport, StageRecord, WorkloadReport};
@@ -87,6 +87,11 @@ pub struct RunOpts {
     /// equivalents when blending the online posterior (only with
     /// `online_refinement`).
     pub online_weight: f64,
+    /// Engine admission policy (FCFS by default — byte-identical to the
+    /// pre-policy releases). Non-FCFS policies consume per-request length
+    /// predictions sampled by the planner's estimate view (refined by the
+    /// online posterior when `online_refinement` is on).
+    pub admit: AdmitPolicy,
 }
 
 impl Default for RunOpts {
@@ -101,6 +106,7 @@ impl Default for RunOpts {
             online_refinement: false,
             replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
             online_weight: online::DEFAULT_OBS_WEIGHT,
+            admit: AdmitPolicy::Fcfs,
         }
     }
 }
@@ -290,6 +296,7 @@ fn run_core(
 
     // ---- running phase ---------------------------------------------------
     let mut true_state = ExecState::init(init_workloads, |_, r| r.true_output_len);
+    true_state.admit = opts.admit;
     if !measured_mode {
         true_state.noise_sigma = Some(opts.noise_sigma);
         true_state.noise_seed = opts.seed ^ 0x7275_6E;
@@ -363,6 +370,20 @@ fn run_core(
             &mut est_rng,
             online_sampler.as_mut(),
         );
+        // Length-aware admission: the same per-stage estimate the planner
+        // prices with becomes the engines' per-request prediction, so the
+        // online posterior's refinements migrate mispredicted requests
+        // between bins/queues at the next stage boundary. FCFS ignores
+        // predictions entirely — nothing is installed.
+        if opts.admit != AdmitPolicy::Fcfs {
+            for (ni, reqs) in true_state.nodes.iter_mut().enumerate() {
+                for (r, e) in reqs.iter_mut().zip(&est_state.nodes[ni]) {
+                    if !r.is_done() {
+                        r.predicted_len = e.output_len;
+                    }
+                }
+            }
+        }
         let stage = policy.plan_stage(&StageCtx {
             graph,
             true_state: &true_state,
@@ -515,6 +536,8 @@ fn run_core(
         scenario: scenario.name.clone(),
         policy: policy.name().to_string(),
         backend: backend.name().to_string(),
+        admit_policy: opts.admit.name(),
+        admission: true_state.admit_stats,
         extra_time,
         search_time,
         planner: planner_stats,
@@ -608,6 +631,15 @@ pub(crate) fn estimate_view(
 ) -> ExecState {
     let mut est = true_state.clone();
     est.noise_sigma = None;
+    // The estimate's output lengths ARE the predictions — engine policies
+    // fall back to them when `predicted_len == 0`, so the clone must not
+    // carry the true state's installed predictions (stale by one stage,
+    // and shadowing the fresh sample). No-op under FCFS (never installed).
+    for reqs in est.nodes.iter_mut() {
+        for r in reqs.iter_mut() {
+            r.predicted_len = 0;
+        }
+    }
     if opts.known_lengths {
         return est;
     }

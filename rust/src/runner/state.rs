@@ -16,7 +16,7 @@ use std::collections::{HashMap, HashSet};
 use anyhow::Result;
 
 use crate::costmodel::IterLatency;
-use crate::engine::sched::EngineEvent;
+use crate::engine::sched::{AdmitPolicy, AdmitStats, EngineEvent};
 use crate::engine::session::remaining_flops;
 use crate::engine::sim::EngineConfig;
 use crate::engine::EngineRequest;
@@ -75,6 +75,11 @@ pub struct StatefulReq {
     pub chain_blocked: bool,
     /// Cross-node dependency: (producer node, producer request id).
     pub dep: Option<(usize, u64)>,
+    /// Predicted total output length for length-aware admission (0 = no
+    /// prediction; see [`EngineRequest::predicted_len`]). Installed by the
+    /// runner from the planner's estimate state when a non-FCFS policy is
+    /// active, refreshed when the online refiner re-samples.
+    pub predicted_len: u32,
 }
 
 impl StatefulReq {
@@ -126,6 +131,12 @@ pub struct ExecState {
     pub noise_sigma: Option<f64>,
     /// Seed for the jitter stream.
     pub noise_seed: u64,
+    /// Admission policy every node's engine runs with (FCFS by default —
+    /// byte-identical to the pre-policy behaviour).
+    pub admit: AdmitPolicy,
+    /// Admission counters accumulated across committed stages (queue
+    /// jumps, starvation promotions, max queue wait).
+    pub admit_stats: AdmitStats,
 }
 
 impl ExecState {
@@ -148,6 +159,7 @@ impl ExecState {
                         chain_next: r.chain_next,
                         chain_blocked: r.chain_blocked,
                         dep: r.dep,
+                        predicted_len: 0,
                     })
                     .collect()
             })
@@ -170,6 +182,8 @@ impl ExecState {
             clock: 0.0,
             noise_sigma: None,
             noise_seed: 0,
+            admit: AdmitPolicy::Fcfs,
+            admit_stats: AdmitStats::default(),
         }
     }
 
@@ -194,6 +208,7 @@ impl ExecState {
                 chain_next: r.chain_next,
                 chain_blocked: r.chain_blocked,
                 dep: r.dep,
+                predicted_len: 0,
             })
             .collect();
         if !self.nodes[node].is_empty() {
@@ -225,6 +240,7 @@ impl ExecState {
             chain_next: r.chain_next,
             chain_blocked: r.chain_blocked,
             dep: r.dep,
+            predicted_len: 0,
         }));
         self.finished_nodes.remove(&node);
     }
@@ -253,6 +269,7 @@ impl ExecState {
                 generated: r.generated,
                 chain_next: None,
                 kv_resident: false,
+                predicted_len: 0,
             })
             .collect();
         remaining_flops(spec, &ereqs)
@@ -321,6 +338,7 @@ impl ExecState {
             .unwrap_or_default();
         let cfg = EngineConfig {
             noise_sigma: None,
+            admit: self.admit,
             ..EngineConfig::standard(spec, plan.tp, mem_bytes)
                 .unwrap_or_else(|e| panic!("candidate plan reached the engine: {e}"))
         };
@@ -357,6 +375,20 @@ impl ExecState {
             .map(|r| r.id)
             .collect();
         let mut h = Fnv::new();
+        // The admission policy shapes batch composition, so it is part of
+        // the key (a cached outcome under one policy must never answer a
+        // query under another). Under FCFS this folds the same constants
+        // for every node — equality patterns, and hence planner cache
+        // hit/miss parity, are preserved.
+        h.push(match self.admit {
+            AdmitPolicy::Fcfs => 0,
+            AdmitPolicy::Spjf => 1,
+            AdmitPolicy::MultiBin { bins } => 2 | ((bins as u64) << 8),
+            AdmitPolicy::SkipJoinMlfq { queues, .. } => 3 | ((queues as u64) << 8),
+        });
+        if let AdmitPolicy::SkipJoinMlfq { promote_after, .. } = self.admit {
+            h.push(promote_after.to_bits());
+        }
         for r in &self.nodes[node] {
             if r.is_done() {
                 continue;
@@ -377,6 +409,9 @@ impl ExecState {
             h.push(r.generated as u64);
             h.push(r.chain_next.map(|c| c ^ 0x8000_0000_0000_0000).unwrap_or(u64::MAX - 1));
             h.push(ready_q);
+            // Predictions steer non-FCFS admission order (constant 0 under
+            // FCFS, where they are never installed).
+            h.push(r.predicted_len as u64);
         }
         h.finish()
     }
@@ -429,6 +464,7 @@ impl ExecState {
                 // Kept nodes (plan + placement unchanged, §4.3) retain
                 // their KV across the stage boundary.
                 kv_resident: kept && r.generated > 0,
+                predicted_len: r.predicted_len,
             });
         }
         out
@@ -595,6 +631,7 @@ impl ExecState {
                 noise_sigma: self.noise_sigma,
                 noise_seed: self.noise_seed ^ ((node as u64) << 8),
                 collect_events,
+                admit: self.admit,
             })
             .unwrap_or_else(|e| panic!("stage execution failed: {e:#}"))
     }
@@ -620,6 +657,9 @@ impl ExecState {
         }
         for (id, t) in &out.completions {
             self.completed.insert((node, *id), *t);
+        }
+        for rep in &out.replicas {
+            self.admit_stats.absorb(&rep.admit);
         }
         let finished = self.nodes[node].iter().all(|r| r.is_done());
         if finished {
@@ -674,6 +714,7 @@ impl ExecState {
                 noise_sigma: None,
                 noise_seed: 0,
                 collect_events: trace.is_some(),
+                admit: self.admit,
             })?;
             for (id, ct) in &out.completions {
                 stage_completions.insert((node, *id), *ct);

@@ -102,6 +102,7 @@ pub fn run_traffic_with_backend(
 
     // ---- running phase: the run starts idle and fills via admission --
     let mut true_state = ExecState::init(&scenario.workloads, |_, r| r.true_output_len);
+    true_state.admit = opts.admit;
     true_state.noise_sigma = Some(opts.noise_sigma);
     true_state.noise_seed = opts.seed ^ 0x7275_6E;
 
@@ -212,6 +213,17 @@ pub fn run_traffic_with_backend(
             &mut est_rng,
             online_sampler.as_mut(),
         );
+        // Install the fresh estimates as admission predictions, exactly
+        // as in the batch loop (no-op under FCFS).
+        if opts.admit != crate::engine::AdmitPolicy::Fcfs {
+            for (ni, reqs) in true_state.nodes.iter_mut().enumerate() {
+                for (r, e) in reqs.iter_mut().zip(&est_state.nodes[ni]) {
+                    if !r.is_done() {
+                        r.predicted_len = e.output_len;
+                    }
+                }
+            }
+        }
         let stage = policy.plan_stage(&StageCtx {
             graph,
             true_state: &true_state,
@@ -343,6 +355,8 @@ pub fn run_traffic_with_backend(
         scenario: traffic.name.clone(),
         policy: policy.name().to_string(),
         backend: backend.name().to_string(),
+        admit_policy: opts.admit.name(),
+        admission: true_state.admit_stats,
         extra_time,
         search_time,
         planner: planner_stats,

@@ -16,7 +16,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::engine::EngineRequest;
+use crate::engine::{AdmitPolicy, EngineRequest};
 use crate::exec::pjrt::PjrtBackend;
 use crate::exec::{EventSummary, ExecBackend, NodeRun};
 use crate::models::ModelSpec;
@@ -113,6 +113,18 @@ pub fn serve_requests(
     requests: &[EngineRequest],
     prompts: &HashMap<u64, Vec<i32>>,
 ) -> Result<(Vec<Generation>, ServeMetrics)> {
+    serve_requests_with(backend, requests, prompts, AdmitPolicy::Fcfs)
+}
+
+/// [`serve_requests`] with an explicit admission policy (the CLI's
+/// `serve --admit` path). FCFS keeps serving byte-identical to before the
+/// policy layer existed.
+pub fn serve_requests_with(
+    backend: &mut PjrtBackend,
+    requests: &[EngineRequest],
+    prompts: &HashMap<u64, Vec<i32>>,
+    admit: AdmitPolicy,
+) -> Result<(Vec<Generation>, ServeMetrics)> {
     for (&id, toks) in prompts {
         backend.set_prompt(0, id, toks.clone());
     }
@@ -128,6 +140,7 @@ pub fn serve_requests(
         noise_sigma: None,
         noise_seed: 0,
         collect_events: true,
+        admit,
     })?;
 
     let latency_of: HashMap<u64, f64> = out.completions.iter().copied().collect();

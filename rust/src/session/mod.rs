@@ -31,6 +31,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::costmodel::online;
+use crate::engine::AdmitPolicy;
 use crate::exec::{self, pjrt::PjrtBackend, ExecBackend, SimBackend};
 use crate::metrics::RunReport;
 use crate::policy;
@@ -68,6 +69,7 @@ pub struct SamuLlmBuilder {
     online_refinement: bool,
     replan_threshold: f64,
     online_weight: f64,
+    admit: String,
 }
 
 impl SamuLlm {
@@ -88,6 +90,7 @@ impl SamuLlm {
             online_refinement: false,
             replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
             online_weight: online::DEFAULT_OBS_WEIGHT,
+            admit: "fcfs".to_string(),
         }
     }
 
@@ -301,12 +304,24 @@ impl SamuLlmBuilder {
         self
     }
 
+    /// Engine admission policy by name (default `"fcfs"`, byte-identical
+    /// to the pre-policy behaviour): one of
+    /// `fcfs | spjf | multi-bin[:BINS] | skip-join[:QUEUES[:PROMOTE_S]]`.
+    /// Validated at `build()` time. Non-FCFS policies order each engine's
+    /// waiting queue by the planner's per-request length predictions
+    /// (refined mid-run when [`SamuLlmBuilder::online_refinement`] is on).
+    pub fn admit_policy(mut self, name: &str) -> Self {
+        self.admit = name.to_string();
+        self
+    }
+
     /// Validate the configuration and assemble the session wiring. For
     /// the `pjrt` backend, the artifacts contract is checked here so
     /// misconfiguration fails before any (expensive) planning starts.
     pub fn build(self) -> Result<SamuLlm> {
         let policy = policy::canonical(&self.policy)?;
         let backend = exec::canonical(&self.backend)?;
+        let admit = AdmitPolicy::parse(&self.admit)?;
         let artifacts = self.artifacts.unwrap_or_else(crate::runtime::default_artifacts_dir);
         if backend == "pjrt" && !artifacts.join("model_meta.json").exists() {
             return Err(anyhow!(
@@ -340,6 +355,7 @@ impl SamuLlmBuilder {
             online_refinement: self.online_refinement,
             replan_threshold: self.replan_threshold,
             online_weight: self.online_weight,
+            admit,
         };
         Ok(SamuLlm {
             ctx: RunContext::new(&cluster, self.seed),
@@ -508,6 +524,63 @@ mod tests {
         assert!(oa.pre_est_total > 0.0);
         // The JSON contract carries the section.
         assert!(a.to_json().contains("\"online\":{"), "{}", a.to_json());
+    }
+
+    #[test]
+    fn builder_validates_admit_policy_name() {
+        assert!(SamuLlm::builder().admit_policy("nope").build().is_err());
+        assert!(SamuLlm::builder().admit_policy("multi-bin:0").build().is_err());
+        for good in ["fcfs", "spjf", "multi-bin:3", "skip-join:2:10"] {
+            assert!(SamuLlm::builder().admit_policy(good).build().is_ok(), "{good}");
+        }
+    }
+
+    #[test]
+    fn explicit_fcfs_admission_is_the_default_path_bit_for_bit() {
+        // The admission layer is opt-in: an explicit "fcfs" must leave
+        // every virtual-time number untouched and report zero counters.
+        let spec = AppSpec::ensembling(60, 128);
+        let a = SamuLlm::builder().gpus(8).seed(3).build().unwrap().run(&spec).unwrap();
+        let b = SamuLlm::builder()
+            .gpus(8)
+            .seed(3)
+            .admit_policy("fcfs")
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        assert_eq!(
+            a.estimated_inference_time.to_bits(),
+            b.estimated_inference_time.to_bits()
+        );
+        assert_eq!(a.n_stages, b.n_stages);
+        assert_eq!(a.admit_policy, "fcfs");
+        assert_eq!(a.admission, b.admission);
+        assert_eq!(a.admission.queue_jumps, 0);
+        assert!(a.to_json().contains("\"admission\":{"), "{}", a.to_json());
+    }
+
+    #[test]
+    fn non_fcfs_admission_completes_and_reports_counters() {
+        let spec = AppSpec::ensembling(60, 128);
+        for admit in ["spjf", "multi-bin:4", "skip-join:4:5"] {
+            let r = SamuLlm::builder()
+                .gpus(8)
+                .seed(3)
+                .admit_policy(admit)
+                .build()
+                .unwrap()
+                .run(&spec)
+                .unwrap();
+            assert!(r.inference_time > 0.0, "{admit}");
+            assert!(r.admit_policy.starts_with(admit.split(':').next().unwrap()), "{admit}");
+            // Every request still completes — admission only reorders.
+            assert!(
+                r.timeline.iter().map(|s| s.events.completions).sum::<u64>() >= 60,
+                "{admit}"
+            );
+        }
     }
 
     #[test]

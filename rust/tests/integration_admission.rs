@@ -1,0 +1,286 @@
+//! Differential-testing layer for the admission-policy work: the FCFS
+//! default is pinned bit-identical across every surface (the four paper
+//! apps, a multi-app workload run and an open-loop traffic run), each
+//! length-aware policy is exercised end-to-end on both the simulated and
+//! the real (mock-PJRT) scheduler, and the misprediction-correction loop
+//! is regression-tested on the shifted-length scenario.
+
+use samullm::cluster::ClusterSpec;
+use samullm::engine::sim::EngineConfig;
+use samullm::engine::{AdmitPolicy, AdmitStats, EngineRequest, EngineSim, EventKind};
+use samullm::exec::pjrt::{MockModel, PjrtBackend};
+use samullm::exec::{ExecBackend, NodeRun};
+use samullm::harness::{poisson_pair_traffic, shifted_length_scenario, staggered_pair_workload};
+use samullm::metrics::RunReport;
+use samullm::models::Registry;
+use samullm::plan::ExecPlan;
+use samullm::runner::{run_policy, run_traffic, run_workload, RunOpts};
+use samullm::spec::AppSpec;
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::a100_node(8)
+}
+
+fn opts(admit: AdmitPolicy) -> RunOpts {
+    RunOpts { seed: 42, admit, ..RunOpts::default() }
+}
+
+const NON_FCFS: [AdmitPolicy; 3] = [
+    AdmitPolicy::Spjf,
+    AdmitPolicy::MultiBin { bins: 4 },
+    AdmitPolicy::SkipJoinMlfq { queues: 4, promote_after: 5.0 },
+];
+
+/// The bit-level pin: every virtual-time number of `a` and `b` agrees
+/// exactly (wall-clock fields like search time are excluded by design).
+fn assert_bit_identical(label: &str, a: &RunReport, b: &RunReport) {
+    assert_eq!(
+        a.inference_time.to_bits(),
+        b.inference_time.to_bits(),
+        "{label}: inference_time diverged ({} vs {})",
+        a.inference_time,
+        b.inference_time
+    );
+    assert_eq!(
+        a.estimated_inference_time.to_bits(),
+        b.estimated_inference_time.to_bits(),
+        "{label}: estimate diverged"
+    );
+    assert_eq!(a.n_stages, b.n_stages, "{label}: stage count diverged");
+    assert_eq!(a.admission, b.admission, "{label}: admission counters diverged");
+    for (sa, sb) in a.timeline.iter().zip(&b.timeline) {
+        assert_eq!(sa.start.to_bits(), sb.start.to_bits(), "{label}: stage start diverged");
+        assert_eq!(sa.end.to_bits(), sb.end.to_bits(), "{label}: stage end diverged");
+        assert_eq!(sa.entries, sb.entries, "{label}: stage entries diverged");
+    }
+}
+
+fn completions(r: &RunReport) -> u64 {
+    r.timeline.iter().map(|s| s.events.completions).sum()
+}
+
+/// The four paper apps in small configurations, with their total request
+/// counts (first-node admissions differ; completions cover all nodes).
+fn paper_apps() -> Vec<(&'static str, AppSpec)> {
+    vec![
+        ("ensembling", AppSpec::ensembling(60, 128)),
+        ("routing", AppSpec::routing(512, false)),
+        ("chain-summary", AppSpec::chain_summary(15, 1, 200)),
+        ("mixed", AppSpec::mixed(10, 120, 300, 96, 2)),
+    ]
+}
+
+#[test]
+fn fcfs_default_is_pinned_bit_identical_across_paper_apps() {
+    // The admission layer is strictly opt-in: a default build and an
+    // explicit --admit fcfs build must agree on every virtual-time bit,
+    // and the counters must stay at their zero defaults.
+    let c = cluster();
+    for (name, spec) in paper_apps() {
+        let s = spec.build(42).expect("valid spec");
+        let default_run = run_policy("ours", &s, &c, &RunOpts { seed: 42, ..RunOpts::default() });
+        let explicit = run_policy("ours", &s, &c, &opts(AdmitPolicy::Fcfs));
+        let again = run_policy("ours", &s, &c, &opts(AdmitPolicy::Fcfs));
+        assert_bit_identical(name, &default_run, &explicit);
+        assert_bit_identical(name, &explicit, &again);
+        assert_eq!(default_run.admit_policy, "fcfs", "{name}");
+        assert_eq!(default_run.admission, AdmitStats::default(), "{name}: FCFS touched stats");
+        assert!(completions(&default_run) > 0, "{name}: no completions recorded");
+    }
+}
+
+#[test]
+fn fcfs_workload_and_traffic_runs_are_pinned() {
+    let c = cluster();
+    let ws = staggered_pair_workload(8, 60, 20.0).build(42).expect("valid workload");
+    let wa = run_workload("ours", &ws, &c, &RunOpts { seed: 42, ..RunOpts::default() });
+    let wb = run_workload("ours", &ws, &c, &opts(AdmitPolicy::Fcfs));
+    assert_bit_identical("workload", &wa, &wb);
+    assert_eq!(wa.admission, AdmitStats::default());
+
+    let ts = poisson_pair_traffic(1.0, 1.0, 2.0, 10.0).build(42).expect("valid traffic mix");
+    let ta = run_traffic("ours", &ts, &c, &RunOpts { seed: 42, ..RunOpts::default() });
+    let tb = run_traffic("ours", &ts, &c, &opts(AdmitPolicy::Fcfs));
+    assert_bit_identical("traffic", &ta, &tb);
+    assert_eq!(ta.admission, AdmitStats::default());
+    let sa = ta.traffic.as_ref().expect("traffic section");
+    let sb = tb.traffic.as_ref().expect("traffic section");
+    assert_eq!((sa.offered, sa.admitted, sa.rejected), (sb.offered, sb.admitted, sb.rejected));
+}
+
+#[test]
+fn fcfs_engine_ignores_length_predictions_bit_for_bit() {
+    // The deepest pin: even with adversarial garbage in `predicted_len`,
+    // the FCFS arm must not read it — the outcome is bit-identical to a
+    // prediction-free run. This is what keeps the default path byte-equal
+    // to the pre-policy engine no matter what the runner installs.
+    let reg = Registry::paper();
+    let spec = reg.get("chatglm3-6b").unwrap().clone();
+    let c = cluster();
+    let hw = samullm::costmodel::HardwareModel::new(c.clone());
+    let plain: Vec<EngineRequest> = (0..80)
+        .map(|i| EngineRequest::fresh(i, 20 + (i % 40) as u32, 8 + (i * 7 % 300) as u32))
+        .collect();
+    let mut poisoned = plain.clone();
+    for r in poisoned.iter_mut() {
+        // Anti-correlated predictions: shorts predicted huge, longs tiny.
+        r.predicted_len = if r.output_len > 100 { 1 } else { 4096 };
+    }
+    let cfg = EngineConfig::standard(&spec, 1, c.mem_bytes).unwrap();
+    let a = EngineSim::new(&spec, 1, &hw, cfg.clone(), plain, 0.0, 0).run(None);
+    let b = EngineSim::new(&spec, 1, &hw, cfg, poisoned, 0.0, 0).run(None);
+    assert_eq!(a.clock.to_bits(), b.clock.to_bits(), "FCFS consumed predictions");
+    assert_eq!(a, b);
+    assert_eq!(a.admit, AdmitStats::default());
+}
+
+#[test]
+fn policies_are_deterministic_on_the_sim_backend() {
+    // Same seed, same policy -> same report, bit for bit, and the
+    // non-FCFS policies actually engage (counters move somewhere).
+    let c = cluster();
+    let s = AppSpec::ensembling(60, 128).build(42).expect("valid spec");
+    let mut any_jumps = 0u64;
+    for admit in NON_FCFS {
+        let a = run_policy("ours", &s, &c, &opts(admit));
+        let b = run_policy("ours", &s, &c, &opts(admit));
+        assert_bit_identical(&admit.name(), &a, &b);
+        assert_eq!(a.admit_policy, admit.name());
+        assert!(completions(&a) >= 60, "{}: lost requests", admit.name());
+        any_jumps += a.admission.queue_jumps;
+    }
+    assert!(any_jumps > 0, "no policy ever reordered the queue");
+}
+
+/// A `NodeRun` for the mock-PJRT scheduler over `reqs`.
+fn node_run<'a>(
+    spec: &'a samullm::models::ModelSpec,
+    reqs: &'a [EngineRequest],
+    admit: AdmitPolicy,
+) -> NodeRun<'a> {
+    NodeRun {
+        node: 0,
+        model: "tinygpt",
+        spec,
+        plan: ExecPlan::new(1, 1),
+        requests: reqs,
+        start_time: 0.0,
+        deadline: None,
+        noise_sigma: None,
+        noise_seed: 0,
+        collect_events: true,
+        admit,
+    }
+}
+
+fn admitted_order(events: &[samullm::engine::EngineEvent]) -> Vec<u64> {
+    events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::Admitted { req } => Some(req),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn policies_are_deterministic_on_the_real_scheduler() {
+    // The same SchedCore drives the real backend; per-policy admission
+    // *order* and generations must be reproducible run-to-run. (Measured
+    // wall-clock durations are excluded — they are real time.) Skip-join
+    // uses an unreachable promotion clock here so its order cannot depend
+    // on measured waits.
+    let reg = Registry::paper();
+    let spec = reg.get("chatglm3-6b").unwrap().clone();
+    let mut reqs: Vec<EngineRequest> =
+        (0..16).map(|i| EngineRequest::fresh(i, 6, 4 + (i * 5 % 23) as u32)).collect();
+    for r in reqs.iter_mut() {
+        r.predicted_len = r.output_len; // perfect predictions
+    }
+    for admit in [
+        AdmitPolicy::Fcfs,
+        AdmitPolicy::Spjf,
+        AdmitPolicy::MultiBin { bins: 4 },
+        AdmitPolicy::SkipJoinMlfq { queues: 4, promote_after: 1e9 },
+    ] {
+        let run_once = || {
+            let mut b = PjrtBackend::with_model(Box::new(MockModel::new(4, 64)));
+            let mut out = b.run_node(&node_run(&spec, &reqs, admit)).unwrap();
+            out.generations.sort_by_key(|(id, _)| *id);
+            (admitted_order(&out.events), out.generations, out.completions.len())
+        };
+        let (order_a, gens_a, done_a) = run_once();
+        let (order_b, gens_b, done_b) = run_once();
+        assert_eq!(order_a, order_b, "{}: admission order not reproducible", admit.name());
+        assert_eq!(gens_a, gens_b, "{}: generations not reproducible", admit.name());
+        assert_eq!(done_a, reqs.len(), "{}: lost requests", admit.name());
+        assert_eq!(done_b, reqs.len());
+    }
+}
+
+#[test]
+fn spjf_overtakes_long_jobs_on_the_real_scheduler() {
+    // One long prompt enqueued first, shorts behind, four seats: FCFS
+    // admits id 0 first; SPJF admits four shorts first and reports the
+    // queue jumps. Exercises the policy end-to-end on the real engine.
+    let reg = Registry::paper();
+    let spec = reg.get("chatglm3-6b").unwrap().clone();
+    let mut reqs = vec![EngineRequest::fresh(0, 8, 60)];
+    for i in 1..10u64 {
+        reqs.push(EngineRequest::fresh(i, 6, 3));
+    }
+    for r in reqs.iter_mut() {
+        r.predicted_len = r.output_len;
+    }
+    let run = |admit: AdmitPolicy| {
+        let mut b = PjrtBackend::with_model(Box::new(MockModel::new(4, 128)));
+        b.run_node(&node_run(&spec, &reqs, admit)).unwrap()
+    };
+    let fcfs = run(AdmitPolicy::Fcfs);
+    let spjf = run(AdmitPolicy::Spjf);
+    assert_eq!(admitted_order(&fcfs.events)[0], 0, "FCFS must admit arrival order");
+    assert_ne!(admitted_order(&spjf.events)[0], 0, "SPJF must overtake the long job");
+    assert_eq!(fcfs.replicas[0].admit, AdmitStats::default());
+    assert!(spjf.replicas[0].admit.queue_jumps > 0, "{:?}", spjf.replicas[0].admit);
+    assert_eq!(fcfs.completions.len(), reqs.len());
+    assert_eq!(spjf.completions.len(), reqs.len());
+}
+
+#[test]
+fn refined_predictions_keep_length_aware_policies_honest() {
+    // Misprediction-correction regression (§4.3 feedback loop meets the
+    // admission layer): on the deliberately miscalibrated shifted-length
+    // scenario, running SPJF/multi-bin with online refinement must
+    // complete everything, report policy activity, and not be meaningfully
+    // slower than the frozen-prediction variant (it is typically faster;
+    // the lenient bound keeps a pathological seed from flaking CI).
+    let c = cluster();
+    let s = shifted_length_scenario(120, 42);
+    let total: u64 = s.workloads.iter().map(|w| w.len() as u64).sum();
+    for admit in [AdmitPolicy::Spjf, AdmitPolicy::MultiBin { bins: 4 }] {
+        let frozen = run_policy("ours", &s, &c, &opts(admit));
+        let refined = run_policy(
+            "ours",
+            &s,
+            &c,
+            &RunOpts { online_refinement: true, ..opts(admit) },
+        );
+        for (label, r) in [("frozen", &frozen), ("refined", &refined)] {
+            assert!(
+                completions(r) >= total,
+                "{label} {} lost requests: {} < {total}",
+                admit.name(),
+                completions(r)
+            );
+            assert!(r.inference_time > 0.0, "{label} {} wedged", admit.name());
+        }
+        assert!(refined.online.is_some(), "{}: refinement stats missing", admit.name());
+        assert!(
+            refined.inference_time <= frozen.inference_time * 1.10,
+            "{}: refined {:.1}s much slower than frozen {:.1}s",
+            admit.name(),
+            refined.inference_time,
+            frozen.inference_time
+        );
+    }
+}

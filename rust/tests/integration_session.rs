@@ -116,6 +116,7 @@ fn spec_round_trips_through_config_json_and_runs() {
     let cfg = ExperimentConfig {
         app: Some(small_custom_spec()),
         workload: None,
+        traffic: None,
         policy: "round-robin".to_string(),
         backend: "sim".to_string(),
         artifacts: None,
@@ -128,6 +129,7 @@ fn spec_round_trips_through_config_json_and_runs() {
         online_refinement: false,
         replan_threshold: samullm::costmodel::online::DEFAULT_REPLAN_THRESHOLD,
         online_weight: samullm::costmodel::online::DEFAULT_OBS_WEIGHT,
+        admit: "fcfs".to_string(),
     };
     let text = cfg.to_json();
     let back = ExperimentConfig::from_json(&text).unwrap();

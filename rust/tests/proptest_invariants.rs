@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use samullm::cluster::{ClusterSpec, Placement};
 use samullm::costmodel::{CostModel, Ecdf, HardwareModel, OutputSampler};
 use samullm::engine::sim::{EngineConfig, EngineSim};
-use samullm::engine::EngineRequest;
+use samullm::engine::{AdmitPolicy, AdmitStats, EngineRequest, EventKind};
 use samullm::exec::SimBackend;
 use samullm::graph::AppGraph;
 use samullm::models::Registry;
@@ -60,6 +60,140 @@ fn engine_conserves_requests_and_tokens() {
             sim.blocks_total()
         );
         prop_assert!(out.clock.is_finite() && out.clock > 0.0, "bad clock {}", out.clock);
+        Ok(())
+    });
+}
+
+#[test]
+fn every_admission_policy_conserves_requests_and_tokens() {
+    // Work conservation is policy-independent: whatever order the waiting
+    // queue is drained in, every request finishes, every token is
+    // produced, and every KV block comes back. Predictions of arbitrary
+    // quality (including absent) must not break any of it.
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(cluster.clone());
+    let spec = registry.get("chatglm3-6b").unwrap();
+    quickprop::run(16, 0xAD317, |rng| {
+        let admit = match rng.range_u64(0, 4) {
+            0 => AdmitPolicy::Fcfs,
+            1 => AdmitPolicy::Spjf,
+            2 => AdmitPolicy::MultiBin { bins: rng.range_u64(1, 7) as u32 },
+            _ => AdmitPolicy::SkipJoinMlfq {
+                queues: rng.range_u64(1, 7) as u32,
+                promote_after: rng.range_f64(0.2, 20.0),
+            },
+        };
+        let n = rng.range_usize(1, 250);
+        let mut reqs = random_requests(rng, n);
+        for r in reqs.iter_mut() {
+            r.predicted_len = rng.range_u64(0, 900) as u32;
+            if rng.range_u64(0, 3) == 0 {
+                r.ready_time = rng.range_f64(0.0, 20.0);
+            }
+        }
+        let want_tokens: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        let mut cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes).unwrap();
+        cfg.max_num_seqs = rng.range_usize(2, 64);
+        cfg.admit = admit;
+        let mut sim = EngineSim::new(spec, 1, &hw, cfg, reqs, 0.0, rng.next_u64());
+        let out = sim.run(None);
+        prop_assert!(out.finished == n, "{admit:?} finished {} != {n}", out.finished);
+        prop_assert!(
+            out.tokens_generated == want_tokens,
+            "{admit:?} tokens {} != {want_tokens}",
+            out.tokens_generated
+        );
+        prop_assert!(
+            sim.free_blocks() == sim.blocks_total(),
+            "{admit:?} leaked blocks: {}/{}",
+            sim.free_blocks(),
+            sim.blocks_total()
+        );
+        if admit == AdmitPolicy::Fcfs {
+            prop_assert!(out.admit == AdmitStats::default(), "FCFS touched counters");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multi_bin_assignment_is_monotone_and_clamped() {
+    // The geometric bin index shared by multi-bin and the skip-join queue
+    // levels: monotone non-decreasing in the predicted length, always
+    // inside [0, bins), and zero-length lands in the shortest bin.
+    quickprop::run(200, 0xB195, |rng| {
+        let bins = rng.range_u64(1, 9) as u32;
+        let a = rng.range_u64(0, 5000) as u32;
+        let b = a + rng.range_u64(0, 5000) as u32;
+        let ba = AdmitPolicy::bin_index(a, bins);
+        let bb = AdmitPolicy::bin_index(b, bins);
+        prop_assert!(ba <= bb, "bin regressed: {a}->{ba} vs {b}->{bb} ({bins} bins)");
+        prop_assert!(bb < bins, "bin {bb} out of range for {bins} bins");
+        prop_assert!(AdmitPolicy::bin_index(0, bins) == 0, "zero length must be bin 0");
+        Ok(())
+    });
+}
+
+#[test]
+fn skip_join_promotion_bounds_starvation_on_heavy_tails() {
+    // Randomized heavy-tailed trace, single seat: SPJF starves the long
+    // job until the short crowd drains; the skip-join promotion clock —
+    // set relative to the measured SPJF starvation so the property is
+    // independent of absolute iteration latencies — must cut that wait at
+    // least in half, via at least one recorded promotion.
+    let cluster = ClusterSpec::a100_node(8);
+    let registry = Registry::paper();
+    let hw = HardwareModel::new(cluster.clone());
+    let spec = registry.get("chatglm3-6b").unwrap();
+    quickprop::run(10, 0x57A2F, |rng| {
+        let n_short = rng.range_usize(40, 80);
+        let mut reqs = vec![EngineRequest::fresh(
+            0,
+            16 + rng.range_u64(0, 32) as u32,
+            300 + rng.range_u64(0, 200) as u32,
+        )];
+        for i in 1..=n_short as u64 {
+            reqs.push(EngineRequest::fresh(
+                i,
+                8 + rng.range_u64(0, 12) as u32,
+                4 + rng.range_u64(0, 8) as u32,
+            ));
+        }
+        let run = |admit: AdmitPolicy| {
+            let mut cfg = EngineConfig::standard(spec, 1, cluster.mem_bytes).unwrap();
+            cfg.max_num_seqs = 1;
+            cfg.admit = admit;
+            let mut sim = EngineSim::new(spec, 1, &hw, cfg, reqs.clone(), 0.0, 7);
+            sim.enable_events(0, 0);
+            let out = sim.run(None);
+            let evs = sim.take_events();
+            (out, evs)
+        };
+        let (spjf_out, spjf_ev) = run(AdmitPolicy::Spjf);
+        let long_admit = |evs: &[samullm::engine::EngineEvent]| {
+            evs.iter().find_map(|e| match e.kind {
+                EventKind::Admitted { req: 0 } => Some(e.t),
+                _ => None,
+            })
+        };
+        let starved = long_admit(&spjf_ev).ok_or("long job never admitted under SPJF")?;
+        prop_assert!(starved > 0.0, "SPJF admitted the long job before any short");
+        let promote_after = starved / 4.0;
+        let (skip_out, skip_ev) =
+            run(AdmitPolicy::SkipJoinMlfq { queues: 4, promote_after });
+        prop_assert!(spjf_out.finished == reqs.len(), "SPJF lost requests");
+        prop_assert!(skip_out.finished == reqs.len(), "skip-join lost requests");
+        prop_assert!(
+            skip_out.admit.promotions >= 1,
+            "no promotion despite starvation: {:?}",
+            skip_out.admit
+        );
+        let promoted = long_admit(&skip_ev).ok_or("long job never admitted under skip-join")?;
+        prop_assert!(
+            promoted <= starved / 2.0,
+            "promotion did not bound starvation: {promoted:.2}s vs SPJF {starved:.2}s"
+        );
         Ok(())
     });
 }
