@@ -1,0 +1,166 @@
+//! Model-residency benchmarks: the same multi-model batch is run three
+//! ways — (a) oversubscribed on a deliberately too-small cluster (packed
+//! stages time-slice the GPUs, loads overlap decode tails), (b) naively
+//! sequential on the same cluster (one model at a time, every cold load
+//! on the critical path), and (c) on a cluster big enough to hold every
+//! model at once (the no-swap reference). Reports per-arm makespan and
+//! the oversubscribed arm's swap counters; the headline bit is
+//! `packed_beats_sequential`. Writes `BENCH_offload.json`; `--smoke`
+//! shrinks the batch to CI size.
+
+use samullm::cluster::ClusterSpec;
+use samullm::graph::AppGraph;
+use samullm::metrics::RunReport;
+use samullm::runner::{run_policy, AppRequest, RunOpts, Scenario};
+use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
+
+const SEED: u64 = 42;
+
+/// `n_models` independent chatglm3-6b nodes, `n_reqs` requests each, with
+/// deterministic mixed lengths. `n_models = 1` carves the single-model
+/// slice the sequential arm runs one at a time.
+fn scenario(n_models: usize, n_reqs: usize) -> Scenario {
+    let mut graph = AppGraph::default();
+    let mut workloads = vec![];
+    for i in 0..n_models {
+        graph.add_node("chatglm3-6b", &format!("m{i}"), 256);
+        workloads.push(
+            (0..n_reqs as u64)
+                .map(|id| AppRequest::simple(id, 24, 30 + (id * 13 % 90) as u32))
+                .collect::<Vec<_>>(),
+        );
+    }
+    Scenario { name: "offload-batch".into(), graph, workloads }
+}
+
+fn completions(r: &RunReport) -> u64 {
+    r.timeline.iter().map(|s| s.events.completions).sum()
+}
+
+struct Arm {
+    makespan: f64,
+    wall: f64,
+    report: Option<RunReport>,
+}
+
+fn bench_arm(
+    label: &str,
+    g: &mut BenchGroup,
+    mut run: impl FnMut() -> (f64, Option<RunReport>),
+) -> Arm {
+    let mut result: Option<(f64, Option<RunReport>)> = None;
+    let wall = g
+        .bench(label, || {
+            result = Some(run());
+        })
+        .median;
+    let (makespan, report) = result.expect("bench ran at least one sample");
+    Arm { makespan, wall, report }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_models, n_reqs) = if smoke { (3, 12) } else { (4, 48) };
+    let total = (n_models * n_reqs) as u64;
+    let tiny = ClusterSpec::a100_node(2);
+    // Four GPUs hold every model of either batch size at once (three-GPU
+    // nodes would break the power-of-two placement alignment).
+    let big = ClusterSpec::a100_node(4);
+
+    let mut g = BenchGroup::new("offload");
+    g.sample_size(if smoke { 2 } else { 3 });
+
+    // (a) Oversubscribed: all models planned together on two GPUs.
+    let over = bench_arm("oversubscribed/2gpu", &mut g, || {
+        let s = scenario(n_models, n_reqs);
+        let opts = RunOpts { seed: SEED, oversubscribe: true, ..RunOpts::default() };
+        let r = run_policy("ours", &s, &tiny, &opts);
+        assert_eq!(completions(&r), total, "oversubscribed arm lost requests");
+        (r.inference_time, Some(r))
+    });
+
+    // (b) Naive sequential: one model at a time on the same two GPUs;
+    // every cold load sits on the critical path and nothing overlaps.
+    let seq = bench_arm("sequential/2gpu", &mut g, || {
+        let mut makespan = 0.0;
+        let mut done = 0u64;
+        for _model in 0..n_models {
+            let s = scenario(1, n_reqs);
+            let r = run_policy("ours", &s, &tiny, &RunOpts { seed: SEED, ..RunOpts::default() });
+            done += completions(&r);
+            makespan += r.inference_time;
+        }
+        assert_eq!(done, total, "sequential arm lost requests");
+        (makespan, None)
+    });
+
+    // (c) Fits-in-HBM reference: enough GPUs for everything at once.
+    let fits = bench_arm("fits/4gpu", &mut g, || {
+        let s = scenario(n_models, n_reqs);
+        let r = run_policy("ours", &s, &big, &RunOpts { seed: SEED, ..RunOpts::default() });
+        assert_eq!(completions(&r), total, "fits arm lost requests");
+        (r.inference_time, Some(r))
+    });
+    g.finish();
+
+    let or = over.report.as_ref().expect("oversubscribed report");
+    let res = or.residency;
+    let packed_beats_sequential = over.makespan < seq.makespan;
+    println!(
+        "makespan: oversubscribed {:.1}s vs sequential {:.1}s vs fits {:.1}s ({})",
+        over.makespan,
+        seq.makespan,
+        fits.makespan,
+        if packed_beats_sequential { "packing wins" } else { "sequential wins" }
+    );
+    println!(
+        "swaps: in={} out={} moved={:.1}GB stalled={:.1}s overlapped={:.1}s",
+        res.swaps_in,
+        res.swaps_out,
+        (res.bytes_in + res.bytes_out) as f64 / 1e9,
+        res.stall_seconds,
+        res.overlapped_seconds
+    );
+    if let Some(fr) = &fits.report {
+        assert_eq!(fr.residency.swaps_in + fr.residency.swaps_out, 0, "fits arm swapped");
+    }
+
+    let arm_json = |label: &str, a: &Arm| {
+        Json::obj(vec![
+            ("arm", Json::Str(label.to_string())),
+            ("makespan_s", Json::Num(a.makespan)),
+            ("throughput_rps", Json::Num(total as f64 / a.makespan)),
+            ("wall_s", Json::Num(a.wall)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("offload".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("n_models", Json::Num(n_models as f64)),
+        ("n_requests_per_model", Json::Num(n_reqs as f64)),
+        (
+            "arms",
+            Json::Arr(vec![
+                arm_json("oversubscribed", &over),
+                arm_json("sequential", &seq),
+                arm_json("fits_in_hbm", &fits),
+            ]),
+        ),
+        (
+            "residency",
+            Json::obj(vec![
+                ("swaps_in", Json::Num(res.swaps_in as f64)),
+                ("swaps_out", Json::Num(res.swaps_out as f64)),
+                ("bytes_in", Json::Num(res.bytes_in as f64)),
+                ("bytes_out", Json::Num(res.bytes_out as f64)),
+                ("stall_seconds", Json::Num(res.stall_seconds)),
+                ("overlapped_seconds", Json::Num(res.overlapped_seconds)),
+            ]),
+        ),
+        ("packed_beats_sequential", Json::Bool(packed_beats_sequential)),
+    ])
+    .to_string();
+    std::fs::write("BENCH_offload.json", format!("{doc}\n")).expect("write BENCH_offload.json");
+    println!("wrote BENCH_offload.json");
+}

@@ -24,6 +24,13 @@ pub struct ClusterSpec {
     pub nvlink_bw: f64,
     /// PCIe bandwidth between unlinked GPUs (bytes/s).
     pub pcie_bw: f64,
+    /// Host-to-device weight-transfer bandwidth (bytes/s): what a warm
+    /// (host-cached) model swap-in pays per GPU. Effective PCIe gen4
+    /// throughput, below the link peak.
+    pub h2d_bw: f64,
+    /// Device-to-host offload bandwidth (bytes/s): what a proactive
+    /// weight evict pays per GPU. Slightly below `h2d_bw` on A100 hosts.
+    pub d2h_bw: f64,
 }
 
 impl ClusterSpec {
@@ -38,6 +45,8 @@ impl ClusterSpec {
             peak_flops: 312.0e12,
             nvlink_bw: 300.0e9,
             pcie_bw: 32.0e9,
+            h2d_bw: 26.0e9,
+            d2h_bw: 22.0e9,
         }
     }
 
@@ -91,6 +100,16 @@ mod tests {
         assert!(!c.nvlinked(1, 2));
         assert!(!c.nvlinked(0, 0));
         assert!(!c.nvlinked(0, 7));
+    }
+
+    #[test]
+    fn host_link_bandwidths_are_ordered() {
+        // Swap economics only make sense when host links are far slower
+        // than HBM and d2h is no faster than h2d.
+        let c = ClusterSpec::a100_node(8);
+        assert!(c.h2d_bw > 0.0 && c.d2h_bw > 0.0);
+        assert!(c.d2h_bw <= c.h2d_bw);
+        assert!(c.h2d_bw < c.hbm_bw / 10.0);
     }
 
     #[test]

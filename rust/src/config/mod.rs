@@ -64,6 +64,13 @@ pub struct ExperimentConfig {
     /// (`fcfs | spjf | multi-bin:K | skip-join:Q:P`; spellings accepted on
     /// parse — see [`AdmitPolicy::parse`]).
     pub admit: String,
+    /// Let plans oversubscribe cluster HBM: packed stages time-slice the
+    /// GPUs via the residency subsystem, paying modeled swap latency
+    /// (default off; batch runs only — traffic runs reject it).
+    pub oversubscribe: bool,
+    /// Host-to-device bandwidth override in bytes/s for swap-cost pricing
+    /// (`None` = the cluster spec's own link).
+    pub h2d_bw: Option<f64>,
 }
 
 impl ExperimentConfig {
@@ -110,6 +117,14 @@ impl ExperimentConfig {
             ("replan_threshold", Json::Num(self.replan_threshold)),
             ("online_weight", Json::Num(self.online_weight)),
             ("admit", Json::Str(self.admit.clone())),
+            ("oversubscribe", Json::Bool(self.oversubscribe)),
+            (
+                "h2d_bw",
+                match self.h2d_bw {
+                    Some(bw) => Json::Num(bw),
+                    None => Json::Null,
+                },
+            ),
         ])
         .to_string()
     }
@@ -182,6 +197,11 @@ impl ExperimentConfig {
                 v.get("admit").and_then(|a| a.as_str()).unwrap_or("fcfs"),
             )?
             .name(),
+            oversubscribe: v
+                .get("oversubscribe")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            h2d_bw: v.get("h2d_bw").and_then(|x| x.as_f64()),
         })
     }
 }
@@ -209,6 +229,8 @@ mod tests {
             replan_threshold: 0.2,
             online_weight: 16.0,
             admit: "multi-bin:4".to_string(),
+            oversubscribe: true,
+            h2d_bw: Some(20.0e9),
         };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.app, c.app);
@@ -222,6 +244,8 @@ mod tests {
         assert_eq!(back.replan_threshold, 0.2);
         assert_eq!(back.online_weight, 16.0);
         assert_eq!(back.admit, "multi-bin:4");
+        assert!(back.oversubscribe);
+        assert_eq!(back.h2d_bw, Some(20.0e9));
     }
 
     #[test]
@@ -243,6 +267,9 @@ mod tests {
         assert_eq!(c.backend, "sim");
         assert!(c.artifacts.is_none());
         assert_eq!(c.admit, "fcfs");
+        // Residency defaults off with the cluster's own host link.
+        assert!(!c.oversubscribe);
+        assert!(c.h2d_bw.is_none());
     }
 
     #[test]
@@ -290,6 +317,8 @@ mod tests {
                 replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
                 online_weight: online::DEFAULT_OBS_WEIGHT,
                 admit: "fcfs".to_string(),
+                oversubscribe: false,
+                h2d_bw: None,
             };
             let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
             assert_eq!(back.app, Some(app));
@@ -365,6 +394,8 @@ mod tests {
             replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
             online_weight: online::DEFAULT_OBS_WEIGHT,
             admit: "fcfs".to_string(),
+            oversubscribe: false,
+            h2d_bw: None,
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();
@@ -413,6 +444,8 @@ mod tests {
             replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
             online_weight: online::DEFAULT_OBS_WEIGHT,
             admit: "fcfs".to_string(),
+            oversubscribe: false,
+            h2d_bw: None,
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();

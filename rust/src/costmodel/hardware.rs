@@ -149,6 +149,64 @@ impl HardwareModel {
     }
 }
 
+/// Weight swap-cost estimator for the model-residency subsystem: what a
+/// host-cached model costs to bring back onto (or proactively evict off)
+/// its GPUs over the host link, per model × TP degree. Cold first loads
+/// (disk + engine init) stay priced by [`ModelSpec::load_time`]; this
+/// estimator prices the *warm* path, where the weights already sit in
+/// pinned host memory and only the h2d/d2h transfer plus a fixed
+/// runtime-rebind overhead remains.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapCost {
+    /// Host-to-device transfer bandwidth (bytes/s, per GPU).
+    pub h2d_bw: f64,
+    /// Device-to-host offload bandwidth (bytes/s, per GPU).
+    pub d2h_bw: f64,
+}
+
+/// Fixed per-swap overhead (allocator rebind, cache re-warm) in seconds,
+/// paid on top of the h2d transfer for a warm load.
+pub const SWAP_FIXED_OVERHEAD: f64 = 0.5;
+
+impl SwapCost {
+    /// The estimator for `cluster`'s host links.
+    pub fn new(cluster: &ClusterSpec) -> Self {
+        SwapCost { h2d_bw: cluster.h2d_bw, d2h_bw: cluster.d2h_bw }
+    }
+
+    /// The estimator with an overridden h2d bandwidth (the `--h2d-bw`
+    /// CLI knob); `d2h` scales by the cluster's d2h/h2d ratio.
+    pub fn with_h2d(cluster: &ClusterSpec, h2d_bw: f64) -> Self {
+        let ratio = if cluster.h2d_bw > 0.0 { cluster.d2h_bw / cluster.h2d_bw } else { 1.0 };
+        SwapCost { h2d_bw, d2h_bw: h2d_bw * ratio }
+    }
+
+    /// Bytes one replica group moves per GPU when swapping under `tp`.
+    pub fn bytes_per_gpu(spec: &ModelSpec, tp: u32) -> u64 {
+        spec.weight_bytes_per_gpu(tp)
+    }
+
+    /// Total weight bytes a `(dp, tp)` deployment moves across all its
+    /// GPUs (`dp` replicas × full weights each).
+    pub fn bytes_total(spec: &ModelSpec, dp: u32, tp: u32) -> u64 {
+        Self::bytes_per_gpu(spec, tp) * (dp * tp) as u64
+    }
+
+    /// Seconds to swap a host-cached model *in* under `tp`: the per-GPU
+    /// shard transfer (shards move concurrently over independent links)
+    /// plus the fixed rebind overhead. Far cheaper than the cold
+    /// [`ModelSpec::load_time`] — that is the whole point of keeping
+    /// evicted weights in host memory.
+    pub fn load_secs(&self, spec: &ModelSpec, tp: u32) -> f64 {
+        Self::bytes_per_gpu(spec, tp) as f64 / self.h2d_bw + SWAP_FIXED_OVERHEAD
+    }
+
+    /// Seconds to proactively evict a model's weights to host under `tp`.
+    pub fn evict_secs(&self, spec: &ModelSpec, tp: u32) -> f64 {
+        Self::bytes_per_gpu(spec, tp) as f64 / self.d2h_bw
+    }
+}
+
 impl IterLatency for HardwareModel {
     fn prefill(&self, spec: &ModelSpec, tp: u32, prompt_lens: &[u32]) -> f64 {
         self.prefill_components(spec, tp, prompt_lens).total()
@@ -236,6 +294,44 @@ mod tests {
         let t = hw().prefill(spec, 1, &lens);
         let toks_per_s = (64.0 * 310.0) / t;
         assert!((5.0e3..100.0e3).contains(&toks_per_s), "{toks_per_s}");
+    }
+
+    #[test]
+    fn warm_swap_is_much_cheaper_than_cold_load() {
+        // chatglm3-6b: ~12 GB of weights. Warm swap-in at ~26 GB/s is
+        // under a second plus overhead; the cold load is 10+ seconds.
+        let c = ClusterSpec::a100_node(8);
+        let swap = SwapCost::new(&c);
+        let s = glm();
+        for tp in [1u32, 2] {
+            let warm = swap.load_secs(&s, tp);
+            let cold = s.load_time(tp);
+            assert!(warm < cold * 0.5, "tp={tp} warm={warm} cold={cold}");
+            assert!(warm > SWAP_FIXED_OVERHEAD, "transfer must cost something");
+        }
+        // Evict is pure d2h transfer, no rebind overhead.
+        assert!(swap.evict_secs(&s, 1) < swap.load_secs(&s, 1));
+        // TP splits the per-GPU shard, so per-GPU swap time shrinks.
+        assert!(swap.load_secs(&s, 2) < swap.load_secs(&s, 1));
+    }
+
+    #[test]
+    fn h2d_override_scales_both_directions() {
+        let c = ClusterSpec::a100_node(8);
+        let fast = SwapCost::with_h2d(&c, c.h2d_bw * 2.0);
+        let base = SwapCost::new(&c);
+        let s = glm();
+        assert!(fast.load_secs(&s, 1) < base.load_secs(&s, 1));
+        assert!(fast.evict_secs(&s, 1) < base.evict_secs(&s, 1));
+        let ratio = fast.d2h_bw / fast.h2d_bw;
+        assert!((ratio - c.d2h_bw / c.h2d_bw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swap_bytes_account_all_replicas() {
+        let s = glm();
+        let per_gpu = SwapCost::bytes_per_gpu(&s, 2);
+        assert_eq!(SwapCost::bytes_total(&s, 3, 2), per_gpu * 6);
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod online;
 pub mod sampler;
 
 pub use ecdf::Ecdf;
-pub use hardware::HardwareModel;
+pub use hardware::{HardwareModel, SwapCost};
 pub use linear::LinearIterModel;
 pub use online::{OnlineSampler, OnlineStats};
 pub use sampler::OutputSampler;

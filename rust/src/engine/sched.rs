@@ -388,6 +388,23 @@ pub enum EventKind {
         /// Request id.
         req: u64,
     },
+    /// A host-cached model's weights were swapped back onto its GPUs
+    /// (model-residency subsystem; emitted at stage boundaries, never by
+    /// the scheduling core itself).
+    SwapIn {
+        /// Total weight bytes moved across the node's GPUs.
+        bytes: u64,
+        /// Transfer duration in seconds (h2d link).
+        dur: f64,
+    },
+    /// A model's weights were evicted to host memory to free HBM for a
+    /// waiting model (proactive offload).
+    SwapOut {
+        /// Total weight bytes moved across the node's GPUs.
+        bytes: u64,
+        /// Transfer duration in seconds (d2h link).
+        dur: f64,
+    },
 }
 
 /// How one scheduler iteration is priced or executed. See module docs.

@@ -191,6 +191,15 @@ pub struct EventSummary {
     pub completions: u64,
     /// Summed iteration latency (busy seconds across replicas).
     pub busy_time: f64,
+    /// Warm model swap-ins (residency subsystem; zero unless a run
+    /// oversubscribed the cluster).
+    pub swaps_in: u64,
+    /// Model weight evictions to host (proactive offloads).
+    pub swaps_out: u64,
+    /// Weight bytes moved by swaps, both directions.
+    pub swap_bytes: u64,
+    /// Seconds spent on swap transfers (h2d + d2h).
+    pub swap_time: f64,
 }
 
 impl EventSummary {
@@ -208,6 +217,16 @@ impl EventSummary {
             }
             EventKind::Preempted { .. } => self.preemptions += 1,
             EventKind::Completed { .. } => self.completions += 1,
+            EventKind::SwapIn { bytes, dur } => {
+                self.swaps_in += 1;
+                self.swap_bytes += bytes;
+                self.swap_time += dur;
+            }
+            EventKind::SwapOut { bytes, dur } => {
+                self.swaps_out += 1;
+                self.swap_bytes += bytes;
+                self.swap_time += dur;
+            }
         }
     }
 

@@ -56,6 +56,10 @@
 //!   minimum-reload placement of §4.3, and the opt-in length-feedback
 //!   loop (`.online_refinement(true)`) that escalates stage repair to
 //!   drift-triggered replanning.
+//! * [`residency`] — the opt-in (`--oversubscribe`) model-residency
+//!   subsystem: weight swap costs over the host links, time-sliced
+//!   *packed* stages whose aggregate plans exceed the cluster, proactive
+//!   offload of drained models and swap-vs-wait displacement.
 //! * [`baselines`] — stage-construction math behind the §5 competitors.
 //! * [`apps`], [`workload`] — the paper's applications (ensembling,
 //!   routing, chain summary, mixed) and synthetic dataset generators
@@ -97,6 +101,7 @@ pub mod models;
 pub mod plan;
 pub mod planner;
 pub mod policy;
+pub mod residency;
 pub mod runner;
 pub mod runtime;
 pub mod serve;

@@ -8,6 +8,7 @@
 //!                  [--threads T] [--no-sim-cache]
 //!                  [--online-refinement] [--replan-threshold X]
 //!                  [--online-weight W] [--admit P]
+//!                  [--oversubscribe] [--h2d-bw B]
 //!   samullm traffic --app NAME[:key=value]... [--duration S] [--warmup S]
 //!                  [--queue-capacity C] [--queue-policy reject|defer]
 //!                  [--admit-quantum Q] [...run flags]
@@ -167,6 +168,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "replan-threshold",
         "online-weight",
         "admit",
+        "oversubscribe",
+        "h2d-bw",
         "gantt",
     ])?;
     let app = args.get_str("app", "ensembling");
@@ -188,12 +191,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
         .online_refinement(args.has("online-refinement"))
-        .admit_policy(&args.get_str("admit", "fcfs"));
+        .admit_policy(&args.get_str("admit", "fcfs"))
+        .oversubscribe(args.has("oversubscribe"));
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
     if let Some(w) = args.get_opt("online-weight")? {
         builder = builder.online_weight(w);
+    }
+    if let Some(bw) = args.get_opt("h2d-bw")? {
+        builder = builder.h2d_bw(bw);
     }
     if let Some(dir) = args.last("artifacts") {
         builder = builder.artifacts_dir(dir.clone());
@@ -223,6 +230,8 @@ fn cmd_workload(args: &Args) -> Result<()> {
         "replan-threshold",
         "online-weight",
         "admit",
+        "oversubscribe",
+        "h2d-bw",
         "gantt",
     ])?;
     let descriptors = args.get_all("app");
@@ -249,12 +258,16 @@ fn cmd_workload(args: &Args) -> Result<()> {
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
         .online_refinement(args.has("online-refinement"))
-        .admit_policy(&args.get_str("admit", "fcfs"));
+        .admit_policy(&args.get_str("admit", "fcfs"))
+        .oversubscribe(args.has("oversubscribe"));
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
     if let Some(w) = args.get_opt("online-weight")? {
         builder = builder.online_weight(w);
+    }
+    if let Some(bw) = args.get_opt("h2d-bw")? {
+        builder = builder.h2d_bw(bw);
     }
     if let Some(dir) = args.last("artifacts") {
         builder = builder.artifacts_dir(dir.clone());
@@ -353,7 +366,11 @@ fn cmd_config(path: &str) -> Result<()> {
         .online_refinement(cfg.online_refinement)
         .replan_threshold(cfg.replan_threshold)
         .online_weight(cfg.online_weight)
-        .admit_policy(&cfg.admit);
+        .admit_policy(&cfg.admit)
+        .oversubscribe(cfg.oversubscribe);
+    if let Some(bw) = cfg.h2d_bw {
+        builder = builder.h2d_bw(bw);
+    }
     if let Some(dir) = &cfg.artifacts {
         builder = builder.artifacts_dir(dir.clone());
     }
@@ -424,6 +441,10 @@ fn usage() -> String {
          \x20                                  (runtime length-feedback loop, default off)\n\
          \x20                [--admit fcfs|spjf|multi-bin[:BINS]|skip-join[:QUEUES[:PROMOTE_S]]]\n\
          \x20                                  (engine admission policy, default fcfs)\n\
+         \x20                [--oversubscribe] [--h2d-bw BYTES_PER_S]\n\
+         \x20                                  (let plans exceed cluster HBM: stages\n\
+         \x20                                  time-slice GPUs, paying modeled weight-swap\n\
+         \x20                                  latency over the host link; default off)\n\
          \x20                [--artifacts DIR]                (pjrt backend artifacts)\n\
          \x20 samullm workload --app NAME[:key=value]... [--app ...] [--name N]\n\
          \x20                [--policy P] [--gpus G] [--seed S] [--gantt] [...run flags]\n\

@@ -45,6 +45,16 @@ pub fn render(report: &RunReport, width: usize) -> String {
             report.admission.max_queue_wait
         ));
     }
+    if report.residency.any() {
+        out.push_str(&format!(
+            "residency: swaps in={} out={} moved={:.1}GB stalled={:.1}s overlapped={:.1}s\n",
+            report.residency.swaps_in,
+            report.residency.swaps_out,
+            (report.residency.bytes_in + report.residency.bytes_out) as f64 / 1e9,
+            report.residency.stall_seconds,
+            report.residency.overlapped_seconds
+        ));
+    }
     for &node in &nodes {
         let mut row = vec![b'.'; width];
         for s in &report.timeline {
@@ -133,6 +143,7 @@ mod tests {
             backend: "sim".into(),
             admit_policy: "fcfs".into(),
             admission: Default::default(),
+            residency: Default::default(),
             extra_time: 0.0,
             search_time: 0.0,
             planner: Default::default(),
@@ -149,6 +160,7 @@ mod tests {
                     load_time: 10.0,
                     busy_gpu_seconds: vec![200.0, 200.0],
                     events: Default::default(),
+                    swap_stall: 0.0,
                 },
                 StageRecord {
                     start: 50.0,
@@ -158,6 +170,7 @@ mod tests {
                     load_time: 15.0,
                     busy_gpu_seconds: vec![400.0],
                     events: Default::default(),
+                    swap_stall: 0.0,
                 },
             ],
             measured: None,
@@ -173,8 +186,24 @@ mod tests {
         assert!(g.lines().find(|l| l.contains("node   0")).unwrap().contains('4'));
         // Node 1 upgrades to 8 GPUs (4x2) in the second half.
         assert!(g.lines().find(|l| l.contains("node   1")).unwrap().contains('8'));
-        // No feedback loop, no annotation.
+        // No feedback loop, no annotation; no swaps, no residency line.
         assert!(!g.contains("online feedback"));
+        assert!(!g.contains("residency:"));
+
+        let mut with_swaps = report.clone();
+        with_swaps.residency = crate::residency::ResidencyStats {
+            swaps_in: 2,
+            swaps_out: 1,
+            bytes_in: 24_000_000_000,
+            bytes_out: 12_000_000_000,
+            stall_seconds: 3.0,
+            overlapped_seconds: 1.0,
+        };
+        let g = render(&with_swaps, 40);
+        assert!(
+            g.contains("residency: swaps in=2 out=1 moved=36.0GB stalled=3.0s overlapped=1.0s"),
+            "{g}"
+        );
 
         let mut with_online = report;
         with_online.online = Some(crate::costmodel::OnlineStats {

@@ -8,6 +8,7 @@ use crate::engine::AdmitStats;
 use crate::exec::EventSummary;
 use crate::plan::ExecPlan;
 use crate::planner::eval::EvalStats;
+use crate::residency::ResidencyStats;
 
 /// What happened in one executed stage.
 #[derive(Debug, Clone)]
@@ -28,6 +29,9 @@ pub struct StageRecord {
     /// Digest of the stage's unified engine event stream (same shape for
     /// every [`crate::exec::ExecBackend`]).
     pub events: EventSummary,
+    /// Wall-clock the stage lost to weight swapping that could not be
+    /// overlapped with compute (0.0 unless oversubscription triggered).
+    pub swap_stall: f64,
 }
 
 impl StageRecord {
@@ -137,6 +141,9 @@ pub struct RunReport {
     /// Admission counters accumulated over every committed stage (all
     /// zero under FCFS, which never jumps the queue).
     pub admission: AdmitStats,
+    /// Weight-swap counters accumulated by the residency subsystem (all
+    /// zero unless `--oversubscribe` triggered actual swapping).
+    pub residency: ResidencyStats,
     /// Scheduling/search wall-clock ("extra time", the hatched bar part).
     pub extra_time: f64,
     /// Algorithm 1's own wall-clock share of `extra_time`
@@ -229,6 +236,7 @@ impl RunReport {
                         ),
                     ),
                     ("load_time", Json::Num(s.load_time)),
+                    ("swap_stall", Json::Num(s.swap_stall)),
                     (
                         "events",
                         Json::obj(vec![
@@ -238,6 +246,10 @@ impl RunReport {
                             ("preemptions", Json::Num(s.events.preemptions as f64)),
                             ("completions", Json::Num(s.events.completions as f64)),
                             ("busy_time", Json::Num(s.events.busy_time)),
+                            ("swaps_in", Json::Num(s.events.swaps_in as f64)),
+                            ("swaps_out", Json::Num(s.events.swaps_out as f64)),
+                            ("swap_bytes", Json::Num(s.events.swap_bytes as f64)),
+                            ("swap_time", Json::Num(s.events.swap_time)),
                         ]),
                     ),
                 ])
@@ -254,6 +266,20 @@ impl RunReport {
                     ("queue_jumps", Json::Num(self.admission.queue_jumps as f64)),
                     ("promotions", Json::Num(self.admission.promotions as f64)),
                     ("max_queue_wait", Json::Num(self.admission.max_queue_wait)),
+                ]),
+            ),
+            (
+                "residency",
+                Json::obj(vec![
+                    ("swaps_in", Json::Num(self.residency.swaps_in as f64)),
+                    ("swaps_out", Json::Num(self.residency.swaps_out as f64)),
+                    ("bytes_in", Json::Num(self.residency.bytes_in as f64)),
+                    ("bytes_out", Json::Num(self.residency.bytes_out as f64)),
+                    ("stall_seconds", Json::Num(self.residency.stall_seconds)),
+                    (
+                        "overlapped_seconds",
+                        Json::Num(self.residency.overlapped_seconds),
+                    ),
                 ]),
             ),
             ("extra_time", Json::Num(self.extra_time)),
@@ -386,6 +412,7 @@ mod tests {
             load_time: 0.0,
             busy_gpu_seconds: busy,
             events: EventSummary { completions: 7, ..Default::default() },
+            swap_stall: 0.0,
         }
     }
 
@@ -397,6 +424,7 @@ mod tests {
             backend: "sim".into(),
             admit_policy: "fcfs".into(),
             admission: AdmitStats::default(),
+            residency: ResidencyStats::default(),
             extra_time: 10.0,
             search_time: 8.0,
             planner: EvalStats {
@@ -579,6 +607,33 @@ mod tests {
         assert!(j.contains("\"latency_p99\":44"), "{j}");
         assert!(j.contains("\"slo_attainment\":0.9"), "{j}");
         assert!(j.contains("\"app\":\"stream-a\""), "{j}");
+    }
+
+    #[test]
+    fn json_reports_residency_counters() {
+        let mut r = report(vec![record(0.0, 100.0, vec![8], vec![800.0])]);
+        let j = r.to_json();
+        // The block is always present (mirrors "admission") and all-zero
+        // on runs that never swapped.
+        assert!(j.contains("\"residency\":{"), "{j}");
+        assert!(j.contains("\"swaps_in\":0"), "{j}");
+        assert!(j.contains("\"swap_stall\":0"), "{j}");
+        r.residency = ResidencyStats {
+            swaps_in: 3,
+            swaps_out: 2,
+            bytes_in: 36_000_000_000,
+            bytes_out: 24_000_000_000,
+            stall_seconds: 4.5,
+            overlapped_seconds: 1.5,
+        };
+        r.timeline[0].swap_stall = 4.5;
+        r.timeline[0].events.swaps_in = 3;
+        let j = r.to_json();
+        assert!(j.contains("\"swaps_in\":3"), "{j}");
+        assert!(j.contains("\"swaps_out\":2"), "{j}");
+        assert!(j.contains("\"stall_seconds\":4.5"), "{j}");
+        assert!(j.contains("\"overlapped_seconds\":1.5"), "{j}");
+        assert!(j.contains("\"swap_stall\":4.5"), "{j}");
     }
 
     #[test]

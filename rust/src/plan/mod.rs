@@ -42,7 +42,11 @@ impl ExecPlan {
     }
 
     /// §3 validity: weights plus at least one sequence's KV must fit the
-    /// per-GPU memory under `tp` (no CPU offloading in this work).
+    /// per-GPU memory under `tp`. This is a per-model HBM constraint and
+    /// holds regardless of oversubscription: the residency subsystem
+    /// ([`crate::residency`]) time-slices *stages* whose aggregate demand
+    /// exceeds the cluster, but a single model whose shard does not fit
+    /// one GPU's memory can never run.
     pub fn is_valid_for(&self, spec: &ModelSpec, cluster: &ClusterSpec) -> bool {
         if self.dp == 0 || self.tp == 0 {
             return false;
@@ -62,6 +66,18 @@ impl ExecPlan {
         let kv_one_seq =
             spec.kv_bytes_per_token(self.tp) * (spec.max_seq as u64).min(KV_ADMISSION_TOKENS);
         weights + kv_one_seq < cluster.mem_bytes
+    }
+
+    /// The smallest-footprint valid plan for a model (fewest GPUs,
+    /// breaking ties toward lower tensor parallelism): `dp = 1` at the
+    /// smallest `tp` whose shard fits. `None` when the model cannot run
+    /// on this cluster at all.
+    pub fn minimal(spec: &ModelSpec, cluster: &ClusterSpec) -> Option<ExecPlan> {
+        cluster
+            .valid_tp()
+            .into_iter()
+            .map(|tp| ExecPlan::new(1, tp))
+            .find(|p| p.is_valid_for(spec, cluster))
     }
 
     /// Enumerate all valid plans for a model on a cluster.
@@ -120,7 +136,24 @@ impl Stage {
         cluster: &ClusterSpec,
         registry: &crate::models::Registry,
     ) -> bool {
-        if self.entries.is_empty() || self.n_gpus() > cluster.n_gpus {
+        self.is_valid_with(graph, finished, cluster, registry, false)
+    }
+
+    /// [`Stage::is_valid`] with a residency mode switch: when
+    /// `oversubscribe` is set the aggregate GPU budget becomes soft (a
+    /// *packed* stage's plans may sum past the cluster — the residency
+    /// lowering time-slices it, [`crate::residency::run_packed_stage`]),
+    /// while every per-model constraint (plan validity, readiness, HBM
+    /// fit of each shard) stays hard.
+    pub fn is_valid_with(
+        &self,
+        graph: &AppGraph,
+        finished: &HashSet<usize>,
+        cluster: &ClusterSpec,
+        registry: &crate::models::Registry,
+        oversubscribe: bool,
+    ) -> bool {
+        if self.entries.is_empty() || (!oversubscribe && self.n_gpus() > cluster.n_gpus) {
             return false;
         }
         let in_stage = self.nodes();
@@ -265,6 +298,54 @@ mod tests {
         assert!(!p.is_valid_for(&small, &c));
         c.mem_bytes = need + 1;
         assert!(p.is_valid_for(&small, &c));
+    }
+
+    #[test]
+    fn minimal_plan_is_smallest_footprint() {
+        let (c, r) = setup();
+        // A 6B model fits a single GPU.
+        assert_eq!(
+            ExecPlan::minimal(r.get("chatglm3-6b").unwrap(), &c),
+            Some(ExecPlan::new(1, 1))
+        );
+        // A 70B model needs tensor parallelism even for dp=1.
+        let m = ExecPlan::minimal(r.get("llama-2-70b-chat").unwrap(), &c).unwrap();
+        assert_eq!(m.dp, 1);
+        assert!(m.tp >= 2);
+        // Unrunnable model -> None.
+        let mut tiny = c.clone();
+        tiny.mem_bytes = 1 << 20;
+        assert_eq!(ExecPlan::minimal(r.get("chatglm3-6b").unwrap(), &tiny), None);
+    }
+
+    #[test]
+    fn oversubscribed_validity_softens_only_the_budget() {
+        let (c, r) = setup();
+        let mut g = AppGraph::default();
+        let a = g.add_node("chatglm3-6b", "a", 256);
+        let b = g.add_node("mistral-7b-instruct", "b", 256);
+        let fin = HashSet::new();
+        let over = Stage {
+            entries: vec![
+                StageEntry { node: a, plan: ExecPlan::new(8, 1) },
+                StageEntry { node: b, plan: ExecPlan::new(1, 2) },
+            ],
+        };
+        // 10 GPUs on an 8-GPU node: invalid normally, packable when
+        // oversubscription is on.
+        assert!(!over.is_valid(&g, &fin, &c, &r));
+        assert!(over.is_valid_with(&g, &fin, &c, &r, true));
+        // Per-model constraints remain hard either way: an invalid plan
+        // (tp wider than the node) is rejected in both modes.
+        let bad = Stage { entries: vec![StageEntry { node: a, plan: ExecPlan::new(1, 16) }] };
+        assert!(!bad.is_valid_with(&g, &fin, &c, &r, true));
+        // And so does readiness.
+        let mut g2 = AppGraph::default();
+        let x = g2.add_node("chatglm3-6b", "x", 256);
+        let y = g2.add_node("mistral-7b-instruct", "y", 256);
+        g2.add_edge(x, y);
+        let solo = Stage { entries: vec![StageEntry { node: y, plan: ExecPlan::new(1, 1) }] };
+        assert!(!solo.is_valid_with(&g2, &fin, &c, &r, true));
     }
 
     #[test]

@@ -7,17 +7,18 @@
 //! the first model completion; the search commits the stage against its
 //! *estimated* state and repeats until every model finishes.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, SwapCost};
 use crate::exec::SimBackend;
 use crate::graph::AppGraph;
 use crate::models::Registry;
 use crate::plan::{ExecPlan, Stage, StageEntry};
 use crate::planner::eval::{EvalStats, Evaluator, StageEval};
 use crate::planner::simcache::SimCache;
+use crate::residency::{self, ResidencyManager};
 use crate::runner::state::{AppRequest, ExecState};
 use crate::util::rng::Rng;
 
@@ -59,6 +60,15 @@ pub struct GreedyPlanner {
     /// also reuse outcomes across searches — e.g. a session re-running or
     /// comparing scenarios.
     pub cache: Option<Arc<SimCache>>,
+    /// Allow *packed* stages whose aggregate plans exceed the cluster
+    /// (model-residency oversubscription, [`crate::residency`]). Off by
+    /// default; when on but every stage fits, plans and estimates are
+    /// identical to the off path (the packing gate only engages when even
+    /// minimal footprints cannot coexist).
+    pub oversubscribe: bool,
+    /// Override of the host-to-device bandwidth the swap cost model
+    /// prices packed-stage transfers with (`None` = cluster default).
+    pub h2d_bw: Option<f64>,
 }
 
 impl GreedyPlanner {
@@ -72,6 +82,8 @@ impl GreedyPlanner {
             no_preemption: false,
             threads: 0,
             cache: None,
+            oversubscribe: false,
+            h2d_bw: None,
         }
     }
 
@@ -150,11 +162,89 @@ impl GreedyPlanner {
             cache,
         );
 
+        // Residency scratch state for packed stages: the estimate pays the
+        // same modeled swap/load costs the runner will, so `est_total`
+        // prices oversubscription. Untouched (and the `swap` pricing
+        // unused) when the packing gate never fires.
+        let mut res_mgr = ResidencyManager::new();
+        let swap = match self.h2d_bw {
+            Some(bw) => SwapCost::with_h2d(&self.cluster, bw),
+            None => SwapCost::new(&self.cluster),
+        };
+        if self.oversubscribe {
+            for (&node, &plan) in initial_plans {
+                if let Some(spec) = self.registry.get(&graph.nodes[node].model) {
+                    res_mgr.note_resident(
+                        node,
+                        plan,
+                        SwapCost::bytes_per_gpu(spec, plan.tp),
+                        state.clock,
+                    );
+                }
+            }
+        }
+
         while !state.all_done() {
             guard += 1;
             assert!(guard <= 4 * graph.n_nodes() + 64, "planner failed to converge");
-            let stage = self.build_stage(graph, &state, &prev_plans, &evaluator);
+            let mut stage = self.build_stage(graph, &state, &prev_plans, &evaluator);
             assert!(!stage.entries.is_empty(), "no valid stage found");
+
+            // Packed extension: with oversubscription on, ready nodes the
+            // budget-bound search left out join at their minimal plans —
+            // but only when even the minimal footprints of everything
+            // runnable cannot coexist on the cluster. Workloads that fit
+            // never take this branch, keeping plans bit-identical to the
+            // oversubscribe-off path.
+            if self.oversubscribe {
+                let leftover = self.leftover_entries(graph, &state, &stage);
+                if !leftover.is_empty()
+                    && residency::overcommitted(
+                        &stage,
+                        &leftover,
+                        &self.cluster,
+                        &self.registry,
+                        graph,
+                    )
+                {
+                    stage.entries.extend(leftover);
+                    let t_start = state.clock;
+                    let mut backend =
+                        SimBackend::new(&self.cost.iter_model, self.cluster.mem_bytes);
+                    let out = residency::run_packed_stage(
+                        &stage,
+                        &mut state,
+                        graph,
+                        &self.registry,
+                        &self.cluster,
+                        &swap,
+                        &mut res_mgr,
+                        &mut backend,
+                        false,
+                    )
+                    .expect("virtual lowering is infallible");
+                    let first = out
+                        .subs
+                        .first()
+                        .and_then(|s| {
+                            s.result
+                                .nodes
+                                .iter()
+                                .min_by(|a, b| {
+                                    a.projected_finish.partial_cmp(&b.projected_finish).unwrap()
+                                })
+                                .map(|n| n.node)
+                        })
+                        .unwrap_or(usize::MAX);
+                    est_windows.push((t_start, state.clock));
+                    est_first.push(first);
+                    prev_plans =
+                        out.final_stage.entries.iter().map(|e| (e.node, e.plan)).collect();
+                    stages.push(stage);
+                    continue;
+                }
+            }
+
             let load = self.load_delays(graph, &stage, &prev_plans);
             let mut backend = SimBackend::new(&self.cost.iter_model, self.cluster.mem_bytes);
             let res = state.run_stage(
@@ -176,6 +266,28 @@ impl GreedyPlanner {
             est_windows.push((res.start, res.end));
             est_first.push(first);
             prev_plans = stage.entries.iter().map(|e| (e.node, e.plan)).collect();
+            // Keep the residency picture aligned with the committed stage:
+            // scheduled models are resident; preempted ones lose their HBM
+            // (no host copy — the normal path's reload stays cold, exactly
+            // the pre-residency loader semantics).
+            if self.oversubscribe {
+                let keep = stage.nodes();
+                for node in res_mgr.resident_nodes() {
+                    if !keep.contains(&node) {
+                        res_mgr.discard(node);
+                    }
+                }
+                for e in &stage.entries {
+                    if let Some(spec) = self.registry.get(&graph.nodes[e.node].model) {
+                        res_mgr.note_resident(
+                            e.node,
+                            e.plan,
+                            SwapCost::bytes_per_gpu(spec, e.plan.tp),
+                            state.clock,
+                        );
+                    }
+                }
+            }
             stages.push(stage);
         }
 
@@ -187,6 +299,29 @@ impl GreedyPlanner {
             search_time: t0.elapsed().as_secs_f64(),
             eval: evaluator.stats(),
         }
+    }
+
+    /// Ready nodes the committed stage left out, paired with their
+    /// smallest valid plans (ascending node id) — the candidates a packed
+    /// stage absorbs when the cluster is overcommitted.
+    fn leftover_entries(
+        &self,
+        graph: &AppGraph,
+        state: &ExecState,
+        stage: &Stage,
+    ) -> Vec<StageEntry> {
+        let in_stage: HashSet<usize> = stage.nodes();
+        let ready = graph.ready_nodes(&state.finished_nodes, &in_stage);
+        let mut out: Vec<StageEntry> = ready
+            .iter()
+            .filter(|n| !in_stage.contains(n))
+            .filter_map(|&node| {
+                let spec = self.registry.get(&graph.nodes[node].model)?;
+                ExecPlan::minimal(spec, &self.cluster).map(|plan| StageEntry { node, plan })
+            })
+            .collect();
+        out.sort_by_key(|e| e.node);
+        out
     }
 
     /// Loading cost per node for a stage, relative to the previous stage's
@@ -459,6 +594,45 @@ mod tests {
         // Re-planning the same state against the shared cache must hit:
         // the 2nd and 3rd searches repeat the 1st search's keys exactly.
         assert!(shared.hits() > 0, "shared cache saw no reuse");
+    }
+
+    #[test]
+    fn oversubscribe_enabled_but_fitting_is_bit_identical() {
+        // The packing gate only engages when minimal footprints cannot
+        // coexist; on the 8-GPU node the ensembling suite always fits, so
+        // flipping the switch must change nothing.
+        let p = planner();
+        let (g, w) = ensembling_like(6, 100);
+        let base = p.plan(&g, &w, false, 2);
+        let mut over = planner();
+        over.oversubscribe = true;
+        let plan = over.plan(&g, &w, false, 2);
+        assert_eq!(plan.stages, base.stages);
+        assert_eq!(plan.est_total.to_bits(), base.est_total.to_bits());
+        assert_eq!(plan.est_windows, base.est_windows);
+    }
+
+    #[test]
+    fn oversubscribed_cluster_packs_leftover_models() {
+        // Three single-GPU models on a 2-GPU node: the budget-bound search
+        // can schedule at most two; with oversubscription the third joins
+        // a packed stage whose plans sum past the cluster.
+        let cluster = ClusterSpec::a100_node(2);
+        let cost = CostModel::calibrated(&cluster, 11);
+        let mut p = GreedyPlanner::new(cost, Registry::paper(), cluster);
+        p.oversubscribe = true;
+        let (g, w) = ensembling_like(3, 60);
+        let plan = p.plan(&g, &w, false, 7);
+        assert!(
+            plan.stages.iter().any(|s| s.n_gpus() > 2),
+            "expected a packed stage: {:?}",
+            plan.stages
+        );
+        for n in 0..3 {
+            assert!(plan.stages.iter().any(|s| s.nodes().contains(&n)), "node {n} unscheduled");
+        }
+        assert!(plan.est_total > 0.0);
+        assert_eq!(plan.est_windows.len(), plan.stages.len());
     }
 
     #[test]

@@ -135,6 +135,8 @@ struct ReplanCfg {
     no_preemption: bool,
     sim_cache: Option<Arc<SimCache>>,
     replan_threshold: f64,
+    oversubscribe: bool,
+    h2d_bw: Option<f64>,
 }
 
 /// Ours (§4): Algorithm 1 greedy planning + dynamic stage adjustment,
@@ -207,6 +209,8 @@ impl SamuLlmPolicy {
         planner.no_preemption = cfg.no_preemption;
         planner.threads = cfg.threads;
         planner.cache = cfg.sim_cache.clone();
+        planner.oversubscribe = cfg.oversubscribe;
+        planner.h2d_bw = cfg.h2d_bw;
         let mut est = ctx.est_state.clone();
         est.noise_sigma = None;
         let plan = planner.plan_from_state(ctx.graph, est, self.sched.last_plans());
@@ -243,13 +247,18 @@ impl Policy for SamuLlmPolicy {
         p.no_preemption = ctx.opts.no_preemption;
         p.threads = ctx.opts.threads;
         p.cache = ctx.sim_cache.cloned();
+        p.oversubscribe = ctx.opts.oversubscribe;
+        p.h2d_bw = ctx.opts.h2d_bw;
         let plan = p.plan(ctx.graph, ctx.workloads, ctx.opts.known_lengths, ctx.opts.seed);
         self.sched = DynamicScheduler::new(Some(plan.clone()));
+        self.sched.oversubscribe = ctx.opts.oversubscribe;
         self.cfg = Some(ReplanCfg {
             threads: ctx.opts.threads,
             no_preemption: ctx.opts.no_preemption,
             sim_cache: ctx.sim_cache.cloned(),
             replan_threshold: ctx.opts.replan_threshold,
+            oversubscribe: ctx.opts.oversubscribe,
+            h2d_bw: ctx.opts.h2d_bw,
         });
         self.length_ref.clear();
         self.plan_t0 = 0.0;

@@ -1,0 +1,661 @@
+//! Model-residency subsystem: weight swap costs, oversubscribed placement
+//! and proactive offload.
+//!
+//! Prior releases treated "the stage fits the cluster" as a hard
+//! invariant: a stage whose plans sum to more GPUs than exist was simply
+//! invalid ([`crate::plan::Stage::is_valid`]). This module relaxes that —
+//! opt-in via `--oversubscribe` — by giving weights a *residency
+//! lifecycle*:
+//!
+//! * **resident** — weights occupy HBM and the model may run;
+//! * **host-cached** — weights were swapped out over the d2h link and can
+//!   be swapped back in at warm-transfer cost
+//!   ([`crate::costmodel::SwapCost::load_secs`]), far cheaper than a cold
+//!   load from checkpoint ([`crate::models::ModelSpec::load_time`]);
+//! * **discarded** — a drained model's weights are released without a
+//!   host copy (finished nodes never rerun, and weights are immutable, so
+//!   nothing needs preserving).
+//!
+//! [`run_packed_stage`] lowers one *packed* stage — a planner stage whose
+//! aggregate GPU demand exceeds the cluster — into a sequence of
+//! first-finish **sub-stages** that time-slice the GPUs. At every
+//! sub-stage boundary it:
+//!
+//! 1. retires drained models (proactive offload: the freed HBM lets the
+//!    next joiner's weight transfer overlap the running models' decode
+//!    tail, FastServe-style);
+//! 2. admits pending models first-fit (dependency-aware), pricing their
+//!    loads cold, warm, or partially overlapped;
+//! 3. optionally *displaces* a long-running model to make room for a
+//!    wide pending one, when the modeled swap round-trip is cheaper than
+//!    waiting for GPUs to free naturally ([`SWAP_WAIT_FACTOR`]).
+//!
+//! Every swap is visible on the unified event stream
+//! ([`SwapIn`](crate::engine::sched::EventKind::SwapIn) /
+//! [`SwapOut`](crate::engine::sched::EventKind::SwapOut))
+//! and aggregated into [`ResidencyStats`] for the run report. With
+//! oversubscription disabled — or enabled but never triggered because
+//! every stage fits — nothing here runs and results are bit-identical to
+//! the pre-residency releases.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use anyhow::Result;
+
+use crate::cluster::ClusterSpec;
+use crate::costmodel::SwapCost;
+use crate::engine::sched::{EngineEvent, EventKind};
+use crate::exec::ExecBackend;
+use crate::graph::AppGraph;
+use crate::models::Registry;
+use crate::plan::{ExecPlan, Stage, StageEntry};
+use crate::runner::state::{ExecState, StageResult};
+
+/// Displacement hysteresis: a running model is swapped out for a pending
+/// one only when the expected natural wait for GPUs exceeds this multiple
+/// of the swap round-trip (victim evict + victim's later warm reload).
+/// The margin absorbs the unpriced cost of the victim's lost KV cache
+/// (it re-prefills on rejoin).
+pub const SWAP_WAIT_FACTOR: f64 = 2.0;
+
+/// A model whose weights currently occupy HBM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidentModel {
+    /// The plan the weights are sharded for.
+    pub plan: ExecPlan,
+    /// Weight bytes per participating GPU under that sharding.
+    pub bytes_per_gpu: u64,
+    /// Pinned models may not be evicted (in-flight this sub-stage).
+    pub pinned: bool,
+    /// Clock of the model's latest scheduled sub-stage (LRU key).
+    pub last_use: f64,
+}
+
+/// Swap-traffic counters for one run (reported in
+/// [`crate::metrics::RunReport::residency`]). All-zero whenever
+/// oversubscription is off or never triggered.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResidencyStats {
+    /// Warm weight loads over the h2d link (each has a `SwapIn` event).
+    pub swaps_in: u64,
+    /// Weight releases from HBM (each has a `SwapOut` event): d2h
+    /// offloads of displaced models plus drained-model discards.
+    pub swaps_out: u64,
+    /// Total weight bytes moved onto GPUs by swap-ins.
+    pub bytes_in: u64,
+    /// Total weight bytes released from GPUs by swap-outs.
+    pub bytes_out: u64,
+    /// Swap seconds on the critical path: paid warm-load delays plus
+    /// d2h evictions that serialized before a displacement load.
+    pub stall_seconds: f64,
+    /// Swap/load seconds hidden behind computation: transfers credited
+    /// against the previous sub-stage's decode tail (proactive offload)
+    /// and off-path d2h copies.
+    pub overlapped_seconds: f64,
+}
+
+impl ResidencyStats {
+    /// Fold another run segment's counters into this one.
+    pub fn absorb(&mut self, o: &ResidencyStats) {
+        self.swaps_in += o.swaps_in;
+        self.swaps_out += o.swaps_out;
+        self.bytes_in += o.bytes_in;
+        self.bytes_out += o.bytes_out;
+        self.stall_seconds += o.stall_seconds;
+        self.overlapped_seconds += o.overlapped_seconds;
+    }
+
+    /// Whether any swap traffic happened at all.
+    pub fn any(&self) -> bool {
+        self.swaps_in + self.swaps_out > 0
+    }
+}
+
+/// Tracks which models' weights are resident in HBM, which have a host
+/// copy, and the swap traffic generated while managing them.
+///
+/// Purely bookkeeping — transfer *times* are priced by the caller with
+/// [`SwapCost`], so the manager can serve both the planner's estimate
+/// pass and the runner's ground-truth pass without knowing which it is.
+#[derive(Debug, Clone, Default)]
+pub struct ResidencyManager {
+    resident: HashMap<usize, ResidentModel>,
+    host_cached: HashSet<usize>,
+    /// Swap-traffic counters accumulated so far.
+    pub stats: ResidencyStats,
+}
+
+impl ResidencyManager {
+    /// An empty manager (nothing resident, nothing cached).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `node`'s weights now occupy HBM under `plan`.
+    pub fn note_resident(&mut self, node: usize, plan: ExecPlan, bytes_per_gpu: u64, now: f64) {
+        self.resident
+            .insert(node, ResidentModel { plan, bytes_per_gpu, pinned: false, last_use: now });
+    }
+
+    /// The plan `node`'s resident weights are sharded for, if resident.
+    pub fn resident_plan(&self, node: usize) -> Option<ExecPlan> {
+        self.resident.get(&node).map(|r| r.plan)
+    }
+
+    /// Whether `node`'s weights are in HBM (under any sharding).
+    pub fn is_resident(&self, node: usize) -> bool {
+        self.resident.contains_key(&node)
+    }
+
+    /// Whether a host copy of `node`'s weights exists (warm reload).
+    pub fn is_host_cached(&self, node: usize) -> bool {
+        self.host_cached.contains(&node)
+    }
+
+    /// Refresh `node`'s LRU timestamp.
+    pub fn touch(&mut self, node: usize, now: f64) {
+        if let Some(r) = self.resident.get_mut(&node) {
+            r.last_use = r.last_use.max(now);
+        }
+    }
+
+    /// Pin `node` against eviction (it has in-flight work this sub-stage).
+    pub fn pin(&mut self, node: usize) {
+        if let Some(r) = self.resident.get_mut(&node) {
+            r.pinned = true;
+        }
+    }
+
+    /// Release `node`'s eviction pin.
+    pub fn unpin(&mut self, node: usize) {
+        if let Some(r) = self.resident.get_mut(&node) {
+            r.pinned = false;
+        }
+    }
+
+    /// Whether `node` is currently pinned.
+    pub fn is_pinned(&self, node: usize) -> bool {
+        self.resident.get(&node).map(|r| r.pinned).unwrap_or(false)
+    }
+
+    /// Evict `node` to the host cache. Returns the evicted entry, or
+    /// `None` if the node is pinned or not resident (pins are inviolable:
+    /// a model with in-flight iterations never loses its weights).
+    pub fn evict(&mut self, node: usize) -> Option<ResidentModel> {
+        if self.is_pinned(node) {
+            return None;
+        }
+        let r = self.resident.remove(&node)?;
+        self.host_cached.insert(node);
+        Some(r)
+    }
+
+    /// Release `node`'s weights without a host copy (drained model).
+    pub fn discard(&mut self, node: usize) -> Option<ResidentModel> {
+        self.resident.remove(&node)
+    }
+
+    /// Ids of all currently resident models.
+    pub fn resident_nodes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.resident.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The least-recently-used unpinned resident model, if any.
+    pub fn lru_candidate(&self) -> Option<usize> {
+        self.resident
+            .iter()
+            .filter(|(_, r)| !r.pinned)
+            .min_by(|a, b| a.1.last_use.total_cmp(&b.1.last_use).then(a.0.cmp(b.0)))
+            .map(|(&n, _)| n)
+    }
+
+    /// GPUs occupied by resident weights (sum of resident plans).
+    pub fn resident_gpus(&self) -> u32 {
+        self.resident.values().map(|r| r.plan.n_gpus()).sum()
+    }
+
+    /// Aggregate weight bytes resident across the whole cluster.
+    pub fn resident_weight_bytes(&self) -> u64 {
+        self.resident
+            .values()
+            .map(|r| r.bytes_per_gpu.saturating_mul(r.plan.n_gpus() as u64))
+            .sum()
+    }
+
+    /// The §4.3-style swap-vs-wait rule: displace only when waiting for
+    /// GPUs to free naturally costs more than [`SWAP_WAIT_FACTOR`] swap
+    /// round-trips.
+    pub fn swap_vs_wait(swap_secs: f64, expected_wait: f64) -> bool {
+        expected_wait > SWAP_WAIT_FACTOR * swap_secs
+    }
+}
+
+/// One first-finish sub-stage produced by lowering a packed stage.
+#[derive(Debug, Clone)]
+pub struct SubStageOutcome {
+    /// The models that actually ran (always fits the cluster).
+    pub stage: Stage,
+    /// The stage-execution result (projected finishes, busy times).
+    pub result: StageResult,
+    /// Per-node load delays paid at this boundary (cold + warm).
+    pub load_delay: HashMap<usize, f64>,
+    /// Swap seconds on this sub-stage's critical path (warm loads paid
+    /// after overlap credit, plus serialized d2h evictions).
+    pub swap_stall: f64,
+    /// Engine events of the sub-stage, including the boundary's
+    /// `SwapIn`/`SwapOut` records.
+    pub events: Vec<EngineEvent>,
+}
+
+/// The lowering of one packed stage: the sub-stages run plus the final
+/// active set (the next stage's `prev_plans` for reload accounting).
+#[derive(Debug, Clone, Default)]
+pub struct PackedOutcome {
+    /// Sub-stages in execution order.
+    pub subs: Vec<SubStageOutcome>,
+    /// The last sub-stage's entries (what is on the GPUs afterwards).
+    pub final_stage: Stage,
+}
+
+/// Lower a packed stage (aggregate GPU demand may exceed the cluster)
+/// into first-finish sub-stages that time-slice the GPUs, and execute
+/// them against `backend`, mutating `state` and `mgr`.
+///
+/// `measured` selects [`ExecState::run_stage_measured`] per sub-stage
+/// (real backends); swap stalls then advance the measured clock directly,
+/// since measured execution has no per-node virtual load delay. Entries
+/// whose dependencies cannot be satisfied within the packed stage are
+/// left unscheduled — the caller's outer loop re-plans them.
+#[allow(clippy::too_many_arguments)] // mirrors the run_stage signature family
+pub fn run_packed_stage(
+    packed: &Stage,
+    state: &mut ExecState,
+    graph: &AppGraph,
+    registry: &Registry,
+    cluster: &ClusterSpec,
+    swap: &SwapCost,
+    mgr: &mut ResidencyManager,
+    backend: &mut dyn ExecBackend,
+    measured: bool,
+) -> Result<PackedOutcome> {
+    let total_hbm = cluster.mem_bytes.saturating_mul(cluster.n_gpus as u64);
+    let spec_of = |node: usize| registry.get(&graph.nodes[node].model).expect("model");
+    let bytes_total =
+        |e: &StageEntry| SwapCost::bytes_total(spec_of(e.node), e.plan.dp, e.plan.tp);
+
+    let mut out = PackedOutcome::default();
+    let mut pendq: VecDeque<StageEntry> = packed.entries.iter().copied().collect();
+    let mut active: Vec<StageEntry> = vec![];
+    let mut prev_result: Option<StageResult> = None;
+    let mut prev_dur = 0.0f64;
+    // Each sub-stage drains at least one model; displacements re-enqueue,
+    // so allow a generous multiple before bailing to the outer loop.
+    let rounds_cap = 4 * packed.entries.len() + 16;
+
+    for _round in 0..rounds_cap {
+        let now = state.clock;
+        let mut events: Vec<EngineEvent> = vec![];
+        let mut load_delay: HashMap<usize, f64> = HashMap::new();
+        let mut swap_stall = 0.0f64;
+
+        // -- boundary 1: retire drained models (proactive offload) --------
+        let unfinished: HashSet<usize> = state.unfinished_nodes().into_iter().collect();
+        let drained: Vec<StageEntry> =
+            active.iter().copied().filter(|e| !unfinished.contains(&e.node)).collect();
+        active.retain(|e| unfinished.contains(&e.node));
+        for e in &drained {
+            let was_resident = mgr.discard(e.node).is_some();
+            if was_resident && !pendq.is_empty() {
+                // Weights released at the drain boundary — no d2h copy
+                // (finished models never rerun), and the freed HBM lets
+                // the joiner's transfer overlap the survivors' decode
+                // tail (credited at admission below).
+                let bytes = bytes_total(e);
+                events.push(EngineEvent {
+                    node: e.node,
+                    replica: 0,
+                    t: now,
+                    kind: EventKind::SwapOut { bytes, dur: 0.0 },
+                });
+                mgr.stats.swaps_out += 1;
+                mgr.stats.bytes_out += bytes;
+            }
+        }
+
+        // Drop pending entries whose node drained through another path
+        // (defensive; keeps the queue consistent with state).
+        pendq.retain(|e| unfinished.contains(&e.node));
+
+        let finished: HashSet<usize> =
+            (0..graph.n_nodes()).filter(|n| !unfinished.contains(n)).collect();
+        let mut used: u32 = active.iter().map(|e| e.plan.n_gpus()).sum();
+
+        // Overlap headroom: a joiner's transfer can start during the
+        // previous sub-stage's tail if its weights fit the HBM freed by
+        // the drained models (aggregate check).
+        let mut overlap_bytes_free = total_hbm.saturating_sub(mgr.resident_weight_bytes());
+
+        // Admission pricing shared by first-fit and displacement paths.
+        // Returns the paid delay; updates events/stats/manager.
+        let mut admit = |e: &StageEntry,
+                         extra_stall: f64,
+                         allow_overlap: bool,
+                         events: &mut Vec<EngineEvent>,
+                         mgr: &mut ResidencyManager|
+         -> Option<f64> {
+            let spec = spec_of(e.node);
+            if mgr.resident_plan(e.node) == Some(e.plan) {
+                // Kept resident under the same sharding: no load at all
+                // (and KV survives, matching the §4.3 kept semantics).
+                mgr.touch(e.node, now);
+                return None;
+            }
+            let warm = mgr.is_host_cached(e.node);
+            let base =
+                if warm { swap.load_secs(spec, e.plan.tp) } else { spec.load_time(e.plan.tp) };
+            let bytes = bytes_total(e);
+            let credit = if allow_overlap && bytes <= overlap_bytes_free {
+                overlap_bytes_free -= bytes;
+                base.min(prev_dur)
+            } else {
+                0.0
+            };
+            let paid = (base - credit).max(0.0) + extra_stall;
+            if warm {
+                events.push(EngineEvent {
+                    node: e.node,
+                    replica: 0,
+                    t: now,
+                    kind: EventKind::SwapIn { bytes, dur: base },
+                });
+                mgr.stats.swaps_in += 1;
+                mgr.stats.bytes_in += bytes;
+                mgr.stats.stall_seconds += paid;
+            }
+            mgr.stats.overlapped_seconds += credit;
+            mgr.note_resident(e.node, e.plan, SwapCost::bytes_per_gpu(spec, e.plan.tp), now);
+            mgr.pin(e.node);
+            Some(paid)
+        };
+
+        // -- boundary 2: first-fit admission (dependency-aware) -----------
+        loop {
+            let in_active: HashSet<usize> = active.iter().map(|a| a.node).collect();
+            let slot = pendq.iter().position(|e| {
+                let mut in_stage = in_active.clone();
+                in_stage.insert(e.node);
+                used + e.plan.n_gpus() <= cluster.n_gpus
+                    && graph.is_ready(e.node, &finished, &in_stage)
+            });
+            let Some(i) = slot else { break };
+            let e = pendq.remove(i).unwrap();
+            if let Some(paid) = admit(&e, 0.0, true, &mut events, mgr) {
+                swap_stall += if mgr.is_host_cached(e.node) { paid } else { 0.0 };
+                load_delay.insert(e.node, paid);
+            }
+            used += e.plan.n_gpus();
+            active.push(e);
+        }
+
+        // -- boundary 3: swap-vs-wait displacement (at most one) ----------
+        // Only with a previous sub-stage's projections to price the wait,
+        // and only for the frontmost ready pending entry that did not fit.
+        if let Some(pr) = &prev_result {
+            let in_active: HashSet<usize> = active.iter().map(|a| a.node).collect();
+            let head = pendq
+                .iter()
+                .position(|e| {
+                    let mut in_stage = in_active.clone();
+                    in_stage.insert(e.node);
+                    graph.is_ready(e.node, &finished, &in_stage)
+                })
+                .map(|i| pendq[i]);
+            if let Some(e) = head {
+                let need = e.plan.n_gpus().saturating_sub(cluster.n_gpus - used);
+                let proj: HashMap<usize, f64> =
+                    pr.nodes.iter().map(|n| (n.node, n.projected_finish)).collect();
+                // Victim: the unpinned active model latest to finish that
+                // alone frees enough GPUs (near-finishers drain naturally).
+                let victim = active
+                    .iter()
+                    .filter(|v| v.plan.n_gpus() >= need && !mgr.is_pinned(v.node))
+                    .max_by(|a, b| {
+                        let fa = proj.get(&a.node).copied().unwrap_or(f64::INFINITY);
+                        let fb = proj.get(&b.node).copied().unwrap_or(f64::INFINITY);
+                        fa.total_cmp(&fb)
+                    })
+                    .copied();
+                if need > 0 {
+                    if let Some(v) = victim {
+                        // Natural wait: when would enough GPUs free if we
+                        // just let the active models run?
+                        let mut finishes: Vec<(f64, u32)> = active
+                            .iter()
+                            .map(|a| {
+                                (proj.get(&a.node).copied().unwrap_or(f64::INFINITY),
+                                 a.plan.n_gpus())
+                            })
+                            .collect();
+                        finishes.sort_by(|a, b| a.0.total_cmp(&b.0));
+                        let mut freed = 0u32;
+                        let mut wait_until = f64::INFINITY;
+                        for (t, g) in finishes {
+                            freed += g;
+                            if freed >= need {
+                                wait_until = t;
+                                break;
+                            }
+                        }
+                        let expected_wait = (wait_until - now).max(0.0);
+                        let vspec = spec_of(v.node);
+                        let evict_dur = if mgr.is_host_cached(v.node) {
+                            0.0 // weights immutable: the host copy is still valid
+                        } else {
+                            swap.evict_secs(vspec, v.plan.tp)
+                        };
+                        let round_trip = evict_dur + swap.load_secs(vspec, v.plan.tp);
+                        if ResidencyManager::swap_vs_wait(round_trip, expected_wait)
+                            && mgr.evict(v.node).is_some()
+                        {
+                            let vbytes = bytes_total(&v);
+                            events.push(EngineEvent {
+                                node: v.node,
+                                replica: 0,
+                                t: now,
+                                kind: EventKind::SwapOut { bytes: vbytes, dur: evict_dur },
+                            });
+                            mgr.stats.swaps_out += 1;
+                            mgr.stats.bytes_out += vbytes;
+                            mgr.stats.stall_seconds += evict_dur;
+                            active.retain(|a| a.node != v.node);
+                            used -= v.plan.n_gpus();
+                            // The victim rejoins later (warm) with its KV
+                            // gone — back of the queue.
+                            pendq.retain(|p| p.node != e.node);
+                            pendq.push_back(v);
+                            // The joiner's load serializes behind the
+                            // evict (HBM must free first); no overlap.
+                            if let Some(paid) = admit(&e, evict_dur, false, &mut events, mgr) {
+                                swap_stall += paid;
+                                load_delay.insert(e.node, paid);
+                            }
+                            used += e.plan.n_gpus();
+                            active.push(e);
+                        }
+                    }
+                }
+            }
+        }
+
+        if active.is_empty() {
+            // Nothing admissible (unsatisfiable dependencies within this
+            // packed stage) — hand the remainder back to the outer loop.
+            break;
+        }
+
+        // -- run the sub-stage (first-finish discipline) ------------------
+        let stage = Stage { entries: active.clone() };
+        let result = if measured {
+            // Measured execution has no per-node virtual delay: the swap
+            // stall is real wall time the devices spend on transfers.
+            state.clock += swap_stall;
+            state.run_stage_measured(&stage, graph, registry, backend, Some(&mut events))?
+        } else {
+            let before_done = state.completed.len();
+            let res = state.run_stage(
+                &stage,
+                graph,
+                registry,
+                backend,
+                &load_delay,
+                false,
+                false,
+                Some(&mut events),
+            );
+            // Livelock guard, as in the outer runner loop: a sub-stage
+            // that completed nothing in zero time re-runs to its fastest
+            // node's completion.
+            if state.completed.len() == before_done && res.end - res.start < 1e-9 {
+                state.run_stage(
+                    &stage,
+                    graph,
+                    registry,
+                    backend,
+                    &load_delay,
+                    false,
+                    true,
+                    Some(&mut events),
+                );
+            }
+            res
+        };
+        for e in &active {
+            mgr.unpin(e.node);
+            mgr.touch(e.node, state.clock);
+        }
+        prev_dur = (result.end - result.start).max(0.0);
+        prev_result = Some(result.clone());
+        out.subs
+            .push(SubStageOutcome { stage: stage.clone(), result, load_delay, swap_stall, events });
+        out.final_stage = stage;
+        if pendq.is_empty() {
+            break; // every packed entry got on the GPUs at least once
+        }
+    }
+    Ok(out)
+}
+
+/// Whether `stage` plus the minimal plans of `leftover` ready nodes
+/// overcommit the cluster — the gate for packed-stage planning. Packing
+/// engages only when even the *smallest* valid footprint of everything
+/// runnable cannot coexist, so workloads that fit (the entire paper
+/// suite) never take this path.
+pub fn overcommitted(
+    stage: &Stage,
+    leftover: &[StageEntry],
+    cluster: &ClusterSpec,
+    registry: &Registry,
+    graph: &AppGraph,
+) -> bool {
+    let min_gpus = |e: &StageEntry| {
+        registry
+            .get(&graph.nodes[e.node].model)
+            .and_then(|s| ExecPlan::minimal(s, cluster))
+            .map(|p| p.n_gpus())
+            .unwrap_or(e.plan.n_gpus())
+    };
+    let demand: u32 = stage.entries.iter().map(|e| min_gpus(e)).sum::<u32>()
+        + leftover.iter().map(min_gpus).sum::<u32>();
+    demand > cluster.n_gpus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn entry(node: usize, dp: u32, tp: u32) -> StageEntry {
+        StageEntry { node, plan: ExecPlan::new(dp, tp) }
+    }
+
+    #[test]
+    fn residency_lifecycle_and_lru() {
+        let mut m = ResidencyManager::new();
+        m.note_resident(0, ExecPlan::new(1, 1), 10 << 30, 1.0);
+        m.note_resident(1, ExecPlan::new(1, 2), 20 << 30, 2.0);
+        assert!(m.is_resident(0) && m.is_resident(1));
+        assert_eq!(m.resident_gpus(), 3);
+        assert_eq!(m.resident_weight_bytes(), (10u64 << 30) + 2 * (20u64 << 30));
+        // LRU prefers the oldest unpinned model.
+        assert_eq!(m.lru_candidate(), Some(0));
+        m.touch(0, 5.0);
+        assert_eq!(m.lru_candidate(), Some(1));
+        // Evict moves weights to the host cache.
+        assert!(m.evict(1).is_some());
+        assert!(!m.is_resident(1) && m.is_host_cached(1));
+        // Discard releases without a host copy.
+        assert!(m.discard(0).is_some());
+        assert!(!m.is_resident(0) && !m.is_host_cached(0));
+    }
+
+    #[test]
+    fn pinned_models_are_never_evicted() {
+        let mut m = ResidencyManager::new();
+        m.note_resident(7, ExecPlan::new(2, 1), 5 << 30, 0.0);
+        m.pin(7);
+        assert!(m.is_pinned(7));
+        assert!(m.evict(7).is_none(), "pinned eviction must be refused");
+        assert!(m.is_resident(7) && !m.is_host_cached(7));
+        assert_eq!(m.lru_candidate(), None, "pinned models are not LRU candidates");
+        m.unpin(7);
+        assert!(m.evict(7).is_some());
+    }
+
+    #[test]
+    fn swap_vs_wait_threshold() {
+        // Waiting a little: keep waiting. Waiting much longer than the
+        // swap round-trip: displace.
+        assert!(!ResidencyManager::swap_vs_wait(10.0, 5.0));
+        assert!(!ResidencyManager::swap_vs_wait(10.0, 20.0)); // boundary is strict
+        assert!(ResidencyManager::swap_vs_wait(10.0, 20.1));
+    }
+
+    #[test]
+    fn stats_absorb_accumulates() {
+        let mut a = ResidencyStats {
+            swaps_in: 1,
+            swaps_out: 2,
+            bytes_in: 10,
+            bytes_out: 20,
+            stall_seconds: 0.5,
+            overlapped_seconds: 1.5,
+        };
+        let b = a;
+        a.absorb(&b);
+        assert_eq!(a.swaps_in, 2);
+        assert_eq!(a.swaps_out, 4);
+        assert_eq!(a.bytes_out, 40);
+        assert!((a.stall_seconds - 1.0).abs() < 1e-12);
+        assert!(a.any());
+        assert!(!ResidencyStats::default().any());
+    }
+
+    #[test]
+    fn overcommit_gate_uses_minimal_footprints() {
+        let cluster = ClusterSpec::a100_node(2);
+        let registry = Registry::paper();
+        let mut graph = AppGraph::default();
+        let a = graph.add_node("chatglm3-6b", "a", 256);
+        let b = graph.add_node("mistral-7b-instruct", "b", 256);
+        let c = graph.add_node("vicuna-13b-v1.5", "c", 256);
+        // Two tp=1 models fill the node; a third ready model overcommits.
+        let stage = Stage { entries: vec![entry(a, 1, 1), entry(b, 1, 1)] };
+        assert!(!overcommitted(&stage, &[], &cluster, &registry, &graph));
+        assert!(overcommitted(&stage, &[entry(c, 1, 1)], &cluster, &registry, &graph));
+        // On a full 8-GPU node everything coexists at minimal plans.
+        let big = ClusterSpec::a100_node(8);
+        assert!(!overcommitted(&stage, &[entry(c, 1, 1)], &big, &registry, &graph));
+    }
+}

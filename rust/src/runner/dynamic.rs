@@ -24,12 +24,18 @@ pub struct DynamicScheduler {
     next_idx: usize,
     /// Most recent plan each node ran with (for keep-running / fallback).
     last_plans: HashMap<usize, ExecPlan>,
+    /// Accept planned *packed* stages whose plans sum past the cluster
+    /// (the runner lowers them through [`crate::residency`]); off by
+    /// default, mirroring [`crate::runner::RunOpts::oversubscribe`].
+    /// Without it, an oversized planned stage is silently skipped — the
+    /// planner only emits one when the same flag was set.
+    pub oversubscribe: bool,
 }
 
 impl DynamicScheduler {
     /// Wrap a planned app (or nothing, for pure fallback scheduling).
     pub fn new(planned: Option<PlannedApp>) -> Self {
-        DynamicScheduler { planned, next_idx: 0, last_plans: HashMap::new() }
+        DynamicScheduler { planned, next_idx: 0, last_plans: HashMap::new(), oversubscribe: false }
     }
 
     /// Stages consumed so far (diagnostics). Resets when a replan is
@@ -109,7 +115,9 @@ impl DynamicScheduler {
                 }
             }
             // §4.3 keep-running rule: unfinished leftovers of the previous
-            // stage join with their old plans if GPUs remain.
+            // stage join with their old plans if GPUs remain. (A packed
+            // stage never grows this way — its lowering already
+            // time-slices everything the budget can't hold.)
             if let Some(prev) = prev_stage {
                 for e in &prev.entries {
                     if true_state.finished_nodes.contains(&e.node) {
@@ -128,7 +136,8 @@ impl DynamicScheduler {
             stage
                 .entries
                 .retain(|e| graph.is_ready(e.node, &true_state.finished_nodes, &nodes));
-            if !stage.entries.is_empty() && stage.n_gpus() <= cluster.n_gpus {
+            let fits = stage.n_gpus() <= cluster.n_gpus;
+            if !stage.entries.is_empty() && (fits || self.oversubscribe) {
                 return Some(stage);
             }
         }
@@ -217,6 +226,24 @@ mod tests {
         // so leftovers are dropped in plan order until they fit.
         assert!(s2.nodes().contains(&2));
         assert!(s2.n_gpus() <= 8);
+    }
+
+    #[test]
+    fn packed_stage_needs_the_oversubscribe_switch() {
+        // A planned stage summing past the cluster (4+4+4 = 12 GPUs on 8)
+        // is skipped by default — and accepted verbatim with the switch,
+        // so the runner's residency lowering gets to time-slice it.
+        let (g, w, c, reg) = ctx();
+        let st = ExecState::init(&w, |_, r| r.true_output_len);
+        let packed = vec![vec![(0, 4, 1), (1, 4, 1), (2, 4, 1)]];
+        let mut d = DynamicScheduler::new(Some(planned(packed.clone())));
+        let s = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert!(s.n_gpus() <= 8, "without the switch the fallback takes over");
+        let mut d = DynamicScheduler::new(Some(planned(packed)));
+        d.oversubscribe = true;
+        let s = d.next_stage(&g, &st, None, &c, &reg, None).unwrap();
+        assert_eq!(s.entries.len(), 3);
+        assert_eq!(s.n_gpus(), 12, "packed stage passes through untouched");
     }
 
     #[test]

@@ -77,6 +77,16 @@ pub fn run_traffic_with_backend(
              (arrival timestamps live on the virtual clock)"
         ));
     }
+    if opts.oversubscribe {
+        // Oversubscribed placement targets the batch (offline) loop: a
+        // packed stage time-slices the whole cluster between sub-stages,
+        // which would head-of-line-block latency-sensitive arrivals for a
+        // full weight round-trip. Keep the serving path strict.
+        return Err(anyhow!(
+            "--oversubscribe applies to batch runs only; traffic runs \
+             require every stage to fit the cluster"
+        ));
+    }
     debug_assert!(cfg.admit_quantum >= 1, "TrafficSpec::build resolves the quantum");
 
     // ---- planning phase: price the placement over a sampled arrival
@@ -303,6 +313,7 @@ pub fn run_traffic_with_backend(
             load_time: reload.load_time,
             busy_gpu_seconds: busy,
             events: EventSummary::from_events(&events),
+            swap_stall: 0.0,
         });
         if let Some(os) = online_sampler.as_mut() {
             for e in &stage.entries {
@@ -357,6 +368,7 @@ pub fn run_traffic_with_backend(
         backend: backend.name().to_string(),
         admit_policy: opts.admit.name(),
         admission: true_state.admit_stats,
+        residency: crate::residency::ResidencyStats::default(),
         extra_time,
         search_time,
         planner: planner_stats,
@@ -420,6 +432,19 @@ mod tests {
         assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
         let (ta, tb) = (a.traffic.unwrap(), b.traffic.unwrap());
         assert_eq!(ta, tb, "whole serving report is bit-identical");
+    }
+
+    #[test]
+    fn oversubscribe_is_rejected_for_traffic() {
+        let cluster = ClusterSpec::a100_node(8);
+        let ts = small_traffic();
+        let mut p = policy::create("ours").unwrap();
+        let ctx = RunContext::new(&cluster, 7);
+        let opts = RunOpts { oversubscribe: true, ..Default::default() };
+        let mut backend = SimBackend::new(&ctx.hw, ctx.cluster.mem_bytes);
+        let err = run_traffic_with_backend(p.as_mut(), &ts, &ctx, &opts, &mut backend)
+            .unwrap_err();
+        assert!(err.to_string().contains("batch runs only"), "{err}");
     }
 
     #[test]

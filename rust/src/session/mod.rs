@@ -70,6 +70,8 @@ pub struct SamuLlmBuilder {
     replan_threshold: f64,
     online_weight: f64,
     admit: String,
+    oversubscribe: bool,
+    h2d_bw: Option<f64>,
 }
 
 impl SamuLlm {
@@ -91,6 +93,8 @@ impl SamuLlm {
             replan_threshold: online::DEFAULT_REPLAN_THRESHOLD,
             online_weight: online::DEFAULT_OBS_WEIGHT,
             admit: "fcfs".to_string(),
+            oversubscribe: false,
+            h2d_bw: None,
         }
     }
 
@@ -315,6 +319,26 @@ impl SamuLlmBuilder {
         self
     }
 
+    /// Let plans oversubscribe the cluster (default off — bit-identical
+    /// to the strict path): stages whose aggregate weight footprint
+    /// exceeds HBM are lowered by the residency subsystem
+    /// ([`crate::residency`]) into sub-stages that time-slice the GPUs,
+    /// paying modeled weight-swap latency over the host link. Batch runs
+    /// only; traffic runs reject it.
+    pub fn oversubscribe(mut self, on: bool) -> Self {
+        self.oversubscribe = on;
+        self
+    }
+
+    /// Override the cluster's host-to-device copy bandwidth in bytes/s
+    /// for swap-cost pricing (default: the cluster spec's own `h2d_bw`;
+    /// the d2h side scales by the spec's d2h/h2d ratio). Must be positive
+    /// — validated at `build()`.
+    pub fn h2d_bw(mut self, bytes_per_sec: f64) -> Self {
+        self.h2d_bw = Some(bytes_per_sec);
+        self
+    }
+
     /// Validate the configuration and assemble the session wiring. For
     /// the `pjrt` backend, the artifacts contract is checked here so
     /// misconfiguration fails before any (expensive) planning starts.
@@ -322,6 +346,11 @@ impl SamuLlmBuilder {
         let policy = policy::canonical(&self.policy)?;
         let backend = exec::canonical(&self.backend)?;
         let admit = AdmitPolicy::parse(&self.admit)?;
+        if let Some(bw) = self.h2d_bw {
+            if !bw.is_finite() || bw <= 0.0 {
+                return Err(anyhow!("h2d bandwidth must be positive, got {bw}"));
+            }
+        }
         let artifacts = self.artifacts.unwrap_or_else(crate::runtime::default_artifacts_dir);
         if backend == "pjrt" && !artifacts.join("model_meta.json").exists() {
             return Err(anyhow!(
@@ -356,6 +385,8 @@ impl SamuLlmBuilder {
             replan_threshold: self.replan_threshold,
             online_weight: self.online_weight,
             admit,
+            oversubscribe: self.oversubscribe,
+            h2d_bw: self.h2d_bw,
         };
         Ok(SamuLlm {
             ctx: RunContext::new(&cluster, self.seed),
@@ -581,6 +612,38 @@ mod tests {
                 "{admit}"
             );
         }
+    }
+
+    #[test]
+    fn builder_validates_h2d_bandwidth() {
+        assert!(SamuLlm::builder().h2d_bw(0.0).build().is_err());
+        assert!(SamuLlm::builder().h2d_bw(-1.0).build().is_err());
+        assert!(SamuLlm::builder().h2d_bw(25.0e9).build().is_ok());
+    }
+
+    #[test]
+    fn oversubscribe_on_a_fitting_workload_is_bit_identical() {
+        // The switch is consulted only when a stage overcommits HBM; a
+        // workload that fits must stay untouched, counters all zero.
+        let spec = AppSpec::ensembling(60, 128);
+        let a = SamuLlm::builder().gpus(8).seed(3).build().unwrap().run(&spec).unwrap();
+        let b = SamuLlm::builder()
+            .gpus(8)
+            .seed(3)
+            .oversubscribe(true)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        assert_eq!(
+            a.estimated_inference_time.to_bits(),
+            b.estimated_inference_time.to_bits()
+        );
+        assert_eq!(a.n_stages, b.n_stages);
+        assert_eq!(b.residency.swaps_in, 0);
+        assert_eq!(b.residency.swaps_out, 0);
+        assert!(a.to_json().contains("\"residency\":{"), "{}", a.to_json());
     }
 
     #[test]
