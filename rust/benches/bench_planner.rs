@@ -2,10 +2,11 @@
 //! paper applications, sequential vs parallel + memoized evaluation.
 //!
 //! Emits `BENCH_planner.json` (schema documented in
-//! `docs/PLANNER_PERF.md`): per app the median sequential and
-//! parallel+cached search times, the speedup, the cache counters, and a
-//! plan-parity bit asserting the two searches committed identical stages
-//! and `est_total`. Run with:
+//! `docs/PLANNER_PERF.md` and `docs/SIMULATOR_PERF.md`): per app the
+//! median sequential and parallel+cached search times, the speedup, the
+//! cache counters, a plan-parity bit asserting the two searches committed
+//! identical stages and `est_total`, and a time-boxed arm (quarter of the
+//! sequential median) with its `budget_exhausted` flag. Run with:
 //!
 //! ```text
 //! cargo bench --bench bench_planner
@@ -79,6 +80,15 @@ fn main() {
         let identical = a.stages == b.stages && a.est_total.to_bits() == b.est_total.to_bits();
         assert!(identical, "{name}: parallel+cached plan diverged from sequential");
 
+        // Anytime arm: time-box a cold sequential search to a quarter of
+        // the unbudgeted median and report whether it had to stop early
+        // (best-so-far plans are still complete and executable).
+        let mut boxed = planner(&cost, &cluster);
+        boxed.threads = 1;
+        boxed.search_budget = Some(seq_median / 4.0);
+        let budgeted = boxed.plan(&s.graph, &s.workloads, false, 7);
+        assert!(!budgeted.stages.is_empty(), "{name}: budgeted search returned no plan");
+
         rows.push(Json::obj(vec![
             ("app", Json::Str(name.to_string())),
             ("sequential_s", Json::Num(seq_median)),
@@ -89,6 +99,9 @@ fn main() {
             ("identical_plans", Json::Bool(identical)),
             ("est_total_s", Json::Num(a.est_total)),
             ("n_stages", Json::Num(a.stages.len() as f64)),
+            ("budget_s", Json::Num(seq_median / 4.0)),
+            ("budgeted_search_s", Json::Num(budgeted.search_time)),
+            ("budget_exhausted", Json::Bool(budgeted.eval.budget_exhausted)),
         ]));
     }
     g.finish();

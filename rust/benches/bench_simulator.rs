@@ -1,6 +1,18 @@
 //! Engine-simulator throughput — the planner's inner loop and therefore
-//! the dominant term of "extra time". Compares the exact per-iteration
-//! path with the fast-forward event-jump path.
+//! the dominant term of "extra time". Compares per-token stepping with
+//! the aggregated fast-step path (bit-identical results, fewer loop
+//! iterations) and reports simulated tokens/sec as the trajectory metric.
+//!
+//! Emits `BENCH_simulator.json` (schema documented in
+//! `docs/SIMULATOR_PERF.md`): per request-set size the median fast-step
+//! and per-token sim times, `sim_tokens_per_sec` for the fast path, and
+//! `fast_step_ratio` (per-token / fast-step — the speedup). The largest
+//! set runs the fast path only; per-token stepping there is what the
+//! fast path exists to avoid. Run with:
+//!
+//! ```text
+//! cargo bench --bench bench_simulator
+//! ```
 
 use samullm::cluster::ClusterSpec;
 use samullm::costmodel::{CostModel, HardwareModel};
@@ -8,6 +20,7 @@ use samullm::engine::sim::{EngineConfig, EngineSim};
 use samullm::engine::EngineRequest;
 use samullm::models::Registry;
 use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
 use samullm::util::rng::Rng;
 
 fn requests(n: usize, seed: u64) -> Vec<EngineRequest> {
@@ -37,31 +50,70 @@ fn main() {
     let cm = CostModel::calibrated(&cluster, 1);
 
     let mut g = BenchGroup::new("simulator");
-    if smoke {
-        g.sample_size(3);
-    }
-    let sizes: &[usize] = if smoke { &[200] } else { &[1000, 10000] };
-    let exact_at = sizes[0];
+    g.sample_size(if smoke { 3 } else { 5 });
+    // The fast path makes a 10x larger set than the old per-token ceiling
+    // (10k) cheap enough to bench; per-token stepping stops at 10k.
+    let sizes: &[usize] = if smoke { &[200] } else { &[1000, 10_000, 100_000] };
+    let per_token_max = if smoke { 200 } else { 10_000 };
+    let mut rows: Vec<Json> = vec![];
     for &n in sizes {
         let reqs = requests(n, 3);
-        g.bench(&format!("fast_forward_{n}"), || {
-            let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
-            let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
-            sim.run(None)
-        });
-        if n == exact_at {
-            g.bench(&format!("exact_{n}"), || {
-                let mut cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
-                cfg.fast_forward = false;
+        let tokens: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        let fast_median = g
+            .bench(&format!("fast_step_{n}"), || {
+                let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
                 let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
                 sim.run(None)
-            });
-        }
+            })
+            .median;
+        let per_token_median = (n <= per_token_max).then(|| {
+            g.bench(&format!("per_token_{n}"), || {
+                let mut cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
+                cfg.fast_step = false;
+                let mut sim = EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
+                sim.run(None)
+            })
+            .median
+        });
         g.bench(&format!("linear_model_{n}"), || {
             let cfg = EngineConfig::standard(&spec, 1, cluster.mem_bytes).unwrap();
             let mut sim = EngineSim::new(&spec, 1, &cm.iter_model, cfg, reqs.clone(), 0.0, 0);
             sim.run(None)
         });
+        rows.push(Json::obj(vec![
+            ("n_requests", Json::Num(n as f64)),
+            ("tokens", Json::Num(tokens as f64)),
+            ("fast_step_s", Json::Num(fast_median)),
+            (
+                "per_token_s",
+                match per_token_median {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "sim_tokens_per_sec",
+                Json::Num(tokens as f64 / fast_median.max(1e-12)),
+            ),
+            (
+                "fast_step_ratio",
+                match per_token_median {
+                    Some(t) => Json::Num(t / fast_median.max(1e-12)),
+                    None => Json::Null,
+                },
+            ),
+        ]));
     }
     g.finish();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("simulator".to_string())),
+        ("model", Json::Str(spec.name.clone())),
+        ("smoke", Json::Bool(smoke)),
+        ("sets", Json::Arr(rows)),
+    ])
+    .to_string();
+    std::fs::write("BENCH_simulator.json", format!("{doc}\n"))
+        .expect("write BENCH_simulator.json");
+    println!("wrote BENCH_simulator.json");
 }

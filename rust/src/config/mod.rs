@@ -71,6 +71,15 @@ pub struct ExperimentConfig {
     /// Host-to-device bandwidth override in bytes/s for swap-cost pricing
     /// (`None` = the cluster spec's own link).
     pub h2d_bw: Option<f64>,
+    /// Aggregated decode stepping in the simulator (default on). Exact —
+    /// turning it off changes simulation wall-clock only, never results
+    /// (see [`crate::engine::sim::EngineConfig::fast_step`]).
+    pub fast_step: bool,
+    /// Wall-clock budget in seconds for each planner search (`None` =
+    /// unbudgeted). The search is anytime: on expiry it keeps the best
+    /// complete plan found so far and flags
+    /// [`crate::planner::EvalStats::budget_exhausted`].
+    pub search_budget: Option<f64>,
 }
 
 impl ExperimentConfig {
@@ -122,6 +131,14 @@ impl ExperimentConfig {
                 "h2d_bw",
                 match self.h2d_bw {
                     Some(bw) => Json::Num(bw),
+                    None => Json::Null,
+                },
+            ),
+            ("fast_step", Json::Bool(self.fast_step)),
+            (
+                "search_budget",
+                match self.search_budget {
+                    Some(b) => Json::Num(b),
                     None => Json::Null,
                 },
             ),
@@ -202,6 +219,8 @@ impl ExperimentConfig {
                 .and_then(|x| x.as_bool())
                 .unwrap_or(false),
             h2d_bw: v.get("h2d_bw").and_then(|x| x.as_f64()),
+            fast_step: v.get("fast_step").and_then(|x| x.as_bool()).unwrap_or(true),
+            search_budget: v.get("search_budget").and_then(|x| x.as_f64()),
         })
     }
 }
@@ -231,6 +250,8 @@ mod tests {
             admit: "multi-bin:4".to_string(),
             oversubscribe: true,
             h2d_bw: Some(20.0e9),
+            fast_step: false,
+            search_budget: Some(0.5),
         };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.app, c.app);
@@ -246,6 +267,8 @@ mod tests {
         assert_eq!(back.admit, "multi-bin:4");
         assert!(back.oversubscribe);
         assert_eq!(back.h2d_bw, Some(20.0e9));
+        assert!(!back.fast_step);
+        assert_eq!(back.search_budget, Some(0.5));
     }
 
     #[test]
@@ -270,6 +293,9 @@ mod tests {
         // Residency defaults off with the cluster's own host link.
         assert!(!c.oversubscribe);
         assert!(c.h2d_bw.is_none());
+        // Fast stepping defaults on; planner searches are unbudgeted.
+        assert!(c.fast_step);
+        assert!(c.search_budget.is_none());
     }
 
     #[test]
@@ -319,6 +345,8 @@ mod tests {
                 admit: "fcfs".to_string(),
                 oversubscribe: false,
                 h2d_bw: None,
+                fast_step: true,
+                search_budget: None,
             };
             let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
             assert_eq!(back.app, Some(app));
@@ -396,6 +424,8 @@ mod tests {
             admit: "fcfs".to_string(),
             oversubscribe: false,
             h2d_bw: None,
+            fast_step: true,
+            search_budget: None,
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();
@@ -446,6 +476,8 @@ mod tests {
             admit: "fcfs".to_string(),
             oversubscribe: false,
             h2d_bw: None,
+            fast_step: true,
+            search_budget: None,
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();

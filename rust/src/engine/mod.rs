@@ -24,7 +24,7 @@ pub use sim::EngineSim;
 
 /// A request as fed to the engine: lengths are already resolved (the
 /// planner resolves by sampling, the runner by ground truth).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EngineRequest {
     /// Request id, unique within its node.
     pub id: u64,

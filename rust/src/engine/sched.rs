@@ -9,9 +9,9 @@
 //!
 //! * [`crate::engine::sim::OracleStep`] **prices** iterations with an
 //!   [`crate::costmodel::IterLatency`] oracle in virtual time (supports
-//!   the fast-forward decode-span approximation) — this is the classic
-//!   [`crate::engine::EngineSim`], bit-identical to the pre-extraction
-//!   simulator;
+//!   the exact aggregated fast-step path via [`StepExec::decode_tick`])
+//!   — this is the classic [`crate::engine::EngineSim`], bit-identical
+//!   to the pre-extraction simulator;
 //! * [`crate::exec::pjrt::PjrtStep`] **executes** iterations on the real
 //!   PJRT runtime ([`crate::runtime::TinyGpt`]) and reports measured
 //!   wall-clock durations, so the same scheduler drives real serving.
@@ -208,10 +208,16 @@ pub struct EngineConfig {
     pub block_tokens: u32,
     /// Blocks kept free as admission watermark.
     pub watermark_blocks: u64,
-    /// Enable event-jump acceleration for uniform decode runs (only
-    /// honoured when the executor can price a span — see
-    /// [`StepExec::decode_span`]).
-    pub fast_forward: bool,
+    /// Enable aggregated decode stepping (default on): while batch
+    /// composition is provably stable — no completion due, no admission
+    /// possible, no KV-block exhaustion within the window — the core
+    /// advances over whole decode windows with O(1) bookkeeping per
+    /// iteration, pricing each step *exactly* via
+    /// [`StepExec::decode_tick`]. Results are bit-identical to per-token
+    /// stepping; only wall-clock changes. Executors that must
+    /// materialise every token (real hardware) decline the tick and run
+    /// per-token regardless.
+    pub fast_step: bool,
     /// Per-iteration multiplicative jitter σ (ground-truth realism);
     /// `None` for the planner's deterministic estimates.
     pub noise_sigma: Option<f64>,
@@ -247,7 +253,7 @@ impl EngineConfig {
             max_batch_tokens: 4096,
             block_tokens: 16,
             watermark_blocks: 8,
-            fast_forward: true,
+            fast_step: true,
             noise_sigma: None,
             kv_bytes_budget: kv_budget,
             admit: AdmitPolicy::Fcfs,
@@ -305,7 +311,8 @@ pub struct SimOutcome {
     pub clock: f64,
     /// Time spent actually executing iterations (vs waiting for inputs).
     pub busy_time: f64,
-    /// Decode iterations executed (fast-forwarded runs count each step).
+    /// Decode iterations executed (aggregated fast-step windows count
+    /// every covered iteration).
     pub decode_iterations: u64,
     /// Prefill iterations executed.
     pub prefill_iterations: u64,
@@ -365,11 +372,14 @@ pub enum EventKind {
         /// Iteration latency in seconds (jitter included).
         dur: f64,
     },
-    /// One decode iteration — or a fast-forwarded uniform run of `iters`.
+    /// One decode iteration. The aggregated fast-step path emits one
+    /// event per covered iteration, so streams agree bit-for-bit with
+    /// per-token stepping.
     Decode {
         /// Running requests in the batch.
         batch: usize,
-        /// Iterations covered by this event (1 unless fast-forwarded).
+        /// Iterations covered by this event (always 1 from the
+        /// scheduling core; retained for consumers that fold runs).
         iters: u32,
         /// Total KV context across the batch before the iteration(s).
         total_ctx: u64,
@@ -419,16 +429,16 @@ pub trait StepExec {
     /// iteration latency in seconds, before jitter.
     fn decode(&mut self, running: &[StepReq]) -> f64;
 
-    /// Price a uniform run of `n` decode iterations at once (fast-forward
-    /// acceleration, midpoint-context pricing). Return `None` when every
-    /// iteration must actually execute (real hardware); the core then
-    /// falls back to single-iteration decodes.
-    fn decode_span(&mut self, running: &[StepReq], n: u32) -> Option<f64>;
-
-    /// Cheap single-iteration latency estimate at the current context,
-    /// used only to bound fast-forward jumps against a deadline. Never
-    /// executes anything.
-    fn estimate_decode(&self, running: &[StepReq]) -> f64;
+    /// Price one decode iteration at an explicit batch composition —
+    /// `batch` running requests whose KV contexts sum to `total_ctx`,
+    /// the longest being `max_ctx` — without materialising per-request
+    /// views. The aggregated fast-step path calls this once per covered
+    /// iteration with O(1) bookkeeping; implementations must return
+    /// exactly what [`StepExec::decode`] would return for the same
+    /// composition (the core depends on that for bit-identity). Return
+    /// `None` when every iteration must actually execute (real
+    /// hardware); the core then falls back to per-token stepping.
+    fn decode_tick(&mut self, batch: usize, total_ctx: u64, max_ctx: u32) -> Option<f64>;
 
     /// The first error the executor encountered, if any (real executors
     /// surface device failures here; pricing executors never fail).
@@ -454,7 +464,8 @@ pub struct SchedCore<X: StepExec> {
     admit_counter: u64,
     fcfs_counter: u64,
     noise: Option<Rng>,
-    /// Active run() deadline — bounds fast-forward jumps so a stage replay
+    /// Active run() deadline — breaks aggregated decode windows at the
+    /// same clock a per-token replay would stop at, so a stage replay
     /// never overshoots its stage-end boundary.
     deadline: Option<f64>,
     events: Option<Vec<EngineEvent>>,
@@ -893,8 +904,8 @@ impl<X: StepExec> SchedCore<X> {
             return false;
         }
 
-        if self.cfg.fast_forward {
-            self.decode_run()
+        if self.cfg.fast_step {
+            self.decode_fast()
         } else {
             self.decode_once()
         }
@@ -958,13 +969,40 @@ impl<X: StepExec> SchedCore<X> {
         true
     }
 
-    /// Fast path: jump over `n` uniform decode iterations where `n` is
-    /// bounded by the next completion, the next admission-ready prompt,
-    /// and the block budget. The executor prices the run at its midpoint
-    /// context; executors that must materialise every token decline the
-    /// span and the core falls back to exact single iterations.
-    fn decode_run(&mut self) -> bool {
+    /// Aggregated decode stepping — the exact fast path. While batch
+    /// composition is provably stable the clock advances over a window
+    /// of up to `k` iterations with O(1) bookkeeping per iteration:
+    ///
+    /// * `k ≤ min_remaining` — no request completes strictly inside the
+    ///   window, so seats, batch order and `running` are all fixed;
+    /// * `k ≤ k_blocks` — the cumulative KV-block need of `k` growth
+    ///   steps fits the free pool, so preemption can never fire inside
+    ///   the window (`needed(k)` is monotone in `k`; binary-searched);
+    /// * the loop breaks when the deadline is reached or a waiting
+    ///   prompt crosses its ready time while seats are free — exactly
+    ///   the clocks at which a per-token replay would stop decoding or
+    ///   attempt an admission that could succeed.
+    ///
+    /// Each covered iteration is priced at its *exact* context via
+    /// [`StepExec::decode_tick`] (`total_ctx` grows by `batch`, `max_ctx`
+    /// by 1 per iteration), drawn through the same jitter stream, and
+    /// accumulated onto the clock in the same order — so outcomes,
+    /// events, completions and traces are bit-identical to per-token
+    /// stepping. Per-slot context/progress/blocks are settled once at
+    /// the window end (block growth telescopes to a `div_ceil`
+    /// difference). Degenerate windows — an admissible prompt already
+    /// waiting, immediate block pressure, a tick-declining executor, or
+    /// a window too short to pay for its setup — fall back to
+    /// [`SchedCore::decode_once`].
+    fn decode_fast(&mut self) -> bool {
         let batch = self.running.len();
+        let seats_free = batch < self.cfg.max_num_seqs;
+        // An admissible prompt may be waiting right now (this step's
+        // admit attempt failed only on block/token pressure): stay
+        // per-token so every iteration re-attempts admission.
+        if seats_free && self.next_ready().is_some_and(|t| t <= self.clock) {
+            return self.decode_once();
+        }
         let min_remaining = self
             .running
             .iter()
@@ -972,67 +1010,75 @@ impl<X: StepExec> SchedCore<X> {
             .min()
             .unwrap_or(0)
             .max(1);
-        // Admission is impossible while the running set is full, no matter
-        // how many prompts are ready — only a completion (already bounded
-        // by `min_remaining`) can open a slot.
-        let until_ready = if self.running.len() >= self.cfg.max_num_seqs {
-            u32::MAX
-        } else {
-            match self.next_ready() {
-                Some(t) if t > self.clock => u32::MAX,
-                Some(_) => 1, // a prompt is admissible now -> go exact
-                None => u32::MAX,
-            }
-        };
-        let spare = self.free_blocks.saturating_sub(self.cfg.watermark_blocks);
-        let until_oom = if spare == 0 {
-            1
-        } else {
-            ((spare * self.cfg.block_tokens as u64) / batch as u64).max(1).min(u32::MAX as u64)
-                as u32
-        };
-        let mut n = min_remaining.min(until_oom).min(until_ready).max(1);
-        // Deadline bound: estimate the per-iteration cost at the current
-        // context and cap the jump so the clock lands at most one
-        // iteration past the deadline (stage replays depend on this).
-        if let Some(d) = self.deadline {
-            fill_step_reqs(&mut self.scratch_run, &self.slots, &self.running);
-            let t_est = self.exec.estimate_decode(&self.scratch_run).max(1e-9);
-            let room = ((d - self.clock) / t_est).ceil();
-            if room < n as f64 {
-                n = (room.max(1.0)) as u32;
-            }
-        }
-        let n = n;
-        if n <= 2 {
-            return self.decode_once();
-        }
-
-        fill_step_reqs(&mut self.scratch_run, &self.slots, &self.running);
-        let Some(t_span) = self.exec.decode_span(&self.scratch_run, n) else {
-            return self.decode_once();
-        };
-        let t = self.jitter(t_span);
-        self.clock += t;
-        self.outcome.busy_time += t;
-        self.outcome.decode_iterations += n as u64;
-        self.outcome.tokens_generated += n as u64 * batch as u64;
-        if self.events.is_some() {
-            let total_ctx: u64 = self.scratch_run.iter().map(|r| r.ctx as u64).sum();
-            let max_ctx = self.scratch_run.iter().map(|r| r.ctx).max().unwrap_or(0);
-            self.emit(EventKind::Decode { batch, iters: n, total_ctx, max_ctx, dur: t });
-        }
-
+        // Largest k whose cumulative block growth fits the free pool
+        // (decode may drain free blocks to zero — the watermark gates
+        // admission only). needed(k) is monotone, so binary search.
         let bt = self.cfg.block_tokens as u64;
+        let needed = |k: u64| -> u64 {
+            self.running
+                .iter()
+                .map(|&i| {
+                    let c = self.slots[i].ctx as u64;
+                    (c + k).div_ceil(bt) - c.div_ceil(bt)
+                })
+                .sum()
+        };
+        let (mut lo, mut hi) = (0u64, min_remaining as u64);
+        while lo < hi {
+            let mid = lo + (hi - lo).div_ceil(2);
+            if needed(mid) <= self.free_blocks {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let k = lo as u32;
+        if k <= 2 {
+            return self.decode_once();
+        }
+
+        let total_ctx0: u64 = self.running.iter().map(|&i| self.slots[i].ctx as u64).sum();
+        let max_ctx0: u32 = self.running.iter().map(|&i| self.slots[i].ctx).max().unwrap_or(0);
+        let mut done = 0u32;
+        while done < k {
+            if let Some(d) = self.deadline {
+                if self.clock >= d {
+                    break;
+                }
+            }
+            if done > 0 && seats_free && self.next_ready().is_some_and(|t| t <= self.clock) {
+                break; // a waiting prompt crossed its ready time mid-window
+            }
+            let total_ctx = total_ctx0 + done as u64 * batch as u64;
+            let max_ctx = max_ctx0 + done;
+            let Some(t) = self.exec.decode_tick(batch, total_ctx, max_ctx) else {
+                break; // executor materialises every token (real hardware)
+            };
+            let t = self.jitter(t);
+            self.clock += t;
+            self.outcome.busy_time += t;
+            self.emit(EventKind::Decode { batch, iters: 1, total_ctx, max_ctx, dur: t });
+            self.record_trace();
+            done += 1;
+        }
+        if done == 0 {
+            return self.decode_once(); // tick declined on the first iteration
+        }
+
+        // Settle the window: per-slot context/progress/blocks and the
+        // completion scan, mirroring decode_once's end-of-iteration
+        // bookkeeping (completions can only land on the last iteration).
+        self.outcome.decode_iterations += done as u64;
+        self.outcome.tokens_generated += done as u64 * batch as u64;
         let mut blocks_used = 0u64;
         let mut j = 0;
         while j < self.running.len() {
             let idx = self.running[j];
             let slot = &mut self.slots[idx];
-            let old_ctx = slot.ctx;
-            slot.ctx += n;
-            slot.req.generated += n;
-            let new_blocks = (slot.ctx as u64).div_ceil(bt) - (old_ctx as u64).div_ceil(bt);
+            let old_ctx = slot.ctx as u64;
+            slot.ctx += done;
+            slot.req.generated += done;
+            let new_blocks = (old_ctx + done as u64).div_ceil(bt) - old_ctx.div_ceil(bt);
             blocks_used += new_blocks;
             slot.blocks += new_blocks;
             if slot.req.is_done() {
@@ -1042,8 +1088,15 @@ impl<X: StepExec> SchedCore<X> {
                 j += 1;
             }
         }
-        self.free_blocks = self.free_blocks.saturating_sub(blocks_used);
-        self.record_trace();
+        debug_assert!(blocks_used <= self.free_blocks, "window overran its block bound");
+        self.free_blocks -= blocks_used;
+        if let Some(tr) = &mut self.iter_trace {
+            // The last covered iteration's trace point must reflect the
+            // post-completion running count, as per-token stepping does.
+            if let Some(last) = tr.last_mut() {
+                last.1 = self.running.len();
+            }
+        }
         true
     }
 
@@ -1362,6 +1415,119 @@ mod tests {
             let (out, _) = sim_with(cfg, reqs.clone(), false);
             assert_eq!(out.finished, reqs.len(), "{admit:?} lost requests");
             assert_eq!(out.tokens_generated, want_tokens, "{admit:?} lost tokens");
+        }
+    }
+
+    #[test]
+    fn fast_step_is_bit_identical_across_policies() {
+        // Aggregated stepping must be indistinguishable from per-token
+        // stepping — same outcome bits, same event stream — under every
+        // admission policy, with staggered ready times and an in-engine
+        // chain keeping the waiting heap busy mid-run.
+        let mut reqs: Vec<EngineRequest> = (0..40)
+            .map(|i| EngineRequest::fresh(i, 10 + (i % 30) as u32, 8 + (i * 17 % 200) as u32))
+            .collect();
+        for (i, r) in reqs.iter_mut().enumerate() {
+            if i % 3 == 1 {
+                r.ready_time = 0.5 * i as f64;
+            }
+        }
+        reqs[0].chain_next = Some(5);
+        reqs[5].ready_time = EngineRequest::BLOCKED;
+        for admit in [
+            AdmitPolicy::Fcfs,
+            AdmitPolicy::Spjf,
+            AdmitPolicy::MultiBin { bins: 4 },
+            AdmitPolicy::SkipJoinMlfq { queues: 4, promote_after: 2.0 },
+        ] {
+            let mut cfg = base_cfg();
+            cfg.max_num_seqs = 8;
+            cfg.admit = admit;
+            cfg.fast_step = true;
+            let (fast, fast_ev) = sim_with(cfg.clone(), reqs.clone(), true);
+            cfg.fast_step = false;
+            let (exact, exact_ev) = sim_with(cfg, reqs.clone(), true);
+            assert_eq!(fast.clock.to_bits(), exact.clock.to_bits(), "{admit:?}");
+            assert_eq!(fast.busy_time.to_bits(), exact.busy_time.to_bits(), "{admit:?}");
+            assert_eq!(fast, exact, "{admit:?}");
+            assert_eq!(fast_ev, exact_ev, "{admit:?}");
+        }
+    }
+
+    #[test]
+    fn fast_step_is_bit_identical_under_preemption_pressure() {
+        // A KV budget tight enough to force preemption-by-recompute:
+        // windows must stop short of every block-exhaustion point and
+        // hand over to the per-token path without drifting a bit.
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap();
+        let mut cfg = base_cfg();
+        cfg.kv_bytes_budget = 3000 * spec.kv_bytes_per_token(1);
+        let reqs: Vec<EngineRequest> =
+            (0..16).map(|i| EngineRequest::fresh(i, 100, 800)).collect();
+        cfg.fast_step = true;
+        let (fast, fast_ev) = sim_with(cfg.clone(), reqs.clone(), true);
+        cfg.fast_step = false;
+        let (exact, exact_ev) = sim_with(cfg, reqs, true);
+        assert!(exact.preemptions > 0, "fixture must exercise preemption");
+        assert_eq!(fast.clock.to_bits(), exact.clock.to_bits());
+        assert_eq!(fast, exact);
+        assert_eq!(fast_ev, exact_ev);
+    }
+
+    #[test]
+    fn fast_step_is_bit_identical_under_noise_and_deadline() {
+        // Jitter draws one normal per iteration: the aggregated path
+        // must consume the RNG stream in the same order, and a deadline
+        // must break its windows at the same clock a per-token replay
+        // stops at (including the drained remainder).
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap().clone();
+        let hw = crate::costmodel::HardwareModel::new(ClusterSpec::a100_node(8));
+        let reqs: Vec<EngineRequest> =
+            (0..64).map(|i| EngineRequest::fresh(i, 20, 40 + (i % 300) as u32)).collect();
+        let run = |fast: bool, deadline: Option<f64>| {
+            let mut cfg = base_cfg();
+            cfg.noise_sigma = Some(0.02);
+            cfg.fast_step = fast;
+            let mut sim = crate::engine::EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 7);
+            let out = sim.run(deadline);
+            (out, sim.drain_unfinished())
+        };
+        for deadline in [None, Some(2.5)] {
+            let (fast, fast_rest) = run(true, deadline);
+            let (exact, exact_rest) = run(false, deadline);
+            assert_eq!(fast.clock.to_bits(), exact.clock.to_bits(), "{deadline:?}");
+            assert_eq!(fast, exact, "{deadline:?}");
+            assert_eq!(fast_rest, exact_rest, "{deadline:?}");
+        }
+    }
+
+    #[test]
+    fn fast_step_traces_match_per_token_traces() {
+        // The Fig. 3 iteration trace records one (clock, running) point
+        // per decode iteration; aggregated windows must reproduce it
+        // exactly, including the post-completion count on a window's
+        // last iteration.
+        let reg = Registry::paper();
+        let spec = reg.get("chatglm3-6b").unwrap().clone();
+        let hw = crate::costmodel::HardwareModel::new(ClusterSpec::a100_node(8));
+        let reqs: Vec<EngineRequest> =
+            (0..50).map(|i| EngineRequest::fresh(i, 20, 30 + (i % 60) as u32)).collect();
+        let run = |fast: bool| {
+            let mut cfg = base_cfg();
+            cfg.fast_step = fast;
+            let mut sim = crate::engine::EngineSim::new(&spec, 1, &hw, cfg, reqs.clone(), 0.0, 0);
+            sim.enable_trace();
+            sim.run(None);
+            sim.iter_trace.take().unwrap()
+        };
+        let fast = run(true);
+        let exact = run(false);
+        assert_eq!(fast.len(), exact.len());
+        for (f, e) in fast.iter().zip(&exact) {
+            assert_eq!(f.0.to_bits(), e.0.to_bits());
+            assert_eq!(f.1, e.1);
         }
     }
 

@@ -16,12 +16,14 @@
 //! dependent models) and may form in-engine chains (fused self-loop nodes,
 //! §4.1): completing a request unblocks its `chain_next` successor.
 //!
-//! A `fast_forward` mode jumps over maximal runs of uniform decode
-//! iterations (no admission, no completion, no OOM in between), pricing
-//! the run at its midpoint context — latency is piecewise-linear in
-//! context, so the approximation error is the roofline crossover only.
-//! This is what makes planning cheap (§4.2 "our request scheduling
-//! simulator processes different execution plans in parallel").
+//! A `fast_step` mode aggregates maximal runs of stable-composition
+//! decode iterations (no admission, no completion, no OOM in between)
+//! into one window with O(1) bookkeeping per iteration, pricing every
+//! iteration at its *exact* context through [`StepExec::decode_tick`] —
+//! results are bit-identical to per-token stepping; only wall-clock
+//! changes. This is what makes planning cheap (§4.2 "our request
+//! scheduling simulator processes different execution plans in
+//! parallel").
 //!
 //! The scheduling discipline itself lives in [`crate::engine::sched`] and
 //! is shared with the real PJRT execution path
@@ -75,17 +77,11 @@ impl StepExec for OracleStep<'_> {
         self.decode_at(running)
     }
 
-    fn decode_span(&mut self, running: &[StepReq], n: u32) -> Option<f64> {
-        let batch = running.len();
-        let total_ctx0: u64 = running.iter().map(|r| r.ctx as u64).sum();
-        let mid = n as u64 / 2;
-        let total_ctx_mid = total_ctx0 + mid * batch as u64;
-        let max_ctx_mid = running.iter().map(|r| r.ctx).max().unwrap_or(0) + mid as u32;
-        Some(self.lat.decode(self.spec, self.tp, batch, total_ctx_mid, max_ctx_mid) * n as f64)
-    }
-
-    fn estimate_decode(&self, running: &[StepReq]) -> f64 {
-        self.decode_at(running)
+    fn decode_tick(&mut self, batch: usize, total_ctx: u64, max_ctx: u32) -> Option<f64> {
+        // The same oracle call decode_at() makes, at the same arguments
+        // the core would have materialised — bit-identical by
+        // construction.
+        Some(self.lat.decode(self.spec, self.tp, batch, total_ctx, max_ctx))
     }
 }
 
@@ -159,16 +155,17 @@ mod tests {
     }
 
     #[test]
-    fn fast_forward_matches_exact_closely() {
+    fn fast_step_is_bit_identical_to_exact() {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
         let mut cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
-        cfg.fast_forward = false;
-        let t_exact = sim(&spec, &hw, cfg.clone(), reqs(200, 25, 120)).run(None).clock;
-        cfg.fast_forward = true;
-        let t_fast = sim(&spec, &hw, cfg, reqs(200, 25, 120)).run(None).clock;
-        let err = (t_fast - t_exact).abs() / t_exact;
-        assert!(err < 0.02, "fast {t_fast} vs exact {t_exact} (err {err})");
+        cfg.fast_step = false;
+        let exact = sim(&spec, &hw, cfg.clone(), reqs(200, 25, 120)).run(None);
+        cfg.fast_step = true;
+        let fast = sim(&spec, &hw, cfg, reqs(200, 25, 120)).run(None);
+        assert_eq!(fast.clock.to_bits(), exact.clock.to_bits());
+        assert_eq!(fast.busy_time.to_bits(), exact.busy_time.to_bits());
+        assert_eq!(fast, exact);
     }
 
     #[test]
@@ -255,7 +252,7 @@ mod tests {
         let mut cfg =
             EngineConfig::standard(&spec, 1, ClusterSpec::a100_node(8).mem_bytes).unwrap();
         cfg.kv_bytes_budget = 3000 * spec.kv_bytes_per_token(1);
-        cfg.fast_forward = false;
+        cfg.fast_step = false;
         let mut s = sim(&spec, &hw, cfg, reqs(16, 100, 800));
         let out = s.run(None);
         assert_eq!(out.finished, 16, "all requests must still complete");
@@ -283,7 +280,7 @@ mod tests {
         let (spec, hw) = fixture();
         let mem = ClusterSpec::a100_node(8).mem_bytes;
         let mut cfg = EngineConfig::standard(&spec, 1, mem).unwrap();
-        cfg.fast_forward = false;
+        cfg.fast_step = false;
         let mut s = sim(&spec, &hw, cfg, reqs(50, 20, 60));
         s.enable_trace();
         s.run(None);

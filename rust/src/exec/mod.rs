@@ -75,6 +75,11 @@ pub struct NodeRun<'a> {
     /// Waiting-queue admission order for the node's engines (default
     /// FCFS — the byte-identical historical path).
     pub admit: AdmitPolicy,
+    /// Enable the engines' aggregated decode stepping
+    /// ([`EngineConfig::fast_step`]) — bit-identical results, less
+    /// wall-clock; executors that must materialise every token ignore
+    /// it.
+    pub fast_step: bool,
 }
 
 /// What a backend reports back after executing one [`NodeRun`].
@@ -142,6 +147,7 @@ impl ExecBackend for SimBackend<'_> {
         let cfg = EngineConfig {
             noise_sigma: run.noise_sigma,
             admit: run.admit,
+            fast_step: run.fast_step,
             ..EngineConfig::standard(run.spec, run.plan.tp, self.mem_bytes)
                 .with_context(|| format!("node {} ({})", run.node, run.model))?
         };
@@ -183,7 +189,8 @@ pub struct EventSummary {
     pub admitted: u64,
     /// Prefill iterations executed.
     pub prefills: u64,
-    /// Decode iterations executed (fast-forwarded spans count each step).
+    /// Decode iterations executed (aggregated fast-step windows count
+    /// every covered iteration).
     pub decode_iters: u64,
     /// Preemption-by-recompute events.
     pub preemptions: u64,
@@ -329,6 +336,7 @@ mod tests {
                 noise_seed: 99,
                 collect_events: false,
                 admit: AdmitPolicy::Fcfs,
+                fast_step: true,
             })
             .unwrap();
 
@@ -364,6 +372,7 @@ mod tests {
                     noise_seed: 0,
                     collect_events: collect,
                     admit: AdmitPolicy::Fcfs,
+                    fast_step: true,
                 })
                 .unwrap()
         };
@@ -403,6 +412,7 @@ mod tests {
                 noise_seed: 0,
                 collect_events: false,
                 admit: AdmitPolicy::Fcfs,
+                fast_step: true,
             })
             .unwrap_err();
         let msg = format!("{err:#}");

@@ -301,12 +301,8 @@ impl StepExec for PjrtStep<'_> {
         }
     }
 
-    fn decode_span(&mut self, _running: &[StepReq], _n: u32) -> Option<f64> {
+    fn decode_tick(&mut self, _batch: usize, _total_ctx: u64, _max_ctx: u32) -> Option<f64> {
         None // real hardware materialises every token
-    }
-
-    fn estimate_decode(&self, _running: &[StepReq]) -> f64 {
-        0.0 // never consulted: the backend disables fast-forward
     }
 
     fn take_error(&mut self) -> Option<anyhow::Error> {
@@ -431,7 +427,7 @@ impl ExecBackend for PjrtBackend {
             max_batch_tokens: (b * s) as u64,
             block_tokens: 16,
             watermark_blocks: 0,
-            fast_forward: false,
+            fast_step: run.fast_step, // PjrtStep declines ticks anyway
             noise_sigma: None,
             kv_bytes_budget: blocks_total,
             admit: run.admit,
@@ -498,6 +494,7 @@ mod tests {
             noise_seed: 0,
             collect_events: true,
             admit: crate::engine::sched::AdmitPolicy::Fcfs,
+            fast_step: true,
         }
     }
 

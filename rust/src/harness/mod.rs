@@ -261,8 +261,10 @@ pub fn fig3() -> String {
         .collect();
 
     let run = |lens: Vec<u32>, lat: &dyn IterLatency, label: &str, out: &mut String| -> f64 {
+        // fast_step reproduces the per-iteration trace exactly; stepped
+        // per token anyway so the figure measures the path it describes.
         let mut cfg = EngineConfig::standard(spec, 1, c.mem_bytes).unwrap();
-        cfg.fast_forward = false;
+        cfg.fast_step = false;
         let mut sim = EngineSim::new(spec, 1, lat, cfg, mk(lens), 0.0, 5);
         sim.enable_trace();
         let res = sim.run(None);

@@ -5,7 +5,8 @@
 //!   samullm run    [--app A] [--policy P] [--n-requests N] [--max-out M]
 //!                  [--n-docs D] [--eval-times E] [--gpus G] [--seed S]
 //!                  [--no-preemption] [--known-lengths] [--gantt]
-//!                  [--threads T] [--no-sim-cache]
+//!                  [--threads T] [--no-sim-cache] [--no-fast-step]
+//!                  [--search-budget S]
 //!                  [--online-refinement] [--replan-threshold X]
 //!                  [--online-weight W] [--admit P]
 //!                  [--oversubscribe] [--h2d-bw B]
@@ -164,6 +165,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "known-lengths",
         "threads",
         "no-sim-cache",
+        "no-fast-step",
+        "search-budget",
         "online-refinement",
         "replan-threshold",
         "online-weight",
@@ -190,9 +193,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         .known_lengths(args.has("known-lengths"))
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
+        .fast_step(!args.has("no-fast-step"))
         .online_refinement(args.has("online-refinement"))
         .admit_policy(&args.get_str("admit", "fcfs"))
         .oversubscribe(args.has("oversubscribe"));
+    if let Some(b) = args.get_opt("search-budget")? {
+        builder = builder.search_budget(b);
+    }
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
@@ -226,6 +233,8 @@ fn cmd_workload(args: &Args) -> Result<()> {
         "no-preemption",
         "threads",
         "no-sim-cache",
+        "no-fast-step",
+        "search-budget",
         "online-refinement",
         "replan-threshold",
         "online-weight",
@@ -257,9 +266,13 @@ fn cmd_workload(args: &Args) -> Result<()> {
         .no_preemption(args.has("no-preemption"))
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
+        .fast_step(!args.has("no-fast-step"))
         .online_refinement(args.has("online-refinement"))
         .admit_policy(&args.get_str("admit", "fcfs"))
         .oversubscribe(args.has("oversubscribe"));
+    if let Some(b) = args.get_opt("search-budget")? {
+        builder = builder.search_budget(b);
+    }
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
@@ -298,6 +311,8 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         "no-preemption",
         "threads",
         "no-sim-cache",
+        "no-fast-step",
+        "search-budget",
         "online-refinement",
         "replan-threshold",
         "online-weight",
@@ -332,8 +347,12 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         .no_preemption(args.has("no-preemption"))
         .threads(args.get("threads", 0)?)
         .sim_cache(!args.has("no-sim-cache"))
+        .fast_step(!args.has("no-fast-step"))
         .online_refinement(args.has("online-refinement"))
         .admit_policy(&args.get_str("admit", "fcfs"));
+    if let Some(b) = args.get_opt("search-budget")? {
+        builder = builder.search_budget(b);
+    }
     if let Some(t) = args.get_opt("replan-threshold")? {
         builder = builder.replan_threshold(t);
     }
@@ -363,11 +382,15 @@ fn cmd_config(path: &str) -> Result<()> {
         .known_lengths(cfg.known_output_lengths)
         .threads(cfg.threads)
         .sim_cache(cfg.sim_cache)
+        .fast_step(cfg.fast_step)
         .online_refinement(cfg.online_refinement)
         .replan_threshold(cfg.replan_threshold)
         .online_weight(cfg.online_weight)
         .admit_policy(&cfg.admit)
         .oversubscribe(cfg.oversubscribe);
+    if let Some(b) = cfg.search_budget {
+        builder = builder.search_budget(b);
+    }
     if let Some(bw) = cfg.h2d_bw {
         builder = builder.h2d_bw(bw);
     }
@@ -437,6 +460,10 @@ fn usage() -> String {
          \x20                [--max-out M] [--n-docs D] [--eval-times E] [--gpus G]\n\
          \x20                [--seed S] [--no-preemption] [--known-lengths] [--gantt]\n\
          \x20                [--threads T] [--no-sim-cache]   (planner search speed knobs)\n\
+         \x20                [--no-fast-step]  (per-token decode stepping; bit-identical\n\
+         \x20                                  results, only slower simulation)\n\
+         \x20                [--search-budget SECONDS]        (anytime planner: keep the\n\
+         \x20                                  best plan found within the wall-clock budget)\n\
          \x20                [--online-refinement] [--replan-threshold X] [--online-weight W]\n\
          \x20                                  (runtime length-feedback loop, default off)\n\
          \x20                [--admit fcfs|spjf|multi-bin[:BINS]|skip-join[:QUEUES[:PROMOTE_S]]]\n\

@@ -292,6 +292,7 @@ impl RunReport {
                     ("cache_hits", Json::Num(self.planner.cache_hits as f64)),
                     ("cache_misses", Json::Num(self.planner.cache_misses as f64)),
                     ("dep_dry_runs", Json::Num(self.planner.dep_dry_runs as f64)),
+                    ("budget_exhausted", Json::Bool(self.planner.budget_exhausted)),
                 ]),
             ),
             ("inference_time", Json::Num(self.inference_time)),
@@ -433,6 +434,7 @@ mod tests {
                 cache_misses: 1,
                 dep_dry_runs: 0,
                 threads: 2,
+                budget_exhausted: false,
             },
             inference_time: inference,
             end_to_end_time: 10.0 + inference,
@@ -477,6 +479,7 @@ mod tests {
         assert!(j.contains("\"cache_hits\":3"), "{j}");
         assert!(j.contains("\"candidates\":4"), "{j}");
         assert!(j.contains("\"threads\":2"), "{j}");
+        assert!(j.contains("\"budget_exhausted\":false"), "{j}");
     }
 
     #[test]

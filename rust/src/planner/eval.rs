@@ -23,8 +23,9 @@
 //!   [`SimKey`] covers every input the outcome depends on.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::cluster::ClusterSpec;
 use crate::costmodel::CostModel;
@@ -61,6 +62,12 @@ pub struct EvalStats {
     pub dep_dry_runs: u64,
     /// Worker threads the evaluator ran with (1 = sequential).
     pub threads: usize,
+    /// True when the anytime-search budget
+    /// ([`crate::planner::GreedyPlanner::search_budget`]) expired before
+    /// the search converged: the returned plan is best-so-far — still
+    /// complete and executable, but stages stopped growing at their
+    /// first committed candidate once the deadline passed.
+    pub budget_exhausted: bool,
 }
 
 /// Scores candidate stages for the greedy search, concurrently and
@@ -73,6 +80,8 @@ pub struct Evaluator<'a> {
     cluster: &'a ClusterSpec,
     cache: &'a SimCache,
     threads: usize,
+    deadline: Option<Instant>,
+    exhausted: AtomicBool,
     candidates: AtomicU64,
     dep_dry_runs: AtomicU64,
     hits0: u64,
@@ -95,10 +104,34 @@ impl<'a> Evaluator<'a> {
             cluster,
             cache,
             threads: threads.max(1),
+            deadline: None,
+            exhausted: AtomicBool::new(false),
             candidates: AtomicU64::new(0),
             dep_dry_runs: AtomicU64::new(0),
             hits0: cache.hits(),
             misses0: cache.misses(),
+        }
+    }
+
+    /// Install an anytime-search deadline (`None` = unbudgeted). The
+    /// evaluator never interrupts itself — the search consults
+    /// [`Evaluator::over_budget`] between evaluation rounds, so every
+    /// score that is computed is computed exactly.
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Whether the anytime-search deadline has passed. Sticky: once
+    /// observed, [`EvalStats::budget_exhausted`] stays set for the
+    /// remainder of the search.
+    pub fn over_budget(&self) -> bool {
+        match self.deadline {
+            Some(d) if Instant::now() >= d => {
+                self.exhausted.store(true, Ordering::Relaxed);
+                true
+            }
+            _ => false,
         }
     }
 
@@ -117,6 +150,7 @@ impl<'a> Evaluator<'a> {
             cache_misses: self.cache.misses() - self.misses0,
             dep_dry_runs: self.dep_dry_runs.load(Ordering::Relaxed),
             threads: self.threads,
+            budget_exhausted: self.exhausted.load(Ordering::Relaxed),
         }
     }
 
@@ -249,23 +283,21 @@ impl<'a> Evaluator<'a> {
         } else {
             for e in &stage.entries {
                 let delay = load.get(&e.node).copied().unwrap_or(0.0);
-                let model = &graph.nodes[e.node].model;
                 let fp = fps
                     .get(&e.node)
                     .copied()
                     .unwrap_or_else(|| state.node_workload_fingerprint(e.node));
-                let key = SimKey::new(model, e.plan, fp, delay);
-                let outcome = self.cache.get_or_compute(key, || {
-                    state.simulate_node_fast(
-                        e.node,
-                        e.plan,
-                        graph,
-                        self.registry,
-                        &self.cost.iter_model,
-                        self.cluster.mem_bytes,
-                        delay,
-                    )
-                });
+                let outcome = state.simulate_node_from(
+                    self.cache,
+                    e.node,
+                    fp,
+                    e.plan,
+                    graph,
+                    self.registry,
+                    &self.cost.iter_model,
+                    self.cluster.mem_bytes,
+                    delay,
+                );
                 let t = outcome.clock.max(1e-6);
                 throughput += state.node_remaining_flops(e.node, graph, self.registry) / t;
             }
@@ -384,6 +416,59 @@ mod tests {
         // Second pass is all hits; (0, 2x1) also repeats inside pass one.
         assert!(stats.cache_hits >= 3, "{stats:?}");
         assert!(stats.cache_misses >= 2, "{stats:?}");
+    }
+
+    #[test]
+    fn replans_reprice_only_changed_nodes() {
+        // The incremental re-simulation contract: pricing a later state
+        // against the same cache resumes every unchanged node from its
+        // memoized outcome and only re-simulates nodes whose workload
+        // progressed.
+        let (g, st, cost, reg, cluster) = fixture();
+        let cache = SimCache::new();
+        let plan = ExecPlan::new(2, 1);
+        let price = |state: &ExecState, node: usize| {
+            state.simulate_node_from(
+                &cache,
+                node,
+                state.node_workload_fingerprint(node),
+                plan,
+                &g,
+                &reg,
+                &cost.iter_model,
+                cluster.mem_bytes,
+                0.0,
+            )
+        };
+        price(&st, 0);
+        let b0 = price(&st, 1);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        // A replan whose state only progressed node 0: node 1 resumes
+        // from the cache, node 0 is re-priced.
+        let mut progressed = st.clone();
+        progressed.nodes[0][0].generated += 5;
+        price(&progressed, 0);
+        let b1 = price(&progressed, 1);
+        assert_eq!(cache.misses(), 3, "only the changed node re-simulates");
+        assert_eq!(cache.hits(), 1, "the unchanged node is a pure resume");
+        assert_eq!(b1, b0, "resumed outcome is the cached one, bit for bit");
+    }
+
+    #[test]
+    fn deadline_reports_budget_exhaustion() {
+        let (_, _, cost, reg, cluster) = fixture();
+        let cache = SimCache::new();
+        let fresh = Evaluator::new(&cost, &reg, &cluster, 1, &cache);
+        assert!(!fresh.over_budget(), "no deadline means unbudgeted");
+        assert!(!fresh.stats().budget_exhausted);
+        let future = Evaluator::new(&cost, &reg, &cluster, 1, &cache)
+            .with_deadline(Some(Instant::now() + std::time::Duration::from_secs(3600)));
+        assert!(!future.over_budget());
+        let past = Evaluator::new(&cost, &reg, &cluster, 1, &cache)
+            .with_deadline(Some(Instant::now()));
+        assert!(past.over_budget());
+        // Sticky: stats keep reporting exhaustion once observed.
+        assert!(past.stats().budget_exhausted);
     }
 
     #[test]

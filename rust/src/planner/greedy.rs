@@ -69,6 +69,22 @@ pub struct GreedyPlanner {
     /// Override of the host-to-device bandwidth the swap cost model
     /// prices packed-stage transfers with (`None` = cluster default).
     pub h2d_bw: Option<f64>,
+    /// Wall-clock budget in seconds for the anytime search. Once spent,
+    /// every remaining stage stops at its first committed candidate
+    /// instead of evaluating further extensions, so the search returns
+    /// best-so-far without blocking a stage boundary — the plan is
+    /// always complete and executable, and
+    /// [`EvalStats::budget_exhausted`] records the early stop. `None`
+    /// (or an infinite budget) searches to convergence, committing
+    /// plans bit-identical to the unbudgeted planner.
+    pub search_budget: Option<f64>,
+    /// Run candidate simulations with the aggregated fast-step decode
+    /// path ([`crate::engine::sched::EngineConfig::fast_step`], exact —
+    /// plans and estimates are bit-identical either way; only search
+    /// wall-clock changes). Applies to states [`GreedyPlanner::plan`]
+    /// builds itself; [`GreedyPlanner::plan_from_state`] honours the
+    /// handed-in state's own flag.
+    pub fast_step: bool,
 }
 
 impl GreedyPlanner {
@@ -84,6 +100,8 @@ impl GreedyPlanner {
             cache: None,
             oversubscribe: false,
             h2d_bw: None,
+            search_budget: None,
+            fast_step: true,
         }
     }
 
@@ -108,7 +126,7 @@ impl GreedyPlanner {
     ) -> PlannedApp {
         let mut rng = Rng::new(seed ^ 0x504C_414E);
         let sampler = &self.cost.sampler;
-        let state = ExecState::init(workloads, |node, r| {
+        let mut state = ExecState::init(workloads, |node, r| {
             if known_lengths {
                 r.true_output_len
             } else {
@@ -117,6 +135,7 @@ impl GreedyPlanner {
                 sampler.sample(&n.model, r.input_len, n.max_out, spec.max_seq, &mut rng)
             }
         });
+        state.fast_step = self.fast_step;
         self.plan_from_state(graph, state, &HashMap::new())
     }
 
@@ -154,13 +173,20 @@ impl GreedyPlanner {
                 &local_cache
             }
         };
+        // The anytime deadline shares `search_time`'s origin, so an
+        // exhausted search reports `search_time` ≈ the budget.
+        let deadline = self
+            .search_budget
+            .filter(|b| b.is_finite())
+            .map(|b| t0 + std::time::Duration::from_secs_f64(b.max(0.0)));
         let evaluator = Evaluator::new(
             &self.cost,
             &self.registry,
             &self.cluster,
             self.resolved_threads(),
             cache,
-        );
+        )
+        .with_deadline(deadline);
 
         // Residency scratch state for packed stages: the estimate pays the
         // same modeled swap/load costs the runner will, so `est_total`
@@ -355,6 +381,14 @@ impl GreedyPlanner {
         let mut best_eval = StageEval { throughput: 0.0, gpus: 0 };
 
         loop {
+            // Anytime search: once the wall-clock budget is spent, stop
+            // growing this stage at its current best. The first round
+            // always runs — a stage with unfinished ready work commits at
+            // least one entry, so budgeted plans stay complete and
+            // executable (the outer all-done loop never stops early).
+            if !best.entries.is_empty() && evaluator.over_budget() {
+                break;
+            }
             let candidates = self.candidate_stages(graph, state, prev_plans, &best);
             if candidates.is_empty() {
                 break;
@@ -633,6 +667,47 @@ mod tests {
         }
         assert!(plan.est_total > 0.0);
         assert_eq!(plan.est_windows.len(), plan.stages.len());
+    }
+
+    #[test]
+    fn infinite_search_budget_is_bit_identical_to_unbudgeted() {
+        let p = planner();
+        let (g, w) = ensembling_like(5, 120);
+        let base = p.plan(&g, &w, false, 9);
+        assert!(!base.eval.budget_exhausted);
+        for budget in [f64::INFINITY, 1e9] {
+            let mut b = planner();
+            b.search_budget = Some(budget);
+            let plan = b.plan(&g, &w, false, 9);
+            assert_eq!(plan.stages, base.stages, "budget={budget}");
+            assert_eq!(plan.est_total.to_bits(), base.est_total.to_bits());
+            assert_eq!(plan.est_windows, base.est_windows);
+            assert!(!plan.eval.budget_exhausted, "a generous budget never exhausts");
+        }
+    }
+
+    #[test]
+    fn tiny_search_budget_still_returns_a_complete_plan() {
+        let mut p = planner();
+        p.search_budget = Some(1e-9);
+        let (g, w) = ensembling_like(5, 120);
+        let plan = p.plan(&g, &w, false, 9);
+        assert!(plan.eval.budget_exhausted, "a 1ns budget must exhaust");
+        // Best-so-far is still a complete, executable plan: every node
+        // scheduled, every stage non-empty and within the cluster, the
+        // estimated timeline contiguous.
+        for n in 0..5 {
+            assert!(plan.stages.iter().any(|s| s.nodes().contains(&n)), "node {n} unscheduled");
+        }
+        for s in &plan.stages {
+            assert!(!s.entries.is_empty());
+            assert!(s.n_gpus() <= 8);
+        }
+        assert!(plan.est_total > 0.0);
+        assert_eq!(plan.est_windows.len(), plan.stages.len());
+        for w2 in plan.est_windows.windows(2) {
+            assert!(w2[0].1 <= w2[1].0 + 1e-9);
+        }
     }
 
     #[test]

@@ -17,6 +17,23 @@
 //! so an outcome computed at clock `t` is valid verbatim at any other
 //! clock.
 //!
+//! ## Delta keys and incremental re-simulation
+//!
+//! The same mechanism makes mid-run re-planning *incremental*. A replan
+//! ([`crate::planner::GreedyPlanner::plan_from_state`]) prices the
+//! remaining application from a state that differs from the previous
+//! search only where execution made progress: most nodes' remaining
+//! workloads — the unchanged suffix of the run — hash to the exact
+//! fingerprints the previous search already priced. Those [`SimKey`]s
+//! act as **delta keys**: an equal key proves nothing the outcome
+//! depends on changed, so the node *resumes* from its memoized outcome
+//! ([`crate::runner::state::ExecState::simulate_node_from`]) instead of
+//! re-simulating; only nodes whose requests progressed, whose
+//! predictions were refreshed, or whose candidate plan/loading differs
+//! miss and re-price. Sharing one cache across a run's searches (the
+//! [`crate::runner::RunContext::sim_cache`] wiring) is what turns
+//! repeated replans from full re-simulations into delta work.
+//!
 //! A `SimCache` is scoped to one cost model + cluster (one
 //! [`crate::runner::RunContext`]); sharing it across differently
 //! calibrated contexts would alias keys to different truths.

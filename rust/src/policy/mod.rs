@@ -137,6 +137,8 @@ struct ReplanCfg {
     replan_threshold: f64,
     oversubscribe: bool,
     h2d_bw: Option<f64>,
+    search_budget: Option<f64>,
+    fast_step: bool,
 }
 
 /// Ours (§4): Algorithm 1 greedy planning + dynamic stage adjustment,
@@ -211,6 +213,10 @@ impl SamuLlmPolicy {
         planner.cache = cfg.sim_cache.clone();
         planner.oversubscribe = cfg.oversubscribe;
         planner.h2d_bw = cfg.h2d_bw;
+        // Re-plans run at stage boundaries, where search time is dead
+        // time for the whole cluster — the anytime budget caps it.
+        planner.search_budget = cfg.search_budget;
+        planner.fast_step = cfg.fast_step;
         let mut est = ctx.est_state.clone();
         est.noise_sigma = None;
         let plan = planner.plan_from_state(ctx.graph, est, self.sched.last_plans());
@@ -249,6 +255,8 @@ impl Policy for SamuLlmPolicy {
         p.cache = ctx.sim_cache.cloned();
         p.oversubscribe = ctx.opts.oversubscribe;
         p.h2d_bw = ctx.opts.h2d_bw;
+        p.search_budget = ctx.opts.search_budget;
+        p.fast_step = ctx.opts.fast_step;
         let plan = p.plan(ctx.graph, ctx.workloads, ctx.opts.known_lengths, ctx.opts.seed);
         self.sched = DynamicScheduler::new(Some(plan.clone()));
         self.sched.oversubscribe = ctx.opts.oversubscribe;
@@ -259,6 +267,8 @@ impl Policy for SamuLlmPolicy {
             replan_threshold: ctx.opts.replan_threshold,
             oversubscribe: ctx.opts.oversubscribe,
             h2d_bw: ctx.opts.h2d_bw,
+            search_budget: ctx.opts.search_budget,
+            fast_step: ctx.opts.fast_step,
         });
         self.length_ref.clear();
         self.plan_t0 = 0.0;

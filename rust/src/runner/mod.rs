@@ -104,6 +104,24 @@ pub struct RunOpts {
     /// swap-cost pricing (`None` = the cluster spec's own `h2d_bw`; the
     /// d2h side scales by the spec's d2h/h2d ratio).
     pub h2d_bw: Option<f64>,
+    /// Aggregated fast-step decode in every engine simulation (on by
+    /// default). Exact: stable-batch decode windows are advanced one
+    /// priced iteration at a time without per-iteration scheduling
+    /// bookkeeping, so outcomes, events and counters are bit-identical
+    /// to per-token stepping — only simulation wall-clock changes. Turn
+    /// off to force the reference per-token path
+    /// ([`crate::engine::sched::EngineConfig::fast_step`]).
+    pub fast_step: bool,
+    /// Anytime-search wall-clock budget in seconds for every Algorithm 1
+    /// search this run performs (the offline plan and each mid-run
+    /// re-plan). `None` = search to convergence, bit-identical to every
+    /// unbudgeted release. With a budget, an expiring search returns
+    /// best-so-far — always a complete, executable plan — and the report
+    /// flags it via [`EvalStats::budget_exhausted`], so re-plans at
+    /// stage boundaries (arrivals, drift, open-loop traffic) stop
+    /// blocking the cluster
+    /// ([`crate::planner::GreedyPlanner::search_budget`]).
+    pub search_budget: Option<f64>,
 }
 
 impl Default for RunOpts {
@@ -121,6 +139,8 @@ impl Default for RunOpts {
             admit: AdmitPolicy::Fcfs,
             oversubscribe: false,
             h2d_bw: None,
+            fast_step: true,
+            search_budget: None,
         }
     }
 }
@@ -311,6 +331,7 @@ fn run_core(
     // ---- running phase ---------------------------------------------------
     let mut true_state = ExecState::init(init_workloads, |_, r| r.true_output_len);
     true_state.admit = opts.admit;
+    true_state.fast_step = opts.fast_step;
     if !measured_mode {
         true_state.noise_sigma = Some(opts.noise_sigma);
         true_state.noise_seed = opts.seed ^ 0x7275_6E;

@@ -137,6 +137,11 @@ pub struct ExecState {
     /// Admission counters accumulated across committed stages (queue
     /// jumps, starvation promotions, max queue wait).
     pub admit_stats: AdmitStats,
+    /// Enable the engine's aggregated fast-step decode path
+    /// ([`EngineConfig::fast_step`]). Exact — bit-identical outcomes
+    /// either way — so it is deliberately *not* part of
+    /// [`ExecState::node_workload_fingerprint`].
+    pub fast_step: bool,
 }
 
 impl ExecState {
@@ -184,6 +189,7 @@ impl ExecState {
             noise_seed: 0,
             admit: AdmitPolicy::Fcfs,
             admit_stats: AdmitStats::default(),
+            fast_step: true,
         }
     }
 
@@ -339,6 +345,7 @@ impl ExecState {
         let cfg = EngineConfig {
             noise_sigma: None,
             admit: self.admit,
+            fast_step: self.fast_step,
             ..EngineConfig::standard(spec, plan.tp, mem_bytes)
                 .unwrap_or_else(|e| panic!("candidate plan reached the engine: {e}"))
         };
@@ -352,6 +359,44 @@ impl ExecState {
             0,
         );
         sim.run(None)
+    }
+
+    /// Resume-point variant of [`ExecState::simulate_node_fast`] for
+    /// incremental re-simulation: consult `cache` under the node's
+    /// **delta key** — model, plan, load delay, and `fingerprint`
+    /// ([`ExecState::node_workload_fingerprint`], pass a precomputed
+    /// value when pricing many candidates against one state) — and only
+    /// run a fresh simulation when the node's workload or placement
+    /// actually changed since the cached entry was written.
+    ///
+    /// Because the fast estimator prices in *relative* virtual time, a
+    /// replan ([`crate::planner::GreedyPlanner::plan_from_state`]) that
+    /// shares the cache resumes every unchanged node from its memoized
+    /// outcome verbatim: only nodes whose requests progressed, whose
+    /// predictions were refreshed, or whose candidate plan/loading
+    /// differs are re-priced. Hits are bit-identical to recomputation.
+    #[allow(clippy::too_many_arguments)] // established planner fast path
+    pub fn simulate_node_from(
+        &self,
+        cache: &crate::planner::SimCache,
+        node: usize,
+        fingerprint: u64,
+        plan: crate::plan::ExecPlan,
+        graph: &AppGraph,
+        registry: &Registry,
+        lat: &dyn IterLatency,
+        mem_bytes: u64,
+        load_delay: f64,
+    ) -> crate::engine::sim::SimOutcome {
+        let key = crate::planner::simcache::SimKey::new(
+            &graph.nodes[node].model,
+            plan,
+            fingerprint,
+            load_delay,
+        );
+        cache.get_or_compute(key, || {
+            self.simulate_node_fast(node, plan, graph, registry, lat, mem_bytes, load_delay)
+        })
     }
 
     /// Fingerprint of this node's remaining workload exactly as
@@ -632,6 +677,7 @@ impl ExecState {
                 noise_seed: self.noise_seed ^ ((node as u64) << 8),
                 collect_events,
                 admit: self.admit,
+                fast_step: self.fast_step,
             })
             .unwrap_or_else(|e| panic!("stage execution failed: {e:#}"))
     }
@@ -715,6 +761,7 @@ impl ExecState {
                 noise_seed: 0,
                 collect_events: trace.is_some(),
                 admit: self.admit,
+                fast_step: self.fast_step,
             })?;
             for (id, ct) in &out.completions {
                 stage_completions.insert((node, *id), *ct);

@@ -141,6 +141,7 @@ pub fn serve_requests_with(
         noise_seed: 0,
         collect_events: true,
         admit,
+        fast_step: true,
     })?;
 
     let latency_of: HashMap<u64, f64> = out.completions.iter().copied().collect();

@@ -72,6 +72,8 @@ pub struct SamuLlmBuilder {
     admit: String,
     oversubscribe: bool,
     h2d_bw: Option<f64>,
+    fast_step: bool,
+    search_budget: Option<f64>,
 }
 
 impl SamuLlm {
@@ -95,6 +97,8 @@ impl SamuLlm {
             admit: "fcfs".to_string(),
             oversubscribe: false,
             h2d_bw: None,
+            fast_step: true,
+            search_budget: None,
         }
     }
 
@@ -339,6 +343,29 @@ impl SamuLlmBuilder {
         self
     }
 
+    /// Aggregated fast-step decode in every engine simulation (default
+    /// on). Exact — outcomes, events and counters are bit-identical to
+    /// per-token stepping, only simulation wall-clock changes — so `false`
+    /// exists for verification and for measuring the speedup itself
+    /// ([`crate::engine::sched::EngineConfig::fast_step`]).
+    pub fn fast_step(mut self, on: bool) -> Self {
+        self.fast_step = on;
+        self
+    }
+
+    /// Anytime-search wall-clock budget in seconds for every Algorithm 1
+    /// search the session runs (offline plans and mid-run re-plans;
+    /// default: none — search to convergence). Must be positive
+    /// (validated at `build()`; `f64::INFINITY` is accepted and
+    /// equivalent to no budget). An expiring search returns best-so-far —
+    /// always a complete, executable plan — and sets
+    /// [`crate::planner::eval::EvalStats::budget_exhausted`] in the
+    /// report.
+    pub fn search_budget(mut self, seconds: f64) -> Self {
+        self.search_budget = Some(seconds);
+        self
+    }
+
     /// Validate the configuration and assemble the session wiring. For
     /// the `pjrt` backend, the artifacts contract is checked here so
     /// misconfiguration fails before any (expensive) planning starts.
@@ -349,6 +376,11 @@ impl SamuLlmBuilder {
         if let Some(bw) = self.h2d_bw {
             if !bw.is_finite() || bw <= 0.0 {
                 return Err(anyhow!("h2d bandwidth must be positive, got {bw}"));
+            }
+        }
+        if let Some(b) = self.search_budget {
+            if b.is_nan() || b <= 0.0 {
+                return Err(anyhow!("search budget must be positive seconds, got {b}"));
             }
         }
         let artifacts = self.artifacts.unwrap_or_else(crate::runtime::default_artifacts_dir);
@@ -387,6 +419,8 @@ impl SamuLlmBuilder {
             admit,
             oversubscribe: self.oversubscribe,
             h2d_bw: self.h2d_bw,
+            fast_step: self.fast_step,
+            search_budget: self.search_budget,
         };
         Ok(SamuLlm {
             ctx: RunContext::new(&cluster, self.seed),
@@ -619,6 +653,80 @@ mod tests {
         assert!(SamuLlm::builder().h2d_bw(0.0).build().is_err());
         assert!(SamuLlm::builder().h2d_bw(-1.0).build().is_err());
         assert!(SamuLlm::builder().h2d_bw(25.0e9).build().is_ok());
+    }
+
+    #[test]
+    fn builder_validates_search_budget() {
+        assert!(SamuLlm::builder().search_budget(0.0).build().is_err());
+        assert!(SamuLlm::builder().search_budget(-2.0).build().is_err());
+        assert!(SamuLlm::builder().search_budget(f64::NAN).build().is_err());
+        assert!(SamuLlm::builder().search_budget(0.25).build().is_ok());
+        // Infinity is a valid spelling of "unbudgeted".
+        assert!(SamuLlm::builder().search_budget(f64::INFINITY).build().is_ok());
+    }
+
+    #[test]
+    fn fast_step_off_is_bit_identical() {
+        // The aggregated decode path is exact: disabling it must change
+        // no reported number, only simulation wall-clock.
+        let spec = AppSpec::ensembling(60, 128);
+        let a = SamuLlm::builder().gpus(8).seed(3).build().unwrap().run(&spec).unwrap();
+        let b = SamuLlm::builder()
+            .gpus(8)
+            .seed(3)
+            .fast_step(false)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        assert_eq!(
+            a.estimated_inference_time.to_bits(),
+            b.estimated_inference_time.to_bits()
+        );
+        assert_eq!(a.n_stages, b.n_stages);
+        for (sa, sb) in a.timeline.iter().zip(&b.timeline) {
+            assert_eq!(sa.events, sb.events, "per-stage event summaries must agree");
+        }
+    }
+
+    #[test]
+    fn infinite_search_budget_is_bit_identical() {
+        let spec = AppSpec::ensembling(60, 128);
+        let a = SamuLlm::builder().gpus(8).seed(3).build().unwrap().run(&spec).unwrap();
+        let b = SamuLlm::builder()
+            .gpus(8)
+            .seed(3)
+            .search_budget(f64::INFINITY)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_eq!(a.inference_time.to_bits(), b.inference_time.to_bits());
+        assert_eq!(
+            a.estimated_inference_time.to_bits(),
+            b.estimated_inference_time.to_bits()
+        );
+        assert_eq!(a.n_stages, b.n_stages);
+        assert!(!b.planner.budget_exhausted);
+    }
+
+    #[test]
+    fn tiny_search_budget_still_completes_the_run() {
+        let spec = AppSpec::ensembling(60, 128);
+        let r = SamuLlm::builder()
+            .gpus(8)
+            .seed(3)
+            .search_budget(1e-9)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert!(r.planner.budget_exhausted, "{:?}", r.planner);
+        assert!(r.inference_time > 0.0);
+        // Everything drained through the best-so-far plan.
+        assert!(r.timeline.iter().map(|s| s.events.completions).sum::<u64>() >= 60);
+        assert!(r.to_json().contains("\"budget_exhausted\":true"), "{}", r.to_json());
     }
 
     #[test]

@@ -170,6 +170,7 @@ fn node_run<'a>(
         noise_seed: 0,
         collect_events: true,
         admit,
+        fast_step: true,
     }
 }
 

@@ -1,0 +1,137 @@
+//! End-to-end differentials for the aggregated decode stepping
+//! (`fast_step`): the default-on fast path must be bit-identical to
+//! per-token stepping on every paper app, under non-FCFS admission, and
+//! through the residency packed-stage lowering. These run the full
+//! session facade, so they also cover planner replans pricing estimated
+//! states with the same flag.
+
+use samullm::metrics::RunReport;
+use samullm::session::SamuLlm;
+use samullm::spec::{AppSpec, NodeSpec, WorkloadGen};
+
+/// Bit-level equality on everything the simulator determines: virtual
+/// times, stage structure, and the per-stage engine event digests.
+fn assert_bit_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(
+        a.inference_time.to_bits(),
+        b.inference_time.to_bits(),
+        "{what}: inference time differs ({} vs {})",
+        a.inference_time,
+        b.inference_time
+    );
+    let (ea, eb) = (a.estimated_inference_time, b.estimated_inference_time);
+    assert!(
+        (ea.is_nan() && eb.is_nan()) || ea.to_bits() == eb.to_bits(),
+        "{what}: estimate differs ({ea} vs {eb})"
+    );
+    assert_eq!(a.n_stages, b.n_stages, "{what}: stage count differs");
+    for (i, (sa, sb)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+        assert_eq!(sa.entries, sb.entries, "{what}: stage {i} entries differ");
+        assert_eq!(sa.start.to_bits(), sb.start.to_bits(), "{what}: stage {i} start");
+        assert_eq!(sa.end.to_bits(), sb.end.to_bits(), "{what}: stage {i} end");
+        assert_eq!(sa.events, sb.events, "{what}: stage {i} event digest differs");
+    }
+}
+
+fn run_pair(spec: &AppSpec, seed: u64) -> (RunReport, RunReport) {
+    let fast = SamuLlm::builder().gpus(8).seed(seed).build().unwrap().run(spec).unwrap();
+    let exact = SamuLlm::builder()
+        .gpus(8)
+        .seed(seed)
+        .fast_step(false)
+        .build()
+        .unwrap()
+        .run(spec)
+        .unwrap();
+    (fast, exact)
+}
+
+#[test]
+fn fast_step_matches_per_token_on_ensembling() {
+    let (fast, exact) = run_pair(&AppSpec::ensembling(60, 128), 7);
+    assert_bit_identical(&fast, &exact, "ensembling");
+    assert!(fast.inference_time > 0.0);
+}
+
+#[test]
+fn fast_step_matches_per_token_on_routing() {
+    let (fast, exact) = run_pair(&AppSpec::routing(512, false), 11);
+    assert_bit_identical(&fast, &exact, "routing");
+}
+
+#[test]
+fn fast_step_matches_per_token_on_chain_summary() {
+    let (fast, exact) = run_pair(&AppSpec::chain_summary(6, 1, 200), 13);
+    assert_bit_identical(&fast, &exact, "chain-summary");
+}
+
+#[test]
+fn fast_step_matches_per_token_on_mixed() {
+    let (fast, exact) = run_pair(&AppSpec::mixed(4, 40, 160, 96, 1), 17);
+    assert_bit_identical(&fast, &exact, "mixed");
+}
+
+#[test]
+fn fast_step_matches_per_token_under_non_fcfs_admission() {
+    // Non-FCFS policies reorder the waiting queue, which changes which
+    // composition windows are stable; the aggregation must still land on
+    // the same outcomes.
+    let spec = AppSpec::ensembling(50, 128);
+    for admit in ["spjf", "multi-bin:4", "skip-join:4:5"] {
+        let fast = SamuLlm::builder()
+            .gpus(8)
+            .seed(19)
+            .admit_policy(admit)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        let exact = SamuLlm::builder()
+            .gpus(8)
+            .seed(19)
+            .admit_policy(admit)
+            .fast_step(false)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap();
+        assert_bit_identical(&fast, &exact, admit);
+    }
+}
+
+#[test]
+fn fast_step_matches_per_token_through_packed_stages() {
+    // Three single-GPU models cannot be co-resident on 2 A100s, so the
+    // residency subsystem lowers the plan into time-sliced sub-stages
+    // with deadline replays — the hardest path for window aggregation
+    // (deadlines cut windows short mid-flight).
+    let spec = AppSpec::Custom {
+        name: "packed-triple".into(),
+        nodes: (0..3)
+            .map(|i| NodeSpec {
+                model: "chatglm3-6b".into(),
+                label: format!("m{i}"),
+                max_out: 256,
+                workload: WorkloadGen::Synthetic { n_requests: 40, input_min: 10, input_max: 60 },
+            })
+            .collect(),
+        edges: vec![],
+    };
+    let build = |fast_step: bool| {
+        SamuLlm::builder()
+            .gpus(2)
+            .seed(23)
+            .oversubscribe(true)
+            .fast_step(fast_step)
+            .build()
+            .unwrap()
+            .run(&spec)
+            .unwrap()
+    };
+    let (fast, exact) = (build(true), build(false));
+    assert_bit_identical(&fast, &exact, "packed");
+    assert_eq!(fast.residency, exact.residency, "packed: swap counters differ");
+    assert!(fast.residency.any(), "packed lowering never triggered: {:?}", fast.residency);
+    let completions: u64 = fast.timeline.iter().map(|s| s.events.completions).sum();
+    assert_eq!(completions, 3 * 40, "all requests drained through sub-stages");
+}

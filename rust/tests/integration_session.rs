@@ -130,6 +130,10 @@ fn spec_round_trips_through_config_json_and_runs() {
         replan_threshold: samullm::costmodel::online::DEFAULT_REPLAN_THRESHOLD,
         online_weight: samullm::costmodel::online::DEFAULT_OBS_WEIGHT,
         admit: "fcfs".to_string(),
+        oversubscribe: false,
+        h2d_bw: None,
+        fast_step: true,
+        search_budget: None,
     };
     let text = cfg.to_json();
     let back = ExperimentConfig::from_json(&text).unwrap();
