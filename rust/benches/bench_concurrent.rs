@@ -1,0 +1,118 @@
+//! Concurrent-vs-sequential measured stage lowering: the same two-node
+//! disjoint-GPU stage runs through `ExecState::run_stage_concurrent`
+//! (event-loop interleaving, stage wall-clock = max over nodes) and
+//! `ExecState::run_stage_measured` (chained nodes, wall-clock = sum) on
+//! a `MockModel` whose every prefill/decode call sleeps, so measured
+//! durations are dominated by identical per-call device time. Both arms
+//! must complete the same request set; the headline bit is
+//! `concurrent_beats_sequential` on the *reported* stage span. Writes
+//! `BENCH_concurrent.json`; `--smoke` shrinks the workload to CI size.
+
+use samullm::exec::pjrt::{MockModel, PjrtBackend};
+use samullm::graph::AppGraph;
+use samullm::models::Registry;
+use samullm::plan::{ExecPlan, Stage, StageEntry};
+use samullm::runner::state::ExecState;
+use samullm::runner::AppRequest;
+use samullm::util::bench::BenchGroup;
+use samullm::util::json::Json;
+
+fn pair_scenario(n_reqs: u64, out_len: u32) -> (AppGraph, Vec<Vec<AppRequest>>) {
+    let mut g = AppGraph::default();
+    g.add_node("chatglm3-6b", "left", 64);
+    g.add_node("mistral-7b-instruct", "right", 64);
+    let w = |_node: usize| -> Vec<AppRequest> {
+        (0..n_reqs)
+            .map(|id| AppRequest::simple(id, 8, 2 + (id as u32 * 7 % out_len)))
+            .collect()
+    };
+    (g, vec![w(0), w(1)])
+}
+
+fn stage_of(g: &AppGraph) -> Stage {
+    Stage {
+        entries: (0..g.n_nodes())
+            .map(|n| StageEntry { node: n, plan: ExecPlan::new(1, 1) })
+            .collect(),
+    }
+}
+
+struct Arm {
+    span: f64,
+    completions: usize,
+    wall: f64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_reqs, out_len, delay) = if smoke { (4u64, 6u32, 0.002) } else { (12, 10, 0.003) };
+    let reg = Registry::paper();
+
+    let mut g = BenchGroup::new("concurrent");
+    g.sample_size(if smoke { 2 } else { 3 });
+
+    let mut run_arm = |label: &str, concurrent: bool| -> Arm {
+        let mut result: Option<(f64, usize)> = None;
+        let wall = g
+            .bench(label, || {
+                let (graph, w) = pair_scenario(n_reqs, out_len);
+                let s = stage_of(&graph);
+                let mut st = ExecState::init(&w, |_, r| r.true_output_len);
+                let mut be =
+                    PjrtBackend::with_model(Box::new(MockModel::new(4, 64).with_delay(delay)));
+                let res = if concurrent {
+                    st.run_stage_concurrent(&s, &graph, &reg, &mut be, None)
+                } else {
+                    st.run_stage_measured(&s, &graph, &reg, &mut be, None)
+                }
+                .expect("mock backend is infallible");
+                assert!(st.all_done(), "{label}: stage left requests unfinished");
+                result = Some((res.end - res.start, st.completed.len()));
+            })
+            .median;
+        let (span, completions) = result.expect("bench ran at least one sample");
+        Arm { span, completions, wall }
+    };
+
+    let con = run_arm("concurrent/2node", true);
+    let seq = run_arm("sequential/2node", false);
+    g.finish();
+
+    assert_eq!(
+        con.completions, seq.completions,
+        "lowerings completed different request sets"
+    );
+    let concurrent_beats_sequential = con.span < seq.span;
+    println!(
+        "stage span: concurrent {:.3}s vs sequential {:.3}s ({}), {} completions each",
+        con.span,
+        seq.span,
+        if concurrent_beats_sequential { "event loop wins" } else { "sequential wins" },
+        con.completions
+    );
+
+    let arm_json = |label: &str, a: &Arm| {
+        Json::obj(vec![
+            ("arm", Json::Str(label.to_string())),
+            ("stage_span_s", Json::Num(a.span)),
+            ("completions", Json::Num(a.completions as f64)),
+            ("wall_s", Json::Num(a.wall)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("concurrent".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("n_requests_per_node", Json::Num(n_reqs as f64)),
+        ("per_call_delay_s", Json::Num(delay)),
+        (
+            "arms",
+            Json::Arr(vec![arm_json("concurrent", &con), arm_json("sequential", &seq)]),
+        ),
+        ("speedup", Json::Num(seq.span / con.span.max(1e-12))),
+        ("concurrent_beats_sequential", Json::Bool(concurrent_beats_sequential)),
+    ])
+    .to_string();
+    std::fs::write("BENCH_concurrent.json", format!("{doc}\n"))
+        .expect("write BENCH_concurrent.json");
+    println!("wrote BENCH_concurrent.json");
+}

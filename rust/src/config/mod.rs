@@ -80,6 +80,10 @@ pub struct ExperimentConfig {
     /// complete plan found so far and flags
     /// [`crate::planner::EvalStats::budget_exhausted`].
     pub search_budget: Option<f64>,
+    /// Force the sequential measured lowering: stage nodes run one after
+    /// another on the device instead of interleaving through the
+    /// backend's stepping interface (default off; inert for `sim` runs).
+    pub sequential_measured: bool,
 }
 
 impl ExperimentConfig {
@@ -142,6 +146,7 @@ impl ExperimentConfig {
                     None => Json::Null,
                 },
             ),
+            ("sequential_measured", Json::Bool(self.sequential_measured)),
         ])
         .to_string()
     }
@@ -221,6 +226,10 @@ impl ExperimentConfig {
             h2d_bw: v.get("h2d_bw").and_then(|x| x.as_f64()),
             fast_step: v.get("fast_step").and_then(|x| x.as_bool()).unwrap_or(true),
             search_budget: v.get("search_budget").and_then(|x| x.as_f64()),
+            sequential_measured: v
+                .get("sequential_measured")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
         })
     }
 }
@@ -252,6 +261,7 @@ mod tests {
             h2d_bw: Some(20.0e9),
             fast_step: false,
             search_budget: Some(0.5),
+            sequential_measured: true,
         };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.app, c.app);
@@ -269,6 +279,7 @@ mod tests {
         assert_eq!(back.h2d_bw, Some(20.0e9));
         assert!(!back.fast_step);
         assert_eq!(back.search_budget, Some(0.5));
+        assert!(back.sequential_measured);
     }
 
     #[test]
@@ -293,9 +304,11 @@ mod tests {
         // Residency defaults off with the cluster's own host link.
         assert!(!c.oversubscribe);
         assert!(c.h2d_bw.is_none());
-        // Fast stepping defaults on; planner searches are unbudgeted.
+        // Fast stepping defaults on; planner searches are unbudgeted;
+        // measured stages take the concurrent lowering.
         assert!(c.fast_step);
         assert!(c.search_budget.is_none());
+        assert!(!c.sequential_measured);
     }
 
     #[test]
@@ -347,6 +360,7 @@ mod tests {
                 h2d_bw: None,
                 fast_step: true,
                 search_budget: None,
+                sequential_measured: false,
             };
             let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
             assert_eq!(back.app, Some(app));
@@ -426,6 +440,7 @@ mod tests {
             h2d_bw: None,
             fast_step: true,
             search_budget: None,
+            sequential_measured: false,
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();
@@ -478,6 +493,7 @@ mod tests {
             h2d_bw: None,
             fast_step: true,
             search_budget: None,
+            sequential_measured: false,
         };
         let text = c.to_json();
         let back = ExperimentConfig::from_json(&text).unwrap();

@@ -473,6 +473,11 @@ pub struct SchedCore<X: StepExec> {
     ev_replica: usize,
     scratch_admit: Vec<StepReq>,
     scratch_run: Vec<StepReq>,
+    /// KV-fit bound of the previous aggregated decode window, carried as
+    /// the bracket seed for the next window's binary search (see
+    /// [`SchedCore::decode_fast`]). Purely an accelerator: outcomes are
+    /// bit-identical to an unseeded search.
+    fast_k: u64,
     /// Completion times per request id (for the communicator).
     pub completions: Vec<(u64, f64)>,
     /// Optional (clock, running-count) trace for Fig. 3.
@@ -529,6 +534,7 @@ impl<X: StepExec> SchedCore<X> {
             ev_replica: 0,
             scratch_admit: vec![],
             scratch_run: vec![],
+            fast_k: 0,
             completions: vec![],
             iter_trace: None,
         };
@@ -536,6 +542,25 @@ impl<X: StepExec> SchedCore<X> {
             core.push_request(req);
         }
         core
+    }
+
+    /// Inject a request into a core that is already running. The
+    /// concurrent measured path uses this to forward cross-node
+    /// completions mid-flight: the moment a producer request finishes,
+    /// its dependent enters the consumer's engine with its measured
+    /// ready time, instead of waiting for the whole producer node to
+    /// drain. Admission follows the same `(ready_time, FCFS arrival)`
+    /// key as construction-time requests.
+    pub fn inject(&mut self, req: EngineRequest) {
+        self.push_request(req);
+    }
+
+    /// Install (or clear) the deadline consulted by aggregated decode
+    /// windows and stepping callers. [`SchedCore::run`] manages this
+    /// itself; incremental drivers ([`crate::exec::ExecBackend::step_node`])
+    /// set it once up front.
+    pub fn set_deadline(&mut self, deadline: Option<f64>) {
+        self.deadline = deadline;
     }
 
     fn push_request(&mut self, req: EngineRequest) {
@@ -993,7 +1018,9 @@ impl<X: StepExec> SchedCore<X> {
     /// difference). Degenerate windows — an admissible prompt already
     /// waiting, immediate block pressure, a tick-declining executor, or
     /// a window too short to pay for its setup — fall back to
-    /// [`SchedCore::decode_once`].
+    /// [`SchedCore::decode_once`]. The KV-fit bracket is seeded from the
+    /// previous window's bound (`fast_k`), collapsing the common
+    /// steady-state case to O(1) probes without changing the result.
     fn decode_fast(&mut self) -> bool {
         let batch = self.running.len();
         let seats_free = batch < self.cfg.max_num_seqs;
@@ -1024,6 +1051,26 @@ impl<X: StepExec> SchedCore<X> {
                 .sum()
         };
         let (mut lo, mut hi) = (0u64, min_remaining as u64);
+        // Seed the bracket from the previous window's bound: batch
+        // composition and the free pool usually persist across
+        // consecutive stable windows, so last window's k is an excellent
+        // first probe — confirming it (and refuting k+1) collapses the
+        // search to O(1) `needed` evaluations instead of a fresh
+        // bisection. Outcome-neutral: the loop below still converges to
+        // the unique largest k with needed(k) <= free_blocks (`needed`
+        // is monotone and touches neither the clock nor the jitter
+        // stream), so results stay bit-identical to an unseeded search.
+        let guess = self.fast_k.min(hi);
+        if guess > 0 {
+            if needed(guess) <= self.free_blocks {
+                lo = guess;
+                if guess < hi && needed(guess + 1) > self.free_blocks {
+                    hi = guess;
+                }
+            } else {
+                hi = guess - 1;
+            }
+        }
         while lo < hi {
             let mid = lo + (hi - lo).div_ceil(2);
             if needed(mid) <= self.free_blocks {
@@ -1032,6 +1079,7 @@ impl<X: StepExec> SchedCore<X> {
                 hi = mid - 1;
             }
         }
+        self.fast_k = lo;
         let k = lo as u32;
         if k <= 2 {
             return self.decode_once();

@@ -101,7 +101,48 @@ pub struct NodeOutcome {
     pub generations: Vec<(u64, Vec<i32>)>,
 }
 
+/// Opaque handle to a node started with [`ExecBackend::start_node`] and
+/// still in flight (stepped, fed requests, then finished).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeHandle(pub usize);
+
+/// Where an in-flight node stands after one [`ExecBackend::step_node`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepStatus {
+    /// The scheduler advanced (an iteration executed or the clock
+    /// idle-jumped to the next ready time) — step again.
+    Progressed,
+    /// Nothing is runnable and nothing becomes ready on its own: the
+    /// node is starved until [`ExecBackend::push_node_requests`] injects
+    /// work (or the caller gives up and finishes it).
+    Idle,
+    /// Every request is done (or the deadline passed) — call
+    /// [`ExecBackend::finish_node`].
+    Done,
+}
+
+/// Result of driving one scheduler iteration of an in-flight node.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// Scheduling status after the step.
+    pub status: StepStatus,
+    /// The node's engine clock (absolute seconds) after the step.
+    pub clock: f64,
+    /// Completions newly recorded by this step: (request id, time).
+    pub completions: Vec<(u64, f64)>,
+}
+
 /// A pluggable execution substrate. See module docs.
+///
+/// Beyond the one-shot [`ExecBackend::run_node`], a backend may opt into
+/// the *incremental stepping* interface (`start_node` / `step_node` /
+/// `push_node_requests` / `finish_node`) by returning `true` from
+/// [`ExecBackend::supports_stepping`]. Stepping lets the runner
+/// interleave several in-flight nodes on one event loop
+/// ([`crate::runner::ExecState::run_stage_concurrent`]), advancing
+/// whichever node's clock is earliest and forwarding cross-node
+/// completions mid-flight. The default implementations decline, keeping
+/// one-shot backends (the virtual substrate) untouched.
 pub trait ExecBackend {
     /// Registry name of the backend (`"sim"`, `"pjrt"`).
     fn name(&self) -> &'static str;
@@ -112,6 +153,42 @@ pub trait ExecBackend {
     /// Execute (or simulate) one node's requests. Virtual backends are
     /// infallible; real backends surface device errors.
     fn run_node(&mut self, run: &NodeRun) -> Result<NodeOutcome>;
+
+    /// Whether this backend implements the incremental stepping
+    /// interface (default: no).
+    fn supports_stepping(&self) -> bool {
+        false
+    }
+
+    /// Begin executing one node incrementally; the returned handle feeds
+    /// [`ExecBackend::step_node`] / [`ExecBackend::push_node_requests`] /
+    /// [`ExecBackend::finish_node`].
+    fn start_node(&mut self, _run: &NodeRun) -> Result<NodeHandle> {
+        Err(anyhow!("backend {} does not support incremental stepping", self.name()))
+    }
+
+    /// Drive one scheduler iteration of an in-flight node.
+    fn step_node(&mut self, _handle: NodeHandle) -> Result<StepOutcome> {
+        Err(anyhow!("backend {} does not support incremental stepping", self.name()))
+    }
+
+    /// Inject newly runnable requests (e.g. consumers whose upstream
+    /// dependency just completed on another node) into an in-flight
+    /// node's waiting queue.
+    fn push_node_requests(
+        &mut self,
+        _handle: NodeHandle,
+        _requests: Vec<EngineRequest>,
+    ) -> Result<()> {
+        Err(anyhow!("backend {} does not support incremental stepping", self.name()))
+    }
+
+    /// Tear down an in-flight node and harvest its [`NodeOutcome`] —
+    /// exactly what [`ExecBackend::run_node`] would have returned had it
+    /// run the same iterations one-shot.
+    fn finish_node(&mut self, _handle: NodeHandle) -> Result<NodeOutcome> {
+        Err(anyhow!("backend {} does not support incremental stepping", self.name()))
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -16,6 +16,15 @@
 //! the whole scheduling discipline is unit-testable without artifacts
 //! ([`MockModel`]); [`TinyGptModel`] is the real implementation.
 //!
+//! The backend also implements the incremental stepping interface
+//! ([`ExecBackend::start_node`] / [`ExecBackend::step_node`] /
+//! [`ExecBackend::finish_node`]): several graph nodes can be in flight at
+//! once, each owning its own scheduling core and token histories, with
+//! the runner's event loop advancing whichever node's measured clock is
+//! earliest. Per-node device state is kept apart through
+//! [`TokenModel::select_context`], so interleaved nodes never clobber
+//! each other's packed KV state.
+//!
 //! Known deliberate simplifications (single compiled CPU executable):
 //! * every graph node executes on the same TinyGPT weights — the model
 //!   *zoo* is virtual, the serving *engine* is real;
@@ -23,13 +32,15 @@
 //!   the scheduler's view of the cluster;
 //! * prompt/output lengths are clamped to the compiled `max_seq`.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::{BackendMode, ExecBackend, NodeOutcome, NodeRun};
+use super::{BackendMode, ExecBackend, NodeHandle, NodeOutcome, NodeRun, StepOutcome, StepStatus};
 use crate::engine::sched::{EngineConfig, SchedCore, StepExec, StepReq};
 use crate::engine::EngineRequest;
 use crate::runtime::TinyGpt;
@@ -55,19 +66,25 @@ pub trait TokenModel {
     /// One decode step: feed `next[row]` at cache position `pos[row]`,
     /// return the sampled next token per row.
     fn decode(&mut self, next: &[i32], pos: &[i32]) -> Result<Vec<i32>>;
+    /// Switch the model's device-state context. The concurrent measured
+    /// path keeps one context per in-flight graph node so interleaved
+    /// nodes each resume from their own packed state; stateless models
+    /// ignore this (default no-op).
+    fn select_context(&mut self, _ctx: usize) {}
 }
 
 /// The real [`TokenModel`]: an AOT-compiled [`TinyGpt`] plus its
-/// device-resident packed state.
+/// device-resident packed state, one per selected context (graph node).
 pub struct TinyGptModel {
     gpt: TinyGpt,
-    state: Option<xla::PjRtBuffer>,
+    states: HashMap<usize, xla::PjRtBuffer>,
+    ctx: usize,
 }
 
 impl TinyGptModel {
     /// Load artifacts from `dir` (see `make artifacts`).
     pub fn load(dir: &Path) -> Result<Self> {
-        Ok(TinyGptModel { gpt: TinyGpt::load(dir)?, state: None })
+        Ok(TinyGptModel { gpt: TinyGpt::load(dir)?, states: HashMap::new(), ctx: 0 })
     }
 
     /// The wrapped runtime model.
@@ -96,19 +113,23 @@ impl TokenModel for TinyGptModel {
     fn prefill(&mut self, tokens: &[i32], lengths: &[i32]) -> Result<Vec<i32>> {
         let out = self.gpt.prefill(tokens, lengths)?;
         let next = self.gpt.argmax(&out.logits);
-        self.state = Some(out.state);
+        self.states.insert(self.ctx, out.state);
         Ok(next)
     }
 
     fn decode(&mut self, next: &[i32], pos: &[i32]) -> Result<Vec<i32>> {
         let state = self
-            .state
-            .take()
+            .states
+            .remove(&self.ctx)
             .ok_or_else(|| anyhow!("decode before prefill: no device state"))?;
         let out = self.gpt.decode(next, state, pos)?;
         let sampled = self.gpt.argmax(&out.logits);
-        self.state = Some(out.state);
+        self.states.insert(self.ctx, out.state);
         Ok(sampled)
+    }
+
+    fn select_context(&mut self, ctx: usize) {
+        self.ctx = ctx;
     }
 }
 
@@ -125,12 +146,21 @@ pub struct MockModel {
     /// Decode calls served so far.
     pub decodes: u64,
     fail_after: Option<u64>,
+    delay: Option<std::time::Duration>,
 }
 
 impl MockModel {
     /// A mock with the given compiled dimensions.
     pub fn new(batch: usize, max_seq: usize) -> Self {
-        MockModel { batch, max_seq, vocab: 512, prefills: 0, decodes: 0, fail_after: None }
+        MockModel {
+            batch,
+            max_seq,
+            vocab: 512,
+            prefills: 0,
+            decodes: 0,
+            fail_after: None,
+            delay: None,
+        }
     }
 
     /// Make the model error after `n` successful prefill+decode calls
@@ -140,11 +170,22 @@ impl MockModel {
         self
     }
 
+    /// Sleep for `seconds` inside every prefill/decode call, so measured
+    /// durations are dominated by a known per-iteration cost (wall-clock
+    /// tests and the concurrent-vs-sequential bench calibrate with this).
+    pub fn with_delay(mut self, seconds: f64) -> Self {
+        self.delay = Some(std::time::Duration::from_secs_f64(seconds));
+        self
+    }
+
     fn check_budget(&mut self) -> Result<()> {
         if let Some(limit) = self.fail_after {
             if self.prefills + self.decodes >= limit {
                 return Err(anyhow!("injected device failure after {limit} calls"));
             }
+        }
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
         }
         Ok(())
     }
@@ -197,21 +238,31 @@ impl TokenModel for MockModel {
 /// [`StepExec`] that *executes* iterations on a [`TokenModel`] and reports
 /// measured wall-clock durations. Device errors are stashed and surfaced
 /// by the backend after the run (the scheduling core itself is
-/// infallible).
-pub struct PjrtStep<'m> {
-    model: &'m mut dyn TokenModel,
+/// infallible). The model and the node's token histories sit behind
+/// shared handles so several nodes' executors can be in flight at once
+/// on the single device (each selects its own context before touching
+/// device state).
+pub struct PjrtStep {
+    model: Rc<RefCell<Box<dyn TokenModel>>>,
     /// Full token history per request id (prompt ++ generated so far).
-    hist: &'m mut HashMap<u64, Vec<i32>>,
+    hist: Rc<RefCell<HashMap<u64, Vec<i32>>>>,
+    /// The graph node this executor serves (device-state context).
+    node: usize,
     /// Row assignment of the most recent prefill (row -> request id).
     rows: Vec<Option<u64>>,
     err: Option<anyhow::Error>,
 }
 
-impl<'m> PjrtStep<'m> {
-    /// An executor over `model`, reading/extending `hist` per request.
-    pub fn new(model: &'m mut dyn TokenModel, hist: &'m mut HashMap<u64, Vec<i32>>) -> Self {
-        let b = model.batch();
-        PjrtStep { model, hist, rows: vec![None; b], err: None }
+impl PjrtStep {
+    /// An executor over `model`, reading/extending `hist` per request,
+    /// running in device context `node`.
+    pub fn new(
+        model: Rc<RefCell<Box<dyn TokenModel>>>,
+        hist: Rc<RefCell<HashMap<u64, Vec<i32>>>>,
+        node: usize,
+    ) -> Self {
+        let b = model.borrow().batch();
+        PjrtStep { model, hist, node, rows: vec![None; b], err: None }
     }
 
     fn fail(&mut self, e: anyhow::Error) -> f64 {
@@ -222,13 +273,15 @@ impl<'m> PjrtStep<'m> {
     }
 }
 
-impl StepExec for PjrtStep<'_> {
+impl StepExec for PjrtStep {
     fn prefill(&mut self, admitted: &[StepReq], running: &[StepReq]) -> f64 {
         if self.err.is_some() {
             return 0.0;
         }
-        let b = self.model.batch();
-        let s = self.model.max_seq();
+        let (b, s) = {
+            let m = self.model.borrow();
+            (m.batch(), m.max_seq())
+        };
         let active = running.len() + admitted.len();
         if active > b {
             return self.fail(anyhow!(
@@ -241,26 +294,41 @@ impl StepExec for PjrtStep<'_> {
         let mut rows = vec![None; b];
         let mut tokens = vec![0i32; b * s];
         let mut lengths = vec![1i32; b];
-        for (row, r) in running.iter().chain(admitted.iter()).enumerate() {
-            let Some(h) = self.hist.get(&r.id) else {
-                return self.fail(anyhow!("request {} has no token history", r.id));
-            };
-            let l = h.len().min(s).max(1);
-            tokens[row * s..row * s + l].copy_from_slice(&h[..l]);
-            lengths[row] = l as i32;
-            rows[row] = Some(r.id);
+        let mut missing = None;
+        {
+            let hist = self.hist.borrow();
+            for (row, r) in running.iter().chain(admitted.iter()).enumerate() {
+                let Some(h) = hist.get(&r.id) else {
+                    missing = Some(r.id);
+                    break;
+                };
+                let l = h.len().min(s).max(1);
+                tokens[row * s..row * s + l].copy_from_slice(&h[..l]);
+                lengths[row] = l as i32;
+                rows[row] = Some(r.id);
+            }
+        }
+        if let Some(id) = missing {
+            return self.fail(anyhow!("request {id} has no token history"));
         }
         let t0 = Instant::now();
-        match self.model.prefill(&tokens, &lengths) {
+        let res = {
+            let mut m = self.model.borrow_mut();
+            m.select_context(self.node);
+            m.prefill(&tokens, &lengths)
+        };
+        match res {
             Ok(next) => {
                 // The prefill emits each *admitted* request's first new
                 // token; running rows merely had their state rebuilt.
+                let mut hist = self.hist.borrow_mut();
                 for (k, r) in admitted.iter().enumerate() {
                     let row = running.len() + k;
-                    if let Some(h) = self.hist.get_mut(&r.id) {
+                    if let Some(h) = hist.get_mut(&r.id) {
                         h.push(next[row]);
                     }
                 }
+                drop(hist);
                 self.rows = rows;
                 t0.elapsed().as_secs_f64()
             }
@@ -272,26 +340,41 @@ impl StepExec for PjrtStep<'_> {
         if self.err.is_some() {
             return 0.0;
         }
-        let b = self.model.batch();
+        let b = self.model.borrow().batch();
         let mut next = vec![0i32; b];
         let mut pos = vec![0i32; b];
         let mut row_of = Vec::with_capacity(running.len());
-        for r in running {
-            let Some(row) = self.rows.iter().position(|x| *x == Some(r.id)) else {
-                return self.fail(anyhow!("running request {} is not device-resident", r.id));
-            };
-            let Some(h) = self.hist.get(&r.id) else {
-                return self.fail(anyhow!("request {} has no token history", r.id));
-            };
-            next[row] = *h.last().unwrap_or(&1);
-            pos[row] = (h.len().saturating_sub(1)) as i32;
-            row_of.push(row);
+        let mut bad = None;
+        {
+            let hist = self.hist.borrow();
+            for r in running {
+                let Some(row) = self.rows.iter().position(|x| *x == Some(r.id)) else {
+                    bad = Some(anyhow!("running request {} is not device-resident", r.id));
+                    break;
+                };
+                let Some(h) = hist.get(&r.id) else {
+                    bad = Some(anyhow!("request {} has no token history", r.id));
+                    break;
+                };
+                next[row] = *h.last().unwrap_or(&1);
+                pos[row] = (h.len().saturating_sub(1)) as i32;
+                row_of.push(row);
+            }
+        }
+        if let Some(e) = bad {
+            return self.fail(e);
         }
         let t0 = Instant::now();
-        match self.model.decode(&next, &pos) {
+        let res = {
+            let mut m = self.model.borrow_mut();
+            m.select_context(self.node);
+            m.decode(&next, &pos)
+        };
+        match res {
             Ok(sampled) => {
+                let mut hist = self.hist.borrow_mut();
                 for (r, &row) in running.iter().zip(&row_of) {
-                    if let Some(h) = self.hist.get_mut(&r.id) {
+                    if let Some(h) = hist.get_mut(&r.id) {
                         h.push(sampled[row]);
                     }
                 }
@@ -310,9 +393,21 @@ impl StepExec for PjrtStep<'_> {
     }
 }
 
+/// One in-flight node on the stepping path: its scheduling core, token
+/// histories (shared with the core's executor) and completion cursor.
+struct ActiveNode {
+    node: usize,
+    model_name: String,
+    core: SchedCore<PjrtStep>,
+    hist: Rc<RefCell<HashMap<u64, Vec<i32>>>>,
+    input_of: HashMap<u64, u32>,
+    deadline: Option<f64>,
+    completions_seen: usize,
+}
+
 /// The real PJRT execution backend. See module docs.
 pub struct PjrtBackend {
-    model: Box<dyn TokenModel>,
+    model: Rc<RefCell<Box<dyn TokenModel>>>,
     /// Token histories per (node, request id), persisted across stages so
     /// carried progress re-prefills the exact tokens it generated.
     node_hist: HashMap<usize, HashMap<u64, Vec<i32>>>,
@@ -321,6 +416,9 @@ pub struct PjrtBackend {
     /// ones derived from `prompt_seed`.
     prompts: HashMap<(usize, u64), Vec<i32>>,
     prompt_seed: u64,
+    /// Nodes currently in flight on the stepping path, by handle.
+    active: HashMap<usize, ActiveNode>,
+    next_handle: usize,
 }
 
 impl PjrtBackend {
@@ -333,22 +431,36 @@ impl PjrtBackend {
 
     /// A backend over any [`TokenModel`] (mocks included).
     pub fn with_model(model: Box<dyn TokenModel>) -> Self {
-        PjrtBackend { model, node_hist: HashMap::new(), prompts: HashMap::new(), prompt_seed: 1 }
+        PjrtBackend {
+            model: Rc::new(RefCell::new(model)),
+            node_hist: HashMap::new(),
+            prompts: HashMap::new(),
+            prompt_seed: 1,
+            active: HashMap::new(),
+            next_handle: 0,
+        }
     }
 
     /// Compiled batch capacity of the underlying model.
     pub fn batch(&self) -> usize {
-        self.model.batch()
+        self.model.borrow().batch()
     }
 
     /// Compiled maximum sequence length of the underlying model.
     pub fn max_seq(&self) -> usize {
-        self.model.max_seq()
+        self.model.borrow().max_seq()
     }
 
     /// Device/platform label of the underlying model.
     pub fn platform(&self) -> String {
-        self.model.platform()
+        self.model.borrow().platform()
+    }
+
+    /// The recorded token history for `(node, id)` — prompt ++ generated
+    /// so far — if that request has run (and its node is not currently in
+    /// flight). Differential tests compare generations through this.
+    pub fn history(&self, node: usize, id: u64) -> Option<Vec<i32>> {
+        self.node_hist.get(&node).and_then(|m| m.get(&id).cloned())
     }
 
     /// Provide real prompt tokens for `(node, id)` (they are padded or
@@ -366,17 +478,18 @@ impl PjrtBackend {
     /// at least one decode slot, outputs fit `max_seq - prompt`. Stable
     /// per request, so carried progress stays consistent across stages.
     fn clamp(&self, r: &EngineRequest) -> EngineRequest {
-        let s = self.model.max_seq() as u32;
+        let s = self.model.borrow().max_seq() as u32;
         let input = r.input_len.max(1).min(s.saturating_sub(2).max(1));
         let output = r.output_len.max(1).min(s.saturating_sub(1).saturating_sub(input).max(1));
         EngineRequest { input_len: input, output_len: output, ..*r }
     }
 
-    /// Ensure a token history exists covering `input + generated` tokens.
-    fn seed_history(&mut self, node: usize, r: &EngineRequest) {
-        let vocab = self.model.vocab() as u64;
+    /// Ensure a token history exists in `hist` covering `input +
+    /// generated` tokens for request `r` of `node`.
+    fn seed_history_in(&self, hist: &mut HashMap<u64, Vec<i32>>, node: usize, r: &EngineRequest) {
+        let vocab = self.model.borrow().vocab() as u64;
         let need = (r.input_len + r.generated) as usize;
-        let h = self.node_hist.entry(node).or_default().entry(r.id).or_default();
+        let h = hist.entry(r.id).or_default();
         if h.is_empty() {
             if let Some(p) = self.prompts.get(&(node, r.id)) {
                 h.extend(p.iter().copied().take(r.input_len as usize));
@@ -398,6 +511,52 @@ impl PjrtBackend {
         }
         h.truncate(need.max(1));
     }
+
+    /// Drive one scheduler iteration of an in-flight core, mirroring one
+    /// turn of [`SchedCore::run`]'s loop: deadline and completion checks,
+    /// then a step; failing that, an idle advance to the next ready time
+    /// (possibly stepping at the new clock). `Idle` covers both a starved
+    /// core (everything remaining is blocked or not yet ready — an
+    /// injection may wake it) and a wedged one; either way another
+    /// `step_node` call makes no progress until requests arrive.
+    fn drive(core: &mut SchedCore<PjrtStep>, deadline: Option<f64>) -> StepStatus {
+        if let Some(d) = deadline {
+            if core.clock() >= d {
+                return StepStatus::Done;
+            }
+        }
+        if core.is_done() {
+            return StepStatus::Done;
+        }
+        if core.step() {
+            return StepStatus::Progressed;
+        }
+        let before = core.clock();
+        if !core.idle_until_ready() {
+            return if core.is_done() { StepStatus::Done } else { StepStatus::Idle };
+        }
+        if core.clock() > before {
+            return StepStatus::Progressed;
+        }
+        if core.step() {
+            StepStatus::Progressed
+        } else {
+            StepStatus::Idle
+        }
+    }
+
+    /// Tear an [`ActiveNode`] down: drop the core (releasing its history
+    /// handle) and fold the histories back into `node_hist`.
+    fn reclaim(&mut self, a: ActiveNode) -> (usize, String, HashMap<u64, Vec<i32>>) {
+        let ActiveNode { node, model_name, core, hist, .. } = a;
+        drop(core);
+        let hist_map = match Rc::try_unwrap(hist) {
+            Ok(cell) => cell.into_inner(),
+            Err(rc) => rc.borrow().clone(),
+        };
+        self.node_hist.insert(node, hist_map.clone());
+        (node, model_name, hist_map)
+    }
 }
 
 impl ExecBackend for PjrtBackend {
@@ -410,11 +569,35 @@ impl ExecBackend for PjrtBackend {
     }
 
     fn run_node(&mut self, run: &NodeRun) -> Result<NodeOutcome> {
-        let b = self.model.batch();
-        let s = self.model.max_seq();
+        // One-shot execution is the stepping interface driven to
+        // quiescence: identical scheduling decisions, identical
+        // measurements (see `SchedCore::run`, whose loop `drive` mirrors).
+        let handle = self.start_node(run)?;
+        loop {
+            match self.step_node(handle)?.status {
+                StepStatus::Progressed => {}
+                StepStatus::Idle | StepStatus::Done => break,
+            }
+        }
+        self.finish_node(handle)
+    }
+
+    fn supports_stepping(&self) -> bool {
+        true
+    }
+
+    fn start_node(&mut self, run: &NodeRun) -> Result<NodeHandle> {
+        if self.active.values().any(|a| a.node == run.node) {
+            return Err(anyhow!("node {} is already in flight", run.node));
+        }
+        let (b, s) = {
+            let m = self.model.borrow();
+            (m.batch(), m.max_seq())
+        };
         let reqs: Vec<EngineRequest> = run.requests.iter().map(|r| self.clamp(r)).collect();
+        let mut hist_map = self.node_hist.remove(&run.node).unwrap_or_default();
         for r in &reqs {
-            self.seed_history(run.node, r);
+            self.seed_history_in(&mut hist_map, run.node, r);
         }
         let input_of: HashMap<u64, u32> = reqs.iter().map(|r| (r.id, r.input_len)).collect();
 
@@ -433,27 +616,99 @@ impl ExecBackend for PjrtBackend {
             admit: run.admit,
         };
 
-        let hist = self.node_hist.entry(run.node).or_default();
-        let step = PjrtStep::new(self.model.as_mut(), hist);
+        let hist = Rc::new(RefCell::new(hist_map));
+        let step = PjrtStep::new(self.model.clone(), hist.clone(), run.node);
         let mut core = SchedCore::with_exec(step, cfg, 1, reqs, run.start_time, 0);
+        core.set_deadline(run.deadline);
         if run.collect_events {
             core.enable_events(run.node, 0);
         }
-        let outcome = core.run(run.deadline);
-        if let Some(e) = core.exec_mut().take_error() {
-            return Err(e).with_context(|| format!("node {} ({})", run.node, run.model));
-        }
-        let completions = core.completions.clone();
-        let events = core.take_events();
-        let remaining = core.drain_unfinished();
-        drop(core);
+        let handle = self.next_handle;
+        self.next_handle += 1;
+        self.active.insert(
+            handle,
+            ActiveNode {
+                node: run.node,
+                model_name: run.model.to_string(),
+                core,
+                hist,
+                input_of,
+                deadline: run.deadline,
+                completions_seen: 0,
+            },
+        );
+        Ok(NodeHandle(handle))
+    }
 
-        let node_hist = self.node_hist.get(&run.node).expect("seeded above");
+    fn step_node(&mut self, handle: NodeHandle) -> Result<StepOutcome> {
+        let a = self
+            .active
+            .get_mut(&handle.0)
+            .ok_or_else(|| anyhow!("unknown node handle {}", handle.0))?;
+        let status = Self::drive(&mut a.core, a.deadline);
+        if let Some(e) = a.core.exec_mut().take_error() {
+            let a = self.active.remove(&handle.0).expect("present above");
+            let (node, model_name, _) = self.reclaim(a);
+            return Err(e).with_context(|| format!("node {node} ({model_name})"));
+        }
+        let a = self.active.get_mut(&handle.0).expect("present above");
+        let clock = a.core.clock();
+        let completions = a.core.completions[a.completions_seen..].to_vec();
+        a.completions_seen = a.core.completions.len();
+        Ok(StepOutcome { status, clock, completions })
+    }
+
+    fn push_node_requests(
+        &mut self,
+        handle: NodeHandle,
+        requests: Vec<EngineRequest>,
+    ) -> Result<()> {
+        let (node, hist) = {
+            let a = self
+                .active
+                .get(&handle.0)
+                .ok_or_else(|| anyhow!("unknown node handle {}", handle.0))?;
+            (a.node, a.hist.clone())
+        };
+        let reqs: Vec<EngineRequest> = requests.iter().map(|r| self.clamp(r)).collect();
+        {
+            let mut hm = hist.borrow_mut();
+            for r in &reqs {
+                self.seed_history_in(&mut hm, node, r);
+            }
+        }
+        let a = self.active.get_mut(&handle.0).expect("present above");
+        for r in reqs {
+            a.input_of.insert(r.id, r.input_len);
+            a.core.inject(r);
+        }
+        Ok(())
+    }
+
+    fn finish_node(&mut self, handle: NodeHandle) -> Result<NodeOutcome> {
+        let mut a = self
+            .active
+            .remove(&handle.0)
+            .ok_or_else(|| anyhow!("unknown node handle {}", handle.0))?;
+        let err = a.core.exec_mut().take_error();
+        a.core.set_deadline(None);
+        // `outcome()` does not stamp the clock (only `run` does): set it
+        // so `finish_time` matches the one-shot path exactly.
+        let mut outcome = a.core.outcome().clone();
+        outcome.clock = a.core.clock();
+        let completions = a.core.completions.clone();
+        let events = a.core.take_events();
+        let remaining = a.core.drain_unfinished();
+        let input_of = std::mem::take(&mut a.input_of);
+        let (node, model_name, hist_map) = self.reclaim(a);
+        if let Some(e) = err {
+            return Err(e).with_context(|| format!("node {node} ({model_name})"));
+        }
         let generations = completions
             .iter()
             .map(|&(id, _)| {
                 let skip = input_of.get(&id).copied().unwrap_or(0) as usize;
-                let gen = node_hist.get(&id).map(|h| h[skip.min(h.len())..].to_vec());
+                let gen = hist_map.get(&id).map(|h| h[skip.min(h.len())..].to_vec());
                 (id, gen.unwrap_or_default())
             })
             .collect();

@@ -9,7 +9,7 @@
 //!                  [--search-budget S]
 //!                  [--online-refinement] [--replan-threshold X]
 //!                  [--online-weight W] [--admit P]
-//!                  [--oversubscribe] [--h2d-bw B]
+//!                  [--oversubscribe] [--h2d-bw B] [--sequential-measured]
 //!   samullm traffic --app NAME[:key=value]... [--duration S] [--warmup S]
 //!                  [--queue-capacity C] [--queue-policy reject|defer]
 //!                  [--admit-quantum Q] [...run flags]
@@ -173,6 +173,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "admit",
         "oversubscribe",
         "h2d-bw",
+        "sequential-measured",
         "gantt",
     ])?;
     let app = args.get_str("app", "ensembling");
@@ -196,7 +197,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .fast_step(!args.has("no-fast-step"))
         .online_refinement(args.has("online-refinement"))
         .admit_policy(&args.get_str("admit", "fcfs"))
-        .oversubscribe(args.has("oversubscribe"));
+        .oversubscribe(args.has("oversubscribe"))
+        .sequential_measured(args.has("sequential-measured"));
     if let Some(b) = args.get_opt("search-budget")? {
         builder = builder.search_budget(b);
     }
@@ -241,6 +243,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
         "admit",
         "oversubscribe",
         "h2d-bw",
+        "sequential-measured",
         "gantt",
     ])?;
     let descriptors = args.get_all("app");
@@ -269,7 +272,8 @@ fn cmd_workload(args: &Args) -> Result<()> {
         .fast_step(!args.has("no-fast-step"))
         .online_refinement(args.has("online-refinement"))
         .admit_policy(&args.get_str("admit", "fcfs"))
-        .oversubscribe(args.has("oversubscribe"));
+        .oversubscribe(args.has("oversubscribe"))
+        .sequential_measured(args.has("sequential-measured"));
     if let Some(b) = args.get_opt("search-budget")? {
         builder = builder.search_budget(b);
     }
@@ -387,7 +391,8 @@ fn cmd_config(path: &str) -> Result<()> {
         .replan_threshold(cfg.replan_threshold)
         .online_weight(cfg.online_weight)
         .admit_policy(&cfg.admit)
-        .oversubscribe(cfg.oversubscribe);
+        .oversubscribe(cfg.oversubscribe)
+        .sequential_measured(cfg.sequential_measured);
     if let Some(b) = cfg.search_budget {
         builder = builder.search_budget(b);
     }
@@ -472,6 +477,9 @@ fn usage() -> String {
          \x20                                  (let plans exceed cluster HBM: stages\n\
          \x20                                  time-slice GPUs, paying modeled weight-swap\n\
          \x20                                  latency over the host link; default off)\n\
+         \x20                [--sequential-measured]          (measured stages run nodes\n\
+         \x20                                  one after another instead of the concurrent\n\
+         \x20                                  event loop; sim runs ignore it)\n\
          \x20                [--artifacts DIR]                (pjrt backend artifacts)\n\
          \x20 samullm workload --app NAME[:key=value]... [--app ...] [--name N]\n\
          \x20                [--policy P] [--gpus G] [--seed S] [--gantt] [...run flags]\n\

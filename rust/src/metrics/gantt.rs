@@ -55,6 +55,18 @@ pub fn render(report: &RunReport, width: usize) -> String {
             report.residency.overlapped_seconds
         ));
     }
+    if let Some(m) = &report.measured {
+        out.push_str(&format!(
+            "measured: decode-iters={} tokens={} overlap={:.1}s\n",
+            m.decode_iters, m.tokens, m.overlap_seconds
+        ));
+        for &(node, busy, wall) in &m.node_busy_wall {
+            let ratio = if wall > 0.0 { busy / wall } else { 0.0 };
+            out.push_str(&format!(
+                "  node {node:>3} busy={busy:>7.2}s wall={wall:>7.2}s busy/wall={ratio:.2}\n"
+            ));
+        }
+    }
     for &node in &nodes {
         let mut row = vec![b'.'; width];
         for s in &report.timeline {
@@ -204,6 +216,18 @@ mod tests {
             g.contains("residency: swaps in=2 out=1 moved=36.0GB stalled=3.0s overlapped=1.0s"),
             "{g}"
         );
+
+        let mut with_measured = report.clone();
+        with_measured.measured = Some(crate::metrics::MeasuredStats {
+            decode_iters: 40,
+            tokens: 43,
+            overlap_seconds: 12.5,
+            node_busy_wall: vec![(0, 40.0, 50.0)],
+            ..Default::default()
+        });
+        let g = render(&with_measured, 40);
+        assert!(g.contains("measured: decode-iters=40 tokens=43 overlap=12.5s"), "{g}");
+        assert!(g.contains("node   0 busy=  40.00s wall=  50.00s busy/wall=0.80"), "{g}");
 
         let mut with_online = report;
         with_online.online = Some(crate::costmodel::OnlineStats {

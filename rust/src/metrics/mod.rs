@@ -51,7 +51,7 @@ impl StageRecord {
 /// for the same batch compositions — the measured-vs-predicted hook that
 /// validates the sampling-then-simulation cost model against real
 /// iterations.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct MeasuredStats {
     /// Prefill iterations executed on the device.
     pub prefills: u64,
@@ -70,6 +70,16 @@ pub struct MeasuredStats {
     /// Mean decode latency the virtual hardware model predicts for the
     /// same (batch, context) compositions (NaN when unavailable).
     pub predicted_decode_mean: f64,
+    /// Seconds of node wall-clock that ran overlapped across the run:
+    /// per stage, `max(0, Σ node walls − stage span)`, summed. Exactly 0
+    /// under the sequential lowering (`--sequential-measured`), positive
+    /// when the concurrent event loop interleaved nodes.
+    pub overlap_seconds: f64,
+    /// Per-node `(node, busy_seconds, wall_seconds)` over the run: busy
+    /// is device compute time, wall is the node's own measured span
+    /// inside its stages. Their ratio shows how well the event loop kept
+    /// each node's device fed.
+    pub node_busy_wall: Vec<(usize, f64, f64)>,
 }
 
 impl MeasuredStats {
@@ -387,6 +397,22 @@ impl RunReport {
                                 Json::Num(m.predicted_decode_mean)
                             },
                         ),
+                        ("overlap_seconds", Json::Num(m.overlap_seconds)),
+                        (
+                            "node_busy_wall",
+                            Json::Arr(
+                                m.node_busy_wall
+                                    .iter()
+                                    .map(|&(n, b, w)| {
+                                        Json::obj(vec![
+                                            ("node", Json::Num(n as f64)),
+                                            ("busy", Json::Num(b)),
+                                            ("wall", Json::Num(w)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
                     ]),
                 },
             ),
@@ -500,12 +526,17 @@ mod tests {
             decode_p50: 0.002,
             decode_p99: 0.004,
             predicted_decode_mean: 0.003,
+            overlap_seconds: 12.5,
+            node_busy_wall: vec![(0, 40.0, 50.0), (1, 30.0, 60.0)],
         });
         let j = r.to_json();
         assert!(j.contains("\"backend\":\"pjrt\""), "{j}");
         assert!(j.contains("\"measured\":{"), "{j}");
         assert!(j.contains("\"decode_iters\":40"), "{j}");
         assert!(j.contains("\"predicted_decode_mean\":0.003"), "{j}");
+        assert!(j.contains("\"overlap_seconds\":12.5"), "{j}");
+        assert!(j.contains("\"node_busy_wall\":["), "{j}");
+        assert!(j.contains("\"node\":1,\"busy\":30,\"wall\":60"), "{j}");
     }
 
     #[test]

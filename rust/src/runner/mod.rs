@@ -122,6 +122,15 @@ pub struct RunOpts {
     /// blocking the cluster
     /// ([`crate::planner::GreedyPlanner::search_budget`]).
     pub search_budget: Option<f64>,
+    /// Force the *sequential* measured lowering
+    /// ([`ExecState::run_stage_measured`]): stage nodes run one after
+    /// another on the device and their measured times chain. Off by
+    /// default — measured stages with ≥ 2 runnable nodes interleave
+    /// through the backend's stepping interface
+    /// ([`ExecState::run_stage_concurrent`]), so the stage wall-clock is
+    /// the max over nodes, as the simulator assumes. Virtual runs ignore
+    /// this entirely. Escape hatch: `--sequential-measured`.
+    pub sequential_measured: bool,
 }
 
 impl Default for RunOpts {
@@ -141,6 +150,7 @@ impl Default for RunOpts {
             h2d_bw: None,
             fast_step: true,
             search_budget: None,
+            sequential_measured: false,
         }
     }
 }
@@ -267,11 +277,15 @@ pub fn run_workload_with_backend(
 /// stages *execute*:
 /// * [`BackendMode::Virtual`] — the §4.3 first-finish discipline with
 ///   projection and deadline replay (today's experiments);
-/// * [`BackendMode::Measured`] — real, irreversible execution: each stage
-///   runs its nodes to completion sequentially on the device, the report
-///   clocks are measured seconds, and
-///   [`RunReport::measured`](crate::metrics::RunReport) compares measured
-///   iteration latencies against the hardware model's predictions.
+/// * [`BackendMode::Measured`] — real, irreversible execution: each
+///   stage's nodes run to completion concurrently (interleaved through
+///   the backend's stepping interface, so the stage wall-clock is the
+///   max over nodes; sequentially under `--sequential-measured` or when
+///   the backend cannot step), the report clocks are measured seconds,
+///   and [`RunReport::measured`](crate::metrics::RunReport) compares
+///   measured iteration latencies against the hardware model's
+///   predictions and reports the concurrency actually achieved
+///   (`overlap_seconds`, per-node busy/wall).
 pub fn run_with_backend(
     policy: &mut dyn Policy,
     scenario: &Scenario,
@@ -365,6 +379,12 @@ fn run_core(
 
     let mut timeline: Vec<StageRecord> = vec![];
     let mut all_events: Vec<EngineEvent> = vec![];
+    // Measured-mode concurrency accounting: seconds of node wall-clock
+    // that ran overlapped (Σ node walls − stage span, clamped at 0 — the
+    // sequential lowering chains walls so it contributes exactly 0), and
+    // per-node (busy, wall) sums for the busy/wall ratio in the report.
+    let mut overlap_seconds = 0.0f64;
+    let mut node_busy_wall: HashMap<usize, (f64, f64)> = HashMap::new();
     let mut locked: HashMap<usize, ExecPlan> = HashMap::new();
     let mut prev_stage: Option<Stage> = None;
     let mut guard = 0usize;
@@ -570,7 +590,26 @@ fn run_core(
             }
         }
         let res = if measured_mode {
-            true_state.run_stage_measured(&stage, graph, registry, backend, Some(&mut events))?
+            let res = if opts.sequential_measured || !backend.supports_stepping() {
+                true_state.run_stage_measured(&stage, graph, registry, backend, Some(&mut events))?
+            } else {
+                true_state.run_stage_concurrent(
+                    &stage,
+                    graph,
+                    registry,
+                    backend,
+                    Some(&mut events),
+                )?
+            };
+            let span = (res.end - res.start).max(0.0);
+            let walls: f64 = res.nodes.iter().map(|n| n.wall).sum();
+            overlap_seconds += (walls - span).max(0.0);
+            for n in &res.nodes {
+                let e = node_busy_wall.entry(n.node).or_insert((0.0, 0.0));
+                e.0 += n.busy_time;
+                e.1 += n.wall;
+            }
+            res
         } else {
             let before_done = true_state.completed.len();
             let res = true_state.run_stage(
@@ -661,7 +700,17 @@ fn run_core(
 
     let inference_time = true_state.clock;
     let measured = measured_mode
-        .then(|| measured_stats(&all_events, &timeline, graph, registry, hw))
+        .then(|| {
+            measured_stats(
+                &all_events,
+                &timeline,
+                graph,
+                registry,
+                hw,
+                overlap_seconds,
+                &node_busy_wall,
+            )
+        })
         .flatten();
     // Drift/replan accounting only exists when the feedback loop ran and
     // the policy participates in it (`None` for baselines).
@@ -731,6 +780,8 @@ fn measured_stats(
     graph: &AppGraph,
     registry: &Registry,
     hw: &dyn IterLatency,
+    overlap_seconds: f64,
+    node_busy_wall: &HashMap<usize, (f64, f64)>,
 ) -> Option<MeasuredStats> {
     // Per-node plan of the stage each event belongs to (by timestamp).
     let plan_at = |node: usize, t: f64| -> ExecPlan {
@@ -778,6 +829,13 @@ fn measured_stats(
             f64::NAN
         } else {
             predicted.iter().sum::<f64>() / predicted.len() as f64
+        },
+        overlap_seconds,
+        node_busy_wall: {
+            let mut v: Vec<(usize, f64, f64)> =
+                node_busy_wall.iter().map(|(&n, &(b, w))| (n, b, w)).collect();
+            v.sort_by_key(|e| e.0);
+            v
         },
     })
 }

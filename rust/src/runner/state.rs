@@ -103,6 +103,11 @@ pub struct NodeStageResult {
     pub tokens: u64,
     /// Whether the node completed all requests within the stage.
     pub finished: bool,
+    /// Seconds from the node's own start within the stage to its finish
+    /// (0 for a node with nothing to run). Under concurrent measured
+    /// lowering every node starts at the stage start, so the per-node
+    /// busy/wall ratio and the stage's overlap both derive from this.
+    pub wall: f64,
 }
 
 /// Result of executing one stage.
@@ -611,6 +616,7 @@ impl ExecState {
                     busy_time: 0.0,
                     tokens: 0,
                     finished: (projected[&node] - stage_end) < 1e-9,
+                    wall: (projected[&node] - start).max(0.0),
                 });
             }
             return StageResult { start, end: stage_end, nodes: results };
@@ -642,7 +648,8 @@ impl ExecState {
             if let Some(t) = trace.as_mut() {
                 t.append(&mut out.events);
             }
-            let res = self.commit_node(node, &out, projected[&node]);
+            let res =
+                self.commit_node(node, &out, projected[&node], (projected[&node] - start).max(0.0));
             results.push(res);
         }
         self.clock = stage_end;
@@ -683,11 +690,14 @@ impl ExecState {
     }
 
     /// Commit a node outcome: completions, carried progress, finish flag.
+    /// `wall` is the node's own span within the stage (start-to-finish
+    /// seconds) as the caller's lowering defines it.
     fn commit_node(
         &mut self,
         node: usize,
         out: &NodeOutcome,
         projected_finish: f64,
+        wall: f64,
     ) -> NodeStageResult {
         let mut progress: HashMap<u64, u32> = HashMap::new();
         for r in &out.remaining {
@@ -713,14 +723,20 @@ impl ExecState {
         }
         let busy: f64 = out.replicas.iter().map(|r| r.busy_time).sum();
         let tokens: u64 = out.replicas.iter().map(|r| r.tokens_generated).sum();
-        NodeStageResult { node, projected_finish, busy_time: busy, tokens, finished }
+        NodeStageResult { node, projected_finish, busy_time: busy, tokens, finished, wall }
     }
 
-    /// Execute one stage on a *measured* backend (real hardware): no
-    /// projections, no deadline replays. Nodes run sequentially in
-    /// dependency order — there is one physical device — each to the
-    /// completion of its runnable requests, and their measured finish
-    /// times chain: the stage ends when the last node finishes.
+    /// Execute one stage on a *measured* backend (real hardware) with the
+    /// **sequential** lowering: no projections, no deadline replays. Nodes
+    /// run one after another in dependency order — even when the plan
+    /// places them on disjoint GPU subsets — each to the completion of
+    /// its runnable requests, and their measured finish times chain: the
+    /// stage ends when the last node finishes, i.e. the stage wall-clock
+    /// is the *sum* of node times. This is the conservative fallback (and
+    /// the `--sequential-measured` escape hatch);
+    /// [`ExecState::run_stage_concurrent`] is the default lowering that
+    /// interleaves the nodes and reports the *max*, matching what the
+    /// simulator and the plans it validates assume.
     pub fn run_stage_measured(
         &mut self,
         stage: &Stage,
@@ -746,6 +762,7 @@ impl ExecState {
                     busy_time: 0.0,
                     tokens: 0,
                     finished: self.nodes[node].iter().all(|r| r.is_done()),
+                    wall: 0.0,
                 });
                 continue;
             }
@@ -770,12 +787,239 @@ impl ExecState {
                 tr.append(&mut out.events);
             }
             let finish = out.finish_time.max(t);
-            let res = self.commit_node(node, &out, finish);
+            let res = self.commit_node(node, &out, finish, finish - t);
             results.push(res);
             t = finish;
         }
         self.clock = t.max(start);
         Ok(StageResult { start, end: self.clock, nodes: results })
+    }
+
+    /// Materialise one dep-satisfied request of `node` for mid-flight
+    /// injection into a running engine, mirroring the field mapping of
+    /// [`ExecState::build_engine_requests`]: `ready` is the producer's
+    /// measured completion time (clamped to the stage start by the
+    /// caller), and chain-blocked successors keep their sentinel unless
+    /// their predecessor already finished — in state, or earlier in this
+    /// stage (`stage_completions`).
+    fn consumer_request(
+        &self,
+        node: usize,
+        id: u64,
+        ready: f64,
+        stage_completions: &HashMap<(usize, u64), f64>,
+    ) -> Option<EngineRequest> {
+        let r = self.nodes[node].iter().find(|r| r.id == id)?;
+        if r.is_done() {
+            return None;
+        }
+        let done_ids: HashSet<u64> = self.nodes[node]
+            .iter()
+            .filter(|x| x.is_done())
+            .map(|x| x.id)
+            .collect();
+        let pred_done = Self::chain_pred_done(&self.nodes[node], r.id, &done_ids)
+            || self.nodes[node]
+                .iter()
+                .find(|p| p.chain_next == Some(r.id))
+                .is_some_and(|p| stage_completions.contains_key(&(node, p.id)));
+        let blocked = r.chain_blocked && !pred_done;
+        Some(EngineRequest {
+            id: r.id,
+            input_len: r.input_len,
+            output_len: r.output_len,
+            ready_time: if blocked { EngineRequest::BLOCKED } else { ready },
+            generated: r.generated,
+            chain_next: r.chain_next,
+            kv_resident: false,
+            predicted_len: r.predicted_len,
+        })
+    }
+
+    /// Start `node` on a stepping backend with the given requests (shared
+    /// by the initial fan-out and lazy consumer starts of
+    /// [`ExecState::run_stage_concurrent`]).
+    #[allow(clippy::too_many_arguments)] // internal forwarding helper
+    fn start_node_on(
+        &self,
+        backend: &mut dyn ExecBackend,
+        node: usize,
+        graph: &AppGraph,
+        registry: &Registry,
+        stage: &Stage,
+        reqs: &[EngineRequest],
+        start_time: f64,
+        collect_events: bool,
+    ) -> Result<crate::exec::NodeHandle> {
+        let plan = stage.plan_of(node).unwrap();
+        let spec = registry.get(&graph.nodes[node].model).expect("model");
+        backend.start_node(&NodeRun {
+            node,
+            model: &graph.nodes[node].model,
+            spec,
+            plan,
+            requests: reqs,
+            start_time,
+            deadline: None,
+            noise_sigma: None,
+            noise_seed: 0,
+            collect_events,
+            admit: self.admit,
+            fast_step: self.fast_step,
+        })
+    }
+
+    /// Execute one stage on a *measured* backend with **concurrent node
+    /// lowering** — the event loop the plans are priced for. Every node
+    /// with runnable work starts at the stage clock; their scheduler
+    /// iterations interleave through the backend's stepping interface
+    /// ([`crate::exec::ExecBackend::step_node`]), always advancing the
+    /// node whose measured clock is earliest, so the stage's wall-clock
+    /// is the *max* over nodes (what the simulator assumes) rather than
+    /// the sequential lowering's *sum*. Cross-node completions are
+    /// forwarded mid-flight: the moment a producer request finishes, its
+    /// dependents are injected into their consumer's engine (which is
+    /// started lazily on its first injection if it had nothing runnable
+    /// at stage start) with the measured completion time as ready time.
+    /// Event streams from the interleaved nodes are merged time-ordered
+    /// into `trace`.
+    ///
+    /// Falls back to [`ExecState::run_stage_measured`] — identical
+    /// results, summed wall-clock — when the backend does not support
+    /// stepping or fewer than two nodes could run this stage.
+    pub fn run_stage_concurrent(
+        &mut self,
+        stage: &Stage,
+        graph: &AppGraph,
+        registry: &Registry,
+        backend: &mut dyn ExecBackend,
+        trace: Option<&mut Vec<EngineEvent>>,
+    ) -> Result<StageResult> {
+        let start = self.clock;
+        let order = graph.topo_order(&stage.entries.iter().map(|e| e.node).collect::<Vec<_>>());
+        let in_stage: HashSet<usize> = order.iter().copied().collect();
+
+        // Initial per-node workloads (dep-satisfiable right now) and the
+        // pending dependents whose in-stage producer has yet to complete.
+        let mut initial: HashMap<usize, Vec<EngineRequest>> = HashMap::new();
+        let mut pending: HashMap<(usize, u64), Vec<(usize, u64)>> = HashMap::new();
+        let mut involved: HashSet<usize> = HashSet::new();
+        for &node in &order {
+            let reqs = self.build_engine_requests(node, start, &HashMap::new(), false);
+            if !reqs.is_empty() {
+                involved.insert(node);
+            }
+            initial.insert(node, reqs);
+            for r in &self.nodes[node] {
+                if r.is_done() {
+                    continue;
+                }
+                if let Some(dep) = r.dep {
+                    if !self.completed.contains_key(&dep) && in_stage.contains(&dep.0) {
+                        pending.entry(dep).or_default().push((node, r.id));
+                        involved.insert(node);
+                    }
+                }
+            }
+        }
+        if !backend.supports_stepping() || involved.len() < 2 {
+            return self.run_stage_measured(stage, graph, registry, backend, trace);
+        }
+
+        let collect = trace.is_some();
+        let mut handles: HashMap<usize, crate::exec::NodeHandle> = HashMap::new();
+        let mut clocks: HashMap<usize, f64> = HashMap::new();
+        let mut parked: HashSet<usize> = HashSet::new();
+        let mut stage_completions: HashMap<(usize, u64), f64> = HashMap::new();
+        for &node in &order {
+            let reqs = &initial[&node];
+            if reqs.is_empty() {
+                continue;
+            }
+            let h =
+                self.start_node_on(backend, node, graph, registry, stage, reqs, start, collect)?;
+            handles.insert(node, h);
+            clocks.insert(node, start);
+        }
+
+        // The event loop: advance the unparked in-flight node whose
+        // measured clock is earliest. Nodes park when idle (starved for
+        // injections) or done, and are woken by injections; the loop ends
+        // when everyone is parked — at that point no producer can emit
+        // further completions, so no pending dependent is satisfiable.
+        loop {
+            let next = handles
+                .keys()
+                .filter(|n| !parked.contains(*n))
+                .min_by(|a, b| {
+                    clocks[a]
+                        .partial_cmp(&clocks[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(b))
+                })
+                .copied();
+            let Some(node) = next else { break };
+            let out = backend.step_node(handles[&node])?;
+            clocks.insert(node, out.clock);
+            for &(id, t) in &out.completions {
+                stage_completions.insert((node, id), t);
+                let Some(consumers) = pending.remove(&(node, id)) else { continue };
+                for (cn, cid) in consumers {
+                    let Some(req) = self.consumer_request(cn, cid, t.max(start), &stage_completions)
+                    else {
+                        continue;
+                    };
+                    if let Some(&ch) = handles.get(&cn) {
+                        backend.push_node_requests(ch, vec![req])?;
+                        parked.remove(&cn);
+                    } else {
+                        let ch = self.start_node_on(
+                            backend, cn, graph, registry, stage, &[req], start, collect,
+                        )?;
+                        handles.insert(cn, ch);
+                        clocks.insert(cn, start);
+                    }
+                }
+            }
+            match out.status {
+                crate::exec::StepStatus::Progressed => {}
+                crate::exec::StepStatus::Idle | crate::exec::StepStatus::Done => {
+                    parked.insert(node);
+                }
+            }
+        }
+
+        // Harvest: finish every in-flight node, commit, and merge events
+        // time-ordered. The stage ends at the latest node finish.
+        let mut trace = trace;
+        let mut merged: Vec<EngineEvent> = vec![];
+        let mut results = vec![];
+        let mut end = start;
+        for &node in &order {
+            let Some(&h) = handles.get(&node) else {
+                results.push(NodeStageResult {
+                    node,
+                    projected_finish: start,
+                    busy_time: 0.0,
+                    tokens: 0,
+                    finished: self.nodes[node].iter().all(|r| r.is_done()),
+                    wall: 0.0,
+                });
+                continue;
+            };
+            let mut out = backend.finish_node(h)?;
+            merged.append(&mut out.events);
+            let finish = out.finish_time.max(start);
+            let res = self.commit_node(node, &out, finish, finish - start);
+            results.push(res);
+            end = end.max(finish);
+        }
+        merged.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal));
+        if let Some(tr) = trace.as_mut() {
+            tr.append(&mut merged);
+        }
+        self.clock = end;
+        Ok(StageResult { start, end, nodes: results })
     }
 }
 

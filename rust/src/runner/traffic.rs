@@ -74,7 +74,9 @@ pub fn run_traffic_with_backend(
     if backend.mode() == BackendMode::Measured {
         return Err(anyhow!(
             "open-loop traffic runs on the virtual-time substrate only \
-             (arrival timestamps live on the virtual clock)"
+             (arrival timestamps live on the virtual clock); measured \
+             execution goes through the batch path's concurrent stage \
+             lowering (run_stage_concurrent) instead"
         ));
     }
     if opts.oversubscribe {

@@ -74,6 +74,7 @@ pub struct SamuLlmBuilder {
     h2d_bw: Option<f64>,
     fast_step: bool,
     search_budget: Option<f64>,
+    sequential_measured: bool,
 }
 
 impl SamuLlm {
@@ -99,6 +100,7 @@ impl SamuLlm {
             h2d_bw: None,
             fast_step: true,
             search_budget: None,
+            sequential_measured: false,
         }
     }
 
@@ -366,6 +368,17 @@ impl SamuLlmBuilder {
         self
     }
 
+    /// Force the sequential measured lowering (default off). Measured
+    /// stages normally interleave their nodes through the backend's
+    /// stepping interface so the stage wall-clock is the max over nodes
+    /// ([`crate::runner::ExecState::run_stage_concurrent`]); with this on
+    /// they run one after another and measured times chain. Inert for
+    /// virtual (`sim`) runs.
+    pub fn sequential_measured(mut self, on: bool) -> Self {
+        self.sequential_measured = on;
+        self
+    }
+
     /// Validate the configuration and assemble the session wiring. For
     /// the `pjrt` backend, the artifacts contract is checked here so
     /// misconfiguration fails before any (expensive) planning starts.
@@ -421,6 +434,7 @@ impl SamuLlmBuilder {
             h2d_bw: self.h2d_bw,
             fast_step: self.fast_step,
             search_budget: self.search_budget,
+            sequential_measured: self.sequential_measured,
         };
         Ok(SamuLlm {
             ctx: RunContext::new(&cluster, self.seed),

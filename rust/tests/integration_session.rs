@@ -134,6 +134,7 @@ fn spec_round_trips_through_config_json_and_runs() {
         h2d_bw: None,
         fast_step: true,
         search_budget: None,
+        sequential_measured: false,
     };
     let text = cfg.to_json();
     let back = ExperimentConfig::from_json(&text).unwrap();
